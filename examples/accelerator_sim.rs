@@ -1,0 +1,70 @@
+//! Accelerator simulation: regenerates Table 3 (device comparison) and the
+//! Fig. 11 resource report on the cycle-level U200 model.
+//!
+//! ```bash
+//! cargo run --release --example accelerator_sim [-- --samples 24 --full]
+//! ```
+
+use anyhow::Result;
+
+use spectral_flow::analysis::ArchParams;
+use spectral_flow::dataflow::{optimize_network_at, OptimizerConfig};
+use spectral_flow::model::Network;
+use spectral_flow::report::{fmt_gbps, fmt_ms, fmt_pct, Table};
+use spectral_flow::sim::baselines::{run_baseline, sparse_spatial_17_latency, BaselineConfig};
+use spectral_flow::sim::{estimate_resources, SimConfig};
+use spectral_flow::util::cli::Args;
+
+fn main() -> Result<()> {
+    let mut args = Args::from_env();
+    let samples = args.opt_usize("samples", 24, "scheduling instances per layer");
+    let full = args.opt_bool("full", "schedule every instance (slow, exact)");
+    args.maybe_help("accelerator_sim: Table 3 + Fig 11 on the U200 model");
+    let sample_groups = if full { None } else { Some(samples) };
+
+    let net = Network::vgg16_224();
+    let mut t3 = Table::new(
+        "Table 3 — VGG16-224 conv stack on the simulated U200",
+        &["design", "latency", "fps", "BW req", "avg PE util", "DDR traffic MB"],
+    );
+    for cfg in BaselineConfig::all() {
+        let t0 = std::time::Instant::now();
+        let res = run_baseline(&cfg, &net, sample_groups, 2020);
+        t3.row(vec![
+            cfg.name.to_string(),
+            fmt_ms(res.latency_secs()),
+            format!("{:.0}", res.throughput_fps()),
+            fmt_gbps(res.required_bandwidth()),
+            fmt_pct(res.avg_pe_utilization()),
+            format!("{:.0}", res.total_ddr_bytes() as f64 / 1e6),
+        ]);
+        eprintln!("  simulated {:<28} in {:?}", cfg.name, t0.elapsed());
+    }
+    t3.row(vec![
+        "[17]-like (sparse spatial)".into(),
+        fmt_ms(sparse_spatial_17_latency(&net, 4)),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+    ]);
+    println!("{}", t3.render());
+    let _ = t3.save_csv("table3");
+
+    // Paper reference points for eyeballing (from Table 3 of the paper):
+    println!("paper reference: this-work 9 ms / 112 fps / 12 GB/s; [16] 68 ms @ 9 GB/s;");
+    println!("                 [27] 250 ms; [26] 167 ms; [17] 200 ms (Artix, 100 MHz)\n");
+
+    // ---- Fig 11: resource utilization ------------------------------------
+    let ocfg = OptimizerConfig::paper();
+    let plan = optimize_network_at(&net, ArchParams::paper(), &ocfg).expect("feasible");
+    let plans: Vec<_> = plan.layers.iter().map(|l| (l.params, l.stream)).collect();
+    let res = estimate_resources(
+        &ArchParams::paper(),
+        &plans,
+        SimConfig::default().fft_butterflies_per_cycle,
+    );
+    println!("Fig 11 — resource estimate @ P'=9, N'=64: {}", res.utilization_report());
+    println!("paper reference: DSP 2680/6840, BRAM 1469/2160, LUT 230K/1.2M, 200 MHz");
+    Ok(())
+}

@@ -1,0 +1,105 @@
+//! Dataflow explorer: regenerates the analysis-side artifacts —
+//! Fig. 2 (fixed-flow complexity), Fig. 7 (fixed vs flexible), Table 1
+//! (optimal streaming parameters) and Table 2 (per-layer bandwidth) —
+//! for VGG16 at K=8 and K=16.
+//!
+//! ```bash
+//! cargo run --release --example dataflow_explorer [-- --alpha 4]
+//! ```
+
+use anyhow::Result;
+
+use spectral_flow::analysis::{
+    bram_flow, transfers_flow, ArchParams, Flow, LayerParams,
+};
+use spectral_flow::dataflow::{optimize_network, optimize_network_at, OptimizerConfig};
+use spectral_flow::model::Network;
+use spectral_flow::report::{fmt_bytes, fmt_gbps, fmt_ms, Table};
+use spectral_flow::util::cli::Args;
+
+fn main() -> Result<()> {
+    let mut args = Args::from_env();
+    let alpha = args.opt_usize("alpha", 4, "compression ratio α");
+    let tau_ms = args.opt_f64("tau-ms", 20.0, "conv-stack latency budget (paper §6.1)");
+    args.maybe_help("dataflow_explorer: Figs 2/7 + Tables 1/2");
+
+    let cfg = OptimizerConfig { alpha, total_latency: tau_ms / 1e3, ..OptimizerConfig::paper() };
+
+    for (net, arch) in [
+        (Network::vgg16_224(), ArchParams::paper()),
+        (Network::vgg16_224_k16(), ArchParams { p_par: 16, n_par: 32, replicas: 10 }),
+    ] {
+        println!("\n################ {} (P'={}, N'={}) ################\n", net.name, arch.p_par, arch.n_par);
+
+        // ---- Fig 2: fixed flows --------------------------------------
+        let mut fig2 = Table::new(
+            &format!("Fig 2 — α={alpha}: transfers (MB @2B words) and BRAMs per fixed flow"),
+            &["layer", "xfer F1", "xfer F2", "xfer F3", "bram F1", "bram F2", "bram F3"],
+        );
+        for conv in net.optimized_convs() {
+            let l = LayerParams::from_layer(conv, alpha);
+            let mut cells = vec![conv.name.clone()];
+            for f in Flow::ALL {
+                cells.push(format!("{:.1}", transfers_flow(f, &l, &arch).total() as f64 * 2.0 / 1e6));
+            }
+            for f in Flow::ALL {
+                cells.push(bram_flow(f, &l, &arch).to_string());
+            }
+            fig2.row(cells);
+        }
+        println!("{}", fig2.render());
+
+        // ---- Table 1 + Fig 7 + Table 2: the flexible flow ------------
+        let Some(plan) = optimize_network_at(&net, arch, &cfg) else {
+            println!("(no feasible flexible plan at this arch point)");
+            continue;
+        };
+        let mut t1 = Table::new(
+            &format!("Table 1 — optimal streaming parameters ({})", net.name),
+            &["layer", "Ps", "Ns"],
+        );
+        let mut fig7 = Table::new(
+            "Fig 7 — transfers: Flow #1 vs Flow #2 vs Flow opt (MB)",
+            &["layer", "Flow#1", "Flow#2", "Flow opt", "opt BRAMs"],
+        );
+        let mut t2 = Table::new(
+            &format!("Table 2 — required bandwidth under Flow opt (τ={tau_ms} ms)"),
+            &["layer", "τ_i", "BW"],
+        );
+        for lp in &plan.layers {
+            t1.row(vec![lp.layer_name.clone(), lp.stream.ps.to_string(), lp.stream.ns.to_string()]);
+            let f1 = transfers_flow(Flow::ReuseKernels, &lp.params, &arch).total();
+            let f2 = transfers_flow(Flow::ReuseInputs, &lp.params, &arch).total();
+            fig7.row(vec![
+                lp.layer_name.clone(),
+                format!("{:.1}", f1 as f64 * 2.0 / 1e6),
+                format!("{:.1}", f2 as f64 * 2.0 / 1e6),
+                format!("{:.1}", lp.transfers.total() as f64 * 2.0 / 1e6),
+                lp.brams.to_string(),
+            ]);
+            t2.row(vec![lp.layer_name.clone(), fmt_ms(lp.tau), fmt_gbps(lp.bandwidth)]);
+        }
+        println!("{}", t1.render());
+        println!("{}", fig7.render());
+        println!("{}", t2.render());
+        println!(
+            "total transfers: {}   max bandwidth: {}",
+            fmt_bytes(plan.total_transfers() * 2),
+            fmt_gbps(plan.bw_max)
+        );
+        let _ = fig7.save_csv(&format!("fig7_{}", net.name));
+        let _ = t2.save_csv(&format!("table2_{}", net.name));
+    }
+
+    // Joint architecture search (Alg 1 outer loop).
+    let net = Network::vgg16_224();
+    if let Some(best) = optimize_network(&net, &cfg) {
+        println!(
+            "\nAlg 1 architecture search optimum: P'={}, N'={} (bw_max {})",
+            best.arch.p_par,
+            best.arch.n_par,
+            fmt_gbps(best.bw_max)
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,110 @@
+//! End-to-end driver (DESIGN.md E10): serve batched VGG16 inference through
+//! the full three-layer stack — Rust batching server → PJRT executables
+//! (JAX-lowered spectral conv with the Pallas Hadamard kernel inside) →
+//! Rust OaA/pool/FC — and report latency/throughput. Also measures the
+//! single-image 224×224 forward pass, the workload Table 3's latency column
+//! talks about. Results are recorded in EXPERIMENTS.md.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example vgg16_e2e
+//! # options: --requests 32 --batch 4 --variant vgg16-cifar --skip-224
+//! ```
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use spectral_flow::coordinator::{
+    BatcherConfig, InferenceEngine, Server, ServerConfig, WeightMode,
+};
+use spectral_flow::tensor::Tensor;
+use spectral_flow::util::cli::Args;
+use spectral_flow::util::rng::Pcg32;
+
+fn main() -> Result<()> {
+    let mut args = Args::from_env();
+    let requests = args.opt_usize("requests", 24, "number of inference requests");
+    let batch = args.opt_usize("batch", 4, "max batch size");
+    let variant = args.opt("variant", "vgg16-cifar", "serving variant");
+    let skip_224 = args.opt_bool("skip-224", "skip the single-image 224x224 run");
+    args.maybe_help("vgg16_e2e: batched serving + single-image latency through PJRT");
+
+    println!("spectral-flow end-to-end driver");
+    println!("===============================\n");
+
+    // ---- Phase 1: batched serving on the CIFAR-scale VGG16 ---------------
+    println!("[1/2] serving {requests} requests ({variant}, α=4 pruned, batch ≤ {batch})");
+    let cfg = ServerConfig {
+        artifacts_dir: "artifacts".into(),
+        variant: variant.clone(),
+        mode: WeightMode::Pruned { alpha: 4 },
+        seed: 7,
+        batcher: BatcherConfig {
+            max_batch: batch,
+            max_wait: std::time::Duration::from_millis(10),
+        },
+    };
+    let t0 = Instant::now();
+    let server = Server::start(cfg)?;
+    println!("  server up (weights + {variant} executables compiled) in {:?}", t0.elapsed());
+
+    let client = server.client();
+    let mut rng = Pcg32::new(99);
+    let images: Vec<Tensor> = (0..requests)
+        .map(|_| Tensor::randn(&[3, 32, 32], &mut rng, 1.0))
+        .collect();
+
+    let t1 = Instant::now();
+    let mut pending = Vec::new();
+    for img in images {
+        pending.push(client.infer_async(img)?);
+    }
+    let mut ok = 0usize;
+    for rx in pending {
+        let resp = rx.recv()??;
+        assert_eq!(resp.logits.len(), 10);
+        ok += 1;
+    }
+    let wall = t1.elapsed();
+    let m = server.metrics()?;
+    println!("  completed {ok}/{requests} requests in {wall:?}");
+    println!("  {}", m.report());
+    println!(
+        "  throughput: {:.2} img/s (wall), per-request p50 {:?} / p95 {:?}",
+        ok as f64 / wall.as_secs_f64(),
+        m.p50().unwrap_or_default(),
+        m.p95().unwrap_or_default()
+    );
+    server.shutdown()?;
+
+    // ---- Phase 2: single-image 224×224 latency (Table 3's workload) ------
+    if !skip_224 {
+        println!("\n[2/2] single-image VGG16-224 forward (the paper's latency workload)");
+        let t2 = Instant::now();
+        let mut engine =
+            InferenceEngine::new("artifacts", "vgg16-224", WeightMode::Pruned { alpha: 4 }, 7)?;
+        println!("  engine up in {:?} (13 conv layers, 9 executables)", t2.elapsed());
+        let img = engine.synthetic_image(1);
+        // warm once (first-touch allocations), then measure.
+        let _ = engine.forward(&img)?;
+        let t3 = Instant::now();
+        let logits = engine.forward(&img)?;
+        let dt = t3.elapsed();
+        println!(
+            "  forward(224x224) in {dt:?} → {} logits (argmax {})",
+            logits.len(),
+            logits
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap()
+        );
+        println!(
+            "  note: this is CPU-PJRT wallclock of the numerics path; the paper's\n\
+             \x20 9 ms is the simulated U200 — see `accelerator_sim` for that row."
+        );
+    }
+    println!("\nvgg16_e2e OK");
+    Ok(())
+}

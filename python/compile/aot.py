@@ -1,0 +1,128 @@
+"""AOT pipeline: lower every distinct layer shape of every model variant to
+XLA HLO **text** and write artifacts/manifest.json for the Rust runtime.
+
+HLO text — NOT ``lowered.compile().serialize()`` and NOT the proto bytes —
+is the interchange format: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which the image's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).  Lowered with ``return_tuple=True``
+so the Rust side unwraps with ``to_tuple1()``.
+
+Run via ``make artifacts`` (a no-op when inputs are unchanged):
+
+    cd python && python -m compile.aot --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange).
+
+    ``print_large_constants=True`` is load-bearing: the default printer
+    elides big constants as ``constant({...})``, which the consuming XLA
+    0.5.1 text parser silently reads back as *zeros* — the DFT matrices
+    (64 floats each) vanish and every output becomes 0. Cost: ~4 KB per
+    artifact.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    text = comp.as_hlo_text(print_large_constants=True)
+    assert "constant({...})" not in text, "elided constant survived printing"
+    return text
+
+
+def shape_file(t: int, m: int, n: int, k: int) -> str:
+    return f"conv_t{t}_c{m}x{n}_k{k}.hlo.txt"
+
+
+def lower_shape(t: int, m: int, n: int, k: int, mode: str) -> str:
+    fn, args = M.layer_fn(t, m, n, k, mode=mode)
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def build(out_dir: str, mode: str, only=None, verbose: bool = True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "format": "hlo-text-v1",
+        "fft_size": M.FFT_SIZE,
+        "kernel_k": M.KERNEL_K,
+        "tile": M.TILE,
+        "hadamard_mode": mode,
+        "word_bytes": 2,  # paper's 16-bit fixed point for the bandwidth model
+        "variants": {},
+        "executables": {},
+    }
+    lowered_shapes = {}
+    for name, var in M.variants().items():
+        if only and name not in only:
+            continue
+        vman = {
+            "input_hw": var.input_hw,
+            "input_c": var.input_c,
+            "fc": list(var.fc),
+            "layers": [],
+        }
+        for lyr in var.layers:
+            key = lyr.shape_key()
+            fname = shape_file(*key, M.FFT_SIZE)
+            if key not in lowered_shapes:
+                t0 = time.time()
+                text = lower_shape(*key, M.FFT_SIZE, mode)
+                path = os.path.join(out_dir, fname)
+                with open(path, "w") as f:
+                    f.write(text)
+                lowered_shapes[key] = fname
+                manifest["executables"][fname] = {
+                    "tiles": key[0], "cin": key[1], "cout": key[2],
+                    "fft_size": M.FFT_SIZE,
+                    "sha256": hashlib.sha256(text.encode()).hexdigest(),
+                    "bytes": len(text),
+                }
+                if verbose:
+                    print(f"  lowered {fname:34s} "
+                          f"({len(text) / 1e6:.2f} MB, {time.time() - t0:.1f}s)",
+                          file=sys.stderr)
+            vman["layers"].append({
+                "name": lyr.name,
+                "cin": lyr.cin, "cout": lyr.cout, "h": lyr.h,
+                "tiles": lyr.tiles, "pool_after": lyr.pool_after,
+                "file": lowered_shapes[key],
+            })
+        manifest["variants"][name] = vman
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--mode", default="batched",
+                    choices=("mxu4", "karatsuba", "batched", "batched_karatsuba"))
+    ap.add_argument("--only", nargs="*", default=None,
+                    help="restrict to named variants (default: all)")
+    args = ap.parse_args()
+    t0 = time.time()
+    man = build(args.out, args.mode, args.only)
+    n = len(man["executables"])
+    print(f"wrote {n} executables + manifest.json to {args.out} "
+          f"in {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,135 @@
+"""Pure-jnp oracles for the spectral pipeline.
+
+Everything here is reference-grade and deliberately naive; pytest checks the
+Pallas kernel and the full AOT'd layer function against these.  The tiling /
+overlap-and-add helpers are also the executable specification that the Rust
+coordinator's ``fft::{im2tiles, overlap_add}`` mirrors exactly.
+
+Conventions (match DESIGN.md and rust/src/fft/):
+  * CNN convolution is cross-correlation with 'SAME' zero padding
+    (pad = (k-1)/2, stride 1).
+  * OaA tile size  h' = K - k + 1  (paper: K=8, k=3 → h'=6).
+  * Spectral kernel  W~[n,m] = FFT2( zeropad_K( flip2(W[n,m]) ) );
+    flipping turns cross-correlation into linear convolution.
+  * Output tile = Re( IFFT2( FFT2(tile) ∘ W~ ) )  — the K-point circular
+    convolution equals the (h'+k-1)-point linear convolution exactly.
+  * Full-conv accumulation buffer has side  Hp + k - 1  (Hp = H padded up to
+    a multiple of h'); the 'SAME' output is the crop starting at
+    offset = k - 1 - pad.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "hadamard_ref",
+    "conv2d_same_ref",
+    "spectral_kernels",
+    "im2tiles",
+    "overlap_add",
+    "spectral_conv_ref",
+    "tiles_per_side",
+]
+
+
+def hadamard_ref(xr, xi, wr, wi):
+    """Oracle for kernels.spectral_hadamard: einsum complex matmul.
+
+    xr/xi: [F, T, M]; wr/wi: [F, M, N] → (yr, yi): [F, T, N].
+    """
+    x = xr + 1j * xi
+    w = wr + 1j * wi
+    y = jnp.einsum("ftm,fmn->ftn", x, w)
+    return jnp.real(y).astype(jnp.float32), jnp.imag(y).astype(jnp.float32)
+
+
+def conv2d_same_ref(x, w):
+    """Spatial ground truth: 'SAME' cross-correlation.
+
+    x: [M, H, W]; w: [N, M, k, k] → [N, H, W].
+    """
+    out = jax.lax.conv_general_dilated(
+        x[None],  # [1, M, H, W]
+        w,
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return out[0]
+
+
+def spectral_kernels(w, fft_size: int):
+    """Spatial [N, M, k, k] → spectral planes ([N,M,K,K], [N,M,K,K]).
+
+    Flip (cross-correlation → convolution), zero-pad to K, FFT2.
+    """
+    wf = jnp.flip(w, axis=(-2, -1))
+    n, m, k, _ = w.shape
+    pad = fft_size - k
+    wp = jnp.pad(wf, ((0, 0), (0, 0), (0, pad), (0, pad)))
+    ws = jnp.fft.fft2(wp)
+    return (jnp.real(ws).astype(jnp.float32),
+            jnp.imag(ws).astype(jnp.float32))
+
+
+def tiles_per_side(h: int, tile: int) -> int:
+    """ceil(h / tile) — number of OaA tiles along one spatial dimension."""
+    return -(-h // tile)
+
+
+def im2tiles(x, tile: int, fft_size: int):
+    """Partition [M, H, W] into zero-padded K x K tiles: [T, M, K, K].
+
+    Tiles are laid out row-major over the (ty, tx) grid; the input is
+    zero-padded up to a multiple of ``tile`` first.  T = tiles_per_side(H)
+    * tiles_per_side(W).
+    """
+    m, h, w = x.shape
+    th, tw = tiles_per_side(h, tile), tiles_per_side(w, tile)
+    xp = jnp.pad(x, ((0, 0), (0, th * tile - h), (0, tw * tile - w)))
+    # [M, th, tile, tw, tile] -> [th, tw, M, tile, tile]
+    xt = xp.reshape(m, th, tile, tw, tile).transpose(1, 3, 0, 2, 4)
+    xt = xt.reshape(th * tw, m, tile, tile)
+    pad = fft_size - tile
+    return jnp.pad(xt, ((0, 0), (0, 0), (0, pad), (0, pad)))
+
+
+def overlap_add(tiles, h: int, w: int, tile: int, k: int, pad: int):
+    """Overlap-add output tiles [T, N, K, K] back to 'SAME' output [N, H, W].
+
+    Each tile holds the full linear convolution (length tile + k - 1 = K) of
+    its input tile; tiles are added at stride ``tile`` and the result is
+    cropped at offset ``k - 1 - pad``.
+    """
+    t, n, kk, _ = tiles.shape
+    th, tw = tiles_per_side(h, tile), tiles_per_side(w, tile)
+    full = np.zeros((n, th * tile + k - 1, tw * tile + k - 1), np.float32)
+    tiles = np.asarray(tiles)
+    for ty in range(th):
+        for tx in range(tw):
+            tl = tiles[ty * tw + tx]
+            full[:, ty * tile:ty * tile + kk, tx * tile:tx * tile + kk] += tl
+    off = k - 1 - pad
+    return jnp.asarray(full[:, off:off + h, off:off + w])
+
+
+def spectral_conv_ref(x, w, fft_size: int = 8):
+    """End-to-end spectral 'SAME' conv oracle (pure jnp + python OaA).
+
+    x: [M, H, W]; w: [N, M, k, k] → [N, H, W].  Must equal conv2d_same_ref
+    up to fp error; pytest asserts this, proving the OaA geometry.
+    """
+    n, m, k, _ = w.shape
+    pad = (k - 1) // 2
+    tile = fft_size - k + 1
+    _, h, wdt = x.shape
+    tiles = im2tiles(x, tile, fft_size)
+    xs = jnp.fft.fft2(tiles)  # [T, M, K, K] complex
+    wr, wi = spectral_kernels(w, fft_size)
+    ws = wr + 1j * wi
+    ys = jnp.einsum("tmij,nmij->tnij", xs, ws)
+    out_tiles = jnp.real(jnp.fft.ifft2(ys)).astype(jnp.float32)
+    return overlap_add(out_tiles, h, wdt, tile, k, pad)

@@ -1,0 +1,187 @@
+"""L1 Pallas kernel: frequency-batched complex Hadamard-accumulate.
+
+The paper's compute hot spot (Eq 3) is, per spectral frequency point f:
+
+    Y[t, n, f] = sum_m  X[t, m, f] * W[n, m, f]        (complex)
+
+i.e. for each of the F = K*K frequency points, a dense complex matmul
+[T x M] @ [M x N] over input channels M.  The FPGA realizes this as an
+N' x P' array of complex MACs fed from BRAM replicas; on TPU the natural
+mapping is the MXU: we grid over frequency points and issue real matmuls
+per grid step (see DESIGN.md "Hardware-Adaptation").
+
+Complex numbers cross the kernel boundary as separate real/imag f32
+planes (the AOT interchange keeps all boundary buffers real-typed).
+
+Two complex-product decompositions are provided:
+
+  * ``mxu4``      — 4 real matmuls (xr@wr - xi@wi, xr@wi + xi@wr).
+  * ``karatsuba`` — 3 real matmuls (m1 = xr@wr, m2 = xi@wi,
+                    m3 = (xr+xi)@(wr+wi); yr = m1-m2, yi = m3-m1-m2).
+                    Trades one MXU pass for two VPU adds; the better
+                    choice is measured in the §Perf pass.
+
+Pallas runs with ``interpret=True`` — the CPU PJRT plugin cannot execute
+Mosaic custom-calls; interpret mode lowers the kernel to plain HLO so the
+same artifact runs anywhere.  Block shapes are still chosen as they would
+be for a real TPU lowering (one frequency slab resident in VMEM).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["spectral_hadamard", "MODES"]
+
+MODES = ("mxu4", "karatsuba", "batched", "batched_karatsuba")
+
+
+def _kernel_mxu4(xr_ref, xi_ref, wr_ref, wi_ref, yr_ref, yi_ref):
+    """One grid step = one frequency point: complex [T,M] @ [M,N]."""
+    xr = xr_ref[0]
+    xi = xi_ref[0]
+    wr = wr_ref[0]
+    wi = wi_ref[0]
+    dot = functools.partial(jnp.dot, preferred_element_type=jnp.float32)
+    yr_ref[0] = dot(xr, wr) - dot(xi, wi)
+    yi_ref[0] = dot(xr, wi) + dot(xi, wr)
+
+
+def _kernel_karatsuba(xr_ref, xi_ref, wr_ref, wi_ref, yr_ref, yi_ref):
+    """3-matmul complex product (Karatsuba); fewer MXU passes."""
+    xr = xr_ref[0]
+    xi = xi_ref[0]
+    wr = wr_ref[0]
+    wi = wi_ref[0]
+    dot = functools.partial(jnp.dot, preferred_element_type=jnp.float32)
+    m1 = dot(xr, wr)
+    m2 = dot(xi, wi)
+    m3 = dot(xr + xi, wr + wi)
+    yr_ref[0] = m1 - m2
+    yi_ref[0] = m3 - m1 - m2
+
+
+_KERNELS = {"mxu4": _kernel_mxu4, "karatsuba": _kernel_karatsuba}
+
+# Frequency-batched dot_general: contract over M with F as a batch dim.
+_BATCH_DN = (((2,), (1,)), ((0,), (0,)))
+
+
+def _kernel_batched(xr_ref, xi_ref, wr_ref, wi_ref, yr_ref, yi_ref):
+    """Single grid step: one batched complex matmul over all F points.
+
+    §Perf (EXPERIMENTS.md): under interpret=True on CPU-PJRT, the per-
+    frequency grid loop costs ~40× more than one batched dot_general (loop
+    overhead + per-step output copies dominate the tiny [T,M]@[M,N]
+    matmuls). This variant is the AOT default; the grid variants above
+    express the per-frequency-slab VMEM schedule a real TPU lowering would
+    use and pin the numerics (tests assert all modes agree).
+    """
+    dot = functools.partial(
+        jax.lax.dot_general,
+        dimension_numbers=_BATCH_DN,
+        preferred_element_type=jnp.float32,
+    )
+    xr = xr_ref[...]
+    xi = xi_ref[...]
+    wr = wr_ref[...]
+    wi = wi_ref[...]
+    yr_ref[...] = dot(xr, wr) - dot(xi, wi)
+    yi_ref[...] = dot(xr, wi) + dot(xi, wr)
+
+
+def _kernel_batched_karatsuba(xr_ref, xi_ref, wr_ref, wi_ref, yr_ref, yi_ref):
+    """Batched 3-matmul complex product."""
+    dot = functools.partial(
+        jax.lax.dot_general,
+        dimension_numbers=_BATCH_DN,
+        preferred_element_type=jnp.float32,
+    )
+    xr = xr_ref[...]
+    xi = xi_ref[...]
+    wr = wr_ref[...]
+    wi = wi_ref[...]
+    m1 = dot(xr, wr)
+    m2 = dot(xi, wi)
+    m3 = dot(xr + xi, wr + wi)
+    yr_ref[...] = m1 - m2
+    yi_ref[...] = m3 - m1 - m2
+
+
+_BATCHED_KERNELS = {
+    "batched": _kernel_batched,
+    "batched_karatsuba": _kernel_batched_karatsuba,
+}
+
+
+def spectral_hadamard(xr, xi, wr, wi, *, mode: str = "mxu4",
+                      interpret: bool = True):
+    """Complex Hadamard-accumulate over input channels, batched by frequency.
+
+    Args:
+      xr, xi: ``[F, T, M]`` f32 — real/imag planes of the FFT'd input tiles,
+        frequency-major (F = K*K frequency points, T tiles, M input channels).
+      wr, wi: ``[F, M, N]`` f32 — real/imag planes of the spectral kernels
+        (N output channels).  Pruned kernels carry explicit zeros; sparsity
+        *scheduling* is a coordinator concern (cycle counts), not a numerics
+        one.
+      mode: complex-product decomposition, one of ``MODES``.
+      interpret: must remain True for CPU-PJRT execution (see module doc).
+
+    Returns:
+      ``(yr, yi)``: ``[F, T, N]`` f32 planes of the spectral output tiles.
+    """
+    if mode not in MODES:
+        raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+    f, t, m = xr.shape
+    fw, mw, n = wr.shape
+    if xr.shape != xi.shape or wr.shape != wi.shape:
+        raise ValueError("real/imag plane shapes must match")
+    if fw != f or mw != m:
+        raise ValueError(
+            f"kernel planes [F={fw},M={mw},N={n}] incompatible with "
+            f"input planes [F={f},T={t},M={m}]")
+
+    if mode in _BATCHED_KERNELS:
+        out_shape = [
+            jax.ShapeDtypeStruct((f, t, n), jnp.float32),
+            jax.ShapeDtypeStruct((f, t, n), jnp.float32),
+        ]
+        yr, yi = pl.pallas_call(
+            _BATCHED_KERNELS[mode],
+            out_shape=out_shape,
+            interpret=interpret,
+        )(xr, xi, wr, wi)
+        return yr, yi
+
+    grid = (f,)
+    x_spec = pl.BlockSpec((1, t, m), lambda i: (i, 0, 0))
+    w_spec = pl.BlockSpec((1, m, n), lambda i: (i, 0, 0))
+    y_spec = pl.BlockSpec((1, t, n), lambda i: (i, 0, 0))
+    out_shape = [
+        jax.ShapeDtypeStruct((f, t, n), jnp.float32),
+        jax.ShapeDtypeStruct((f, t, n), jnp.float32),
+    ]
+    yr, yi = pl.pallas_call(
+        _KERNELS[mode],
+        grid=grid,
+        in_specs=[x_spec, x_spec, w_spec, w_spec],
+        out_specs=[y_spec, y_spec],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(xr, xi, wr, wi)
+    return yr, yi
+
+
+def vmem_bytes(t: int, m: int, n: int) -> int:
+    """Estimated VMEM working set of one grid step (f32 words).
+
+    One frequency slab: 2x[T,M] inputs + 2x[M,N] weights + 2x[T,N] outputs.
+    Used by the DESIGN.md §Perf roofline estimate — interpret-mode wallclock
+    is *not* a TPU proxy, the structural footprint is what we optimize.
+    """
+    return 4 * (2 * t * m + 2 * m * n + 2 * t * n)

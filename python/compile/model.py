@@ -1,0 +1,224 @@
+"""L2: the spectral convolutional layer as a jittable JAX function, plus the
+model-variant registry the AOT pipeline and the Rust coordinator share.
+
+One compiled executable per distinct layer *shape* (T tiles, M in-channels,
+N out-channels, K FFT size).  The executable covers the paper's "FPGA side":
+
+    spatial tiles --2D FFT--> spectral --Hadamard (Pallas L1)--> spectral
+                 --2D IFFT--> spatial output tiles
+
+The "CPU side" (im2tiles, overlap-and-add, bias, ReLU, pooling, FC) lives in
+the Rust coordinator, mirroring the paper's CPU-FPGA split (§6: "operations
+like OaA, ReLU, Pooling, fully-connected layers are offloaded to CPU, while
+FPGA is dedicated to spectral convolutional layers").
+
+Boundary convention: all executable inputs/outputs are f32 (complex values
+never cross the AOT boundary); spectral kernels arrive as re/im planes laid
+out ``[N, M, K, K]`` exactly as the Rust side stores them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+import numpy as np
+
+from .kernels.spectral_hadamard import spectral_hadamard
+
+KERNEL_K = 3          # spatial kernel size the paper targets (VGG 3x3)
+FFT_SIZE = 8          # K — paper's chosen spectral window (§6.1)
+TILE = FFT_SIZE - KERNEL_K + 1  # h' = 6
+
+
+# ---------------------------------------------------------------------------
+# 2D DFT as matmuls (§Perf L2). For K = 8 the dense DFT-matrix product
+# (X = D x Dᵀ) beats the XLA FFT op by a wide margin on the CPU PJRT the
+# artifacts run on (xla_extension 0.5.1's FFT is serial and per-plane), and
+# it is also the canonical TPU mapping: small Fourier transforms are MXU
+# matmuls, not butterfly networks (DESIGN.md §Hardware-Adaptation).
+# ---------------------------------------------------------------------------
+
+def _dft_mats(k: int):
+    """Forward DFT matrix D (re, im) and inverse E = conj(D)/K (re, im)."""
+    idx = np.arange(k)
+    ang = -2.0 * np.pi * np.outer(idx, idx) / k
+    dr = np.cos(ang).astype(np.float32)
+    di = np.sin(ang).astype(np.float32)
+    er = (dr / k).astype(np.float32)
+    ei = (-di / k).astype(np.float32)
+    return dr, di, er, ei
+
+
+def fft2_real(x):
+    """2D DFT of real tiles ``[..., K, K]`` via D x Dᵀ → (re, im)."""
+    k = x.shape[-1]
+    dr, di, er, ei = _dft_mats(k)
+    del er, ei
+    dr = jnp.asarray(dr)
+    di = jnp.asarray(di)
+    # rows: t = D @ x  (contract x's second-to-last axis)
+    t_r = jnp.einsum("ua,...ab->...ub", dr, x)
+    t_i = jnp.einsum("ua,...ab->...ub", di, x)
+    # cols: X = t @ Dᵀ
+    x_r = jnp.einsum("...ub,vb->...uv", t_r, dr) - jnp.einsum("...ub,vb->...uv", t_i, di)
+    x_i = jnp.einsum("...ub,vb->...uv", t_r, di) + jnp.einsum("...ub,vb->...uv", t_i, dr)
+    return x_r, x_i
+
+
+def ifft2_real(y_r, y_i):
+    """Real part of the 2D inverse DFT of ``[..., K, K]`` spectral planes."""
+    k = y_r.shape[-1]
+    _, _, er, ei = _dft_mats(k)
+    er = jnp.asarray(er)
+    ei = jnp.asarray(ei)
+    t_r = jnp.einsum("ua,...ab->...ub", er, y_r) - jnp.einsum("ua,...ab->...ub", ei, y_i)
+    t_i = jnp.einsum("ua,...ab->...ub", er, y_i) + jnp.einsum("ua,...ab->...ub", ei, y_r)
+    return jnp.einsum("...ub,vb->...uv", t_r, er) - jnp.einsum("...ub,vb->...uv", t_i, ei)
+
+
+def spectral_conv_tiles(tiles, w_re, w_im, *, mode: str = "batched"):
+    """FFT → frequency-major reshape → Pallas Hadamard → IFFT.
+
+    Args:
+      tiles: ``[T, M, K, K]`` f32 zero-padded spatial input tiles.
+      w_re, w_im: ``[F, M, N]`` f32 spectral kernel planes, **frequency-
+        major**. Weights are static, so the host computes this layout once
+        at upload time — §Perf L2 (EXPERIMENTS.md): transposing the natural
+        ``[N, M, K, K]`` layout inside the graph cost ~120 ms *per request*
+        at 512×512 (67 MB strided transpose), dominating the deep layers.
+      mode: complex-product decomposition for the Pallas kernel.
+
+    Returns:
+      1-tuple of ``[T, N, K, K]`` f32 spatial output tiles (real part of the
+      IFFT; imaginary residue is fp noise since inputs/kernels derive from
+      real spatial data).
+    """
+    t, m, k, _ = tiles.shape
+    f = k * k
+    fw, mw, n = w_re.shape
+    assert fw == f and mw == m, f"kernel planes {w_re.shape} vs tiles {tiles.shape}"
+
+    xr, xi = fft2_real(tiles)  # [T, M, K, K] f32 planes (DFT-as-matmul)
+    # [T, M, K, K] -> frequency-major [F, T, M]
+    xr = xr.reshape(t, m, f).transpose(2, 0, 1)
+    xi = xi.reshape(t, m, f).transpose(2, 0, 1)
+
+    yr, yi = spectral_hadamard(xr, xi, w_re, w_im, mode=mode)
+
+    # [F, T, N] -> [T, N, K, K]
+    yr = yr.transpose(1, 2, 0).reshape(t, n, k, k)
+    yi = yi.transpose(1, 2, 0).reshape(t, n, k, k)
+    out = ifft2_real(yr, yi)
+    return (out,)
+
+
+def layer_fn(t: int, m: int, n: int, k: int = FFT_SIZE, mode: str = "batched"):
+    """Jittable function + example args for one layer shape (for lowering)."""
+    tiles = jax.ShapeDtypeStruct((t, m, k, k), jnp.float32)
+    w = jax.ShapeDtypeStruct((k * k, m, n), jnp.float32)  # frequency-major
+
+    def fn(tiles, w_re, w_im):
+        return spectral_conv_tiles(tiles, w_re, w_im, mode=mode)
+
+    return fn, (tiles, w, w)
+
+
+def to_freq_major(w_planes):
+    """Host-side helper: ``[N, M, K, K]`` plane → frequency-major
+    ``[F, M, N]`` (the executable input layout). Mirrored by the Rust
+    engine's `freq_major_planes`."""
+    n, m, k, _ = w_planes.shape
+    return jnp.asarray(w_planes).reshape(n, m, k * k).transpose(2, 1, 0)
+
+
+def tiles_per_side(h: int, tile: int = TILE) -> int:
+    return -(-h // tile)
+
+
+# ---------------------------------------------------------------------------
+# Model-variant registry (shared vocabulary with the Rust coordinator via
+# artifacts/manifest.json)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ConvLayer:
+    """One convolutional layer instance inside a variant."""
+    name: str
+    cin: int
+    cout: int
+    h: int              # spatial side at this layer's input
+    pool_after: bool    # 2x2/stride-2 maxpool follows (handled in Rust)
+
+    @property
+    def tiles(self) -> int:
+        s = tiles_per_side(self.h)
+        return s * s
+
+    def shape_key(self) -> Tuple[int, int, int]:
+        """Executable dedup key: layers sharing (T, M, N) share an HLO."""
+        return (self.tiles, self.cin, self.cout)
+
+
+@dataclasses.dataclass(frozen=True)
+class Variant:
+    name: str
+    input_hw: int
+    input_c: int
+    layers: Tuple[ConvLayer, ...]
+    fc: Tuple[int, ...]   # FC widths after flatten (Rust-side)
+
+    def unique_shapes(self) -> List[Tuple[int, int, int]]:
+        seen, out = set(), []
+        for l in self.layers:
+            k = l.shape_key()
+            if k not in seen:
+                seen.add(k)
+                out.append(k)
+        return out
+
+
+def _vgg16_convs(h0: int) -> Tuple[ConvLayer, ...]:
+    """The 13 VGG16 conv layers with the 5 pool boundaries, at input side h0."""
+    plan = [  # (block, n_convs, cout)
+        (1, 2, 64), (2, 2, 128), (3, 3, 256), (4, 3, 512), (5, 3, 512),
+    ]
+    layers: List[ConvLayer] = []
+    h, cin = h0, 3
+    for blk, reps, cout in plan:
+        for i in range(reps):
+            layers.append(ConvLayer(
+                name=f"conv{blk}_{i + 1}",
+                cin=cin, cout=cout, h=h,
+                pool_after=(i == reps - 1),
+            ))
+            cin = cout
+        h //= 2
+    return tuple(layers)
+
+
+def variants() -> Dict[str, Variant]:
+    """All AOT model variants (see DESIGN.md 'Artifact variants')."""
+    return {
+        "demo": Variant(
+            name="demo", input_hw=16, input_c=1,
+            layers=(
+                ConvLayer("conv1", 1, 8, 16, pool_after=True),
+                ConvLayer("conv2", 8, 8, 8, pool_after=True),
+            ),
+            fc=(32, 10),
+        ),
+        "vgg16-cifar": Variant(
+            name="vgg16-cifar", input_hw=32, input_c=3,
+            layers=_vgg16_convs(32),
+            fc=(256, 10),
+        ),
+        "vgg16-224": Variant(
+            name="vgg16-224", input_hw=224, input_c=3,
+            layers=_vgg16_convs(224),
+            fc=(4096, 4096, 1000),
+        ),
+    }

@@ -1,0 +1,56 @@
+"""AOT pipeline: HLO text emission + manifest schema (demo variant only —
+keeps pytest fast; the full build is exercised by ``make artifacts``)."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, model as M
+
+
+@pytest.fixture(scope="module")
+def demo_build(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    man = aot.build(str(out), mode="mxu4", only=["demo"], verbose=False)
+    return str(out), man
+
+
+def test_manifest_schema(demo_build):
+    out, man = demo_build
+    assert man["format"] == "hlo-text-v1"
+    assert man["fft_size"] == M.FFT_SIZE and man["tile"] == M.TILE
+    assert "demo" in man["variants"]
+    demo = man["variants"]["demo"]
+    assert demo["input_hw"] == 16 and demo["fc"] == [32, 10]
+    assert [l["name"] for l in demo["layers"]] == ["conv1", "conv2"]
+    # every referenced file exists and is registered
+    for lyr in demo["layers"]:
+        assert lyr["file"] in man["executables"]
+        assert os.path.exists(os.path.join(out, lyr["file"]))
+
+
+def test_hlo_text_shape(demo_build):
+    out, man = demo_build
+    lyr = man["variants"]["demo"]["layers"][0]
+    text = open(os.path.join(out, lyr["file"])).read()
+    # DFT runs as DFT-matrix matmuls (§Perf L2), so the module contains dot
+    # ops and no fft custom-call
+    assert "ENTRY" in text and "dot(" in text
+    # three f32 params: tiles [T,M,K,K]; w planes frequency-major [F,M,N]
+    t, m, n, k = lyr["tiles"], lyr["cin"], lyr["cout"], man["fft_size"]
+    assert f"f32[{t},{m},{k},{k}]" in text
+    assert f"f32[{k * k},{m},{n}]" in text
+
+
+def test_manifest_json_roundtrip(demo_build):
+    out, _ = demo_build
+    man = json.load(open(os.path.join(out, "manifest.json")))
+    for fname, meta in man["executables"].items():
+        assert meta["bytes"] > 0 and len(meta["sha256"]) == 64
+
+
+def test_shape_dedup(demo_build):
+    _, man = demo_build
+    # demo has 2 distinct shapes → exactly 2 executables
+    assert len(man["executables"]) == 2

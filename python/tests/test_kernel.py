@@ -1,0 +1,102 @@
+"""L1 correctness: Pallas spectral_hadamard vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes; fixed cases pin the paper's operating points
+(K=8 → F=64, VGG channel widths).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels.ref import hadamard_ref
+from compile.kernels.spectral_hadamard import spectral_hadamard, vmem_bytes, MODES
+
+
+def _rand(shape, seed):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal(shape, dtype=np.float32)
+
+
+def _run_case(f, t, m, n, mode, seed=0):
+    xr, xi = _rand((f, t, m), seed), _rand((f, t, m), seed + 1)
+    wr, wi = _rand((f, m, n), seed + 2), _rand((f, m, n), seed + 3)
+    yr, yi = spectral_hadamard(xr, xi, wr, wi, mode=mode)
+    er, ei = hadamard_ref(xr, xi, wr, wi)
+    np.testing.assert_allclose(yr, er, rtol=1e-4, atol=1e-4 * m)
+    np.testing.assert_allclose(yi, ei, rtol=1e-4, atol=1e-4 * m)
+    assert yr.dtype == jnp.float32 and yi.dtype == jnp.float32
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_paper_operating_point(mode):
+    """F=64 (K=8), a VGG-ish channel slice."""
+    _run_case(64, 9, 16, 32, mode)
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_single_everything(mode):
+    _run_case(1, 1, 1, 1, mode)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    f=st.sampled_from([1, 4, 16, 64]),
+    t=st.integers(1, 8),
+    m=st.integers(1, 24),
+    n=st.integers(1, 24),
+    mode=st.sampled_from(MODES),
+    seed=st.integers(0, 2**16),
+)
+def test_hypothesis_shape_sweep(f, t, m, n, mode, seed):
+    _run_case(f, t, m, n, mode, seed)
+
+
+def test_pruned_kernels_zero_channels():
+    """Explicit zeros in the kernel planes behave exactly as pruning."""
+    f, t, m, n = 16, 3, 8, 8
+    xr, xi = _rand((f, t, m), 0), _rand((f, t, m), 1)
+    wr, wi = _rand((f, m, n), 2), _rand((f, m, n), 3)
+    mask = (np.random.default_rng(4).random((f, m, n)) < 0.25).astype(np.float32)
+    yr, yi = spectral_hadamard(xr, xi, wr * mask, wi * mask)
+    er, ei = hadamard_ref(xr, xi, wr * mask, wi * mask)
+    np.testing.assert_allclose(yr, er, rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(yi, ei, rtol=1e-4, atol=1e-3)
+
+
+def test_modes_agree():
+    """mxu4 and karatsuba are algebraically identical."""
+    f, t, m, n = 64, 4, 12, 12
+    xr, xi = _rand((f, t, m), 10), _rand((f, t, m), 11)
+    wr, wi = _rand((f, m, n), 12), _rand((f, m, n), 13)
+    y1 = spectral_hadamard(xr, xi, wr, wi, mode="mxu4")
+    y2 = spectral_hadamard(xr, xi, wr, wi, mode="karatsuba")
+    np.testing.assert_allclose(y1[0], y2[0], rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(y1[1], y2[1], rtol=1e-4, atol=1e-3)
+
+
+def test_bad_shapes_rejected():
+    x = np.zeros((4, 2, 3), np.float32)
+    w = np.zeros((4, 5, 2), np.float32)  # M mismatch (5 != 3)
+    with pytest.raises(ValueError):
+        spectral_hadamard(x, x, w, w)
+    with pytest.raises(ValueError):
+        spectral_hadamard(x, x, np.zeros((4, 3, 2), np.float32),
+                          np.zeros((4, 3, 2), np.float32), mode="nope")
+
+
+def test_linearity():
+    """Hadamard is linear in X: f(aX) == a f(X)."""
+    f, t, m, n = 16, 2, 4, 4
+    xr, xi = _rand((f, t, m), 20), _rand((f, t, m), 21)
+    wr, wi = _rand((f, m, n), 22), _rand((f, m, n), 23)
+    y1 = spectral_hadamard(2.0 * xr, 2.0 * xi, wr, wi)
+    y2 = spectral_hadamard(xr, xi, wr, wi)
+    np.testing.assert_allclose(y1[0], 2.0 * np.asarray(y2[0]), rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(y1[1], 2.0 * np.asarray(y2[1]), rtol=1e-4, atol=1e-3)
+
+
+def test_vmem_estimate_paper_point():
+    """Structural VMEM footprint at the paper's conv4/5 shape fits VMEM."""
+    assert vmem_bytes(t=25, m=512, n=512) < 16 * 2**20

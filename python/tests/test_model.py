@@ -1,0 +1,106 @@
+"""L2 correctness: the spectral conv layer (tiling + FFT + Pallas Hadamard +
+IFFT + OaA) equals spatial 'SAME' convolution, and the variant registry is
+self-consistent with the Rust coordinator's expectations.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile import model as M
+from compile.kernels import ref
+
+
+def _rand(shape, seed):
+    return np.random.default_rng(seed).standard_normal(shape, dtype=np.float32)
+
+
+def _spectral_same_conv(x, w, mode="mxu4"):
+    """Full pipeline as the Rust coordinator drives it: ref tiling → the
+    jittable layer fn (the thing that gets AOT'd) → ref overlap-add."""
+    n, m, k, _ = w.shape
+    pad = (k - 1) // 2
+    _, h, wdt = x.shape
+    tiles = ref.im2tiles(x, M.TILE, M.FFT_SIZE)
+    wr, wi = ref.spectral_kernels(w, M.FFT_SIZE)
+    (out_tiles,) = M.spectral_conv_tiles(
+        jnp.asarray(tiles), M.to_freq_major(wr), M.to_freq_major(wi), mode=mode)
+    return ref.overlap_add(np.asarray(out_tiles), h, wdt, M.TILE, k, pad)
+
+
+@pytest.mark.parametrize("mode", ("mxu4", "karatsuba"))
+def test_layer_matches_spatial_conv(mode):
+    x = _rand((4, 12, 12), 0)
+    w = _rand((6, 4, 3, 3), 1) * 0.2
+    got = _spectral_same_conv(x, w, mode)
+    want = ref.conv2d_same_ref(x, w)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_ref_pipeline_matches_spatial_conv():
+    """The pure-jnp spectral oracle itself is validated against lax.conv."""
+    x = _rand((3, 14, 14), 2)
+    w = _rand((5, 3, 3, 3), 3) * 0.2
+    got = ref.spectral_conv_ref(x, w, fft_size=8)
+    want = ref.conv2d_same_ref(x, w)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    h=st.integers(4, 20),
+    m=st.integers(1, 6),
+    n=st.integers(1, 6),
+    seed=st.integers(0, 2**16),
+)
+def test_hypothesis_layer_sizes(h, m, n, seed):
+    """Sweep odd sizes incl. non-multiples of the tile (edge padding path)."""
+    x = _rand((m, h, h), seed)
+    w = _rand((n, m, 3, 3), seed + 1) * 0.3
+    got = _spectral_same_conv(x, w)
+    want = ref.conv2d_same_ref(x, w)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_tile_geometry_paper_points():
+    """Paper geometry: K=8, k=3 → h'=6; VGG16-224 tile counts per layer."""
+    assert M.TILE == 6 and M.FFT_SIZE == 8
+    sides = {224: 38, 112: 19, 56: 10, 28: 5, 14: 3}
+    for h, s in sides.items():
+        assert M.tiles_per_side(h) == s
+
+
+def test_vgg16_variant_structure():
+    v = M.variants()["vgg16-224"]
+    assert len(v.layers) == 13
+    assert v.layers[0].name == "conv1_1" and v.layers[0].cin == 3
+    assert v.layers[-1].name == "conv5_3" and v.layers[-1].cout == 512
+    assert sum(l.pool_after for l in v.layers) == 5
+    # distinct executables for the 224 variant: 9 shapes
+    assert len(v.unique_shapes()) == 9
+    # spatial sides halve at pool boundaries
+    hs = [l.h for l in v.layers]
+    assert hs == [224, 224, 112, 112, 56, 56, 56, 28, 28, 28, 14, 14, 14]
+
+
+def test_cifar_variant_structure():
+    v = M.variants()["vgg16-cifar"]
+    assert len(v.layers) == 13
+    hs = [l.h for l in v.layers]
+    assert hs == [32, 32, 16, 16, 8, 8, 8, 4, 4, 4, 2, 2, 2]
+    # conv5 at h=2 and conv4_2/3 at h=4 share T=1,512,512 → dedup works
+    assert (1, 512, 512) in v.unique_shapes()
+
+
+def test_flatten_dims_consistent():
+    """Post-pool flatten width feeds the Rust FC layers."""
+    for name, v in M.variants().items():
+        h = v.input_hw
+        for l in v.layers:
+            assert l.h == h
+            if l.pool_after:
+                h //= 2
+        flat = v.layers[-1].cout * h * h
+        assert flat > 0, name

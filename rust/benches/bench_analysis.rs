@@ -1,0 +1,92 @@
+//! Bench E1/E3 — regenerates Fig. 2 (fixed-flow complexity) and Fig. 7
+//! (fixed vs flexible) and times the analysis kernels.
+//!
+//! ```bash
+//! cargo bench --bench bench_analysis [-- --quick]
+//! ```
+
+use spectral_flow::analysis::{
+    bram_flow, transfers_flow, transfers_flow2, ArchParams, Flow, LayerParams,
+};
+use spectral_flow::dataflow::{optimize_network_at, OptimizerConfig};
+use spectral_flow::model::Network;
+use spectral_flow::report::Table;
+use spectral_flow::util::bench::{quick_requested, Bench};
+
+fn main() {
+    let mut b = if quick_requested() { Bench::quick() } else { Bench::new() };
+    let net = Network::vgg16_224();
+    let arch = ArchParams::paper();
+
+    println!("\n--- Fig 2: per-layer complexity of the three fixed flows ---");
+    let mut fig2 = Table::new(
+        "Fig 2 — VGG16 K=8 α=4 (transfers MB / BRAMs)",
+        &["layer", "xfer F1", "xfer F2", "xfer F3", "bram F1", "bram F2", "bram F3"],
+    );
+    for conv in net.optimized_convs() {
+        let l = LayerParams::from_layer(conv, 4);
+        let mut cells = vec![conv.name.clone()];
+        for f in Flow::ALL {
+            cells.push(format!("{:.1}", transfers_flow(f, &l, &arch).total() as f64 * 2.0 / 1e6));
+        }
+        for f in Flow::ALL {
+            cells.push(bram_flow(f, &l, &arch).to_string());
+        }
+        fig2.row(cells);
+    }
+    println!("{}", fig2.render());
+    let _ = fig2.save_csv("fig2");
+
+    println!("--- Fig 7: flexible vs fixed transfers ---");
+    let cfg = OptimizerConfig::paper();
+    let plan = optimize_network_at(&net, arch, &cfg).expect("feasible");
+    let mut fig7 = Table::new(
+        "Fig 7 — transfers MB: Flow#1 / Flow#2 / Flow opt",
+        &["layer", "Flow#1", "Flow#2", "Flow opt"],
+    );
+    let (mut tot1, mut tot2, mut toto) = (0u64, 0u64, 0u64);
+    for lp in &plan.layers {
+        let f1 = transfers_flow(Flow::ReuseKernels, &lp.params, &arch).total();
+        let f2 = transfers_flow2(&lp.params, &arch).total();
+        let fo = lp.transfers.total();
+        tot1 += f1;
+        tot2 += f2;
+        toto += fo;
+        fig7.row(vec![
+            lp.layer_name.clone(),
+            format!("{:.1}", f1 as f64 * 2.0 / 1e6),
+            format!("{:.1}", f2 as f64 * 2.0 / 1e6),
+            format!("{:.1}", fo as f64 * 2.0 / 1e6),
+        ]);
+    }
+    println!("{}", fig7.render());
+    println!(
+        "totals: Flow#1 {:.1} MB, Flow#2 {:.1} MB, opt {:.1} MB — opt saves {:.0}% vs Flow#2\n",
+        tot1 as f64 * 2.0 / 1e6,
+        tot2 as f64 * 2.0 / 1e6,
+        toto as f64 * 2.0 / 1e6,
+        100.0 * (1.0 - toto as f64 / tot2 as f64)
+    );
+
+    println!("--- timing ---");
+    let ls: Vec<LayerParams> = net
+        .optimized_convs()
+        .iter()
+        .map(|c| LayerParams::from_layer(c, 4))
+        .collect();
+    b.run("analysis/fig2_all_layers_all_flows", || {
+        let mut acc = 0u64;
+        for l in &ls {
+            for f in Flow::ALL {
+                acc += transfers_flow(f, l, &arch).total() + bram_flow(f, l, &arch);
+            }
+        }
+        acc
+    });
+    b.run("analysis/eq12_eq13_single_eval", || {
+        use spectral_flow::analysis::{bram_flex, transfers_flex, StreamParams};
+        let s = StreamParams { ns: 128, ps: 27 };
+        bram_flex(&ls[5], &arch, &s) + transfers_flex(&ls[5], &s).total()
+    });
+    let _ = b.write_csv("reports/bench_analysis.csv");
+}

@@ -1,0 +1,88 @@
+//! Bench E10 — the real-numerics end-to-end path through PJRT: per-layer
+//! executable latency, full forward passes, and the serving loop. This is
+//! the path the §Perf optimization pass iterates on (EXPERIMENTS.md §Perf).
+//!
+//! Requires `make artifacts`; exits early (successfully) without them so
+//! `cargo bench` stays green in a fresh checkout.
+//!
+//! ```bash
+//! make artifacts && cargo bench --bench bench_e2e [-- --quick]
+//! ```
+
+use std::time::{Duration, Instant};
+
+use spectral_flow::coordinator::{
+    BatcherConfig, InferenceEngine, Server, ServerConfig, WeightMode,
+};
+use spectral_flow::tensor::Tensor;
+use spectral_flow::util::bench::{quick_requested, Bench};
+use spectral_flow::util::rng::Pcg32;
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("SKIP bench_e2e: run `make artifacts` first");
+        return;
+    }
+    let quick = quick_requested();
+    let mut b = if quick { Bench::quick() } else { Bench::new() };
+
+    // ---- per-layer executable latency (demo + cifar shapes) --------------
+    let mut engine = InferenceEngine::new("artifacts", "demo", WeightMode::Dense, 42)
+        .expect("demo engine");
+    let img = engine.synthetic_image(1);
+    b.run("e2e/demo_conv_layer0_pjrt", || engine.conv_layer(0, &img).unwrap().len());
+    b.run("e2e/demo_forward", || engine.forward(&img).unwrap().len());
+
+    let t0 = Instant::now();
+    let mut cifar = InferenceEngine::new("artifacts", "vgg16-cifar", WeightMode::Pruned { alpha: 4 }, 7)
+        .expect("cifar engine");
+    b.record("e2e/cifar_engine_startup", t0.elapsed(), 1);
+    let cimg = cifar.synthetic_image(2);
+    b.run("e2e/cifar_conv1_1_pjrt", || cifar.conv_layer(0, &cimg).unwrap().len());
+    b.run("e2e/cifar_vgg16_forward", || cifar.forward(&cimg).unwrap().len());
+
+    // ---- serving throughput ----------------------------------------------
+    let server = Server::start(ServerConfig {
+        artifacts_dir: "artifacts".into(),
+        variant: "vgg16-cifar".into(),
+        mode: WeightMode::Pruned { alpha: 4 },
+        seed: 7,
+        batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(5) },
+    })
+    .expect("server");
+    let client = server.client();
+    let mut rng = Pcg32::new(5);
+    let n = if quick { 6 } else { 16 };
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..n)
+        .map(|_| client.infer_async(Tensor::randn(&[3, 32, 32], &mut rng, 1.0)).unwrap())
+        .collect();
+    for rx in rxs {
+        rx.recv().unwrap().unwrap();
+    }
+    let wall = t0.elapsed();
+    b.record("e2e/serve_cifar_batched_per_request", wall, n);
+    let m = server.metrics().expect("metrics");
+    println!(
+        "serving: {n} requests in {wall:?} → {:.2} img/s, p50 {:?}, p95 {:?}, mean batch {:.1}",
+        n as f64 / wall.as_secs_f64(),
+        m.p50().unwrap_or_default(),
+        m.p95().unwrap_or_default(),
+        m.mean_batch_size()
+    );
+    server.shutdown().unwrap();
+
+    // ---- single-image 224 (skipped in quick mode: ~seconds per pass) -----
+    if !quick {
+        let t0 = Instant::now();
+        let mut big = InferenceEngine::new("artifacts", "vgg16-224", WeightMode::Pruned { alpha: 4 }, 7)
+            .expect("224 engine");
+        println!("vgg16-224 engine up in {:?}", t0.elapsed());
+        let bimg = big.synthetic_image(3);
+        let _ = big.forward(&bimg).unwrap(); // warm
+        let t1 = Instant::now();
+        let _ = big.forward(&bimg).unwrap();
+        b.record("e2e/vgg16_224_forward_single", t1.elapsed(), 1);
+    }
+    let _ = b.write_csv("reports/bench_e2e.csv");
+}

@@ -1,0 +1,125 @@
+//! Bench E5/E6/E7 — regenerates Fig. 8 (per-layer PE utilization), Fig. 9
+//! (avg utilization vs replicas, ADMM-like kernels) and Fig. 10 (random
+//! sparsity), and times the three schedulers on the paper's group shape.
+//!
+//! ```bash
+//! cargo bench --bench bench_scheduling [-- --quick]
+//! ```
+
+use spectral_flow::model::Network;
+use spectral_flow::report::{fmt_pct, Table};
+use spectral_flow::schedule::Scheduler;
+use spectral_flow::sparse::{prune_magnitude, prune_random, SparseLayer};
+use spectral_flow::util::bench::{quick_requested, Bench};
+use spectral_flow::util::rng::Pcg32;
+
+const N_PAR: usize = 64;
+
+fn layer_util(sparse: &SparseLayer, sch: Scheduler, r: usize, samples: usize) -> f64 {
+    let total = sparse.num_groups(N_PAR) * sparse.cin;
+    let picks = Pcg32::new(7).sample_indices(total, samples.min(total));
+    let (mut reads, mut slots) = (0u64, 0u64);
+    for p in picks {
+        let (g, m) = (p / sparse.cin, p % sparse.cin);
+        let s = sch.run(&sparse.group_indices(g, N_PAR, m), r, p as u64);
+        reads += s.total_reads() as u64;
+        slots += (s.cycles() * N_PAR.min(s.num_kernels)) as u64;
+    }
+    reads as f64 / slots as f64
+}
+
+/// Sparse layers for one (α, pattern) setting — generated once and reused
+/// across every (r, scheduler) grid point (generation is ~10× the cost of
+/// scheduling a sampled instance set).
+fn gen_layers(net: &Network, alpha: usize, random: bool) -> Vec<(SparseLayer, f64)> {
+    let mut rng = Pcg32::new(2020 + alpha as u64);
+    net.optimized_convs()
+        .iter()
+        .map(|conv| {
+            let sparse = if random {
+                prune_random(conv.cout, conv.cin, conv.fft, alpha, &mut rng)
+            } else {
+                prune_magnitude(conv.cout, conv.cin, conv.fft, alpha, &mut rng)
+            };
+            (sparse, conv.spectral_macs() as f64)
+        })
+        .collect()
+}
+
+fn avg_util(layers: &[(SparseLayer, f64)], sch: Scheduler, r: usize, samples: usize) -> f64 {
+    let (mut num, mut den) = (0.0, 0.0);
+    for (sparse, w) in layers {
+        num += layer_util(sparse, sch, r, samples) * w;
+        den += w;
+    }
+    num / den
+}
+
+fn main() {
+    let quick = quick_requested();
+    let mut b = if quick { Bench::quick() } else { Bench::new() };
+    let samples = if quick { 4 } else { 10 };
+    let net = Network::vgg16_224();
+
+    // ---- Fig 8 ------------------------------------------------------------
+    let mut fig8 = Table::new(
+        "Fig 8 — PE utilization per layer (r=8, N'=64, α=4, ADMM-like)",
+        &["layer", "exact-cover", "lowest-index", "random"],
+    );
+    let mut rng = Pcg32::new(2020);
+    for conv in net.optimized_convs() {
+        let sparse = prune_magnitude(conv.cout, conv.cin, conv.fft, 4, &mut rng);
+        fig8.row(vec![
+            conv.name.clone(),
+            fmt_pct(layer_util(&sparse, Scheduler::ExactCover, 8, samples)),
+            fmt_pct(layer_util(&sparse, Scheduler::LowestIndexFirst, 8, samples)),
+            fmt_pct(layer_util(&sparse, Scheduler::Random, 8, samples)),
+        ]);
+    }
+    println!("{}", fig8.render());
+    let _ = fig8.save_csv("fig8");
+
+    // ---- Figs 9 & 10 -------------------------------------------------------
+    let rs: &[usize] = if quick { &[4, 10, 16] } else { &[4, 6, 8, 10, 12, 16, 20] };
+    for (name, random) in [("Fig 9 — ADMM-like", false), ("Fig 10 — random non-zeros", true)] {
+        let mut t = Table::new(
+            &format!("{name}: avg PE utilization vs replicas (N'=64)"),
+            &["r", "EC α=4", "LI α=4", "RD α=4", "EC α=8", "LI α=8", "RD α=8"],
+        );
+        let layers4 = gen_layers(&net, 4, random);
+        let layers8 = gen_layers(&net, 8, random);
+        for &r in rs {
+            let mut cells = vec![r.to_string()];
+            for layers in [&layers4, &layers8] {
+                for sch in Scheduler::ALL {
+                    cells.push(fmt_pct(avg_util(layers, sch, r, samples)));
+                }
+            }
+            t.row(cells);
+        }
+        println!("{}", t.render());
+        let _ = t.save_csv(if random { "fig10" } else { "fig9" });
+    }
+    println!("paper reference: EC >80% at r=10 even for α=8; LI needs r≈16.\n");
+
+    // ---- timing ------------------------------------------------------------
+    println!("--- timing (one 64-kernel group, α=4 → 16 nnz each) ---");
+    let mut rng = Pcg32::new(1);
+    let layer = prune_magnitude(64, 1, 8, 4, &mut rng);
+    let kernels = layer.group_indices(0, 64, 0);
+    b.run("schedule/exact_cover_64x16_r10", || {
+        Scheduler::ExactCover.run(&kernels, 10, 0).cycles()
+    });
+    b.run("schedule/lowest_index_64x16_r10", || {
+        Scheduler::LowestIndexFirst.run(&kernels, 10, 0).cycles()
+    });
+    b.run("schedule/random_64x16_r10", || {
+        Scheduler::Random.run(&kernels, 10, 0).cycles()
+    });
+    let rnd = prune_random(64, 1, 8, 8, &mut rng);
+    let k8 = rnd.group_indices(0, 64, 0);
+    b.run("schedule/exact_cover_64x8_r10_alpha8", || {
+        Scheduler::ExactCover.run(&k8, 10, 0).cycles()
+    });
+    let _ = b.write_csv("reports/bench_scheduling.csv");
+}

@@ -1,0 +1,103 @@
+//! Bench E8/E9 — regenerates Table 3 (device comparison on the simulated
+//! U200) and the Fig. 11 resource estimate, and times the simulator.
+//!
+//! ```bash
+//! cargo bench --bench bench_simulator [-- --quick]
+//! ```
+
+use spectral_flow::analysis::ArchParams;
+use spectral_flow::dataflow::{optimize_network_at, OptimizerConfig};
+use spectral_flow::model::Network;
+use spectral_flow::report::{fmt_gbps, fmt_ms, fmt_pct, Table};
+use spectral_flow::sim::baselines::{run_baseline, sparse_spatial_17_latency, BaselineConfig};
+use spectral_flow::sim::{estimate_resources, SimConfig};
+use spectral_flow::util::bench::{quick_requested, Bench};
+
+fn main() {
+    let quick = quick_requested();
+    let mut b = if quick { Bench::quick() } else { Bench::new() };
+    let samples = if quick { 8 } else { 24 };
+    let net = Network::vgg16_224();
+
+    let mut t3 = Table::new(
+        "Table 3 — VGG16-224 conv stack on the simulated U200",
+        &["design", "latency", "fps", "BW req", "avg PE util"],
+    );
+    for cfg in BaselineConfig::all() {
+        let res = run_baseline(&cfg, &net, Some(samples), 2020);
+        t3.row(vec![
+            cfg.name.to_string(),
+            fmt_ms(res.latency_secs()),
+            format!("{:.0}", res.throughput_fps()),
+            fmt_gbps(res.required_bandwidth()),
+            fmt_pct(res.avg_pe_utilization()),
+        ]);
+    }
+    t3.row(vec![
+        "[17]-like (sparse spatial)".into(),
+        fmt_ms(sparse_spatial_17_latency(&net, 4)),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+    ]);
+    println!("{}", t3.render());
+    let _ = t3.save_csv("table3");
+    println!("paper reference: this-work 9 ms / 112 fps / 12 GB/s; [16] 68 ms @ 9 GB/s;");
+    println!("                 [27] 250 ms; [26] 167 ms; [17] 200 ms\n");
+
+    let ocfg = OptimizerConfig::paper();
+    let plan = optimize_network_at(&net, ArchParams::paper(), &ocfg).unwrap();
+    let plans: Vec<_> = plan.layers.iter().map(|l| (l.params, l.stream)).collect();
+    let r = estimate_resources(&ArchParams::paper(), &plans, SimConfig::default().fft_butterflies_per_cycle);
+    println!("Fig 11 — resources: {}", r.utilization_report());
+    println!("paper reference:    DSP 2680/6840, BRAM 1469/2160, LUT 230K/1.2M\n");
+
+    // --- ablations: which design choice buys what ------------------------
+    // (DESIGN.md calls these out: scheduler choice and replica count at the
+    // paper's headline operating point, plus the fixed-dataflow ablation)
+    use spectral_flow::schedule::Scheduler;
+    use spectral_flow::sim::baselines::FixedStream;
+    let mut abl = Table::new(
+        "Ablations — this-work VGG16-224 with one knob changed",
+        &["config", "latency", "avg PE util", "DDR MB"],
+    );
+    let mut add = |name: &str, cfg: &BaselineConfig| {
+        let r = run_baseline(cfg, &net, Some(samples.min(12)), 2020);
+        abl.row(vec![
+            name.to_string(),
+            fmt_ms(r.latency_secs()),
+            fmt_pct(r.avg_pe_utilization()),
+            format!("{:.0}", r.total_ddr_bytes() as f64 / 1e6),
+        ]);
+    };
+    add("full (EC, r=10, flexible)", &BaselineConfig::this_work());
+    for (name, sch) in [("scheduler → lowest-index", Scheduler::LowestIndexFirst),
+                        ("scheduler → random", Scheduler::Random)] {
+        let mut c = BaselineConfig::this_work();
+        c.scheduler = sch;
+        add(name, &c);
+    }
+    for r in [6usize, 16] {
+        let mut c = BaselineConfig::this_work();
+        c.arch.replicas = r;
+        add(&format!("replicas → {r}"), &c);
+    }
+    let mut c = BaselineConfig::this_work();
+    c.fixed_stream = Some(FixedStream::StreamKernels);
+    add("dataflow → fixed stream-kernels", &c);
+    let mut c2 = BaselineConfig::this_work();
+    c2.alpha = 8;
+    add("compression → α=8", &c2);
+    println!("{}", abl.render());
+    let _ = abl.save_csv("ablations");
+
+    println!("--- timing ---");
+    b.run("sim/this_work_vgg224_sampled", || {
+        run_baseline(&BaselineConfig::this_work(), &net, Some(samples), 2020).latency_secs()
+    });
+    let cifar = Network::vgg16_cifar();
+    b.run("sim/this_work_cifar_sampled", || {
+        run_baseline(&BaselineConfig::this_work(), &cifar, Some(samples), 2020).latency_secs()
+    });
+    let _ = b.write_csv("reports/bench_simulator.csv");
+}

@@ -1,0 +1,165 @@
+//! Deadline/size-bounded request batching.
+//!
+//! The serving loop pulls individual requests from an MPSC queue and groups
+//! them into batches: a batch closes when it reaches `max_batch` requests
+//! or when `max_wait` has elapsed since its first request — the standard
+//! latency/throughput knob of serving systems. Pure logic (no threads), so
+//! it is property-testable: no request is ever dropped, duplicated, or
+//! reordered.
+
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Debug, Clone, Copy)]
+pub struct BatcherConfig {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(20) }
+    }
+}
+
+/// Incremental batch builder.
+#[derive(Debug)]
+pub struct Batcher<T> {
+    cfg: BatcherConfig,
+    pending: Vec<T>,
+    opened_at: Option<Instant>,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(cfg: BatcherConfig) -> Self {
+        assert!(cfg.max_batch >= 1);
+        Batcher { cfg, pending: Vec::new(), opened_at: None }
+    }
+
+    /// Add a request; returns a full batch if this push closed it.
+    pub fn push(&mut self, item: T, now: Instant) -> Option<Vec<T>> {
+        if self.pending.is_empty() {
+            self.opened_at = Some(now);
+        }
+        self.pending.push(item);
+        if self.pending.len() >= self.cfg.max_batch {
+            return self.take();
+        }
+        None
+    }
+
+    /// Deadline check: returns the batch if the oldest request has waited
+    /// past `max_wait`.
+    pub fn poll(&mut self, now: Instant) -> Option<Vec<T>> {
+        match self.opened_at {
+            Some(t0) if !self.pending.is_empty() && now.duration_since(t0) >= self.cfg.max_wait => {
+                self.take()
+            }
+            _ => None,
+        }
+    }
+
+    /// Flush whatever is pending (shutdown path).
+    pub fn take(&mut self) -> Option<Vec<T>> {
+        if self.pending.is_empty() {
+            return None;
+        }
+        self.opened_at = None;
+        Some(std::mem::take(&mut self.pending))
+    }
+
+    pub fn pending(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Time until the current batch's deadline (serving loop's park time).
+    pub fn time_to_deadline(&self, now: Instant) -> Option<Duration> {
+        self.opened_at.map(|t0| {
+            let elapsed = now.duration_since(t0);
+            self.cfg.max_wait.saturating_sub(elapsed)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::forall;
+
+    fn cfg(max_batch: usize, ms: u64) -> BatcherConfig {
+        BatcherConfig { max_batch, max_wait: Duration::from_millis(ms) }
+    }
+
+    #[test]
+    fn closes_on_size() {
+        let mut b = Batcher::new(cfg(3, 1000));
+        let t = Instant::now();
+        assert!(b.push(1, t).is_none());
+        assert!(b.push(2, t).is_none());
+        let batch = b.push(3, t).unwrap();
+        assert_eq!(batch, vec![1, 2, 3]);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn closes_on_deadline() {
+        let mut b = Batcher::new(cfg(100, 10));
+        let t0 = Instant::now();
+        b.push("a", t0);
+        assert!(b.poll(t0 + Duration::from_millis(5)).is_none());
+        let batch = b.poll(t0 + Duration::from_millis(11)).unwrap();
+        assert_eq!(batch, vec!["a"]);
+    }
+
+    #[test]
+    fn deadline_resets_per_batch() {
+        let mut b = Batcher::new(cfg(2, 10));
+        let t0 = Instant::now();
+        b.push(1, t0);
+        b.push(2, t0); // closes by size
+        b.take();
+        b.push(3, t0 + Duration::from_millis(50));
+        // new batch's clock starts at its own first push
+        assert!(b.poll(t0 + Duration::from_millis(55)).is_none());
+        assert!(b.poll(t0 + Duration::from_millis(61)).is_some());
+    }
+
+    #[test]
+    fn no_loss_no_dup_no_reorder() {
+        forall("batcher conservation", 100, |rng| {
+            let max_batch = rng.range(1, 10);
+            let mut b = Batcher::new(cfg(max_batch, 5));
+            let n = rng.range(1, 50);
+            let t0 = Instant::now();
+            let mut out: Vec<usize> = Vec::new();
+            let mut now = t0;
+            for i in 0..n {
+                // random time advance, sometimes past the deadline
+                now += Duration::from_millis(rng.range(0, 8) as u64);
+                if let Some(batch) = b.poll(now) {
+                    out.extend(batch);
+                }
+                if let Some(batch) = b.push(i, now) {
+                    out.extend(batch);
+                }
+            }
+            if let Some(batch) = b.take() {
+                out.extend(batch);
+            }
+            assert_eq!(out, (0..n).collect::<Vec<_>>());
+        });
+    }
+
+    #[test]
+    fn park_time_hint() {
+        let mut b = Batcher::new(cfg(10, 20));
+        let t0 = Instant::now();
+        assert!(b.time_to_deadline(t0).is_none());
+        b.push(1, t0);
+        let d = b.time_to_deadline(t0 + Duration::from_millis(5)).unwrap();
+        assert_eq!(d, Duration::from_millis(15));
+        // past deadline → zero
+        let z = b.time_to_deadline(t0 + Duration::from_millis(30)).unwrap();
+        assert_eq!(z, Duration::ZERO);
+    }
+}

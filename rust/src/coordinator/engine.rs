@@ -1,0 +1,230 @@
+//! The inference engine: drives one model variant's AOT executables through
+//! the full spectral pipeline (paper Eq. 4) plus the CPU-side head.
+//!
+//! Per conv layer (the paper's §5.1 process, CPU side in Rust):
+//!
+//! ```text
+//! im2tiles → [PJRT: FFT → Hadamard (Pallas) → IFFT] → overlap-add
+//!          → bias → ReLU → (maxpool)
+//! ```
+//!
+//! then flatten → FC stack → logits.
+
+use anyhow::{anyhow, Result};
+
+use crate::fft::{im2tiles, overlap_add, spectral_kernels, TileGeometry};
+use crate::nn;
+use crate::runtime::{Runtime, VariantEntry};
+use crate::sparse::{prune_magnitude, SparseLayer};
+use crate::tensor::{ComplexTensor, Tensor};
+use crate::util::rng::Pcg32;
+
+/// How layer weights are generated (no trained checkpoints exist for the
+/// paper's pruned spectral VGG16 — DESIGN.md "Hardware substitution").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WeightMode {
+    /// Dense spatial 3×3 kernels, FFT'd to spectral planes. Numerics are
+    /// checkable against a spatial convolution reference.
+    Dense,
+    /// Magnitude-pruned ("ADMM-like") spectral kernels at ratio α. The
+    /// spectral path is then the definition of the network.
+    Pruned { alpha: usize },
+}
+
+/// One conv layer's parameters on the engine side.
+pub struct LayerWeights {
+    /// Spectral kernel planes `[cout, cin, K, K]`.
+    pub spectral: ComplexTensor,
+    /// Spatial kernels (Dense mode only; kept for reference checking).
+    pub spatial: Option<Tensor>,
+    pub bias: Vec<f32>,
+    /// Sparse form (Pruned mode only; drives scheduling experiments).
+    pub sparse: Option<SparseLayer>,
+}
+
+/// All weights for a variant.
+pub struct Weights {
+    pub convs: Vec<LayerWeights>,
+    /// FC stack: (weight `[out, in]`, bias).
+    pub fc: Vec<(Tensor, Vec<f32>)>,
+    pub mode: WeightMode,
+}
+
+impl Weights {
+    /// Deterministic weight generation for a manifest variant.
+    pub fn generate(variant: &VariantEntry, fft: usize, k: usize, mode: WeightMode, seed: u64) -> Self {
+        let mut rng = Pcg32::new(seed);
+        let mut convs = Vec::new();
+        for l in &variant.layers {
+            let bias: Vec<f32> = (0..l.cout).map(|_| rng.normal() * 0.01).collect();
+            match mode {
+                WeightMode::Dense => {
+                    let scale = (2.0 / (l.cin * k * k) as f32).sqrt();
+                    let spatial = Tensor::randn(&[l.cout, l.cin, k, k], &mut rng, scale);
+                    let spectral = spectral_kernels(&spatial, fft);
+                    convs.push(LayerWeights { spectral, spatial: Some(spatial), bias, sparse: None });
+                }
+                WeightMode::Pruned { alpha } => {
+                    let sparse = prune_magnitude(l.cout, l.cin, fft, alpha, &mut rng);
+                    let spectral = sparse.to_dense_planes();
+                    convs.push(LayerWeights { spectral, spatial: None, bias, sparse: Some(sparse) });
+                }
+            }
+        }
+        // FC head: flatten width from the last conv + pool chain.
+        let mut side = variant.input_hw;
+        for l in &variant.layers {
+            if l.pool_after {
+                side /= 2;
+            }
+        }
+        let mut in_w = variant.layers.last().map(|l| l.cout).unwrap_or(variant.input_c) * side * side;
+        let mut fc = Vec::new();
+        for &out_w in &variant.fc {
+            let scale = (2.0 / in_w as f32).sqrt();
+            let w = Tensor::randn(&[out_w, in_w], &mut rng, scale);
+            let b: Vec<f32> = (0..out_w).map(|_| rng.normal() * 0.01).collect();
+            fc.push((w, b));
+            in_w = out_w;
+        }
+        Weights { convs, fc, mode }
+    }
+}
+
+/// The engine: runtime + weights + variant description.
+pub struct InferenceEngine {
+    runtime: Runtime,
+    pub variant_name: String,
+    pub variant: VariantEntry,
+    pub weights: Weights,
+    /// Per-layer (w_re, w_im) device buffers — uploaded once at startup
+    /// (§Perf L3: avoids a ~134 MB Literal conversion per deep-layer call).
+    weight_buffers: Vec<(xla::PjRtBuffer, xla::PjRtBuffer)>,
+    kernel_k: usize,
+    fft: usize,
+}
+
+impl InferenceEngine {
+    /// Build an engine over `artifacts/` for a named variant, pre-compiling
+    /// all of its executables.
+    pub fn new(
+        artifacts_dir: &str,
+        variant: &str,
+        mode: WeightMode,
+        seed: u64,
+    ) -> Result<Self> {
+        let mut runtime = Runtime::open(artifacts_dir)?;
+        let v = runtime.manifest.variant(variant)?.clone();
+        let fft = runtime.manifest.fft_size;
+        let k = runtime.manifest.kernel_k;
+        runtime.warm_variant(variant)?;
+        let weights = Weights::generate(&v, fft, k, mode, seed);
+        let mut weight_buffers = Vec::with_capacity(v.layers.len());
+        for (l, w) in v.layers.iter().zip(&weights.convs) {
+            // frequency-major [F, M, N] — the executable's weight layout,
+            // computed once here instead of per request inside the graph
+            let (re, im) = crate::runtime::freq_major_planes(&w.spectral);
+            let dims = [fft * fft, l.cin, l.cout];
+            weight_buffers.push((
+                runtime.upload(&re, &dims)?,
+                runtime.upload(&im, &dims)?,
+            ));
+        }
+        Ok(InferenceEngine {
+            runtime,
+            variant_name: variant.to_string(),
+            variant: v,
+            weights,
+            weight_buffers,
+            kernel_k: k,
+            fft,
+        })
+    }
+
+    pub fn fft_size(&self) -> usize {
+        self.fft
+    }
+
+    /// Run one conv layer through the PJRT executable (the "FPGA" side).
+    pub fn conv_layer(&mut self, idx: usize, x: &Tensor) -> Result<Tensor> {
+        let l = self.variant.layers[idx].clone();
+        if x.shape() != [l.cin, l.h, l.h] {
+            return Err(anyhow!(
+                "layer {} expects [{}, {}, {}], got {:?}",
+                l.name,
+                l.cin,
+                l.h,
+                l.h,
+                x.shape()
+            ));
+        }
+        let geo = TileGeometry::new(l.h, self.fft, self.kernel_k);
+        let tiles = im2tiles(x, &geo);
+        let tiles_buf = self.runtime.upload(
+            tiles.data(),
+            &[geo.num_tiles(), l.cin, self.fft, self.fft],
+        )?;
+        let (w_re, w_im) = {
+            let (a, b) = &self.weight_buffers[idx];
+            (a, b)
+        };
+        let exe = self.runtime.conv_executable(&l.file)?;
+        let out_tiles = exe.run_buffers(&tiles_buf, w_re, w_im)?;
+        let mut out = overlap_add(&out_tiles, &geo, l.cout);
+        nn::add_bias(&mut out, &self.weights.convs[idx].bias);
+        nn::relu(&mut out);
+        Ok(out)
+    }
+
+    /// Full forward pass: image `[C, H, W]` → logits.
+    pub fn forward(&mut self, image: &Tensor) -> Result<Vec<f32>> {
+        let want = [self.variant.input_c, self.variant.input_hw, self.variant.input_hw];
+        if image.shape() != want {
+            return Err(anyhow!("input shape {:?} != {:?}", image.shape(), want));
+        }
+        let mut x = image.clone();
+        for i in 0..self.variant.layers.len() {
+            x = self.conv_layer(i, &x)?;
+            if self.variant.layers[i].pool_after {
+                x = nn::maxpool2(&x);
+            }
+        }
+        let mut v = x.into_vec();
+        let n_fc = self.weights.fc.len();
+        for (i, (w, b)) in self.weights.fc.iter().enumerate() {
+            v = nn::dense(w, b, &v);
+            if i + 1 < n_fc {
+                for e in &mut v {
+                    if *e < 0.0 {
+                        *e = 0.0;
+                    }
+                }
+            }
+        }
+        Ok(v)
+    }
+
+    /// Pure-Rust spatial reference for one conv layer (Dense mode only):
+    /// the ground truth integration tests compare [`Self::conv_layer`]
+    /// against.
+    pub fn conv_layer_reference(&self, idx: usize, x: &Tensor) -> Result<Tensor> {
+        let w = self.weights.convs[idx]
+            .spatial
+            .as_ref()
+            .ok_or_else(|| anyhow!("reference path needs WeightMode::Dense"))?;
+        let mut out = nn::conv2d_same_ref(x, w);
+        nn::add_bias(&mut out, &self.weights.convs[idx].bias);
+        nn::relu(&mut out);
+        Ok(out)
+    }
+
+    /// A deterministic synthetic input image.
+    pub fn synthetic_image(&self, seed: u64) -> Tensor {
+        let mut rng = Pcg32::new(seed);
+        Tensor::randn(
+            &[self.variant.input_c, self.variant.input_hw, self.variant.input_hw],
+            &mut rng,
+            1.0,
+        )
+    }
+}

@@ -1,0 +1,132 @@
+//! Serving metrics: latency distribution + throughput.
+
+use std::time::Duration;
+
+/// Latency/throughput accumulator (single-threaded; the server owns one and
+/// snapshots it on demand).
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    latencies_us: Vec<u64>,
+    batches: u64,
+    batch_sizes: u64,
+    started: Option<std::time::Instant>,
+    finished: Option<std::time::Instant>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_request(&mut self, latency: Duration) {
+        let now = std::time::Instant::now();
+        if self.started.is_none() {
+            self.started = Some(now);
+        }
+        self.finished = Some(now);
+        self.latencies_us.push(latency.as_micros() as u64);
+    }
+
+    pub fn record_batch(&mut self, size: usize) {
+        self.batches += 1;
+        self.batch_sizes += size as u64;
+    }
+
+    pub fn count(&self) -> usize {
+        self.latencies_us.len()
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batch_sizes as f64 / self.batches as f64
+        }
+    }
+
+    fn percentile(&self, p: f64) -> Option<Duration> {
+        if self.latencies_us.is_empty() {
+            return None;
+        }
+        let mut v = self.latencies_us.clone();
+        v.sort_unstable();
+        let idx = ((v.len() - 1) as f64 * p).round() as usize;
+        Some(Duration::from_micros(v[idx]))
+    }
+
+    pub fn p50(&self) -> Option<Duration> {
+        self.percentile(0.50)
+    }
+
+    pub fn p95(&self) -> Option<Duration> {
+        self.percentile(0.95)
+    }
+
+    pub fn p99(&self) -> Option<Duration> {
+        self.percentile(0.99)
+    }
+
+    pub fn mean(&self) -> Option<Duration> {
+        if self.latencies_us.is_empty() {
+            return None;
+        }
+        let sum: u64 = self.latencies_us.iter().sum();
+        Some(Duration::from_micros(sum / self.latencies_us.len() as u64))
+    }
+
+    /// Requests/second over the observation window.
+    pub fn throughput(&self) -> f64 {
+        match (self.started, self.finished) {
+            (Some(a), Some(b)) if b > a => {
+                self.count() as f64 / b.duration_since(a).as_secs_f64()
+            }
+            _ => 0.0,
+        }
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "n={} mean={:?} p50={:?} p95={:?} p99={:?} batch={:.1} thpt={:.1}/s",
+            self.count(),
+            self.mean().unwrap_or_default(),
+            self.p50().unwrap_or_default(),
+            self.p95().unwrap_or_default(),
+            self.p99().unwrap_or_default(),
+            self.mean_batch_size(),
+            self.throughput(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_ordered() {
+        let mut m = Metrics::new();
+        for us in [100u64, 200, 300, 400, 500, 1000, 2000] {
+            m.record_request(Duration::from_micros(us));
+        }
+        assert_eq!(m.count(), 7);
+        assert!(m.p50().unwrap() <= m.p95().unwrap());
+        assert!(m.p95().unwrap() <= m.p99().unwrap());
+        assert_eq!(m.p50().unwrap(), Duration::from_micros(400));
+    }
+
+    #[test]
+    fn empty_metrics_safe() {
+        let m = Metrics::new();
+        assert!(m.p50().is_none());
+        assert_eq!(m.throughput(), 0.0);
+        assert!(m.report().contains("n=0"));
+    }
+
+    #[test]
+    fn batch_accounting() {
+        let mut m = Metrics::new();
+        m.record_batch(4);
+        m.record_batch(8);
+        assert!((m.mean_batch_size() - 6.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,23 @@
+//! Layer-3 coordinator: the serving engine around the AOT'd executables.
+//!
+//! Mirrors the paper's CPU–FPGA split at system level: the "FPGA" is the
+//! PJRT executable (spectral conv per tile batch), everything else —
+//! tiling, OaA, bias/ReLU, pooling, the FC head, request batching and
+//! metrics — runs here, in Rust, on the request path. Python exists only
+//! in the build pipeline.
+//!
+//! * [`engine`] — [`engine::InferenceEngine`]: weights + per-layer forward.
+//! * [`batcher`] — deadline/size-bounded request batching.
+//! * [`server`] — worker thread + client handles (std::thread + channels;
+//!   tokio is unavailable in the offline registry — DESIGN.md).
+//! * [`metrics`] — latency percentiles and throughput counters.
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod server;
+
+pub use batcher::{Batcher, BatcherConfig};
+pub use engine::{InferenceEngine, WeightMode, Weights};
+pub use metrics::Metrics;
+pub use server::{Server, ServerConfig};

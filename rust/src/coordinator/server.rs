@@ -1,0 +1,206 @@
+//! The serving loop: one executor thread owning the [`InferenceEngine`],
+//! fed by client handles through an MPSC channel, with deadline batching.
+//!
+//! PJRT objects hold raw FFI pointers, so the engine is constructed *inside*
+//! the worker thread and never crosses a thread boundary; clients exchange
+//! plain tensors. (tokio is unavailable offline — std::thread + channels,
+//! see DESIGN.md.)
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use super::batcher::{Batcher, BatcherConfig};
+use super::engine::{InferenceEngine, WeightMode};
+use super::metrics::Metrics;
+use crate::tensor::Tensor;
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub artifacts_dir: String,
+    pub variant: String,
+    pub mode: WeightMode,
+    pub seed: u64,
+    pub batcher: BatcherConfig,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            artifacts_dir: "artifacts".into(),
+            variant: "vgg16-cifar".into(),
+            mode: WeightMode::Pruned { alpha: 4 },
+            seed: 7,
+            batcher: BatcherConfig::default(),
+        }
+    }
+}
+
+struct Request {
+    image: Tensor,
+    submitted: Instant,
+    reply: mpsc::Sender<Result<Response>>,
+}
+
+/// A completed inference.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub logits: Vec<f32>,
+    pub latency: Duration,
+    pub batch_size: usize,
+}
+
+enum Msg {
+    Infer(Request),
+    Snapshot(mpsc::Sender<Metrics>),
+    Shutdown,
+}
+
+/// Running server + client handle factory.
+pub struct Server {
+    tx: mpsc::Sender<Msg>,
+    worker: Option<std::thread::JoinHandle<Result<()>>>,
+}
+
+/// Cheap cloneable client handle.
+#[derive(Clone)]
+pub struct Client {
+    tx: mpsc::Sender<Msg>,
+}
+
+impl Client {
+    /// Blocking inference call.
+    pub fn infer(&self, image: Tensor) -> Result<Response> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Infer(Request { image, submitted: Instant::now(), reply }))
+            .map_err(|_| anyhow!("server stopped"))?;
+        rx.recv().map_err(|_| anyhow!("server dropped request"))?
+    }
+
+    /// Fire-and-collect: submit without waiting; returns the receiver.
+    pub fn infer_async(&self, image: Tensor) -> Result<mpsc::Receiver<Result<Response>>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Infer(Request { image, submitted: Instant::now(), reply }))
+            .map_err(|_| anyhow!("server stopped"))?;
+        Ok(rx)
+    }
+}
+
+impl Server {
+    /// Start the worker; blocks until the engine has loaded (compile
+    /// warm-up) so the first request doesn't pay startup cost.
+    pub fn start(cfg: ServerConfig) -> Result<Server> {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let worker = std::thread::Builder::new()
+            .name("sf-serve".into())
+            .spawn(move || worker_loop(cfg, rx, ready_tx))
+            .expect("spawn worker");
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("server worker died during startup"))??;
+        Ok(Server { tx, worker: Some(worker) })
+    }
+
+    pub fn client(&self) -> Client {
+        Client { tx: self.tx.clone() }
+    }
+
+    /// Snapshot current metrics.
+    pub fn metrics(&self) -> Result<Metrics> {
+        let (tx, rx) = mpsc::channel();
+        self.tx.send(Msg::Snapshot(tx)).map_err(|_| anyhow!("server stopped"))?;
+        rx.recv().map_err(|_| anyhow!("server stopped"))
+    }
+
+    /// Graceful shutdown (flushes pending batches).
+    pub fn shutdown(mut self) -> Result<()> {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(w) = self.worker.take() {
+            w.join().map_err(|_| anyhow!("worker panicked"))??;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(
+    cfg: ServerConfig,
+    rx: mpsc::Receiver<Msg>,
+    ready: mpsc::Sender<Result<()>>,
+) -> Result<()> {
+    let mut engine =
+        match InferenceEngine::new(&cfg.artifacts_dir, &cfg.variant, cfg.mode, cfg.seed) {
+            Ok(e) => {
+                let _ = ready.send(Ok(()));
+                e
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                let _ = ready.send(Err(anyhow!(msg)));
+                return Err(e);
+            }
+        };
+    let mut batcher: Batcher<Request> = Batcher::new(cfg.batcher);
+    let mut metrics = Metrics::new();
+
+    let run_batch = |batch: Vec<Request>, engine: &mut InferenceEngine, metrics: &mut Metrics| {
+        let size = batch.len();
+        metrics.record_batch(size);
+        for req in batch {
+            let result = engine.forward(&req.image).map(|logits| {
+                let latency = req.submitted.elapsed();
+                metrics.record_request(latency);
+                Response { logits, latency, batch_size: size }
+            });
+            let _ = req.reply.send(result);
+        }
+    };
+
+    loop {
+        // Park until the next message or the batch deadline.
+        let msg = match batcher.time_to_deadline(Instant::now()) {
+            Some(d) => match rx.recv_timeout(d) {
+                Ok(m) => Some(m),
+                Err(mpsc::RecvTimeoutError::Timeout) => None,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            },
+            None => match rx.recv() {
+                Ok(m) => Some(m),
+                Err(_) => break,
+            },
+        };
+        match msg {
+            Some(Msg::Infer(req)) => {
+                if let Some(batch) = batcher.push(req, Instant::now()) {
+                    run_batch(batch, &mut engine, &mut metrics);
+                }
+            }
+            Some(Msg::Snapshot(tx)) => {
+                let _ = tx.send(metrics.clone());
+            }
+            Some(Msg::Shutdown) => break,
+            None => {}
+        }
+        if let Some(batch) = batcher.poll(Instant::now()) {
+            run_batch(batch, &mut engine, &mut metrics);
+        }
+    }
+    // flush
+    if let Some(batch) = batcher.take() {
+        run_batch(batch, &mut engine, &mut metrics);
+    }
+    Ok(())
+}

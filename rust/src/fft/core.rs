@@ -1,0 +1,261 @@
+//! Radix-2 iterative FFT (Cooley–Tukey, decimation in time).
+//!
+//! Only power-of-two sizes are needed (the paper uses K ∈ {8, 16}); sizes
+//! are asserted. `ifft` applies the 1/N normalization (matching
+//! `jnp.fft.ifft`). Twiddle factors are computed per call — the transforms
+//! here run on 8/16-point tiles at build/verify time, never on the serving
+//! hot path (that work is inside the AOT'd XLA executables).
+
+/// Minimal complex number (avoids pulling in `num-complex`).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Complex {
+    pub re: f32,
+    pub im: f32,
+}
+
+impl Complex {
+    pub const ZERO: Complex = Complex { re: 0.0, im: 0.0 };
+
+    pub fn new(re: f32, im: f32) -> Self {
+        Complex { re, im }
+    }
+
+    #[inline]
+    pub fn add(self, o: Complex) -> Complex {
+        Complex::new(self.re + o.re, self.im + o.im)
+    }
+
+    #[inline]
+    pub fn sub(self, o: Complex) -> Complex {
+        Complex::new(self.re - o.re, self.im - o.im)
+    }
+
+    #[inline]
+    pub fn mul(self, o: Complex) -> Complex {
+        Complex::new(
+            self.re * o.re - self.im * o.im,
+            self.re * o.im + self.im * o.re,
+        )
+    }
+
+    #[inline]
+    pub fn conj(self) -> Complex {
+        Complex::new(self.re, -self.im)
+    }
+
+    pub fn abs(self) -> f32 {
+        (self.re * self.re + self.im * self.im).sqrt()
+    }
+}
+
+fn assert_pow2(n: usize) {
+    assert!(n.is_power_of_two(), "FFT size {n} must be a power of two");
+}
+
+/// In-place iterative radix-2 FFT. `inverse` flips the twiddle sign;
+/// normalization is the caller's concern (see [`ifft1d`]).
+fn fft_inplace(buf: &mut [Complex], inverse: bool) {
+    let n = buf.len();
+    assert_pow2(n);
+    if n <= 1 {
+        return;
+    }
+    // bit-reversal permutation
+    let bits = n.trailing_zeros();
+    for i in 0..n {
+        let j = (i as u32).reverse_bits() >> (32 - bits);
+        let j = j as usize;
+        if i < j {
+            buf.swap(i, j);
+        }
+    }
+    let sign = if inverse { 1.0 } else { -1.0 };
+    let mut len = 2;
+    while len <= n {
+        let ang = sign * 2.0 * std::f64::consts::PI / len as f64;
+        let wlen = Complex::new(ang.cos() as f32, ang.sin() as f32);
+        for chunk in buf.chunks_mut(len) {
+            let mut w = Complex::new(1.0, 0.0);
+            let half = len / 2;
+            for i in 0..half {
+                let u = chunk[i];
+                let v = chunk[i + half].mul(w);
+                chunk[i] = u.add(v);
+                chunk[i + half] = u.sub(v);
+                w = w.mul(wlen);
+            }
+        }
+        len <<= 1;
+    }
+}
+
+/// Forward 1D FFT (no normalization, like `jnp.fft.fft`).
+pub fn fft1d(x: &[Complex]) -> Vec<Complex> {
+    let mut buf = x.to_vec();
+    fft_inplace(&mut buf, false);
+    buf
+}
+
+/// Inverse 1D FFT with 1/N normalization (like `jnp.fft.ifft`).
+pub fn ifft1d(x: &[Complex]) -> Vec<Complex> {
+    let mut buf = x.to_vec();
+    fft_inplace(&mut buf, true);
+    let inv = 1.0 / buf.len() as f32;
+    for v in &mut buf {
+        v.re *= inv;
+        v.im *= inv;
+    }
+    buf
+}
+
+/// Forward 2D FFT on a row-major `n x n` plane.
+pub fn fft2d(x: &[Complex], n: usize) -> Vec<Complex> {
+    fft2d_impl(x, n, false)
+}
+
+/// Inverse 2D FFT with 1/N² normalization.
+pub fn ifft2d(x: &[Complex], n: usize) -> Vec<Complex> {
+    let mut out = fft2d_impl(x, n, true);
+    let inv = 1.0 / (n * n) as f32;
+    for v in &mut out {
+        v.re *= inv;
+        v.im *= inv;
+    }
+    out
+}
+
+fn fft2d_impl(x: &[Complex], n: usize, inverse: bool) -> Vec<Complex> {
+    assert_eq!(x.len(), n * n, "plane must be n x n");
+    let mut out = x.to_vec();
+    // rows
+    for r in 0..n {
+        fft_inplace(&mut out[r * n..(r + 1) * n], inverse);
+    }
+    // columns (gather/scatter through a scratch row)
+    let mut col = vec![Complex::ZERO; n];
+    for c in 0..n {
+        for r in 0..n {
+            col[r] = out[r * n + c];
+        }
+        fft_inplace(&mut col, inverse);
+        for r in 0..n {
+            out[r * n + c] = col[r];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::forall;
+    use crate::util::rng::Pcg32;
+
+    fn randc(rng: &mut Pcg32, n: usize) -> Vec<Complex> {
+        (0..n).map(|_| Complex::new(rng.normal(), rng.normal())).collect()
+    }
+
+    #[test]
+    fn fft_of_impulse_is_flat() {
+        let mut x = vec![Complex::ZERO; 8];
+        x[0] = Complex::new(1.0, 0.0);
+        for v in fft1d(&x) {
+            assert!((v.re - 1.0).abs() < 1e-6 && v.im.abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn fft_known_values() {
+        // fft([1,2,3,4]) = [10, -2+2i, -2, -2-2i]
+        let x: Vec<Complex> = [1.0, 2.0, 3.0, 4.0]
+            .iter()
+            .map(|&r| Complex::new(r, 0.0))
+            .collect();
+        let y = fft1d(&x);
+        let want = [(10.0, 0.0), (-2.0, 2.0), (-2.0, 0.0), (-2.0, -2.0)];
+        for (got, &(re, im)) in y.iter().zip(&want) {
+            assert!((got.re - re).abs() < 1e-5, "{got:?} vs {re}");
+            assert!((got.im - im).abs() < 1e-5, "{got:?} vs {im}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_1d_2d() {
+        forall("fft roundtrip", 50, |rng| {
+            let n = 1 << rng.range(0, 6); // 1..32
+            let x = randc(rng, n);
+            let y = ifft1d(&fft1d(&x));
+            for (a, b) in x.iter().zip(&y) {
+                assert!((a.re - b.re).abs() < 1e-4 && (a.im - b.im).abs() < 1e-4);
+            }
+            let n2 = 1 << rng.range(1, 5); // 2..16
+            let p = randc(rng, n2 * n2);
+            let q = ifft2d(&fft2d(&p, n2), n2);
+            for (a, b) in p.iter().zip(&q) {
+                assert!((a.re - b.re).abs() < 1e-3 && (a.im - b.im).abs() < 1e-3);
+            }
+        });
+    }
+
+    #[test]
+    fn parseval_energy_preserved() {
+        forall("parseval", 30, |rng| {
+            let n = 16;
+            let x = randc(rng, n);
+            let y = fft1d(&x);
+            let ex: f32 = x.iter().map(|c| c.abs() * c.abs()).sum();
+            let ey: f32 = y.iter().map(|c| c.abs() * c.abs()).sum::<f32>() / n as f32;
+            assert!((ex - ey).abs() < 1e-2 * ex.max(1.0), "{ex} vs {ey}");
+        });
+    }
+
+    #[test]
+    fn linearity() {
+        forall("fft linearity", 30, |rng| {
+            let n = 8;
+            let x = randc(rng, n);
+            let y = randc(rng, n);
+            let sum: Vec<Complex> = x.iter().zip(&y).map(|(a, b)| a.add(*b)).collect();
+            let fs = fft1d(&sum);
+            let fx = fft1d(&x);
+            let fy = fft1d(&y);
+            for i in 0..n {
+                let e = fx[i].add(fy[i]);
+                assert!((fs[i].re - e.re).abs() < 1e-3 && (fs[i].im - e.im).abs() < 1e-3);
+            }
+        });
+    }
+
+    #[test]
+    fn convolution_theorem_circular() {
+        // ifft(fft(x) ∘ fft(h)) = circular convolution of x and h
+        let mut rng = Pcg32::new(77);
+        let n = 8;
+        let x: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let h: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let mut want = vec![0.0f32; n];
+        for i in 0..n {
+            for j in 0..n {
+                want[(i + j) % n] += x[i] * h[j];
+            }
+        }
+        let xc: Vec<Complex> = x.iter().map(|&r| Complex::new(r, 0.0)).collect();
+        let hc: Vec<Complex> = h.iter().map(|&r| Complex::new(r, 0.0)).collect();
+        let prod: Vec<Complex> = fft1d(&xc)
+            .iter()
+            .zip(fft1d(&hc))
+            .map(|(a, b)| a.mul(b))
+            .collect();
+        let got = ifft1d(&prod);
+        for i in 0..n {
+            assert!((got[i].re - want[i]).abs() < 1e-4, "{} vs {}", got[i].re, want[i]);
+            assert!(got[i].im.abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn non_pow2_rejected() {
+        fft1d(&vec![Complex::ZERO; 6]);
+    }
+}

@@ -1,0 +1,11 @@
+//! Spectral math substrate: radix-2 FFT, OaA tiling geometry.
+//!
+//! Mirrors `python/compile/kernels/ref.py` exactly (same conventions,
+//! documented there); integration tests assert the Rust pipeline and the
+//! AOT'd executables agree through this geometry.
+
+mod core;
+mod tiling;
+
+pub use core::{fft1d, fft2d, ifft1d, ifft2d, Complex};
+pub use tiling::{im2tiles, overlap_add, spectral_kernels, tiles_per_side, TileGeometry};

@@ -1,0 +1,259 @@
+//! Overlap-and-Add tiling geometry (paper Eq. 4) — the Rust mirror of
+//! `python/compile/kernels/ref.py::{im2tiles, overlap_add, spectral_kernels}`.
+//!
+//! These run on the coordinator's CPU path (the paper offloads OaA to the
+//! host CPU, §6) around the AOT'd spectral-conv executables.
+
+use crate::fft::core::{fft2d, Complex};
+use crate::tensor::{ComplexTensor, Tensor};
+
+/// ceil(h / tile): number of OaA tiles along one spatial dimension.
+pub fn tiles_per_side(h: usize, tile: usize) -> usize {
+    h.div_ceil(tile)
+}
+
+/// Static geometry of one spectral conv layer's tiling.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TileGeometry {
+    /// Input spatial side H (square activations).
+    pub h: usize,
+    /// OaA tile side h' = K - k + 1.
+    pub tile: usize,
+    /// FFT window K.
+    pub fft: usize,
+    /// Spatial kernel side k.
+    pub k: usize,
+    /// 'SAME' padding (k-1)/2.
+    pub pad: usize,
+}
+
+impl TileGeometry {
+    pub fn new(h: usize, fft: usize, k: usize) -> Self {
+        assert!(fft >= k, "FFT window {fft} smaller than kernel {k}");
+        TileGeometry { h, tile: fft - k + 1, fft, k, pad: (k - 1) / 2 }
+    }
+
+    pub fn tiles_per_side(&self) -> usize {
+        tiles_per_side(self.h, self.tile)
+    }
+
+    /// Total tile count T for a square H x H activation.
+    pub fn num_tiles(&self) -> usize {
+        let s = self.tiles_per_side();
+        s * s
+    }
+}
+
+/// Partition `[M, H, H]` activations into zero-padded tiles `[T, M, K, K]`.
+///
+/// Tiles are row-major over the (ty, tx) grid; the activation is implicitly
+/// zero-padded up to a multiple of the tile size.
+pub fn im2tiles(x: &Tensor, geo: &TileGeometry) -> Tensor {
+    let shape = x.shape();
+    assert_eq!(shape.len(), 3, "expected [M, H, W]");
+    let (m, h, w) = (shape[0], shape[1], shape[2]);
+    assert_eq!(h, geo.h, "geometry H mismatch");
+    assert_eq!(h, w, "square activations only");
+    let side = geo.tiles_per_side();
+    let (tile, fft) = (geo.tile, geo.fft);
+    let mut out = Tensor::zeros(&[side * side, m, fft, fft]);
+    let xd = x.data();
+    let od = out.data_mut();
+    for ty in 0..side {
+        for tx in 0..side {
+            let t = ty * side + tx;
+            for c in 0..m {
+                for dy in 0..tile {
+                    let sy = ty * tile + dy;
+                    if sy >= h {
+                        break;
+                    }
+                    let src_row = (c * h + sy) * w + tx * tile;
+                    let dst_row = ((t * m + c) * fft + dy) * fft;
+                    let ncols = tile.min(w - tx * tile);
+                    od[dst_row..dst_row + ncols]
+                        .copy_from_slice(&xd[src_row..src_row + ncols]);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Overlap-add output tiles `[T, N, K, K]` into the 'SAME' output `[N, H, H]`.
+///
+/// Tiles hold full linear convolutions (length tile + k - 1 = K); they are
+/// accumulated at stride `tile` and cropped at offset `k - 1 - pad`.
+pub fn overlap_add(tiles: &Tensor, geo: &TileGeometry, n: usize) -> Tensor {
+    let shape = tiles.shape();
+    assert_eq!(shape.len(), 4, "expected [T, N, K, K]");
+    let side = geo.tiles_per_side();
+    assert_eq!(shape[0], side * side, "tile count mismatch");
+    assert_eq!(shape[1], n);
+    assert_eq!(shape[2], geo.fft);
+    let (h, tile, fft, k) = (geo.h, geo.tile, geo.fft, geo.k);
+    let full_side = side * tile + k - 1;
+    let mut full = Tensor::zeros(&[n, full_side, full_side]);
+    let td = tiles.data();
+    let fd = full.data_mut();
+    for ty in 0..side {
+        for tx in 0..side {
+            let t = ty * side + tx;
+            for c in 0..n {
+                for dy in 0..fft {
+                    let fy = ty * tile + dy;
+                    let dst = (c * full_side + fy) * full_side + tx * tile;
+                    let src = ((t * n + c) * fft + dy) * fft;
+                    for dx in 0..fft {
+                        fd[dst + dx] += td[src + dx];
+                    }
+                }
+            }
+        }
+    }
+    // crop: offset = k - 1 - pad, size h
+    let off = k - 1 - geo.pad;
+    let mut out = Tensor::zeros(&[n, h, h]);
+    let odata = out.data_mut();
+    let fdata = full.data();
+    for c in 0..n {
+        for y in 0..h {
+            let src = (c * full_side + y + off) * full_side + off;
+            let dst = (c * h + y) * h;
+            odata[dst..dst + h].copy_from_slice(&fdata[src..src + h]);
+        }
+    }
+    out
+}
+
+/// Spatial kernels `[N, M, k, k]` → spectral planes `[N, M, K, K]` (re, im).
+///
+/// Flip both spatial axes (cross-correlation → convolution), zero-pad to K,
+/// 2D FFT — identical to `ref.spectral_kernels`.
+pub fn spectral_kernels(w: &Tensor, fft: usize) -> ComplexTensor {
+    let shape = w.shape();
+    assert_eq!(shape.len(), 4, "expected [N, M, k, k]");
+    let (n, m, k) = (shape[0], shape[1], shape[2]);
+    assert_eq!(shape[3], k);
+    let mut out = ComplexTensor::zeros(&[n, m, fft, fft]);
+    let mut plane = vec![Complex::ZERO; fft * fft];
+    for o in 0..n {
+        for i in 0..m {
+            for p in plane.iter_mut() {
+                *p = Complex::ZERO;
+            }
+            for y in 0..k {
+                for x in 0..k {
+                    // flipped kernel into the top-left K x K corner
+                    plane[y * fft + x] =
+                        Complex::new(w.at(&[o, i, k - 1 - y, k - 1 - x]), 0.0);
+                }
+            }
+            let spec = fft2d(&plane, fft);
+            for y in 0..fft {
+                for x in 0..fft {
+                    let c = spec[y * fft + x];
+                    out.set(&[o, i, y, x], c.re, c.im);
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::forall;
+
+    #[test]
+    fn geometry_paper_points() {
+        let g = TileGeometry::new(224, 8, 3);
+        assert_eq!(g.tile, 6);
+        assert_eq!(g.pad, 1);
+        assert_eq!(g.tiles_per_side(), 38);
+        assert_eq!(g.num_tiles(), 1444);
+        assert_eq!(TileGeometry::new(14, 8, 3).num_tiles(), 9);
+        assert_eq!(TileGeometry::new(112, 16, 3).num_tiles(), 64); // K=16 → h'=14
+    }
+
+    #[test]
+    fn im2tiles_places_values() {
+        // 1 channel, 7x7 input, tile 6 → 2x2 tiles with edge padding
+        let g = TileGeometry::new(7, 8, 3);
+        let x = Tensor::from_vec(&[1, 7, 7], (0..49).map(|i| i as f32).collect());
+        let t = im2tiles(&x, &g);
+        assert_eq!(t.shape(), &[4, 1, 8, 8]);
+        // tile (0,0) holds x[0..6, 0..6] at its top-left
+        assert_eq!(t.at(&[0, 0, 0, 0]), 0.0);
+        assert_eq!(t.at(&[0, 0, 5, 5]), x.at(&[0, 5, 5]));
+        // padding rows/cols of tile(0,0) are zero
+        assert_eq!(t.at(&[0, 0, 6, 0]), 0.0);
+        assert_eq!(t.at(&[0, 0, 0, 6]), 0.0);
+        // tile (1,1) top-left = x[6,6]
+        assert_eq!(t.at(&[3, 0, 0, 0]), x.at(&[0, 6, 6]));
+        // out-of-image region of edge tile is zero
+        assert_eq!(t.at(&[3, 0, 1, 1]), 0.0);
+    }
+
+    #[test]
+    fn tiles_partition_preserves_mass() {
+        forall("im2tiles mass", 20, |rng| {
+            let h = rng.range(3, 20);
+            let m = rng.range(1, 4);
+            let g = TileGeometry::new(h, 8, 3);
+            let x = Tensor::randn(&[m, h, h], rng, 1.0);
+            let t = im2tiles(&x, &g);
+            let sx: f32 = x.data().iter().sum();
+            let st: f32 = t.data().iter().sum();
+            assert!((sx - st).abs() < 1e-3 * x.len() as f32);
+        });
+    }
+
+    #[test]
+    fn identity_kernel_roundtrips_through_oaa() {
+        // delta kernel at center → spectral conv is identity; this exercises
+        // im2tiles + fft + hadamard + ifft + overlap_add end to end in rust.
+        forall("oaa identity", 10, |rng| {
+            let h = rng.range(4, 16);
+            let g = TileGeometry::new(h, 8, 3);
+            let x = Tensor::randn(&[1, h, h], rng, 1.0);
+            let mut w = Tensor::zeros(&[1, 1, 3, 3]);
+            w.set(&[0, 0, 1, 1], 1.0); // center tap
+            let ws = spectral_kernels(&w, g.fft);
+            let tiles = im2tiles(&x, &g);
+            let t = g.num_tiles();
+            let mut out_tiles = Tensor::zeros(&[t, 1, g.fft, g.fft]);
+            for ti in 0..t {
+                let mut plane = vec![Complex::ZERO; g.fft * g.fft];
+                for y in 0..g.fft {
+                    for x2 in 0..g.fft {
+                        plane[y * g.fft + x2] =
+                            Complex::new(tiles.at(&[ti, 0, y, x2]), 0.0);
+                    }
+                }
+                let xs = fft2d(&plane, g.fft);
+                let prod: Vec<Complex> = (0..g.fft * g.fft)
+                    .map(|i| {
+                        let (wr, wi) = ws.at(&[0, 0, i / g.fft, i % g.fft]);
+                        xs[i].mul(Complex::new(wr, wi))
+                    })
+                    .collect();
+                let y = crate::fft::ifft2d(&prod, g.fft);
+                for (i, c) in y.iter().enumerate() {
+                    out_tiles.set(&[ti, 0, i / g.fft, i % g.fft], c.re);
+                }
+            }
+            let out = overlap_add(&out_tiles, &g, 1);
+            let err = out.max_abs_diff(&x);
+            assert!(err < 1e-4, "identity conv error {err}");
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "square")]
+    fn non_square_rejected() {
+        let g = TileGeometry::new(4, 8, 3);
+        im2tiles(&Tensor::zeros(&[1, 4, 5]), &g);
+    }
+}

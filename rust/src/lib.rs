@@ -1,0 +1,43 @@
+//! # spectral-flow
+//!
+//! Reproduction of *"Reuse Kernels or Activations? A Flexible Dataflow for
+//! Low-latency Spectral CNN Acceleration"* (FPGA '20) as a three-layer
+//! Rust + JAX + Pallas stack.
+//!
+//! The crate is the **Layer-3 coordinator**: it owns the dataflow optimizer
+//! (paper Alg. 1), the exact-cover memory-access scheduler (paper Alg. 2),
+//! a cycle-level model of the paper's FPGA accelerator, and a serving engine
+//! that executes spectral VGG16 inference through AOT-compiled XLA
+//! executables (built once by `make artifacts`; Python is never on the
+//! request path).
+//!
+//! Module map (see DESIGN.md for the full system inventory):
+//!
+//! * [`util`] — offline-environment substrates: RNG, JSON, bench harness,
+//!   mini property-testing.
+//! * [`tensor`] — dense f32 tensors + complex planes.
+//! * [`fft`] — radix-2 FFT, tiling (`im2tiles`) and overlap-and-add.
+//! * [`nn`] — CPU-side ops: ReLU, maxpool, dense/FC, naive conv reference.
+//! * [`model`] — layer descriptors and VGG16 presets (paper §6 workloads).
+//! * [`sparse`] — sparse spectral kernels: ADMM-like and random pruning.
+//! * [`analysis`] — BRAM/bandwidth complexity model (paper Eqs. 6–13).
+//! * [`dataflow`] — flexible-dataflow optimizer (paper Alg. 1).
+//! * [`schedule`] — exact-cover scheduler + baselines (paper Alg. 2).
+//! * [`sim`] — cycle-level accelerator simulator (the U200 substitute).
+//! * [`runtime`] — PJRT executable loading/execution (the `xla` crate).
+//! * [`coordinator`] — batching inference server (the e2e driver).
+//! * [`report`] — ASCII/CSV emitters for every paper table and figure.
+
+pub mod analysis;
+pub mod coordinator;
+pub mod dataflow;
+pub mod fft;
+pub mod model;
+pub mod nn;
+pub mod report;
+pub mod runtime;
+pub mod schedule;
+pub mod sim;
+pub mod sparse;
+pub mod tensor;
+pub mod util;

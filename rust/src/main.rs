@@ -1,0 +1,256 @@
+//! `spectral-flow` CLI: the leader entrypoint.
+//!
+//! Subcommands map 1:1 to the paper's evaluation artifacts (DESIGN.md
+//! "Per-experiment index"); the benches regenerate the same tables with
+//! timing, the CLI is for interactive exploration.
+
+use anyhow::{anyhow, Result};
+
+use spectral_flow::analysis::{
+    transfers_flow, ArchParams, Flow, LayerParams,
+};
+use spectral_flow::coordinator::{InferenceEngine, WeightMode};
+use spectral_flow::dataflow::{optimize_network_at, OptimizerConfig};
+use spectral_flow::model::Network;
+use spectral_flow::report::{fmt_bytes, fmt_gbps, fmt_ms, fmt_pct, Table};
+use spectral_flow::schedule::Scheduler;
+use spectral_flow::sim::baselines::{run_baseline, sparse_spatial_17_latency, BaselineConfig};
+use spectral_flow::sim::{estimate_resources, SimConfig};
+use spectral_flow::sparse::prune_magnitude;
+use spectral_flow::util::cli::Args;
+use spectral_flow::util::rng::Pcg32;
+
+const ABOUT: &str = "spectral-flow — flexible-dataflow sparse spectral CNN accelerator \
+(FPGA '20 reproduction)\n\n\
+Usage: spectral-flow <analyze|optimize|schedule|simulate|infer|serve> [--help]";
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let cmd = args.positional().first().cloned().unwrap_or_default();
+    match cmd.as_str() {
+        "analyze" => analyze(args),
+        "optimize" => optimize(args),
+        "schedule" => schedule(args),
+        "simulate" => simulate(args),
+        "infer" => infer(args),
+        "serve" => serve(args),
+        _ => {
+            args.maybe_help(ABOUT);
+            println!("{ABOUT}");
+            Ok(())
+        }
+    }
+}
+
+/// Fig. 2: per-layer transfer volume + BRAMs for the three fixed flows.
+fn analyze(mut args: Args) -> Result<()> {
+    let alpha = args.opt_usize("alpha", 4, "compression ratio");
+    args.maybe_help("analyze: Fig 2 complexity (data transfers + BRAMs per flow)");
+    let net = Network::vgg16_224();
+    let arch = ArchParams::paper();
+    let mut t = Table::new(
+        &format!("Fig 2 — VGG16 K=8 α={alpha}: transfers (MB) / BRAMs per flow"),
+        &["layer", "xfer#1", "xfer#2", "xfer#3", "bram#1", "bram#2", "bram#3"],
+    );
+    for conv in net.optimized_convs() {
+        let l = LayerParams::from_layer(conv, alpha);
+        let xf: Vec<String> = Flow::ALL
+            .iter()
+            .map(|f| format!("{:.1}", transfers_flow(*f, &l, &arch).total() as f64 * 2.0 / 1e6))
+            .collect();
+        let br: Vec<String> = Flow::ALL
+            .iter()
+            .map(|f| spectral_flow::analysis::bram_flow(*f, &l, &arch).to_string())
+            .collect();
+        t.row(vec![
+            conv.name.clone(),
+            xf[0].clone(),
+            xf[1].clone(),
+            xf[2].clone(),
+            br[0].clone(),
+            br[1].clone(),
+            br[2].clone(),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+/// Tables 1 + 2: Alg. 1 optimum at the paper's architecture point.
+fn optimize(mut args: Args) -> Result<()> {
+    let alpha = args.opt_usize("alpha", 4, "compression ratio");
+    let tau_ms = args.opt_f64("tau-ms", 20.0, "total conv latency budget");
+    args.maybe_help("optimize: Alg 1 → Table 1 (streaming params) + Table 2 (bandwidth)");
+    let net = Network::vgg16_224();
+    let cfg = OptimizerConfig {
+        alpha,
+        total_latency: tau_ms / 1e3,
+        ..OptimizerConfig::paper()
+    };
+    let plan = optimize_network_at(&net, ArchParams::paper(), &cfg)
+        .ok_or_else(|| anyhow!("no feasible plan"))?;
+    let mut t = Table::new(
+        &format!("Tables 1+2 — VGG16 K=8 α={alpha}, P'=9 N'=64, τ={tau_ms} ms"),
+        &["layer", "Ps", "Ns", "BRAMs", "transfers", "τ_i", "BW"],
+    );
+    for lp in &plan.layers {
+        t.row(vec![
+            lp.layer_name.clone(),
+            lp.stream.ps.to_string(),
+            lp.stream.ns.to_string(),
+            lp.brams.to_string(),
+            fmt_bytes(lp.transfers.total() * 2),
+            fmt_ms(lp.tau),
+            fmt_gbps(lp.bandwidth),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("max bandwidth: {}", fmt_gbps(plan.bw_max));
+    Ok(())
+}
+
+/// Fig. 8-style: per-layer PE utilization for the three schedulers.
+fn schedule(mut args: Args) -> Result<()> {
+    let replicas = args.opt_usize("replicas", 8, "input-tile replicas r");
+    let alpha = args.opt_usize("alpha", 4, "compression ratio");
+    let samples = args.opt_usize("samples", 16, "scheduling instances per layer");
+    args.maybe_help("schedule: Fig 8 PE utilization per layer and scheduler");
+    let net = Network::vgg16_224();
+    let n_par = 64;
+    let mut t = Table::new(
+        &format!("Fig 8 — PE utilization, r={replicas}, N'={n_par}, α={alpha}"),
+        &["layer", "exact-cover", "lowest-index", "random"],
+    );
+    let mut rng = Pcg32::new(2020);
+    for conv in net.optimized_convs() {
+        let sparse = prune_magnitude(conv.cout, conv.cin, conv.fft, alpha, &mut rng);
+        let mut cells = vec![conv.name.clone()];
+        for sch in Scheduler::ALL {
+            let total = sparse.num_groups(n_par) * sparse.cin;
+            let k = samples.min(total);
+            let picks = Pcg32::new(1).sample_indices(total, k);
+            let (mut reads, mut slots) = (0u64, 0u64);
+            for p in picks {
+                let (g, m) = (p / sparse.cin, p % sparse.cin);
+                let kernels = sparse.group_indices(g, n_par, m);
+                let s = sch.run(&kernels, replicas, p as u64);
+                reads += s.total_reads() as u64;
+                slots += (s.cycles() * n_par) as u64;
+            }
+            cells.push(fmt_pct(reads as f64 / slots as f64));
+        }
+        t.row(cells);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+/// Table 3: device-comparison rows via the cycle simulator.
+fn simulate(mut args: Args) -> Result<()> {
+    let samples = args.opt_usize("samples", 24, "scheduling instances per layer");
+    let resources = args.opt_bool("resources", "print the Fig 11 resource table");
+    args.maybe_help("simulate: Table 3 comparison via the cycle-level simulator");
+    let net = Network::vgg16_224();
+    let mut t = Table::new(
+        "Table 3 — simulated on the U200 model (VGG16-224 conv stack)",
+        &["design", "latency", "fps", "BW req", "avg PE util"],
+    );
+    for cfg in BaselineConfig::all() {
+        let res = run_baseline(&cfg, &net, Some(samples), 2020);
+        t.row(vec![
+            cfg.name.to_string(),
+            fmt_ms(res.latency_secs()),
+            format!("{:.0}", res.throughput_fps()),
+            fmt_gbps(res.required_bandwidth()),
+            fmt_pct(res.avg_pe_utilization()),
+        ]);
+    }
+    t.row(vec![
+        "[17]-like (sparse spatial)".into(),
+        fmt_ms(sparse_spatial_17_latency(&net, 4)),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+    ]);
+    println!("{}", t.render());
+    if resources {
+        let cfgp = OptimizerConfig::paper();
+        let plan = optimize_network_at(&net, ArchParams::paper(), &cfgp).unwrap();
+        let plans: Vec<_> = plan.layers.iter().map(|l| (l.params, l.stream)).collect();
+        let r = estimate_resources(&ArchParams::paper(), &plans, SimConfig::default().fft_butterflies_per_cycle);
+        println!("Fig 11 resource estimate: {}", r.utilization_report());
+    }
+    Ok(())
+}
+
+/// Run the batching inference server against a synthetic request stream.
+fn serve(mut args: Args) -> Result<()> {
+    use spectral_flow::coordinator::{BatcherConfig, Server, ServerConfig};
+    use spectral_flow::tensor::Tensor;
+    let variant = args.opt("variant", "vgg16-cifar", "model variant");
+    let requests = args.opt_usize("requests", 16, "number of requests to issue");
+    let batch = args.opt_usize("batch", 4, "max batch size");
+    let wait_ms = args.opt_usize("wait-ms", 10, "batch deadline (ms)");
+    let artifacts = args.opt("artifacts", "artifacts", "artifacts directory");
+    args.maybe_help("serve: run the batching server on synthetic traffic");
+    let server = Server::start(ServerConfig {
+        artifacts_dir: artifacts,
+        variant: variant.clone(),
+        mode: WeightMode::Pruned { alpha: 4 },
+        seed: 7,
+        batcher: BatcherConfig {
+            max_batch: batch,
+            max_wait: std::time::Duration::from_millis(wait_ms as u64),
+        },
+    })?;
+    let client = server.client();
+    let mut rng = Pcg32::new(123);
+    let m = spectral_flow::runtime::Runtime::open("artifacts")?;
+    let vdesc = m.manifest.variant(&variant)?.clone();
+    let t0 = std::time::Instant::now();
+    let rxs: Result<Vec<_>> = (0..requests)
+        .map(|_| {
+            client.infer_async(Tensor::randn(
+                &[vdesc.input_c, vdesc.input_hw, vdesc.input_hw],
+                &mut rng,
+                1.0,
+            ))
+        })
+        .collect();
+    for rx in rxs? {
+        rx.recv().map_err(|_| anyhow!("server dropped request"))??;
+    }
+    let wall = t0.elapsed();
+    let metrics = server.metrics()?;
+    println!("{requests} requests in {wall:?} → {:.2} img/s", requests as f64 / wall.as_secs_f64());
+    println!("{}", metrics.report());
+    server.shutdown()?;
+    Ok(())
+}
+
+/// Run one forward pass through the AOT'd executables.
+fn infer(mut args: Args) -> Result<()> {
+    let variant = args.opt("variant", "demo", "model variant (demo|vgg16-cifar|vgg16-224)");
+    let artifacts = args.opt("artifacts", "artifacts", "artifacts directory");
+    let pruned = args.opt_bool("pruned", "use magnitude-pruned (α=4) kernels");
+    args.maybe_help("infer: single-image forward pass through the PJRT executables");
+    let mode = if pruned { WeightMode::Pruned { alpha: 4 } } else { WeightMode::Dense };
+    let t0 = std::time::Instant::now();
+    let mut engine = InferenceEngine::new(&artifacts, &variant, mode, 7)?;
+    println!("engine up in {:?} ({} executables)", t0.elapsed(), engine.variant.layers.len());
+    let img = engine.synthetic_image(1);
+    let t1 = std::time::Instant::now();
+    let logits = engine.forward(&img)?;
+    println!(
+        "forward({variant}) in {:?} → {} logits, argmax {}",
+        t1.elapsed(),
+        logits.len(),
+        logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    );
+    Ok(())
+}

@@ -1,0 +1,269 @@
+//! Model descriptions: spectral conv layer specs and the VGG16 presets the
+//! paper evaluates (§6). Mirrors `python/compile/model.py`; the runtime
+//! cross-checks this table against `artifacts/manifest.json`.
+
+use crate::fft::TileGeometry;
+
+/// One spectral convolutional layer (paper notation in parens).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ConvLayer {
+    pub name: String,
+    /// Input channels (M).
+    pub cin: usize,
+    /// Output channels (N).
+    pub cout: usize,
+    /// Input spatial side (h_in = w_in).
+    pub h: usize,
+    /// Spatial kernel side (k).
+    pub k: usize,
+    /// FFT window (K).
+    pub fft: usize,
+    /// 2x2 maxpool follows this layer.
+    pub pool_after: bool,
+}
+
+impl ConvLayer {
+    pub fn geometry(&self) -> TileGeometry {
+        TileGeometry::new(self.h, self.fft, self.k)
+    }
+
+    /// Total tile count P for one image (paper: h_in*w_in / h'w').
+    pub fn num_tiles(&self) -> usize {
+        self.geometry().num_tiles()
+    }
+
+    /// Spectral multiply-accumulate count for one image: every (tile,
+    /// cout, cin) needs K² complex MACs (paper §6.1 uses this to split the
+    /// latency budget: τ_i = τ · CMP_i / CMP_total).
+    pub fn spectral_macs(&self) -> u64 {
+        (self.num_tiles() as u64)
+            * (self.cin as u64)
+            * (self.cout as u64)
+            * (self.fft * self.fft) as u64
+    }
+
+    /// Spatial-domain MACs (for the complexity-reduction comparison).
+    pub fn spatial_macs(&self) -> u64 {
+        (self.h as u64)
+            * (self.h as u64)
+            * (self.cin as u64)
+            * (self.cout as u64)
+            * (self.k * self.k) as u64
+    }
+
+    /// Dense spectral kernel element count (the "kernel explosion").
+    pub fn spectral_kernel_elems(&self) -> u64 {
+        (self.cout * self.cin * self.fft * self.fft) as u64
+    }
+}
+
+/// A full network variant (conv stack + FC head).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Network {
+    pub name: String,
+    pub input_hw: usize,
+    pub input_c: usize,
+    pub convs: Vec<ConvLayer>,
+    /// FC widths after flatten; the flatten width is derived.
+    pub fc: Vec<usize>,
+}
+
+impl Network {
+    /// VGG16 at an arbitrary square input side (224 = paper, 32 = CIFAR).
+    pub fn vgg16(input_hw: usize, fft: usize, fc: Vec<usize>, name: &str) -> Self {
+        let plan: [(usize, usize, usize); 5] =
+            [(1, 2, 64), (2, 2, 128), (3, 3, 256), (4, 3, 512), (5, 3, 512)];
+        let mut convs = Vec::new();
+        let mut h = input_hw;
+        let mut cin = 3;
+        for (blk, reps, cout) in plan {
+            for i in 0..reps {
+                convs.push(ConvLayer {
+                    name: format!("conv{blk}_{}", i + 1),
+                    cin,
+                    cout,
+                    h,
+                    k: 3,
+                    fft,
+                    pool_after: i == reps - 1,
+                });
+                cin = cout;
+            }
+            h /= 2;
+        }
+        Network { name: name.to_string(), input_hw, input_c: 3, convs, fc }
+    }
+
+    /// The paper's evaluation target: VGG16, 224x224, K=8.
+    pub fn vgg16_224() -> Self {
+        Self::vgg16(224, 8, vec![4096, 4096, 1000], "vgg16-224")
+    }
+
+    /// The K=16 variant of Table 1's lower half.
+    pub fn vgg16_224_k16() -> Self {
+        Self::vgg16(224, 16, vec![4096, 4096, 1000], "vgg16-224-k16")
+    }
+
+    /// CIFAR-scale VGG16 for the serving example.
+    pub fn vgg16_cifar() -> Self {
+        Self::vgg16(32, 8, vec![256, 10], "vgg16-cifar")
+    }
+
+    /// Tiny demo model matching the `demo` artifact variant.
+    pub fn demo() -> Self {
+        Network {
+            name: "demo".to_string(),
+            input_hw: 16,
+            input_c: 1,
+            convs: vec![
+                ConvLayer {
+                    name: "conv1".into(),
+                    cin: 1,
+                    cout: 8,
+                    h: 16,
+                    k: 3,
+                    fft: 8,
+                    pool_after: true,
+                },
+                ConvLayer {
+                    name: "conv2".into(),
+                    cin: 8,
+                    cout: 8,
+                    h: 8,
+                    k: 3,
+                    fft: 8,
+                    pool_after: true,
+                },
+            ],
+            fc: vec![32, 10],
+        }
+    }
+
+    /// Spatial side after the full conv stack (input to flatten).
+    pub fn final_side(&self) -> usize {
+        let mut h = self.input_hw;
+        for c in &self.convs {
+            debug_assert_eq!(c.h, h, "layer {} expects side {h}", c.name);
+            if c.pool_after {
+                h /= 2;
+            }
+        }
+        h
+    }
+
+    /// Flattened width feeding the first FC layer.
+    pub fn flatten_width(&self) -> usize {
+        let s = self.final_side();
+        self.convs.last().map(|c| c.cout).unwrap_or(self.input_c) * s * s
+    }
+
+    pub fn total_spectral_macs(&self) -> u64 {
+        self.convs.iter().map(|c| c.spectral_macs()).sum()
+    }
+
+    /// Latency budget split (paper §6.1): τ_i = τ · CMP_i / CMP_total.
+    pub fn latency_split(&self, total_secs: f64) -> Vec<f64> {
+        let total = self.total_spectral_macs() as f64;
+        self.convs
+            .iter()
+            .map(|c| total_secs * c.spectral_macs() as f64 / total)
+            .collect()
+    }
+
+    /// Layers the paper optimizes (conv1_1 is omitted: "negligible
+    /// computations", §6.1).
+    pub fn optimized_convs(&self) -> Vec<&ConvLayer> {
+        self.convs.iter().filter(|c| c.name != "conv1_1").collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vgg16_224_structure() {
+        let n = Network::vgg16_224();
+        assert_eq!(n.convs.len(), 13);
+        assert_eq!(n.convs[0].name, "conv1_1");
+        assert_eq!(n.convs[0].cin, 3);
+        assert_eq!(n.convs[12].name, "conv5_3");
+        assert_eq!(n.convs[12].cout, 512);
+        assert_eq!(n.convs.iter().filter(|c| c.pool_after).count(), 5);
+        assert_eq!(n.final_side(), 7);
+        assert_eq!(n.flatten_width(), 512 * 7 * 7);
+    }
+
+    #[test]
+    fn tile_counts_match_paper_geometry() {
+        let n = Network::vgg16_224();
+        let tiles: Vec<usize> = n.convs.iter().map(|c| c.num_tiles()).collect();
+        assert_eq!(
+            tiles,
+            [1444, 1444, 361, 361, 100, 100, 100, 25, 25, 25, 9, 9, 9]
+        );
+    }
+
+    #[test]
+    fn spectral_beats_spatial_in_most_layers() {
+        // The paper's headline: ~2-3x complexity reduction at K=8. The ratio
+        // holds for every layer past conv1 (small channel counts don't
+        // amortize tile padding).
+        let n = Network::vgg16_224();
+        for c in &n.convs[2..] {
+            let ratio = c.spatial_macs() as f64 / c.spectral_macs() as f64;
+            assert!(ratio > 1.5, "{}: ratio {ratio}", c.name);
+        }
+    }
+
+    #[test]
+    fn kernel_explosion_factor() {
+        // 3x3 real -> 8x8 complex: 64*2/9 ≈ 14.2x storage (paper: ~15x).
+        let c = &Network::vgg16_224().convs[1];
+        let spatial = (c.cout * c.cin * c.k * c.k) as f64;
+        let spectral = c.spectral_kernel_elems() as f64 * 2.0; // complex
+        let factor = spectral / spatial;
+        assert!(factor > 14.0 && factor < 15.0, "factor {factor}");
+    }
+
+    #[test]
+    fn latency_split_sums_to_total() {
+        let n = Network::vgg16_224();
+        let split = n.latency_split(0.020);
+        assert_eq!(split.len(), 13);
+        let sum: f64 = split.iter().sum();
+        assert!((sum - 0.020).abs() < 1e-9);
+        assert!(split.iter().all(|&t| t > 0.0));
+        // conv3_2 (100 tiles × 256×256 channels) carries the most spectral
+        // MACs; conv1_1 the fewest by far.
+        let max = split.iter().cloned().fold(0.0, f64::max);
+        assert!((split[5] - max).abs() < 1e-12, "expected conv3_2 max: {split:?}");
+        let min = split.iter().cloned().fold(f64::MAX, f64::min);
+        assert!((split[0] - min).abs() < 1e-12);
+    }
+
+    #[test]
+    fn optimized_set_drops_conv1_1() {
+        let n = Network::vgg16_224();
+        let opt = n.optimized_convs();
+        assert_eq!(opt.len(), 12);
+        assert!(opt.iter().all(|c| c.name != "conv1_1"));
+    }
+
+    #[test]
+    fn cifar_and_demo_consistent() {
+        let c = Network::vgg16_cifar();
+        assert_eq!(c.final_side(), 1);
+        assert_eq!(c.flatten_width(), 512);
+        let d = Network::demo();
+        assert_eq!(d.final_side(), 4);
+        assert_eq!(d.flatten_width(), 8 * 4 * 4);
+    }
+
+    #[test]
+    fn k16_variant_tiles() {
+        let n = Network::vgg16_224_k16();
+        // K=16, k=3 → h'=14; 224/14 = 16 → 256 tiles in conv1.
+        assert_eq!(n.convs[0].num_tiles(), 256);
+    }
+}

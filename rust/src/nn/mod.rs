@@ -1,0 +1,210 @@
+//! CPU-side neural-network ops.
+//!
+//! The paper's CPU-FPGA split (§6) puts ReLU, pooling, the FC layers and
+//! OaA on the host CPU; these are their Rust implementations, used on the
+//! coordinator's request path around the AOT'd spectral-conv executables.
+//! `conv2d_same_ref` is the *spatial ground truth* used by integration tests
+//! to validate the whole spectral pipeline.
+
+use crate::tensor::Tensor;
+
+/// In-place ReLU.
+pub fn relu(x: &mut Tensor) {
+    for v in x.data_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// Add a per-channel bias to `[N, H, W]` activations.
+pub fn add_bias(x: &mut Tensor, bias: &[f32]) {
+    let shape = x.shape().to_vec();
+    assert_eq!(shape.len(), 3);
+    assert_eq!(shape[0], bias.len(), "bias length != channels");
+    let hw = shape[1] * shape[2];
+    let d = x.data_mut();
+    for (c, &b) in bias.iter().enumerate() {
+        for v in &mut d[c * hw..(c + 1) * hw] {
+            *v += b;
+        }
+    }
+}
+
+/// 2x2 stride-2 max pooling on `[C, H, W]` (H, W even — VGG guarantees it).
+pub fn maxpool2(x: &Tensor) -> Tensor {
+    let shape = x.shape();
+    assert_eq!(shape.len(), 3);
+    let (c, h, w) = (shape[0], shape[1], shape[2]);
+    assert!(h % 2 == 0 && w % 2 == 0, "maxpool2 needs even H, W (got {h}x{w})");
+    let (oh, ow) = (h / 2, w / 2);
+    let mut out = Tensor::zeros(&[c, oh, ow]);
+    let xd = x.data();
+    let od = out.data_mut();
+    for ch in 0..c {
+        for y in 0..oh {
+            let r0 = (ch * h + 2 * y) * w;
+            let r1 = r0 + w;
+            for xx in 0..ow {
+                let m = xd[r0 + 2 * xx]
+                    .max(xd[r0 + 2 * xx + 1])
+                    .max(xd[r1 + 2 * xx])
+                    .max(xd[r1 + 2 * xx + 1]);
+                od[(ch * oh + y) * ow + xx] = m;
+            }
+        }
+    }
+    out
+}
+
+/// Dense layer: `y = W x + b` with `W: [N, M]`, `x: [M]`.
+pub fn dense(w: &Tensor, bias: &[f32], x: &[f32]) -> Vec<f32> {
+    let shape = w.shape();
+    assert_eq!(shape.len(), 2);
+    let (n, m) = (shape[0], shape[1]);
+    assert_eq!(m, x.len(), "dense input width mismatch");
+    assert_eq!(n, bias.len());
+    let wd = w.data();
+    let mut out = vec![0.0f32; n];
+    for i in 0..n {
+        let row = &wd[i * m..(i + 1) * m];
+        let mut acc = 0.0f32;
+        for (a, b) in row.iter().zip(x) {
+            acc += a * b;
+        }
+        out[i] = acc + bias[i];
+    }
+    out
+}
+
+/// Numerically stable softmax.
+pub fn softmax(x: &[f32]) -> Vec<f32> {
+    let max = x.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = x.iter().map(|v| (v - max).exp()).collect();
+    let sum: f32 = exps.iter().sum();
+    exps.into_iter().map(|e| e / sum).collect()
+}
+
+/// Naive spatial 'SAME' cross-correlation (ground truth for tests).
+///
+/// `x: [M, H, W]`, `w: [N, M, k, k]` → `[N, H, W]`; pad = (k-1)/2, stride 1.
+pub fn conv2d_same_ref(x: &Tensor, w: &Tensor) -> Tensor {
+    let xs = x.shape();
+    let ws = w.shape();
+    assert_eq!(xs.len(), 3);
+    assert_eq!(ws.len(), 4);
+    let (m, h, wd) = (xs[0], xs[1], xs[2]);
+    let (n, m2, k) = (ws[0], ws[1], ws[2]);
+    assert_eq!(m, m2, "channel mismatch");
+    assert_eq!(ws[3], k);
+    let pad = (k - 1) / 2;
+    let mut out = Tensor::zeros(&[n, h, wd]);
+    for o in 0..n {
+        for y in 0..h {
+            for x2 in 0..wd {
+                let mut acc = 0.0f32;
+                for c in 0..m {
+                    for u in 0..k {
+                        for v in 0..k {
+                            let sy = y + u;
+                            let sx = x2 + v;
+                            if sy < pad || sx < pad {
+                                continue;
+                            }
+                            let (sy, sx) = (sy - pad, sx - pad);
+                            if sy >= h || sx >= wd {
+                                continue;
+                            }
+                            acc += x.at(&[c, sy, sx]) * w.at(&[o, c, u, v]);
+                        }
+                    }
+                }
+                out.set(&[o, y, x2], acc);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::forall;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn relu_clamps() {
+        let mut t = Tensor::from_vec(&[4], vec![-1.0, 0.0, 2.0, -0.5]);
+        relu(&mut t);
+        assert_eq!(t.data(), &[0.0, 0.0, 2.0, 0.0]);
+    }
+
+    #[test]
+    fn bias_per_channel() {
+        let mut t = Tensor::zeros(&[2, 1, 2]);
+        add_bias(&mut t, &[1.0, -2.0]);
+        assert_eq!(t.data(), &[1.0, 1.0, -2.0, -2.0]);
+    }
+
+    #[test]
+    fn maxpool_picks_max() {
+        let t = Tensor::from_vec(&[1, 2, 4], vec![1.0, 2.0, 5.0, 6.0, 3.0, 4.0, 7.0, 8.0]);
+        let p = maxpool2(&t);
+        assert_eq!(p.shape(), &[1, 1, 2]);
+        assert_eq!(p.data(), &[4.0, 8.0]);
+    }
+
+    #[test]
+    fn dense_known() {
+        let w = Tensor::from_vec(&[2, 3], vec![1.0, 0.0, 0.0, 0.0, 1.0, 1.0]);
+        let y = dense(&w, &[0.5, -0.5], &[3.0, 4.0, 5.0]);
+        assert_eq!(y, vec![3.5, 8.5]);
+    }
+
+    #[test]
+    fn softmax_normalizes() {
+        let p = softmax(&[1.0, 2.0, 3.0]);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+        // stability with large values
+        let p2 = softmax(&[1000.0, 1000.0]);
+        assert!((p2[0] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn conv_identity_kernel() {
+        let mut rng = Pcg32::new(3);
+        let x = Tensor::randn(&[2, 5, 5], &mut rng, 1.0);
+        let mut w = Tensor::zeros(&[2, 2, 3, 3]);
+        w.set(&[0, 0, 1, 1], 1.0);
+        w.set(&[1, 1, 1, 1], 1.0);
+        let y = conv2d_same_ref(&x, &w);
+        assert!(y.max_abs_diff(&x) < 1e-6);
+    }
+
+    #[test]
+    fn conv_shift_kernel_at_border() {
+        // kernel tap at (0,0) shifts the image down-right by `pad`; border
+        // reads come from zero padding.
+        let x = Tensor::from_vec(&[1, 2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let mut w = Tensor::zeros(&[1, 1, 3, 3]);
+        w.set(&[0, 0, 0, 0], 1.0);
+        let y = conv2d_same_ref(&x, &w);
+        assert_eq!(y.data(), &[0.0, 0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn maxpool_halves_shape() {
+        forall("pool shape", 20, |rng| {
+            let c = rng.range(1, 4);
+            let h = 2 * rng.range(1, 8);
+            let x = Tensor::randn(&[c, h, h], rng, 1.0);
+            let p = maxpool2(&x);
+            assert_eq!(p.shape(), &[c, h / 2, h / 2]);
+            // pooled max never exceeds global max
+            let gmax = x.data().iter().cloned().fold(f32::MIN, f32::max);
+            let pmax = p.data().iter().cloned().fold(f32::MIN, f32::max);
+            assert!(pmax <= gmax + 1e-6);
+        });
+    }
+}

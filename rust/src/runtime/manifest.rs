@@ -1,0 +1,261 @@
+//! `artifacts/manifest.json` schema (written by `python/compile/aot.py`).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::Json;
+
+/// One executable's metadata.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ExecutableEntry {
+    pub tiles: usize,
+    pub cin: usize,
+    pub cout: usize,
+    pub fft_size: usize,
+    pub sha256: String,
+    pub bytes: usize,
+}
+
+/// One conv layer instance inside a variant.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerEntry {
+    pub name: String,
+    pub cin: usize,
+    pub cout: usize,
+    pub h: usize,
+    pub tiles: usize,
+    pub pool_after: bool,
+    pub file: String,
+}
+
+/// One model variant (conv stack + FC head description).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct VariantEntry {
+    pub input_hw: usize,
+    pub input_c: usize,
+    pub fc: Vec<usize>,
+    pub layers: Vec<LayerEntry>,
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Manifest {
+    pub fft_size: usize,
+    pub kernel_k: usize,
+    pub tile: usize,
+    pub word_bytes: usize,
+    pub hadamard_mode: String,
+    pub variants: BTreeMap<String, VariantEntry>,
+    pub executables: BTreeMap<String, ExecutableEntry>,
+}
+
+fn req_usize(j: &Json, key: &str) -> Result<usize> {
+    j.get(key)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow!("manifest: missing/invalid '{key}'"))
+}
+
+fn req_str(j: &Json, key: &str) -> Result<String> {
+    j.get(key)
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| anyhow!("manifest: missing/invalid '{key}'"))
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let format = req_str(&j, "format")?;
+        if format != "hlo-text-v1" {
+            return Err(anyhow!("unsupported manifest format {format:?}"));
+        }
+        let mut variants = BTreeMap::new();
+        for (name, v) in j
+            .get("variants")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest: missing 'variants'"))?
+        {
+            let mut layers = Vec::new();
+            for l in v
+                .get("layers")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("variant {name}: missing 'layers'"))?
+            {
+                layers.push(LayerEntry {
+                    name: req_str(l, "name")?,
+                    cin: req_usize(l, "cin")?,
+                    cout: req_usize(l, "cout")?,
+                    h: req_usize(l, "h")?,
+                    tiles: req_usize(l, "tiles")?,
+                    pool_after: l
+                        .get("pool_after")
+                        .and_then(Json::as_bool)
+                        .unwrap_or(false),
+                    file: req_str(l, "file")?,
+                });
+            }
+            let fc = v
+                .get("fc")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("variant {name}: missing 'fc'"))?
+                .iter()
+                .map(|x| x.as_usize().ok_or_else(|| anyhow!("bad fc width")))
+                .collect::<Result<Vec<_>>>()?;
+            variants.insert(
+                name.clone(),
+                VariantEntry {
+                    input_hw: req_usize(v, "input_hw")?,
+                    input_c: req_usize(v, "input_c")?,
+                    fc,
+                    layers,
+                },
+            );
+        }
+        let mut executables = BTreeMap::new();
+        for (file, e) in j
+            .get("executables")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest: missing 'executables'"))?
+        {
+            executables.insert(
+                file.clone(),
+                ExecutableEntry {
+                    tiles: req_usize(e, "tiles")?,
+                    cin: req_usize(e, "cin")?,
+                    cout: req_usize(e, "cout")?,
+                    fft_size: req_usize(e, "fft_size")?,
+                    sha256: req_str(e, "sha256")?,
+                    bytes: req_usize(e, "bytes")?,
+                },
+            );
+        }
+        let m = Manifest {
+            fft_size: req_usize(&j, "fft_size")?,
+            kernel_k: req_usize(&j, "kernel_k")?,
+            tile: req_usize(&j, "tile")?,
+            word_bytes: req_usize(&j, "word_bytes")?,
+            hadamard_mode: req_str(&j, "hadamard_mode")?,
+            variants,
+            executables,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Cross-checks: every layer's file exists in `executables` with a
+    /// matching shape, and tile geometry is self-consistent.
+    pub fn validate(&self) -> Result<()> {
+        if self.tile + self.kernel_k - 1 != self.fft_size {
+            return Err(anyhow!(
+                "tile {} + k {} - 1 != K {}",
+                self.tile,
+                self.kernel_k,
+                self.fft_size
+            ));
+        }
+        for (name, v) in &self.variants {
+            for l in &v.layers {
+                let e = self
+                    .executables
+                    .get(&l.file)
+                    .ok_or_else(|| anyhow!("{name}/{}: file {} unregistered", l.name, l.file))?;
+                if e.tiles != l.tiles || e.cin != l.cin || e.cout != l.cout {
+                    return Err(anyhow!(
+                        "{name}/{}: shape mismatch with executable {}",
+                        l.name,
+                        l.file
+                    ));
+                }
+                let side = l.h.div_ceil(self.tile);
+                if side * side != l.tiles {
+                    return Err(anyhow!(
+                        "{name}/{}: tiles {} != ceil({}/{})²",
+                        l.name,
+                        l.tiles,
+                        l.h,
+                        self.tile
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn variant(&self, name: &str) -> Result<&VariantEntry> {
+        self.variants.get(name).ok_or_else(|| {
+            anyhow!(
+                "variant {name:?} not in manifest (have: {:?})",
+                self.variants.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> String {
+        r#"{
+          "format": "hlo-text-v1",
+          "fft_size": 8, "kernel_k": 3, "tile": 6,
+          "word_bytes": 2, "hadamard_mode": "mxu4",
+          "variants": {
+            "demo": {
+              "input_hw": 16, "input_c": 1, "fc": [32, 10],
+              "layers": [
+                {"name": "conv1", "cin": 1, "cout": 8, "h": 16,
+                 "tiles": 9, "pool_after": true, "file": "a.hlo.txt"}
+              ]
+            }
+          },
+          "executables": {
+            "a.hlo.txt": {"tiles": 9, "cin": 1, "cout": 8,
+                          "fft_size": 8, "sha256": "00", "bytes": 10}
+          }
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(&sample()).unwrap();
+        assert_eq!(m.fft_size, 8);
+        let v = m.variant("demo").unwrap();
+        assert_eq!(v.layers[0].cout, 8);
+        assert!(v.layers[0].pool_after);
+        assert_eq!(v.fc, vec![32, 10]);
+    }
+
+    #[test]
+    fn rejects_shape_mismatch() {
+        let bad = sample().replace("\"tiles\": 9, \"cin\": 1", "\"tiles\": 4, \"cin\": 1");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_variant_lookup() {
+        let m = Manifest::parse(&sample()).unwrap();
+        assert!(m.variant("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        let bad = sample().replace("hlo-text-v1", "hlo-proto-v0");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn parses_real_manifest_if_built() {
+        // Non-fatal integration hook: validate the real artifacts when
+        // `make artifacts` has run (skip silently otherwise).
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/manifest.json");
+        if let Ok(text) = std::fs::read_to_string(path) {
+            let m = Manifest::parse(&text).unwrap();
+            assert!(m.variants.contains_key("demo"));
+            assert!(m.variants.contains_key("vgg16-224"));
+            assert_eq!(m.variant("vgg16-224").unwrap().layers.len(), 13);
+        }
+    }
+}

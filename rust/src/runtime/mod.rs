@@ -1,0 +1,198 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them.
+//!
+//! Wraps the `xla` crate (`PjRtClient::cpu()` → `HloModuleProto::
+//! from_text_file` → `compile` → `execute`) following
+//! /opt/xla-example/load_hlo. One compiled executable per layer *shape*
+//! (the manifest's dedup keys); compilation happens once at engine startup
+//! and executables are cached for the life of the process — Python never
+//! runs on this path.
+
+mod manifest;
+
+pub use manifest::{LayerEntry, Manifest, VariantEntry};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::tensor::{ComplexTensor, Tensor};
+
+/// A compiled spectral-conv executable for one (T, Cin, Cout, K) shape.
+pub struct ConvExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    pub tiles: usize,
+    pub cin: usize,
+    pub cout: usize,
+    pub fft: usize,
+}
+
+/// Host-side layout conversion: spectral kernel planes `[N, M, K, K]` →
+/// frequency-major `[F, M, N]` (re, im) — the executable's weight layout.
+/// Computed once per engine startup (§Perf L2: doing this transpose inside
+/// the graph cost ~120 ms per request on 512×512 layers).
+pub fn freq_major_planes(kernels: &ComplexTensor) -> (Vec<f32>, Vec<f32>) {
+    let shape = kernels.shape();
+    let (n, m, k) = (shape[0], shape[1], shape[2]);
+    let f = k * shape[3];
+    let mut re = vec![0.0f32; f * m * n];
+    let mut im = vec![0.0f32; f * m * n];
+    let (src_re, src_im) = (kernels.re.data(), kernels.im.data());
+    for ni in 0..n {
+        for mi in 0..m {
+            let src = (ni * m + mi) * f;
+            for fi in 0..f {
+                let dst = (fi * m + mi) * n + ni;
+                re[dst] = src_re[src + fi];
+                im[dst] = src_im[src + fi];
+            }
+        }
+    }
+    (re, im)
+}
+
+impl ConvExecutable {
+    /// One-shot execution: spatial input tiles `[T, Cin, K, K]` + spectral
+    /// kernel planes `[Cout, Cin, K, K]` → spatial output tiles
+    /// `[T, Cout, K, K]`. Converts the kernel layout per call; the serving
+    /// hot path uses [`Self::run_buffers`] with pre-uploaded weights.
+    pub fn run(&self, tiles: &Tensor, kernels: &ComplexTensor) -> Result<Tensor> {
+        let k = self.fft;
+        let want_in = [self.tiles, self.cin, k, k];
+        let want_w = [self.cout, self.cin, k, k];
+        if tiles.shape() != want_in {
+            return Err(anyhow!(
+                "input tiles shape {:?} != executable shape {:?}",
+                tiles.shape(),
+                want_in
+            ));
+        }
+        if kernels.shape() != want_w {
+            return Err(anyhow!(
+                "kernel shape {:?} != executable shape {:?}",
+                kernels.shape(),
+                want_w
+            ));
+        }
+        let dims: Vec<i64> = want_in.iter().map(|&d| d as i64).collect();
+        let wdims = [(k * k) as i64, self.cin as i64, self.cout as i64];
+        let (wre, wim) = freq_major_planes(kernels);
+        let lit_tiles = xla::Literal::vec1(tiles.data()).reshape(&dims)?;
+        let lit_wre = xla::Literal::vec1(&wre).reshape(&wdims)?;
+        let lit_wim = xla::Literal::vec1(&wim).reshape(&wdims)?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[lit_tiles, lit_wre, lit_wim])?[0][0]
+            .to_literal_sync()?;
+        self.unpack(result)
+    }
+
+    /// Hot-path execution with pre-uploaded device buffers (§Perf: the
+    /// per-call `Literal` conversion of a 512×512×8×8 kernel plane pair
+    /// costs ~0.5 s; weights are static, so the engine uploads them once
+    /// and re-uses the `PjRtBuffer`s — see EXPERIMENTS.md §Perf L3).
+    pub fn run_buffers(
+        &self,
+        tiles: &xla::PjRtBuffer,
+        w_re: &xla::PjRtBuffer,
+        w_im: &xla::PjRtBuffer,
+    ) -> Result<Tensor> {
+        let result = self
+            .exe
+            .execute_b::<&xla::PjRtBuffer>(&[tiles, w_re, w_im])?[0][0]
+            .to_literal_sync()?;
+        self.unpack(result)
+    }
+
+    fn unpack(&self, result: xla::Literal) -> Result<Tensor> {
+        // aot.py lowers with return_tuple=True → unwrap the 1-tuple.
+        let out = result.to_tuple1()?;
+        let data = out.to_vec::<f32>()?;
+        let k = self.fft;
+        Ok(Tensor::from_vec(&[self.tiles, self.cout, k, k], data))
+    }
+}
+
+/// The PJRT runtime: client + executable cache + manifest.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+    pub manifest: Manifest,
+    cache: HashMap<String, ConvExecutable>,
+}
+
+impl Runtime {
+    /// Open `artifacts/` (produced by `make artifacts`).
+    pub fn open(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                manifest_path.display()
+            )
+        })?;
+        let manifest = Manifest::parse(&text)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { client, artifacts_dir: dir, manifest, cache: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Upload an f32 host array to a device buffer (weights are uploaded
+    /// once at engine startup and reused every request).
+    pub fn upload(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Compile (or fetch from cache) the executable for an artifact file.
+    pub fn conv_executable(&mut self, file: &str) -> Result<&ConvExecutable> {
+        if !self.cache.contains_key(file) {
+            let meta = self
+                .manifest
+                .executables
+                .get(file)
+                .ok_or_else(|| anyhow!("{file} not in manifest"))?;
+            let path = self.artifacts_dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.cache.insert(
+                file.to_string(),
+                ConvExecutable {
+                    exe,
+                    tiles: meta.tiles,
+                    cin: meta.cin,
+                    cout: meta.cout,
+                    fft: meta.fft_size,
+                },
+            );
+        }
+        Ok(&self.cache[file])
+    }
+
+    /// Pre-compile all executables of a variant (startup warm-up).
+    pub fn warm_variant(&mut self, variant: &str) -> Result<usize> {
+        let files: Vec<String> = self
+            .manifest
+            .variant(variant)?
+            .layers
+            .iter()
+            .map(|l| l.file.clone())
+            .collect();
+        let mut compiled = 0;
+        for f in files {
+            self.conv_executable(&f)?;
+            compiled += 1;
+        }
+        Ok(compiled)
+    }
+
+    pub fn cached_executables(&self) -> usize {
+        self.cache.len()
+    }
+}

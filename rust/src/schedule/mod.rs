@@ -1,0 +1,219 @@
+//! On-chip memory-access scheduling for parallel sparse kernels
+//! (paper §5.3, Alg. 2, Figs. 4–6, 8–10).
+//!
+//! Problem: N' sparse kernels are processed in parallel; in each clock cycle
+//! every active PE reads one input value from the (replicated) input-tile
+//! BRAM. A tile has `r` replicas, so at most `r` *distinct* frequency
+//! indices can be served per cycle, and each kernel contributes at most one
+//! (value, index) per cycle. A schedule is a sequence of *sets*
+//! `s_i = {(kernel, index), ...}` covering every non-zero of every kernel
+//! exactly once; quality = few sets (cycles) ⇔ high PE utilization (Eq. 14).
+//!
+//! * [`exact_cover`] — the paper's greedy approximate exact-cover scheduler.
+//! * [`baselines`] — *random* and *lowest-index-first* ([16]) comparators.
+//! * [`tables`] — the INDEX/VALUE table encoding of Fig. 6 that the
+//!   simulator's streaming controller consumes.
+
+pub mod baselines;
+pub mod exact_cover;
+pub mod tables;
+
+pub use baselines::{schedule_lowest_index, schedule_random};
+pub use exact_cover::schedule_exact_cover;
+
+/// One read cycle: the (kernel, index) pairs served together.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CycleSet {
+    /// (kernel id within the group, flattened frequency index).
+    pub reads: Vec<(u16, u16)>,
+}
+
+impl CycleSet {
+    /// Distinct frequency indices this cycle (must be ≤ r).
+    pub fn distinct_indices(&self) -> usize {
+        let mut idx: Vec<u16> = self.reads.iter().map(|&(_, i)| i).collect();
+        idx.sort_unstable();
+        idx.dedup();
+        idx.len()
+    }
+
+    /// Active PEs this cycle = kernels served.
+    pub fn active_kernels(&self) -> usize {
+        self.reads.len()
+    }
+}
+
+/// A full schedule for one kernel group (the `S*` of Alg. 2).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Schedule {
+    pub sets: Vec<CycleSet>,
+    /// The replica bound r the schedule was built for.
+    pub replicas: usize,
+    /// Number of kernels in the group (PE_total per tile lane).
+    pub num_kernels: usize,
+}
+
+impl Schedule {
+    pub fn cycles(&self) -> usize {
+        self.sets.len()
+    }
+
+    pub fn total_reads(&self) -> usize {
+        self.sets.iter().map(|s| s.reads.len()).sum()
+    }
+
+    /// PE utilization (paper Eq. 14), for a single tile lane:
+    /// `μ = Σ_t PE_on_t / (T · N')`. Broadcasting to P' tiles multiplies
+    /// both numerator and denominator by P', leaving μ unchanged.
+    pub fn pe_utilization(&self) -> f64 {
+        if self.sets.is_empty() {
+            return 1.0;
+        }
+        self.total_reads() as f64 / (self.cycles() * self.num_kernels) as f64
+    }
+
+    /// Information-theoretic lower bound on cycles for this workload:
+    /// every kernel needs `nnz_k` cycles (one value per cycle), and at most
+    /// `num_kernels` reads happen per cycle.
+    pub fn lower_bound(kernels: &[Vec<u16>], _replicas: usize) -> usize {
+        let max_nnz = kernels.iter().map(|k| k.len()).max().unwrap_or(0);
+        let total: usize = kernels.iter().map(|k| k.len()).sum();
+        let n = kernels.len().max(1);
+        max_nnz.max(total.div_ceil(n))
+    }
+
+    /// Validate the exact-cover invariants against the source kernels:
+    /// (C1) one read per kernel per cycle, (C2) ≤ r distinct indices per
+    /// cycle, and every (kernel, index) edge covered exactly once.
+    pub fn validate(&self, kernels: &[Vec<u16>]) -> Result<(), String> {
+        use std::collections::HashSet;
+        let mut covered: HashSet<(u16, u16)> = HashSet::new();
+        for (c, set) in self.sets.iter().enumerate() {
+            let mut seen_kernels = HashSet::new();
+            for &(k, i) in &set.reads {
+                if !seen_kernels.insert(k) {
+                    return Err(format!("cycle {c}: kernel {k} read twice (C1)"));
+                }
+                if !covered.insert((k, i)) {
+                    return Err(format!("cycle {c}: edge ({k},{i}) covered twice"));
+                }
+                let kk = kernels
+                    .get(k as usize)
+                    .ok_or_else(|| format!("cycle {c}: kernel {k} out of range"))?;
+                if !kk.contains(&i) {
+                    return Err(format!("cycle {c}: ({k},{i}) not a non-zero"));
+                }
+            }
+            if set.distinct_indices() > self.replicas {
+                return Err(format!(
+                    "cycle {c}: {} distinct indices > r={} (C2)",
+                    set.distinct_indices(),
+                    self.replicas
+                ));
+            }
+        }
+        let total_edges: usize = kernels.iter().map(|k| k.len()).sum();
+        if covered.len() != total_edges {
+            return Err(format!(
+                "covered {} of {} edges",
+                covered.len(),
+                total_edges
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Scheduling strategy selector (benches sweep all three).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Scheduler {
+    ExactCover,
+    LowestIndexFirst,
+    Random,
+}
+
+impl Scheduler {
+    pub const ALL: [Scheduler; 3] =
+        [Scheduler::ExactCover, Scheduler::LowestIndexFirst, Scheduler::Random];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Scheduler::ExactCover => "exact-cover (this work)",
+            Scheduler::LowestIndexFirst => "lowest-index-first [16]",
+            Scheduler::Random => "random",
+        }
+    }
+
+    /// Schedule one kernel group. `seed` only affects [`Scheduler::Random`].
+    pub fn run(&self, kernels: &[Vec<u16>], replicas: usize, seed: u64) -> Schedule {
+        match self {
+            Scheduler::ExactCover => schedule_exact_cover(kernels, replicas),
+            Scheduler::LowestIndexFirst => baselines::schedule_lowest_index(kernels, replicas),
+            Scheduler::Random => baselines::schedule_random(kernels, replicas, seed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cycle_set_counts() {
+        let s = CycleSet { reads: vec![(0, 5), (1, 5), (2, 9)] };
+        assert_eq!(s.distinct_indices(), 2);
+        assert_eq!(s.active_kernels(), 3);
+    }
+
+    #[test]
+    fn utilization_bounds() {
+        let sched = Schedule {
+            sets: vec![
+                CycleSet { reads: vec![(0, 1), (1, 1)] },
+                CycleSet { reads: vec![(0, 2)] },
+            ],
+            replicas: 2,
+            num_kernels: 2,
+        };
+        // 3 reads over 2 cycles * 2 PEs = 0.75
+        assert!((sched.pe_utilization() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lower_bound_cases() {
+        // one kernel with 5 nnz dominates
+        assert_eq!(Schedule::lower_bound(&[vec![0, 1, 2, 3, 4], vec![0]], 4), 5);
+        // balanced: total/n
+        assert_eq!(Schedule::lower_bound(&[vec![0, 1], vec![2, 3], vec![4, 5]], 1), 2);
+        assert_eq!(Schedule::lower_bound(&[], 4), 0);
+    }
+
+    #[test]
+    fn validate_catches_violations() {
+        let kernels = vec![vec![1u16, 2], vec![1]];
+        // duplicate kernel in one cycle
+        let bad = Schedule {
+            sets: vec![CycleSet { reads: vec![(0, 1), (0, 2)] }],
+            replicas: 8,
+            num_kernels: 2,
+        };
+        assert!(bad.validate(&kernels).unwrap_err().contains("C1"));
+        // replica violation
+        let bad2 = Schedule {
+            sets: vec![
+                CycleSet { reads: vec![(0, 1), (1, 1)] },
+                CycleSet { reads: vec![(0, 2)] },
+            ],
+            replicas: 0,
+            num_kernels: 2,
+        };
+        assert!(bad2.validate(&kernels).unwrap_err().contains("C2"));
+        // incomplete cover
+        let bad3 = Schedule {
+            sets: vec![CycleSet { reads: vec![(0, 1)] }],
+            replicas: 8,
+            num_kernels: 2,
+        };
+        assert!(bad3.validate(&kernels).unwrap_err().contains("covered"));
+    }
+}

@@ -1,0 +1,183 @@
+//! INDEX/VALUE table encoding (paper Fig. 6).
+//!
+//! After scheduling, `S*` is split into two hardware tables:
+//!
+//! * **INDEX table** — per cycle, the ≤ r distinct frequency indices to read
+//!   from the input-tile replicas (`rep_0, rep_1, ...`).
+//! * **VALUE table** — per cycle, one slot per PE lane: the kernel weight,
+//!   a `sel` signal routing the right replica output to the PE, and a
+//!   `valid` bit ("some kernels might be inactive due to too many unique
+//!   addresses in current cycle").
+//!
+//! The cycle-level simulator's streaming controller executes these tables
+//! directly, so the scheduler → hardware hand-off is the same data structure
+//! the paper describes.
+
+use super::Schedule;
+use crate::sparse::SparseLayer;
+
+/// One PE lane's slot in a cycle of the VALUE table.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ValueSlot {
+    /// Lane active this cycle?
+    pub valid: bool,
+    /// Which INDEX-table entry (replica port) feeds this lane.
+    pub sel: u8,
+    /// Kernel weight (re, im) consumed this cycle.
+    pub weight: (f32, f32),
+    /// Flattened frequency index (for writing the partial sum).
+    pub index: u16,
+}
+
+impl ValueSlot {
+    pub fn idle() -> Self {
+        ValueSlot { valid: false, sel: 0, weight: (0.0, 0.0), index: 0 }
+    }
+}
+
+/// The compiled tables for one kernel group at one input channel.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AccessTables {
+    /// `index[c]` = distinct indices read in cycle c (≤ r entries).
+    pub index: Vec<Vec<u16>>,
+    /// `value[c][lane]` = the lane's slot in cycle c (N' lanes wide).
+    pub value: Vec<Vec<ValueSlot>>,
+    pub num_lanes: usize,
+}
+
+impl AccessTables {
+    pub fn cycles(&self) -> usize {
+        self.index.len()
+    }
+
+    /// Words of on-chip table storage: INDEX entries + VALUE slots
+    /// (weight = 2 words, sel+valid+index packed into 1).
+    pub fn storage_words(&self) -> usize {
+        let idx: usize = self.index.iter().map(|c| c.len()).sum();
+        let val: usize = self
+            .value
+            .iter()
+            .flat_map(|c| c.iter())
+            .filter(|s| s.valid)
+            .count();
+        idx + 3 * val
+    }
+}
+
+/// Compile a schedule into Fig. 6's INDEX/VALUE tables.
+///
+/// `kernel_of_lane` maps schedule-local kernel ids to lanes 1:1 (the
+/// schedule's kernels *are* the lanes); weights come from the sparse layer:
+/// group `group` at input channel `m`.
+pub fn compile_tables(
+    schedule: &Schedule,
+    layer: &SparseLayer,
+    group: usize,
+    m: usize,
+    n_par: usize,
+) -> AccessTables {
+    let base = group * n_par;
+    let lanes = schedule.num_kernels;
+    let mut index = Vec::with_capacity(schedule.cycles());
+    let mut value = Vec::with_capacity(schedule.cycles());
+    for set in &schedule.sets {
+        let mut idxs: Vec<u16> = set.reads.iter().map(|&(_, i)| i).collect();
+        idxs.sort_unstable();
+        idxs.dedup();
+        assert!(idxs.len() <= schedule.replicas, "C2 violated in input schedule");
+        let mut slots = vec![ValueSlot::idle(); lanes];
+        for &(k, i) in &set.reads {
+            let sel = idxs.binary_search(&i).expect("index present") as u8;
+            let kernel = layer.kernel(base + k as usize, m);
+            let pos = kernel
+                .indices
+                .binary_search(&i)
+                .expect("scheduled index must be a non-zero of the kernel");
+            slots[k as usize] = ValueSlot {
+                valid: true,
+                sel,
+                weight: kernel.values[pos],
+                index: i,
+            };
+        }
+        index.push(idxs);
+        value.push(slots);
+    }
+    AccessTables { index, value, num_lanes: lanes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::schedule_exact_cover;
+    use crate::sparse::prune_random;
+    use crate::util::rng::Pcg32;
+
+    fn setup(n_par: usize, r: usize) -> (SparseLayer, Schedule, AccessTables) {
+        let mut rng = Pcg32::new(21);
+        let layer = prune_random(n_par, 2, 8, 4, &mut rng);
+        let kernels = layer.group_indices(0, n_par, 1);
+        let sched = schedule_exact_cover(&kernels, r);
+        let tables = compile_tables(&sched, &layer, 0, 1, n_par);
+        (layer, sched, tables)
+    }
+
+    #[test]
+    fn tables_align_with_schedule() {
+        let (_, sched, tables) = setup(16, 6);
+        assert_eq!(tables.cycles(), sched.cycles());
+        for (c, set) in sched.sets.iter().enumerate() {
+            assert_eq!(tables.index[c].len(), set.distinct_indices());
+            let active = tables.value[c].iter().filter(|s| s.valid).count();
+            assert_eq!(active, set.active_kernels());
+        }
+    }
+
+    #[test]
+    fn sel_routes_to_correct_index() {
+        let (_, _, tables) = setup(16, 6);
+        for c in 0..tables.cycles() {
+            for slot in tables.value[c].iter().filter(|s| s.valid) {
+                assert_eq!(tables.index[c][slot.sel as usize], slot.index);
+            }
+        }
+    }
+
+    #[test]
+    fn weights_match_sparse_layer() {
+        let (layer, _, tables) = setup(8, 4);
+        for c in 0..tables.cycles() {
+            for (lane, slot) in tables.value[c].iter().enumerate() {
+                if slot.valid {
+                    let kernel = layer.kernel(lane, 1);
+                    let pos = kernel.indices.binary_search(&slot.index).unwrap();
+                    assert_eq!(slot.weight, kernel.values[pos]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn total_valid_slots_equal_nnz() {
+        let (layer, _, tables) = setup(16, 6);
+        let valid: usize = tables
+            .value
+            .iter()
+            .flat_map(|c| c.iter())
+            .filter(|s| s.valid)
+            .count();
+        // group 0 at channel 1 covers all 16 kernels × nnz each
+        let want: usize = (0..16).map(|n| layer.kernel(n, 1).nnz()).sum();
+        assert_eq!(valid, want);
+    }
+
+    #[test]
+    fn storage_words_positive_and_bounded() {
+        let (layer, sched, tables) = setup(16, 6);
+        let words = tables.storage_words();
+        assert!(words > 0);
+        // ≤ index entries (r per cycle) + 3 words per nnz
+        let nnz: usize = (0..16).map(|n| layer.kernel(n, 1).nnz()).sum();
+        assert!(words <= sched.cycles() * 6 + 3 * nnz);
+    }
+}

@@ -1,0 +1,254 @@
+//! Table 3 comparison rows as simulator configurations.
+//!
+//! The paper compares against four published designs; we cannot run their
+//! bitstreams, so each row is modeled as a configuration of the same
+//! simulator (DESIGN.md: baselines are "a configuration of S5"):
+//!
+//! * **[27] Zhang & Prasanna '17** — dense spectral CNN (α=1), fixed
+//!   dataflow, small PE budget (224 DSPs → N'=8, P'=7 at 4 DSP/PE).
+//! * **[26] Zeng et al. '18** — dense spectral (α=1), throughput-oriented,
+//!   256 DSPs (N'=8, P'=8).
+//! * **[16] SPEC2** — sparse spectral (α=4) but *fixed* streaming-kernels
+//!   dataflow (Flow #2-equivalent: Ns = N, Ps = P'), lowest-index-first
+//!   scheduling, 3200 DSPs (N'=64, P'=12), batch-oriented (single-image
+//!   latency suffers: the paper quotes 68 ms at 9 GB/s).
+//! * **[17] SparCNet** — sparse *spatial* accelerator; no spectral reuse at
+//!   all. Modeled analytically: spatial MACs / (PEs · clock) at the same
+//!   DSP budget scaled to the U200 (the paper does the same rescaling).
+//!
+//! "This work" = flexible dataflow (Alg. 1 plan) + exact-cover scheduling.
+
+use crate::analysis::{ArchParams, StreamParams};
+use crate::dataflow::{optimize_network_at, OptimizerConfig};
+use crate::model::Network;
+use crate::schedule::Scheduler;
+use crate::sim::engine::{simulate_network, NetworkSimResult, SimConfig};
+use crate::sparse::{prune_magnitude, SparseLayer};
+use crate::util::rng::Pcg32;
+
+/// A named Table 3 configuration.
+#[derive(Debug, Clone)]
+pub struct BaselineConfig {
+    pub name: &'static str,
+    pub alpha: usize,
+    pub arch: ArchParams,
+    pub scheduler: Scheduler,
+    /// Fixed streaming parameters; `None` = run Alg. 1 (this work).
+    pub fixed_stream: Option<FixedStream>,
+    pub ddr_bytes_per_sec: f64,
+}
+
+/// Fixed-dataflow policies for baseline rows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FixedStream {
+    /// Stream kernels every tile pass (Flow #2): Ns = N, Ps = P'.
+    StreamKernels,
+    /// Stream input tiles (Flow #1): Ns = N', Ps = P.
+    StreamInputs,
+}
+
+impl BaselineConfig {
+    pub fn this_work() -> Self {
+        BaselineConfig {
+            name: "This work",
+            alpha: 4,
+            arch: ArchParams::paper(),
+            scheduler: Scheduler::ExactCover,
+            fixed_stream: None,
+            ddr_bytes_per_sec: 12.8e9,
+        }
+    }
+
+    /// [16] SPEC2-like: sparse, fixed dataflow, lowest-index-first.
+    pub fn spec2_like() -> Self {
+        BaselineConfig {
+            name: "[16]-like (SPEC2)",
+            alpha: 4,
+            arch: ArchParams { p_par: 12, n_par: 64, replicas: 16 },
+            scheduler: Scheduler::LowestIndexFirst,
+            fixed_stream: Some(FixedStream::StreamKernels),
+            ddr_bytes_per_sec: 9.0e9,
+        }
+    }
+
+    /// [27]-like: dense spectral, small PE array.
+    pub fn dense_spectral_27() -> Self {
+        BaselineConfig {
+            name: "[27]-like (dense spectral)",
+            alpha: 1,
+            arch: ArchParams { p_par: 7, n_par: 8, replicas: 1 },
+            scheduler: Scheduler::LowestIndexFirst, // dense ⇒ all equal
+            fixed_stream: Some(FixedStream::StreamKernels),
+            ddr_bytes_per_sec: 5.0e9,
+        }
+    }
+
+    /// [26]-like: dense spectral, slightly bigger array.
+    pub fn dense_spectral_26() -> Self {
+        BaselineConfig {
+            name: "[26]-like (dense spectral)",
+            alpha: 1,
+            arch: ArchParams { p_par: 8, n_par: 8, replicas: 1 },
+            scheduler: Scheduler::LowestIndexFirst,
+            fixed_stream: Some(FixedStream::StreamKernels),
+            ddr_bytes_per_sec: 9.0e9,
+        }
+    }
+
+    pub fn all() -> Vec<BaselineConfig> {
+        vec![
+            Self::dense_spectral_27(),
+            Self::dense_spectral_26(),
+            Self::spec2_like(),
+            Self::this_work(),
+        ]
+    }
+}
+
+/// Run one Table 3 row: build sparse kernels, plan the dataflow, simulate.
+pub fn run_baseline(
+    cfg: &BaselineConfig,
+    net: &Network,
+    sample_groups: Option<usize>,
+    seed: u64,
+) -> NetworkSimResult {
+    let mut rng = Pcg32::new(seed);
+    let sparse: Vec<SparseLayer> = net
+        .convs
+        .iter()
+        .map(|c| prune_magnitude(c.cout, c.cin, c.fft, cfg.alpha, &mut rng))
+        .collect();
+
+    // Per-layer streaming parameters.
+    let streams: Vec<StreamParams> = match cfg.fixed_stream {
+        Some(FixedStream::StreamKernels) => net
+            .convs
+            .iter()
+            .map(|c| StreamParams { ns: c.cout, ps: cfg.arch.p_par.min(c.num_tiles()) })
+            .collect(),
+        Some(FixedStream::StreamInputs) => net
+            .convs
+            .iter()
+            .map(|c| StreamParams { ns: cfg.arch.n_par.min(c.cout), ps: c.num_tiles() })
+            .collect(),
+        None => {
+            let ocfg = OptimizerConfig {
+                alpha: cfg.alpha,
+                replicas: cfg.arch.replicas,
+                ..OptimizerConfig::paper()
+            };
+            let plan = optimize_network_at(net, cfg.arch, &ocfg)
+                .expect("this-work arch must be feasible");
+            net.convs
+                .iter()
+                .map(|c| {
+                    plan.layer(&c.name)
+                        .map(|lp| lp.stream)
+                        // conv1_1 is unplanned (skipped by Alg. 1): keep all
+                        .unwrap_or(StreamParams { ns: c.cout, ps: c.num_tiles() })
+                })
+                .collect()
+        }
+    };
+
+    let layers: Vec<(&crate::model::ConvLayer, &SparseLayer, StreamParams)> = net
+        .convs
+        .iter()
+        .zip(&sparse)
+        .zip(&streams)
+        .map(|((c, s), st)| (c, s, *st))
+        .collect();
+
+    let sim = SimConfig {
+        scheduler: cfg.scheduler,
+        ddr_bytes_per_sec: cfg.ddr_bytes_per_sec,
+        sample_groups,
+        seed,
+        ..SimConfig::default()
+    };
+    simulate_network(&layers, &cfg.arch, &sim)
+}
+
+/// [17]-like analytical row: sparse *spatial* accelerator.
+pub fn sparse_spatial_17_latency(net: &Network, _alpha: usize) -> f64 {
+    // Rescaled to the U200 exactly the way the paper does it (§6.3: "we
+    // also assume it can be deployed in Alveo U200, while accessing the
+    // same resources"): take the published 200 ms @ 384 DSP / 100 MHz and
+    // scale by DSP count and clock.
+    let published_latency = 0.200; // Artix-7 XC7A200T row of Table 3
+    let published_dsp = 384.0;
+    let published_clock = 100e6;
+    let our_dsp = 2680.0; // matched budget (paper's this-work DSPs)
+    let our_clock = 200e6;
+    let scaled = published_latency * (published_dsp / our_dsp)
+        * (published_clock / our_clock);
+    // sanity anchor: the workload must be non-trivial (guards unit slips)
+    let macs: u64 = net.convs.iter().map(|c| c.spatial_macs()).sum();
+    debug_assert!(macs > 1_000_000_000);
+    let _ = macs;
+    scaled
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_net() -> Network {
+        Network::vgg16_cifar()
+    }
+
+    #[test]
+    fn this_work_beats_spec2_latency() {
+        // Table 3's headline: flexible dataflow + exact-cover beats the
+        // fixed-dataflow SPEC2 configuration on single-image latency.
+        let net = small_net();
+        let ours = run_baseline(&BaselineConfig::this_work(), &net, Some(8), 1);
+        let spec2 = run_baseline(&BaselineConfig::spec2_like(), &net, Some(8), 1);
+        assert!(
+            ours.latency_secs() < spec2.latency_secs(),
+            "ours {:.4} vs spec2 {:.4}",
+            ours.latency_secs(),
+            spec2.latency_secs()
+        );
+    }
+
+    #[test]
+    fn dense_rows_are_slowest() {
+        let net = small_net();
+        let ours = run_baseline(&BaselineConfig::this_work(), &net, Some(8), 2);
+        let dense = run_baseline(&BaselineConfig::dense_spectral_27(), &net, Some(8), 2);
+        assert!(dense.latency_secs() > 3.0 * ours.latency_secs());
+    }
+
+    #[test]
+    fn transfer_reduction_vs_fixed_flow_224() {
+        // The paper's 42% headline holds at 224 scale, where tile counts are
+        // large enough that flexibility matters (at CIFAR scale every
+        // buffer fits and the flows converge — also checked).
+        let net = Network::vgg16_224();
+        let ours = run_baseline(&BaselineConfig::this_work(), &net, Some(2), 3);
+        let mut fixed_cfg = BaselineConfig::this_work();
+        fixed_cfg.fixed_stream = Some(FixedStream::StreamKernels);
+        let fixed = run_baseline(&fixed_cfg, &net, Some(2), 3);
+        let reduction = 1.0 - ours.total_ddr_bytes() as f64 / fixed.total_ddr_bytes() as f64;
+        assert!(
+            reduction > 0.30,
+            "transfer reduction {reduction:.2} (ours {} vs fixed {})",
+            ours.total_ddr_bytes(),
+            fixed.total_ddr_bytes()
+        );
+        // CIFAR scale: flexible never does worse.
+        let small = small_net();
+        let o2 = run_baseline(&BaselineConfig::this_work(), &small, Some(4), 3);
+        let mut f2 = BaselineConfig::this_work();
+        f2.fixed_stream = Some(FixedStream::StreamKernels);
+        let r2 = run_baseline(&f2, &small, Some(4), 3);
+        assert!(o2.total_ddr_bytes() <= r2.total_ddr_bytes());
+    }
+
+    #[test]
+    fn sparse_spatial_row_positive() {
+        let l = sparse_spatial_17_latency(&Network::vgg16_224(), 4);
+        assert!((0.010..0.020).contains(&l), "latency {l}");
+    }
+}

@@ -1,0 +1,304 @@
+//! Streaming-controller finite state machine (paper Fig. 3).
+//!
+//! Loop nest, derived jointly from Fig. 3 and the Eq. 12/13 accounting:
+//!
+//! ```text
+//! for tile-pass  (⌈P/Ps⌉):              # psums for Ps tiles stay resident
+//!   for kernel-pass (⌈N/Ns⌉):           #   across the channel loop
+//!     for channel m in 0..M:            # M' = 1, serial channels
+//!       READ KERNEL   (Ns kernels, channel m — buffer holds one channel:
+//!                      Eq. 12's (1/α)·Ns·K² kernel term)
+//!       for tile-batch (⌈Ps/P'⌉):
+//!         READ INPUT  (P' tiles of channel m) + tile FFT
+//!         PROC CONV   (per N'-subgroup of the Ns kernels)
+//!     PROC IFFT + WRITE OUT (Ns × Ps output tiles)
+//! ```
+//!
+//! Transfer totals telescope exactly to Eq. 13: kernels are read
+//! `⌈P/Ps⌉` times over the layer (`h_in·w_in/(Ps·h'·w')`), inputs
+//! `⌈N/Ns⌉` times, outputs once. Fig. 3's two `!Ms` cases map to the
+//! channel loop: mid-channel tile batches reuse resident kernels
+//! ("kernels are already loaded"); a new channel flushes kernels and tiles.
+
+/// FSM states (names follow Fig. 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum State {
+    /// Load Ns kernels' values for the current input channel.
+    ReadKernel,
+    /// Load the next P' input tiles (and FFT them).
+    ReadInput,
+    /// Hadamard product + accumulation for one N'-subgroup.
+    ProcConv,
+    /// IFFT the finished Ns × Ps output tiles.
+    ProcIfft,
+    /// Write spatial output tiles to DDR.
+    WriteOut,
+    /// Layer complete.
+    Done,
+}
+
+/// Layer configuration the controller sequences over.
+#[derive(Debug, Clone, Copy)]
+pub struct LoopConfig {
+    /// Total kernels N.
+    pub n: usize,
+    /// Total tiles P.
+    pub p: usize,
+    /// Total input channels M (processed serially, M' = 1).
+    pub m: usize,
+    /// Streaming parameters.
+    pub ns: usize,
+    pub ps: usize,
+    /// Parallelism.
+    pub p_par: usize,
+    pub n_par: usize,
+}
+
+/// One emitted phase with enough context to charge cycles against it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Phase {
+    pub state: State,
+    /// Global kernel-group index (kpass · ⌈Ns/N'⌉ + subgroup) for ProcConv.
+    pub kernel_group: usize,
+    /// Input channel (ReadKernel / ReadInput / ProcConv).
+    pub channel: usize,
+    /// Tiles covered by this phase.
+    pub tiles: usize,
+    /// Kernels covered by this phase.
+    pub kernels: usize,
+}
+
+/// The streaming controller.
+#[derive(Debug, Clone)]
+pub struct Controller {
+    cfg: LoopConfig,
+    state: State,
+    tpass: usize,
+    kpass: usize,
+    chan: usize,
+    batch: usize,
+    sub: usize,
+    started: bool,
+}
+
+impl Controller {
+    pub fn new(cfg: LoopConfig) -> Self {
+        assert!(cfg.ns >= 1 && cfg.ps >= 1 && cfg.m >= 1 && cfg.n >= 1 && cfg.p >= 1);
+        assert!(cfg.n_par >= 1 && cfg.p_par >= 1);
+        Controller { cfg, state: State::ReadKernel, tpass: 0, kpass: 0, chan: 0, batch: 0, sub: 0, started: false }
+    }
+
+    fn ns_eff(&self) -> usize {
+        (self.cfg.n - self.kpass * self.cfg.ns).min(self.cfg.ns)
+    }
+
+    fn ps_eff(&self) -> usize {
+        (self.cfg.p - self.tpass * self.cfg.ps).min(self.cfg.ps)
+    }
+
+    fn subgroups(&self) -> usize {
+        self.ns_eff().div_ceil(self.cfg.n_par)
+    }
+
+    fn batches(&self) -> usize {
+        self.ps_eff().div_ceil(self.cfg.p_par)
+    }
+
+    fn kernels_in_sub(&self) -> usize {
+        (self.ns_eff() - self.sub * self.cfg.n_par).min(self.cfg.n_par)
+    }
+
+    fn tiles_in_batch(&self) -> usize {
+        (self.ps_eff() - self.batch * self.cfg.p_par).min(self.cfg.p_par)
+    }
+
+    /// Advance the FSM and return the next phase, or `None` when Done.
+    pub fn next_phase(&mut self) -> Option<Phase> {
+        if self.state == State::Done {
+            return None;
+        }
+        if !self.started {
+            self.started = true;
+            return Some(self.emit(State::ReadKernel));
+        }
+        let phase = match self.state {
+            State::ReadKernel => self.emit(State::ReadInput),
+            State::ReadInput => self.emit(State::ProcConv),
+            State::ProcConv => {
+                if self.sub + 1 < self.subgroups() {
+                    self.sub += 1;
+                    self.emit(State::ProcConv)
+                } else if self.batch + 1 < self.batches() {
+                    // mid-channel: new tiles, kernels already loaded (Fig 3)
+                    self.sub = 0;
+                    self.batch += 1;
+                    self.emit(State::ReadInput)
+                } else if self.chan + 1 < self.cfg.m {
+                    // new channel: flush kernels and tiles, reload both
+                    self.sub = 0;
+                    self.batch = 0;
+                    self.chan += 1;
+                    self.emit(State::ReadKernel)
+                } else {
+                    self.emit(State::ProcIfft)
+                }
+            }
+            State::ProcIfft => self.emit(State::WriteOut),
+            State::WriteOut => {
+                self.sub = 0;
+                self.batch = 0;
+                self.chan = 0;
+                if (self.kpass + 1) * self.cfg.ns < self.cfg.n {
+                    // next kernel group against the same resident tile pass
+                    self.kpass += 1;
+                    self.emit(State::ReadKernel)
+                } else if (self.tpass + 1) * self.cfg.ps < self.cfg.p {
+                    self.tpass += 1;
+                    self.kpass = 0;
+                    self.emit(State::ReadKernel)
+                } else {
+                    self.state = State::Done;
+                    return None;
+                }
+            }
+            State::Done => return None,
+        };
+        Some(phase)
+    }
+
+    fn emit(&mut self, s: State) -> Phase {
+        self.state = s;
+        Phase {
+            state: s,
+            kernel_group: self.kpass * self.cfg.ns.div_ceil(self.cfg.n_par) + self.sub,
+            channel: self.chan,
+            tiles: match s {
+                State::ReadKernel => 0,
+                State::ProcIfft | State::WriteOut => self.ps_eff(),
+                _ => self.tiles_in_batch(),
+            },
+            kernels: match s {
+                State::ReadInput => 0,
+                State::ProcConv => self.kernels_in_sub(),
+                _ => self.ns_eff(),
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(cfg: LoopConfig) -> Vec<Phase> {
+        let mut c = Controller::new(cfg);
+        let mut out = Vec::new();
+        while let Some(p) = c.next_phase() {
+            out.push(p);
+            assert!(out.len() < 1_000_000, "FSM must terminate");
+        }
+        out
+    }
+
+    fn count(phases: &[Phase], s: State) -> usize {
+        phases.iter().filter(|p| p.state == s).count()
+    }
+
+    #[test]
+    fn minimal_layer_sequence() {
+        let phases = run(LoopConfig { n: 4, p: 2, m: 1, ns: 4, ps: 2, p_par: 2, n_par: 4 });
+        let states: Vec<State> = phases.iter().map(|p| p.state).collect();
+        assert_eq!(
+            states,
+            vec![State::ReadKernel, State::ReadInput, State::ProcConv, State::ProcIfft, State::WriteOut]
+        );
+    }
+
+    #[test]
+    fn channel_loop_reloads_kernels_per_channel() {
+        // Eq 12: the kernel buffer holds one channel of Ns kernels, so
+        // every channel re-reads kernels.
+        let phases = run(LoopConfig { n: 4, p: 2, m: 3, ns: 4, ps: 2, p_par: 2, n_par: 4 });
+        assert_eq!(count(&phases, State::ReadKernel), 3);
+        assert_eq!(count(&phases, State::ReadInput), 3);
+        let convs: Vec<usize> = phases
+            .iter()
+            .filter(|p| p.state == State::ProcConv)
+            .map(|p| p.channel)
+            .collect();
+        assert_eq!(convs, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn transfer_totals_telescope_to_eq13() {
+        // Kernel words loaded = ⌈P/Ps⌉ · N · M · nnz; input words = ⌈N/Ns⌉
+        // · M · P · tile_area. Verify the phase counts give those factors.
+        let cfg = LoopConfig { n: 8, p: 6, m: 2, ns: 4, ps: 3, p_par: 3, n_par: 4 };
+        let phases = run(cfg);
+        // kernel reads: tpasses(2) × kpasses(2) × channels(2) = 8 phases,
+        // each ns_eff=4 kernels
+        let kernel_reads: usize = phases
+            .iter()
+            .filter(|p| p.state == State::ReadKernel)
+            .map(|p| p.kernels)
+            .sum();
+        assert_eq!(kernel_reads, 2 * 2 * 2 * 4); // = ⌈P/Ps⌉·⌈N/Ns⌉·M·Ns
+        // input tiles read: per (tpass,kpass,chan): ps_eff tiles
+        let tile_reads: usize = phases
+            .iter()
+            .filter(|p| p.state == State::ReadInput)
+            .map(|p| p.tiles)
+            .sum();
+        assert_eq!(tile_reads, 2 * 2 * 2 * 3); // ⌈N/Ns⌉·M·P
+        // outputs written once per (tpass, kpass): Ns×Ps tiles... summed
+        // over kpasses covers all N; over tpasses covers all P.
+        let written: usize = phases
+            .iter()
+            .filter(|p| p.state == State::WriteOut)
+            .map(|p| p.tiles * p.kernels)
+            .sum();
+        assert_eq!(written, 8 * 6); // N × P output tiles exactly once
+    }
+
+    #[test]
+    fn kernel_pass_inner_tile_pass_outer() {
+        // P=4, Ps=2, N=8, Ns=4: sequence visits both kernel passes before
+        // advancing the tile pass.
+        let phases = run(LoopConfig { n: 8, p: 4, m: 1, ns: 4, ps: 2, p_par: 2, n_par: 4 });
+        assert_eq!(count(&phases, State::WriteOut), 4); // 2 tpass × 2 kpass
+        assert_eq!(count(&phases, State::ReadKernel), 4);
+    }
+
+    #[test]
+    fn subgroup_and_batch_counts() {
+        // Ns=8, n_par=4 → 2 subgroups per batch; Ps=4, p_par=2 → 2 batches.
+        let phases = run(LoopConfig { n: 8, p: 4, m: 1, ns: 8, ps: 4, p_par: 2, n_par: 4 });
+        assert_eq!(count(&phases, State::ProcConv), 4);
+    }
+
+    #[test]
+    fn ragged_tails_covered() {
+        let phases = run(LoopConfig { n: 10, p: 5, m: 2, ns: 4, ps: 2, p_par: 2, n_par: 4 });
+        let written: usize = phases
+            .iter()
+            .filter(|p| p.state == State::WriteOut)
+            .map(|p| p.tiles * p.kernels)
+            .sum();
+        assert_eq!(written, 10 * 5);
+        for p in phases.iter().filter(|p| p.state == State::ProcConv) {
+            assert!(p.kernels <= 4 && p.kernels >= 1);
+            assert!(p.tiles <= 2 && p.tiles >= 1);
+        }
+    }
+
+    #[test]
+    fn kernel_group_ids_are_global_and_dense() {
+        let phases = run(LoopConfig { n: 8, p: 2, m: 1, ns: 4, ps: 2, p_par: 2, n_par: 2 });
+        let groups: Vec<usize> = phases
+            .iter()
+            .filter(|p| p.state == State::ProcConv)
+            .map(|p| p.kernel_group)
+            .collect();
+        assert_eq!(groups, vec![0, 1, 2, 3]); // 8 kernels / n_par=2 per pass of 4
+    }
+}

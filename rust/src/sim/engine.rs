@@ -1,0 +1,508 @@
+//! Phase-level accelerator simulation: drives the Fig. 3 FSM and charges
+//! cycles/bytes per phase, yielding per-layer and network latency — the
+//! quantities behind Tables 2 and 3.
+//!
+//! Timing model (DESIGN.md "Simulator cycle & resource model"):
+//!
+//! * **ProcConv** — the scheduler's cycle count for that (kernel subgroup,
+//!   channel), i.e. `|S*|`: the exact object Alg. 2 minimizes. One set per
+//!   clock, broadcast to the P' tile lanes.
+//! * **ReadInput FFT / ProcIfft** — streaming radix-2 2D FFT:
+//!   `K²·log2(K)` butterflies per tile, `fft_butterflies_per_cycle` per
+//!   engine, `p_par` engines each direction.
+//! * **DDR** — phase bytes at `ddr_bytes_per_sec`, converted to cycles.
+//! * **Overlap** — double buffering: layer time =
+//!   `max(Σ compute, Σ ddr) + pipeline fill` (the paper sizes bandwidth so
+//!   layers are compute-bound; Table 2 reports the bandwidth that makes
+//!   this max flip).
+//!
+//! Scheduling fidelity: `sample_groups = None` schedules every (subgroup,
+//! channel) instance exactly; `Some(k)` schedules k sampled instances per
+//! layer and scales — benches use sampling (conv5 alone has 4096
+//! instances), tests use exact mode on small layers.
+
+use super::controller::{Controller, LoopConfig, State};
+use crate::analysis::{ArchParams, StreamParams};
+use crate::model::ConvLayer;
+use crate::schedule::Scheduler;
+use crate::sparse::SparseLayer;
+use crate::util::rng::Pcg32;
+
+/// Simulator configuration (clock + memory system + fidelity).
+#[derive(Debug, Clone, Copy)]
+pub struct SimConfig {
+    /// FPGA clock (paper: 200 MHz).
+    pub clock_hz: f64,
+    /// Off-chip bandwidth in bytes/s (paper: 12 GB/s needed; DDR4 ~19.2
+    /// peak — default 12.8e9).
+    pub ddr_bytes_per_sec: f64,
+    /// Word size (paper: 16-bit fixed point).
+    pub word_bytes: u64,
+    /// Streaming FFT engine throughput (butterflies/cycle/engine).
+    pub fft_butterflies_per_cycle: u64,
+    /// Scheduling strategy for the Hadamard phases.
+    pub scheduler: Scheduler,
+    /// `None` = schedule every (subgroup, channel); `Some(k)` = sample k
+    /// instances per layer and scale (mean-cycles × instance count).
+    pub sample_groups: Option<usize>,
+    /// Seed (random scheduler + instance sampling).
+    pub seed: u64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            clock_hz: 200e6,
+            ddr_bytes_per_sec: 12.8e9,
+            word_bytes: 2,
+            fft_butterflies_per_cycle: 8,
+            scheduler: Scheduler::ExactCover,
+            sample_groups: Some(32),
+            seed: 0xF1,
+        }
+    }
+}
+
+/// Per-layer simulation result.
+#[derive(Debug, Clone)]
+pub struct LayerSimResult {
+    pub layer_name: String,
+    /// Hadamard (ProcConv) cycles.
+    pub hadamard_cycles: u64,
+    /// Input-FFT cycles.
+    pub fft_cycles: u64,
+    /// Output-IFFT cycles.
+    pub ifft_cycles: u64,
+    /// Total bytes moved to/from DDR.
+    pub ddr_bytes: u64,
+    /// DDR time expressed in clock cycles.
+    pub ddr_cycles: u64,
+    /// Pipeline-fill overhead cycles.
+    pub fill_cycles: u64,
+    /// End-to-end layer cycles (overlap model).
+    pub total_cycles: u64,
+    /// FLOP-weighted PE utilization over the Hadamard phases (Eq. 14).
+    pub pe_utilization: f64,
+    /// Scheduling instances evaluated / total.
+    pub instances_scheduled: usize,
+    pub instances_total: usize,
+}
+
+impl LayerSimResult {
+    pub fn latency_secs(&self, clock_hz: f64) -> f64 {
+        self.total_cycles as f64 / clock_hz
+    }
+
+    /// Pipeline-bottleneck compute cycles: the datapath is three streaming
+    /// stages (input FFT → Hadamard PE array → output IFFT) with double
+    /// buffering between them, so steady-state cycles = the slowest stage,
+    /// not the sum.
+    pub fn compute_cycles(&self) -> u64 {
+        self.hadamard_cycles.max(self.fft_cycles).max(self.ifft_cycles)
+    }
+
+    /// Bandwidth (bytes/s) needed for this layer to stay compute-bound
+    /// (the Table 2 planning quantity).
+    pub fn saturating_bandwidth(&self, clock_hz: f64) -> f64 {
+        let compute_secs = self.compute_cycles() as f64 / clock_hz;
+        if compute_secs <= 0.0 {
+            return 0.0;
+        }
+        self.ddr_bytes as f64 / compute_secs
+    }
+
+    /// Bandwidth actually drawn at the achieved layer latency (the Table 3
+    /// "Bandwidth" semantics: what the platform must provide).
+    pub fn utilized_bandwidth(&self, clock_hz: f64) -> f64 {
+        let secs = self.latency_secs(clock_hz);
+        if secs <= 0.0 {
+            return 0.0;
+        }
+        self.ddr_bytes as f64 / secs
+    }
+}
+
+/// Whole-network simulation result.
+#[derive(Debug, Clone)]
+pub struct NetworkSimResult {
+    pub layers: Vec<LayerSimResult>,
+    pub clock_hz: f64,
+}
+
+impl NetworkSimResult {
+    /// Single-image conv-stack latency (paper Table 3's "Latency").
+    pub fn latency_secs(&self) -> f64 {
+        self.layers.iter().map(|l| l.latency_secs(self.clock_hz)).sum()
+    }
+
+    /// Throughput assuming back-to-back single images (no batching).
+    pub fn throughput_fps(&self) -> f64 {
+        1.0 / self.latency_secs()
+    }
+
+    pub fn total_ddr_bytes(&self) -> u64 {
+        self.layers.iter().map(|l| l.ddr_bytes).sum()
+    }
+
+    /// Peak per-layer bandwidth drawn (Table 3's "Bandwidth").
+    pub fn required_bandwidth(&self) -> f64 {
+        self.layers
+            .iter()
+            .map(|l| l.utilized_bandwidth(self.clock_hz))
+            .fold(0.0, f64::max)
+    }
+
+    /// MAC-weighted average PE utilization.
+    pub fn avg_pe_utilization(&self) -> f64 {
+        let num: f64 = self
+            .layers
+            .iter()
+            .map(|l| l.pe_utilization * l.hadamard_cycles as f64)
+            .sum();
+        let den: f64 = self.layers.iter().map(|l| l.hadamard_cycles as f64).sum();
+        if den == 0.0 {
+            1.0
+        } else {
+            num / den
+        }
+    }
+}
+
+/// Cycles to FFT `tiles` K×K tiles with `engines` streaming engines.
+fn fft_cycles_for(tiles: u64, k: usize, engines: u64, butterflies_per_cycle: u64) -> u64 {
+    // 2D FFT = 2K size-K FFTs = K²·log2(K) butterflies per tile.
+    let log2k = (usize::BITS - 1 - k.leading_zeros()) as u64;
+    let butterflies = (k * k) as u64 * log2k;
+    let per_engine = butterflies.div_ceil(butterflies_per_cycle);
+    tiles.div_ceil(engines) * per_engine
+}
+
+/// Schedule-cycle oracle: exact per-instance cycles, or sampled mean.
+struct ScheduleCycles {
+    /// cycles[(group, channel)] when exact; otherwise the sampled mean.
+    exact: Option<Vec<Vec<(u32, u32)>>>, // [group][channel] -> (cycles, reads)
+    mean_cycles: f64,
+    mean_reads: f64,
+    instances_scheduled: usize,
+}
+
+fn build_schedule_cycles(
+    sparse: &SparseLayer,
+    arch: &ArchParams,
+    cfg: &SimConfig,
+) -> ScheduleCycles {
+    let groups = sparse.num_groups(arch.n_par);
+    let channels = sparse.cin;
+    let total = groups * channels;
+    let budget = cfg.sample_groups.unwrap_or(total).min(total);
+    if budget >= total {
+        // exact: schedule everything
+        let mut table = vec![vec![(0u32, 0u32); channels]; groups];
+        for (g, row) in table.iter_mut().enumerate() {
+            for (m, cell) in row.iter_mut().enumerate() {
+                let kernels = sparse.group_indices(g, arch.n_par, m);
+                let s = cfg.scheduler.run(&kernels, arch.replicas, cfg.seed ^ ((g * channels + m) as u64));
+                *cell = (s.cycles() as u32, s.total_reads() as u32);
+            }
+        }
+        let (mut tc, mut tr) = (0u64, 0u64);
+        for row in &table {
+            for &(c, r) in row {
+                tc += c as u64;
+                tr += r as u64;
+            }
+        }
+        ScheduleCycles {
+            exact: Some(table),
+            mean_cycles: tc as f64 / total as f64,
+            mean_reads: tr as f64 / total as f64,
+            instances_scheduled: total,
+        }
+    } else {
+        let mut rng = Pcg32::new(cfg.seed ^ 0xABCD);
+        let picks = rng.sample_indices(total, budget);
+        let (mut tc, mut tr) = (0u64, 0u64);
+        for p in &picks {
+            let (g, m) = (p / channels, p % channels);
+            let kernels = sparse.group_indices(g, arch.n_par, m);
+            let s = cfg.scheduler.run(&kernels, arch.replicas, cfg.seed ^ (*p as u64));
+            tc += s.cycles() as u64;
+            tr += s.total_reads() as u64;
+        }
+        ScheduleCycles {
+            exact: None,
+            mean_cycles: tc as f64 / budget as f64,
+            mean_reads: tr as f64 / budget as f64,
+            instances_scheduled: budget,
+        }
+    }
+}
+
+/// Simulate one spectral conv layer under a dataflow plan.
+pub fn simulate_layer(
+    layer: &ConvLayer,
+    sparse: &SparseLayer,
+    arch: &ArchParams,
+    stream: &StreamParams,
+    cfg: &SimConfig,
+) -> LayerSimResult {
+    assert_eq!(layer.cin, sparse.cin, "sparse layer must match conv layer");
+    assert_eq!(layer.cout, sparse.cout);
+    assert_eq!(layer.fft, sparse.fft);
+    let geo = layer.geometry();
+    let p = geo.num_tiles();
+    let sched = build_schedule_cycles(sparse, arch, cfg);
+    let nnz = sparse.nnz_per_kernel() as u64;
+
+    let mut ctl = Controller::new(LoopConfig {
+        n: layer.cout,
+        p,
+        m: layer.cin,
+        ns: stream.ns.min(layer.cout),
+        ps: stream.ps.min(p),
+        p_par: arch.p_par,
+        n_par: arch.n_par,
+    });
+
+    let mut hadamard = 0u64;
+    let mut reads = 0u64; // active-PE reads (for Eq. 14, per tile lane)
+    let mut read_slots = 0u64; // cycles × N' (denominator)
+    let mut fftc = 0u64;
+    let mut ifftc = 0u64;
+    let mut kernel_bytes = 0u64;
+    // Tile-unit accumulators: DDR holds exactly the h×w image (edge-tile
+    // padding is generated on-chip), so a tile transfer averages h·w/P
+    // spatial words — accumulated in whole-tile units and converted once so
+    // the totals telescope exactly to Eq. 13.
+    let mut in_tile_units = 0u64;
+    let mut out_tile_units = 0u64;
+    let mut first_kernel_units = 0u64;
+    let mut first_tile_units = 0u64;
+    let wb = cfg.word_bytes;
+    let hw = (layer.h * layer.h) as u64;
+    let p_total = p as u64;
+    let mut phases = 0u64;
+
+    while let Some(ph) = ctl.next_phase() {
+        phases += 1;
+        match ph.state {
+            State::ReadKernel => {
+                // Ns kernels × one channel × nnz words, values + indices
+                kernel_bytes += ph.kernels as u64 * nnz * wb;
+                if phases <= 2 {
+                    first_kernel_units += ph.kernels as u64 * nnz;
+                }
+            }
+            State::ReadInput => {
+                // P' tiles of one channel (spatial words; padding on-chip)
+                in_tile_units += ph.tiles as u64;
+                if phases <= 2 {
+                    first_tile_units += ph.tiles as u64;
+                }
+                fftc += fft_cycles_for(
+                    ph.tiles as u64,
+                    layer.fft,
+                    arch.p_par as u64,
+                    cfg.fft_butterflies_per_cycle,
+                );
+            }
+            State::ProcConv => {
+                let (cycles, rds) = match &sched.exact {
+                    Some(t) => {
+                        let (c, r) = t[ph.kernel_group][ph.channel];
+                        (c as u64, r as u64)
+                    }
+                    None => (sched.mean_cycles.round() as u64, sched.mean_reads.round() as u64),
+                };
+                hadamard += cycles;
+                reads += rds;
+                read_slots += cycles * arch.n_par as u64;
+            }
+            State::ProcIfft => {
+                let out_tiles = (ph.tiles * ph.kernels) as u64;
+                ifftc += fft_cycles_for(
+                    out_tiles,
+                    layer.fft,
+                    arch.p_par as u64,
+                    cfg.fft_butterflies_per_cycle,
+                );
+            }
+            State::WriteOut => {
+                // Eq. 13 counts spatial output words (OaA on the host).
+                out_tile_units += (ph.tiles * ph.kernels) as u64;
+            }
+            State::Done => unreachable!(),
+        }
+    }
+
+    let ddr_bytes = kernel_bytes
+        + in_tile_units * hw * wb / p_total
+        + out_tile_units * hw * wb / p_total;
+    let first_load_bytes =
+        first_kernel_units * wb + first_tile_units * hw * wb / p_total;
+    // three pipelined stages: FFT → Hadamard → IFFT (see compute_cycles)
+    let compute = hadamard.max(fftc).max(ifftc);
+    let ddr_secs = ddr_bytes as f64 / cfg.ddr_bytes_per_sec;
+    let ddr_cycles = (ddr_secs * cfg.clock_hz).ceil() as u64;
+    let fill_secs = first_load_bytes as f64 / cfg.ddr_bytes_per_sec;
+    let fill_cycles = (fill_secs * cfg.clock_hz).ceil() as u64
+        + fft_cycles_for(arch.p_par as u64, layer.fft, arch.p_par as u64, cfg.fft_butterflies_per_cycle);
+    let total = compute.max(ddr_cycles) + fill_cycles;
+    let pe_utilization = if read_slots == 0 { 1.0 } else { reads as f64 / read_slots as f64 };
+
+    LayerSimResult {
+        layer_name: layer.name.clone(),
+        hadamard_cycles: hadamard,
+        fft_cycles: fftc,
+        ifft_cycles: ifftc,
+        ddr_bytes,
+        ddr_cycles,
+        fill_cycles,
+        total_cycles: total,
+        pe_utilization,
+        instances_scheduled: sched.instances_scheduled,
+        instances_total: sparse.num_groups(arch.n_par) * sparse.cin,
+    }
+}
+
+/// Simulate a network given a per-layer plan `(layer, sparse, stream)`.
+pub fn simulate_network(
+    layers: &[(&ConvLayer, &SparseLayer, StreamParams)],
+    arch: &ArchParams,
+    cfg: &SimConfig,
+) -> NetworkSimResult {
+    let results = layers
+        .iter()
+        .map(|(l, s, st)| simulate_layer(l, s, arch, st, cfg))
+        .collect();
+    NetworkSimResult { layers: results, clock_hz: cfg.clock_hz }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Network;
+    use crate::sparse::prune_random;
+    use crate::util::rng::Pcg32;
+
+    fn small_layer() -> ConvLayer {
+        ConvLayer {
+            name: "test".into(),
+            cin: 4,
+            cout: 8,
+            h: 12,
+            k: 3,
+            fft: 8,
+            pool_after: false,
+        }
+    }
+
+    fn sim_small(scheduler: Scheduler, replicas: usize) -> LayerSimResult {
+        let layer = small_layer();
+        let mut rng = Pcg32::new(11);
+        let sparse = prune_random(layer.cout, layer.cin, 8, 4, &mut rng);
+        let arch = ArchParams { p_par: 2, n_par: 4, replicas };
+        let stream = StreamParams { ns: 8, ps: 4 };
+        let cfg = SimConfig { scheduler, sample_groups: None, ..SimConfig::default() };
+        simulate_layer(&layer, &sparse, &arch, &stream, &cfg)
+    }
+
+    #[test]
+    fn ddr_bytes_match_eq13() {
+        use crate::analysis::{transfers_flex, LayerParams};
+        let layer = small_layer();
+        let res = sim_small(Scheduler::ExactCover, 8);
+        let l = LayerParams::from_layer(&layer, 4);
+        let s = StreamParams { ns: 8, ps: 4 };
+        let t = transfers_flex(&l, &s);
+        // engine counts words × 2 bytes; Eq 13 volumes are in words.
+        assert_eq!(res.ddr_bytes, t.total() * 2);
+    }
+
+    #[test]
+    fn hadamard_cycles_bounded_by_workload() {
+        let res = sim_small(Scheduler::ExactCover, 8);
+        // Lower bound: every (kernel, nnz, channel, tile-batch) read needs
+        // a cycle slot across N' lanes.
+        let total_reads = 8u64 * 16 * 4; // cout × nnz × cin
+        let batches = 2u64 * 2; // ⌈P(4? no: h=12 → 2x2 tiles)/p_par⌉ … P=4, p_par=2 → 2
+        let min_cycles = (total_reads / 4) * 2; // /N' lanes × batches(2)
+        assert!(res.hadamard_cycles >= min_cycles / 2, "{} vs {}", res.hadamard_cycles, min_cycles);
+        assert!(res.pe_utilization > 0.3 && res.pe_utilization <= 1.0);
+        let _ = batches;
+    }
+
+    #[test]
+    fn more_replicas_never_slower() {
+        let r4 = sim_small(Scheduler::ExactCover, 4);
+        let r16 = sim_small(Scheduler::ExactCover, 16);
+        assert!(r16.hadamard_cycles <= r4.hadamard_cycles);
+        assert!(r16.pe_utilization >= r4.pe_utilization - 1e-9);
+    }
+
+    #[test]
+    fn exact_cover_beats_baselines_in_sim() {
+        let ec = sim_small(Scheduler::ExactCover, 6);
+        let li = sim_small(Scheduler::LowestIndexFirst, 6);
+        let rd = sim_small(Scheduler::Random, 6);
+        assert!(ec.hadamard_cycles <= li.hadamard_cycles);
+        assert!(ec.hadamard_cycles <= rd.hadamard_cycles);
+    }
+
+    #[test]
+    fn sampled_mode_tracks_exact_mode() {
+        let layer = ConvLayer { name: "t".into(), cin: 16, cout: 32, h: 12, k: 3, fft: 8, pool_after: false };
+        let mut rng = Pcg32::new(12);
+        let sparse = prune_random(layer.cout, layer.cin, 8, 4, &mut rng);
+        let arch = ArchParams { p_par: 2, n_par: 8, replicas: 8 };
+        let stream = StreamParams { ns: 32, ps: 4 };
+        let exact = simulate_layer(&layer, &sparse, &arch, &stream,
+            &SimConfig { sample_groups: None, ..SimConfig::default() });
+        let sampled = simulate_layer(&layer, &sparse, &arch, &stream,
+            &SimConfig { sample_groups: Some(16), ..SimConfig::default() });
+        let ratio = sampled.hadamard_cycles as f64 / exact.hadamard_cycles as f64;
+        assert!((0.85..1.15).contains(&ratio), "sampled/exact = {ratio}");
+        assert_eq!(sampled.ddr_bytes, exact.ddr_bytes);
+    }
+
+    #[test]
+    fn bandwidth_starved_sim_is_ddr_bound() {
+        let layer = small_layer();
+        let mut rng = Pcg32::new(13);
+        let sparse = prune_random(layer.cout, layer.cin, 8, 4, &mut rng);
+        let arch = ArchParams { p_par: 2, n_par: 4, replicas: 8 };
+        let stream = StreamParams { ns: 8, ps: 4 };
+        let starved = SimConfig { ddr_bytes_per_sec: 1e6, sample_groups: None, ..SimConfig::default() };
+        let res = simulate_layer(&layer, &sparse, &arch, &stream, &starved);
+        assert!(res.ddr_cycles > res.compute_cycles());
+        assert!(res.total_cycles >= res.ddr_cycles);
+    }
+
+    #[test]
+    fn network_aggregation() {
+        let net = Network::demo();
+        let mut rng = Pcg32::new(14);
+        let sparse: Vec<SparseLayer> = net
+            .convs
+            .iter()
+            .map(|c| prune_random(c.cout, c.cin, c.fft, 4, &mut rng))
+            .collect();
+        let plans: Vec<(&ConvLayer, &SparseLayer, StreamParams)> = net
+            .convs
+            .iter()
+            .zip(&sparse)
+            .map(|(c, s)| (c, s, StreamParams { ns: c.cout, ps: c.num_tiles() }))
+            .collect();
+        let arch = ArchParams { p_par: 2, n_par: 4, replicas: 8 };
+        let cfg = SimConfig { sample_groups: None, ..SimConfig::default() };
+        let res = simulate_network(&plans, &arch, &cfg);
+        assert_eq!(res.layers.len(), 2);
+        assert!(res.latency_secs() > 0.0);
+        assert!(res.throughput_fps() > 0.0);
+        assert!(res.avg_pe_utilization() > 0.0 && res.avg_pe_utilization() <= 1.0);
+        assert_eq!(
+            res.total_ddr_bytes(),
+            res.layers.iter().map(|l| l.ddr_bytes).sum::<u64>()
+        );
+    }
+}

@@ -1,0 +1,31 @@
+//! Cycle-level model of the paper's FPGA accelerator — the substitution for
+//! the Xilinx Alveo U200 (DESIGN.md "Hardware substitution").
+//!
+//! The simulator has two granularities:
+//!
+//! * **Micro** ([`bram`], [`pe`]) — executes compiled INDEX/VALUE tables
+//!   (Fig. 6) cycle by cycle against BRAM replica banks with single-port
+//!   semantics, verifying the scheduler's output is hardware-legal *and*
+//!   computes the right numbers (PE array accumulation is checked against
+//!   the dense Hadamard reference in tests).
+//! * **Phase** ([`engine`], [`controller`]) — walks the Fig. 3 streaming
+//!   FSM over (kernel pass, tile pass, channel) phases, accumulating
+//!   Hadamard/FFT/IFFT compute cycles and DDR transfer time with double
+//!   buffering (compute/communication overlap), yielding per-layer and
+//!   per-network latency — the quantities of Tables 2 and 3.
+//!
+//! [`resources`] maps an architecture to DSP/BRAM/LUT counts (calibrated
+//! against the paper's reported utilization, constants documented there);
+//! [`baselines`] configures the comparison rows of Table 3.
+
+pub mod baselines;
+pub mod bram;
+pub mod controller;
+pub mod engine;
+pub mod pe;
+pub mod resources;
+
+pub use bram::ReplicaBank;
+pub use engine::{simulate_layer, simulate_network, LayerSimResult, NetworkSimResult, SimConfig};
+pub use pe::execute_tables;
+pub use resources::{estimate_resources, Resources};

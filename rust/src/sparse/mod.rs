@@ -1,0 +1,356 @@
+//! Sparse spectral kernels.
+//!
+//! A "kernel" here is one (output-channel, input-channel) K×K spectral
+//! plane pruned to `K²/α` non-zeros (paper §4: uniform compression ratio α
+//! across kernels, following the ADMM method of [16]). The *index pattern*
+//! is what the scheduling algorithm (paper Alg. 2) consumes; the values are
+//! what the numerics path consumes (as dense planes with explicit zeros).
+//!
+//! Two generators reproduce the paper's two evaluation regimes:
+//!
+//! * [`prune_magnitude`] — "ADMM-like": top K²/α indices of a synthetic
+//!   trained-kernel energy model (shared low-frequency field + per-kernel
+//!   jitter), giving the clustered, cross-correlated patterns the paper
+//!   observes in conv5_* (where lowest-index-first scheduling does well).
+//! * [`prune_random`] — uniform random index choice (paper Fig. 10:
+//!   "generate sparse kernels ... by randomly choose K²/α non-zero weights").
+
+use crate::fft::tiles_per_side;
+use crate::tensor::ComplexTensor;
+use crate::util::rng::Pcg32;
+
+/// One sparse spectral kernel: sorted frequency indices (0..K²) + values.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SparseKernel {
+    /// Sorted, distinct indices into the flattened K×K frequency plane.
+    pub indices: Vec<u16>,
+    /// Complex values matching `indices` (re, im).
+    pub values: Vec<(f32, f32)>,
+}
+
+impl SparseKernel {
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    fn assert_valid(&self, k2: usize) {
+        assert_eq!(self.indices.len(), self.values.len());
+        for w in self.indices.windows(2) {
+            assert!(w[0] < w[1], "indices must be sorted+distinct");
+        }
+        if let Some(&last) = self.indices.last() {
+            assert!((last as usize) < k2, "index {last} out of K²={k2}");
+        }
+    }
+}
+
+/// All sparse kernels of one conv layer, indexed `[cout][cin]`.
+#[derive(Debug, Clone)]
+pub struct SparseLayer {
+    pub cout: usize,
+    pub cin: usize,
+    pub fft: usize,
+    /// Row-major `[cout][cin]`.
+    pub kernels: Vec<SparseKernel>,
+    /// Compression ratio α (K²/α non-zeros per kernel).
+    pub alpha: usize,
+}
+
+impl SparseLayer {
+    pub fn kernel(&self, n: usize, m: usize) -> &SparseKernel {
+        &self.kernels[n * self.cin + m]
+    }
+
+    pub fn k2(&self) -> usize {
+        self.fft * self.fft
+    }
+
+    pub fn nnz_per_kernel(&self) -> usize {
+        self.k2() / self.alpha
+    }
+
+    /// Total non-zeros across the layer.
+    pub fn total_nnz(&self) -> u64 {
+        self.kernels.iter().map(|k| k.nnz() as u64).sum()
+    }
+
+    /// Dense spectral planes `[cout, cin, K, K]` (re, im) for the AOT
+    /// executables — pruned positions carry explicit zeros.
+    pub fn to_dense_planes(&self) -> ComplexTensor {
+        let k2 = self.k2();
+        let shape = [self.cout, self.cin, self.fft, self.fft];
+        let mut out = ComplexTensor::zeros(&shape);
+        for n in 0..self.cout {
+            for m in 0..self.cin {
+                let k = self.kernel(n, m);
+                for (&idx, &(re, im)) in k.indices.iter().zip(&k.values) {
+                    let (y, x) = ((idx as usize) / self.fft, (idx as usize) % self.fft);
+                    out.set(&[n, m, y, x], re, im);
+                }
+            }
+        }
+        debug_assert_eq!(out.len(), shape.iter().product::<usize>());
+        let _ = k2;
+        out
+    }
+
+    /// Index sets of one *kernel group*: the N' kernels `{W[n, m]}` for
+    /// `n ∈ [group·n_par, ..)` at fixed input channel `m` — the scheduling
+    /// instance of paper Alg. 2 (M' = 1: channels are serial, §5.1).
+    pub fn group_indices(&self, group: usize, n_par: usize, m: usize) -> Vec<Vec<u16>> {
+        let start = group * n_par;
+        let end = (start + n_par).min(self.cout);
+        (start..end)
+            .map(|n| self.kernel(n, m).indices.clone())
+            .collect()
+    }
+
+    pub fn num_groups(&self, n_par: usize) -> usize {
+        self.cout.div_ceil(n_par)
+    }
+
+    fn assert_valid(&self) {
+        assert_eq!(self.kernels.len(), self.cout * self.cin);
+        let k2 = self.k2();
+        for k in &self.kernels {
+            k.assert_valid(k2);
+        }
+    }
+}
+
+/// "ADMM-like" pruning: keep the top K²/α indices of an energy model that
+/// mimics trained-then-ADMM-pruned spectral kernels.
+///
+/// An i.i.d.-random spatial kernel has a *flat* expected spectrum, so
+/// naively FFT-ing random weights gives no clustering at all (we measured
+/// it). Trained kernels are smooth: their spectral energy decays with the
+/// wrapped frequency radius, and kernels within a layer share structure —
+/// which is exactly why the paper's lowest-index-first baseline does well
+/// on conv5_2/conv5_3 ("indices in different kernels are close"). We model
+/// both properties directly:
+///
+/// * a per-layer shared energy field `exp(-r²(f)/2σ²) · lognormal jitter`
+///   (σ = K/3.6, calibrated so exact-cover utilization at the paper's
+///   operating points matches Fig. 9 — see EXPERIMENTS.md §Calibration), and
+/// * per-kernel lognormal jitter controlling cross-kernel correlation.
+///
+/// Each kernel keeps its top K²/α indices by `shared · individual` score;
+/// values are complex normals scaled by the field (energy-consistent).
+pub fn prune_magnitude(
+    cout: usize,
+    cin: usize,
+    fft: usize,
+    alpha: usize,
+    rng: &mut Pcg32,
+) -> SparseLayer {
+    let k2 = fft * fft;
+    let nnz = k2 / alpha;
+    assert!(nnz >= 1, "alpha {alpha} prunes everything at K={fft}");
+    let sigma2 = (fft as f64 / 3.6).powi(2);
+    // shared layer field: smooth low-frequency decay × mild jitter
+    let shared: Vec<f64> = (0..k2)
+        .map(|i| {
+            let (y, x) = (i / fft, i % fft);
+            let fy = y.min(fft - y) as f64;
+            let fx = x.min(fft - x) as f64;
+            let r2 = fy * fy + fx * fx;
+            (-r2 / (2.0 * sigma2)).exp() * (rng.normal() as f64 * 0.35).exp()
+        })
+        .collect();
+    let vscale = (1.0 / (cin * nnz) as f32).sqrt();
+    // Per-kernel jitter is the hot loop (K² draws × cout·cin kernels — a
+    // conv5 layer alone needs ~17M lognormals). A 4096-entry pool sampled
+    // by the PCG stream preserves the distribution for pattern purposes at
+    // ~6× the speed (§Perf L3, EXPERIMENTS.md).
+    let jitter_pool: Vec<f64> =
+        (0..4096).map(|_| (rng.normal() as f64 * 0.5).exp()).collect();
+    let mut kernels = Vec::with_capacity(cout * cin);
+    let mut scores: Vec<(f64, u16)> = Vec::with_capacity(k2);
+    for _ in 0..cout * cin {
+        scores.clear();
+        for (i, &s) in shared.iter().enumerate() {
+            let jitter = jitter_pool[(rng.next_u32() & 4095) as usize];
+            scores.push((s * jitter, i as u16));
+        }
+        // top-nnz selection in O(K²) (hot path: 512×512 kernels per layer)
+        scores.select_nth_unstable_by(nnz - 1, |a, b| {
+            b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1))
+        });
+        let mut idxs: Vec<u16> = scores[..nnz].iter().map(|&(_, i)| i).collect();
+        idxs.sort_unstable();
+        let values = idxs
+            .iter()
+            .map(|&i| {
+                let mag = shared[i as usize].sqrt() as f32;
+                (rng.normal() * vscale * mag, rng.normal() * vscale * mag)
+            })
+            .collect();
+        kernels.push(SparseKernel { indices: idxs, values });
+    }
+    let layer = SparseLayer { cout, cin, fft, kernels, alpha };
+    layer.assert_valid();
+    layer
+}
+
+/// Random pruning: uniform K²/α index choice per kernel (paper Fig. 10).
+pub fn prune_random(
+    cout: usize,
+    cin: usize,
+    fft: usize,
+    alpha: usize,
+    rng: &mut Pcg32,
+) -> SparseLayer {
+    let k2 = fft * fft;
+    let nnz = k2 / alpha;
+    assert!(nnz >= 1, "alpha {alpha} prunes everything at K={fft}");
+    let scale = (1.0 / (cin * nnz) as f32).sqrt();
+    let mut kernels = Vec::with_capacity(cout * cin);
+    for _ in 0..cout * cin {
+        let mut idxs: Vec<u16> = rng
+            .sample_indices(k2, nnz)
+            .into_iter()
+            .map(|i| i as u16)
+            .collect();
+        idxs.sort_unstable();
+        let values = idxs
+            .iter()
+            .map(|_| (rng.normal() * scale, rng.normal() * scale))
+            .collect();
+        kernels.push(SparseKernel { indices: idxs, values });
+    }
+    let layer = SparseLayer { cout, cin, fft, kernels, alpha };
+    layer.assert_valid();
+    layer
+}
+
+/// Pattern statistics used by tests and EXPERIMENTS.md to show the two
+/// generators produce the regimes the paper assumes.
+///
+/// Mean *wrapped* frequency radius: the DFT of a small real kernel
+/// concentrates energy at low |freq|, where |freq| along each axis is the
+/// circular distance min(f, K-f). Normalized so a uniform-random pattern
+/// scores ≈ 0.5 and a perfectly low-frequency pattern scores ≈ 0.
+pub fn index_concentration(layer: &SparseLayer) -> f64 {
+    let k = layer.fft;
+    let max_r = 2.0 * ((k / 2) as f64).powi(2);
+    let mut sum = 0.0;
+    let mut cnt = 0u64;
+    for kern in &layer.kernels {
+        for &i in &kern.indices {
+            let (y, x) = ((i as usize) / k, (i as usize) % k);
+            let fy = y.min(k - y) as f64;
+            let fx = x.min(k - x) as f64;
+            sum += (fy * fy + fx * fx) / max_r;
+            cnt += 1;
+        }
+    }
+    sum / cnt.max(1) as f64
+}
+
+/// Convenience: tile count of a square activation at this layer (used when
+/// pairing a `SparseLayer` with a model layer for scheduling experiments).
+pub fn tiles_for(h: usize, tile: usize) -> usize {
+    let s = tiles_per_side(h, tile);
+    s * s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::forall;
+
+    #[test]
+    fn magnitude_pruning_counts() {
+        let mut rng = Pcg32::new(1);
+        let l = prune_magnitude(8, 4, 8, 4, &mut rng);
+        assert_eq!(l.kernels.len(), 32);
+        assert_eq!(l.nnz_per_kernel(), 16);
+        for k in &l.kernels {
+            assert_eq!(k.nnz(), 16);
+        }
+        assert_eq!(l.total_nnz(), 32 * 16);
+    }
+
+    #[test]
+    fn random_pruning_counts_alpha8() {
+        let mut rng = Pcg32::new(2);
+        let l = prune_random(16, 3, 8, 8, &mut rng);
+        assert_eq!(l.nnz_per_kernel(), 8);
+        for k in &l.kernels {
+            assert_eq!(k.nnz(), 8);
+            let mut d = k.indices.clone();
+            d.dedup();
+            assert_eq!(d.len(), 8, "indices must be distinct");
+        }
+    }
+
+    #[test]
+    fn magnitude_clusters_low_frequencies() {
+        // DFT of a 3x3 kernel padded to 8x8 concentrates energy at low
+        // wrapped |freq|: the magnitude-pruned pattern must score clearly
+        // below a uniform-random one (which sits near 0.5).
+        let mut rng = Pcg32::new(3);
+        let adm = prune_magnitude(32, 8, 8, 4, &mut rng);
+        let rnd = prune_random(32, 8, 8, 4, &mut rng);
+        let ca = index_concentration(&adm);
+        let cr = index_concentration(&rnd);
+        // uniform-random over the wrapped radius metric sits near 11/32 ≈
+        // 0.344 at K=8 (E[min(f,K-f)²] = 5.5 per axis, max_r = 32)
+        assert!(ca < cr - 0.08, "admm-like {ca} vs random {cr}");
+        assert!((cr - 0.344).abs() < 0.05, "random should be ≈0.344: {cr}");
+    }
+
+    #[test]
+    fn dense_planes_roundtrip() {
+        let mut rng = Pcg32::new(4);
+        let l = prune_random(4, 2, 8, 4, &mut rng);
+        let planes = l.to_dense_planes();
+        assert_eq!(planes.shape(), &[4, 2, 8, 8]);
+        // every non-zero in planes appears in the sparse kernels, and counts
+        // match exactly
+        let mut nz = 0;
+        for n in 0..4 {
+            for m in 0..2 {
+                for idx in 0..64 {
+                    let (re, im) = planes.at(&[n, m, idx / 8, idx % 8]);
+                    if re != 0.0 || im != 0.0 {
+                        nz += 1;
+                        assert!(l.kernel(n, m).indices.contains(&(idx as u16)));
+                    }
+                }
+            }
+        }
+        assert_eq!(nz, l.total_nnz());
+    }
+
+    #[test]
+    fn group_indices_cover_all_kernels() {
+        forall("groups partition cout", 20, |rng| {
+            let cout = rng.range(1, 100);
+            let n_par = [8, 16, 32, 64][rng.range(0, 4)];
+            let l = prune_random(cout, 2, 8, 4, rng);
+            let groups = l.num_groups(n_par);
+            let total: usize = (0..groups)
+                .map(|g| l.group_indices(g, n_par, 0).len())
+                .sum();
+            assert_eq!(total, cout);
+            // last group may be ragged but never empty
+            assert!(!l.group_indices(groups - 1, n_par, 0).is_empty());
+        });
+    }
+
+    #[test]
+    fn generators_deterministic() {
+        let a = prune_magnitude(4, 4, 8, 4, &mut Pcg32::new(9));
+        let b = prune_magnitude(4, 4, 8, 4, &mut Pcg32::new(9));
+        assert_eq!(a.kernels, b.kernels);
+    }
+
+    #[test]
+    fn k16_supported() {
+        let mut rng = Pcg32::new(5);
+        let l = prune_random(4, 2, 16, 4, &mut rng);
+        assert_eq!(l.nnz_per_kernel(), 64);
+        assert!(l.kernels.iter().all(|k| k.indices.iter().all(|&i| i < 256)));
+    }
+}

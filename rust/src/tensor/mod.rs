@@ -1,0 +1,259 @@
+//! Dense f32 tensors + complex plane pairs.
+//!
+//! Deliberately small: row-major contiguous storage, shape-checked views,
+//! and exactly the ops the coordinator's CPU path needs (the heavy math
+//! lives in the AOT'd XLA executables). Complex data is carried as separate
+//! re/im planes — the same convention the AOT boundary uses.
+
+use std::fmt;
+
+use crate::util::rng::Pcg32;
+
+/// Row-major dense f32 tensor.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}", self.shape)?;
+        if self.data.len() <= 8 {
+            write!(f, " {:?}", self.data)?;
+        }
+        Ok(())
+    }
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} incompatible with {} elements",
+            data.len()
+        );
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    /// Standard-normal init scaled by `scale` (weight generation).
+    pub fn randn(shape: &[usize], rng: &mut Pcg32, scale: f32) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: rng.normal_vec(n, scale) }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reinterpret with a new shape of equal element count.
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            self.data.len(),
+            "reshape {:?} -> {shape:?} changes element count",
+            self.shape
+        );
+        self.shape = shape.to_vec();
+        self
+    }
+
+    #[inline]
+    fn offset(&self, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let mut off = 0;
+        for (i, (&ix, &dim)) in idx.iter().zip(&self.shape).enumerate() {
+            debug_assert!(ix < dim, "index {ix} out of bounds for dim {i} (size {dim})");
+            off = off * dim + ix;
+        }
+        off
+    }
+
+    #[inline]
+    pub fn at(&self, idx: &[usize]) -> f32 {
+        self.data[self.offset(idx)]
+    }
+
+    #[inline]
+    pub fn set(&mut self, idx: &[usize], v: f32) {
+        let o = self.offset(idx);
+        self.data[o] = v;
+    }
+
+    #[inline]
+    pub fn add_at(&mut self, idx: &[usize], v: f32) {
+        let o = self.offset(idx);
+        self.data[o] += v;
+    }
+
+    pub fn map(mut self, f: impl Fn(f32) -> f32) -> Self {
+        for v in &mut self.data {
+            *v = f(*v);
+        }
+        self
+    }
+
+    pub fn scale(self, s: f32) -> Self {
+        self.map(|v| v * s)
+    }
+
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape, "add shape mismatch");
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect();
+        Tensor { shape: self.shape.clone(), data }
+    }
+
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+/// Complex tensor as separate re/im planes (the AOT boundary convention).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ComplexTensor {
+    pub re: Tensor,
+    pub im: Tensor,
+}
+
+impl ComplexTensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        ComplexTensor { re: Tensor::zeros(shape), im: Tensor::zeros(shape) }
+    }
+
+    pub fn from_real(re: Tensor) -> Self {
+        let im = Tensor::zeros(re.shape());
+        ComplexTensor { re, im }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        self.re.shape()
+    }
+
+    pub fn len(&self) -> usize {
+        self.re.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.re.is_empty()
+    }
+
+    #[inline]
+    pub fn at(&self, idx: &[usize]) -> (f32, f32) {
+        (self.re.at(idx), self.im.at(idx))
+    }
+
+    #[inline]
+    pub fn set(&mut self, idx: &[usize], re: f32, im: f32) {
+        self.re.set(idx, re);
+        self.im.set(idx, im);
+    }
+
+    /// Pointwise complex multiply: (a+bi)(c+di).
+    pub fn hadamard(&self, other: &ComplexTensor) -> ComplexTensor {
+        assert_eq!(self.shape(), other.shape(), "hadamard shape mismatch");
+        let n = self.len();
+        let mut re = vec![0.0f32; n];
+        let mut im = vec![0.0f32; n];
+        let (ar, ai) = (self.re.data(), self.im.data());
+        let (br, bi) = (other.re.data(), other.im.data());
+        for i in 0..n {
+            re[i] = ar[i] * br[i] - ai[i] * bi[i];
+            im[i] = ar[i] * bi[i] + ai[i] * br[i];
+        }
+        ComplexTensor {
+            re: Tensor::from_vec(self.shape(), re),
+            im: Tensor::from_vec(self.shape(), im),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing_row_major() {
+        let t = Tensor::from_vec(&[2, 3], (0..6).map(|i| i as f32).collect());
+        assert_eq!(t.at(&[0, 0]), 0.0);
+        assert_eq!(t.at(&[0, 2]), 2.0);
+        assert_eq!(t.at(&[1, 0]), 3.0);
+        assert_eq!(t.at(&[1, 2]), 5.0);
+    }
+
+    #[test]
+    fn set_and_add_at() {
+        let mut t = Tensor::zeros(&[2, 2]);
+        t.set(&[1, 1], 3.0);
+        t.add_at(&[1, 1], 1.5);
+        assert_eq!(t.at(&[1, 1]), 4.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "changes element count")]
+    fn reshape_guards_count() {
+        Tensor::zeros(&[2, 3]).reshape(&[7]);
+    }
+
+    #[test]
+    fn randn_deterministic() {
+        let mut r1 = Pcg32::new(5);
+        let mut r2 = Pcg32::new(5);
+        let a = Tensor::randn(&[4, 4], &mut r1, 0.1);
+        let b = Tensor::randn(&[4, 4], &mut r2, 0.1);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn complex_hadamard_matches_formula() {
+        // (1+2i)(3+4i) = -5 + 10i
+        let a = ComplexTensor {
+            re: Tensor::from_vec(&[1], vec![1.0]),
+            im: Tensor::from_vec(&[1], vec![2.0]),
+        };
+        let b = ComplexTensor {
+            re: Tensor::from_vec(&[1], vec![3.0]),
+            im: Tensor::from_vec(&[1], vec![4.0]),
+        };
+        let c = a.hadamard(&b);
+        assert_eq!(c.at(&[0]), (-5.0, 10.0));
+    }
+
+    #[test]
+    fn add_and_diff() {
+        let a = Tensor::from_vec(&[3], vec![1.0, 2.0, 3.0]);
+        let b = Tensor::from_vec(&[3], vec![0.5, 2.0, 2.0]);
+        assert_eq!(a.add(&b).data(), &[1.5, 4.0, 5.0]);
+        assert_eq!(a.max_abs_diff(&b), 1.0);
+    }
+}

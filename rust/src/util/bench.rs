@@ -1,0 +1,212 @@
+//! Micro-benchmark harness (offline substitute for `criterion`).
+//!
+//! All `cargo bench` targets in `rust/benches/` are `harness = false`
+//! binaries built on this module. The methodology mirrors criterion's core:
+//! warmup, then timed iterations, reporting median / p10 / p90 and
+//! mean±stddev. Results are printed as aligned text and optionally appended
+//! to a CSV so EXPERIMENTS.md can cite exact numbers.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub stddev_ns: f64,
+    pub median_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+}
+
+impl Measurement {
+    pub fn mean(&self) -> Duration {
+        Duration::from_nanos(self.mean_ns as u64)
+    }
+
+    fn fmt_ns(ns: f64) -> String {
+        if ns < 1e3 {
+            format!("{ns:.0} ns")
+        } else if ns < 1e6 {
+            format!("{:.2} µs", ns / 1e3)
+        } else if ns < 1e9 {
+            format!("{:.2} ms", ns / 1e6)
+        } else {
+            format!("{:.3} s", ns / 1e9)
+        }
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<52} {:>12} (median {:>12}, p10 {:>12}, p90 {:>12}, n={})",
+            self.name,
+            Self::fmt_ns(self.mean_ns),
+            Self::fmt_ns(self.median_ns),
+            Self::fmt_ns(self.p10_ns),
+            Self::fmt_ns(self.p90_ns),
+            self.iters,
+        )
+    }
+
+    pub fn csv_row(&self) -> String {
+        format!(
+            "{},{},{:.1},{:.1},{:.1},{:.1},{:.1}",
+            self.name, self.iters, self.mean_ns, self.stddev_ns,
+            self.median_ns, self.p10_ns, self.p90_ns
+        )
+    }
+}
+
+/// Benchmark runner with a time budget per benchmark.
+pub struct Bench {
+    warmup: Duration,
+    budget: Duration,
+    min_iters: usize,
+    max_iters: usize,
+    results: Vec<Measurement>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup: Duration::from_millis(200),
+            budget: Duration::from_secs(2),
+            min_iters: 5,
+            max_iters: 1000,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Quick-mode harness for CI-ish runs (shorter budget).
+    pub fn quick() -> Self {
+        Bench {
+            warmup: Duration::from_millis(50),
+            budget: Duration::from_millis(400),
+            min_iters: 3,
+            max_iters: 200,
+            results: Vec::new(),
+        }
+    }
+
+    pub fn with_budget(mut self, budget: Duration) -> Self {
+        self.budget = budget;
+        self
+    }
+
+    /// Run `f` repeatedly, using its return value to defeat dead-code elim.
+    pub fn run<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &Measurement {
+        // Warmup: also estimates per-iteration cost.
+        let wstart = Instant::now();
+        let mut wit = 0usize;
+        while wstart.elapsed() < self.warmup || wit == 0 {
+            std::hint::black_box(f());
+            wit += 1;
+            if wit >= self.max_iters {
+                break;
+            }
+        }
+        let est = wstart.elapsed().as_secs_f64() / wit as f64;
+        let target = (self.budget.as_secs_f64() / est.max(1e-9)) as usize;
+        let iters = target.clamp(self.min_iters, self.max_iters);
+
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_nanos() as f64);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>()
+            / samples.len() as f64;
+        let pct = |p: f64| samples[((samples.len() - 1) as f64 * p) as usize];
+        let m = Measurement {
+            name: name.to_string(),
+            iters,
+            mean_ns: mean,
+            stddev_ns: var.sqrt(),
+            median_ns: pct(0.5),
+            p10_ns: pct(0.1),
+            p90_ns: pct(0.9),
+        };
+        println!("{}", m.report());
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    /// Record an externally measured value (e.g. a one-shot end-to-end run).
+    pub fn record(&mut self, name: &str, elapsed: Duration, iters: usize) {
+        let ns = elapsed.as_nanos() as f64 / iters.max(1) as f64;
+        let m = Measurement {
+            name: name.to_string(),
+            iters,
+            mean_ns: ns,
+            stddev_ns: 0.0,
+            median_ns: ns,
+            p10_ns: ns,
+            p90_ns: ns,
+        };
+        println!("{}", m.report());
+        self.results.push(m);
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+
+    /// Append all results to a CSV file (with header if new).
+    pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
+        use std::io::Write;
+        let new = !std::path::Path::new(path).exists();
+        let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+        if new {
+            writeln!(f, "name,iters,mean_ns,stddev_ns,median_ns,p10_ns,p90_ns")?;
+        }
+        for m in &self.results {
+            writeln!(f, "{}", m.csv_row())?;
+        }
+        Ok(())
+    }
+}
+
+/// `true` when `--quick` appears in the bench args or SF_BENCH_QUICK=1.
+pub fn quick_requested() -> bool {
+    std::env::args().any(|a| a == "--quick")
+        || std::env::var("SF_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bench::quick().with_budget(Duration::from_millis(30));
+        let m = b.run("spin", || (0..1000u64).sum::<u64>());
+        assert!(m.mean_ns > 0.0);
+        assert!(m.iters >= 3);
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let mut b = Bench::quick().with_budget(Duration::from_millis(30));
+        let m = b.run("spin2", || (0..5000u64).product::<u64>()).clone();
+        assert!(m.p10_ns <= m.median_ns + 1.0);
+        assert!(m.median_ns <= m.p90_ns + 1.0);
+    }
+
+    #[test]
+    fn record_passthrough() {
+        let mut b = Bench::quick();
+        b.record("ext", Duration::from_millis(10), 10);
+        assert_eq!(b.results().len(), 1);
+        assert!((b.results()[0].mean_ns - 1e6).abs() < 1.0);
+    }
+}

@@ -1,0 +1,141 @@
+//! Mini property-testing framework (offline substitute for `proptest`).
+//!
+//! Usage pattern throughout the test suite:
+//!
+//! ```no_run
+//! // (no_run: doctest executables don't get the xla rpath linker flags)
+//! use spectral_flow::util::check::forall;
+//! forall("sum is commutative", 200, |rng| {
+//!     let a = rng.below(1000) as u64;
+//!     let b = rng.below(1000) as u64;
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+//!
+//! Each case gets a fresh [`Pcg32`] derived from a base seed and the case
+//! index; on failure the panic message names the property and the exact
+//! failing case seed so the case reproduces in isolation via
+//! [`reproduce`]. `SF_CHECK_SEED` overrides the base seed, `SF_CHECK_CASES`
+//! scales case counts (both read once per call).
+
+use super::rng::Pcg32;
+
+const DEFAULT_BASE_SEED: u64 = 0x5EC7_2A1F;
+
+fn base_seed() -> u64 {
+    std::env::var("SF_CHECK_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(DEFAULT_BASE_SEED)
+}
+
+fn scaled(cases: usize) -> usize {
+    let scale: f64 = std::env::var("SF_CHECK_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0);
+    ((cases as f64 * scale) as usize).max(1)
+}
+
+/// Seed for case `i` of a property (public so failures can be replayed).
+pub fn case_seed(base: u64, i: usize) -> u64 {
+    base ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+/// Run `prop` over `cases` random cases. Panics (with the case seed) on the
+/// first failing case. The property signals failure by panicking.
+pub fn forall<F: FnMut(&mut Pcg32)>(name: &str, cases: usize, mut prop: F) {
+    let base = base_seed();
+    for i in 0..scaled(cases) {
+        let seed = case_seed(base, i);
+        let mut rng = Pcg32::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng)
+        }));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| payload.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property '{name}' failed at case {i} (seed {seed:#x}): {msg}\n\
+                 reproduce with: spectral_flow::util::check::reproduce({seed:#x}, ...)"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case by its reported seed.
+pub fn reproduce<F: FnOnce(&mut Pcg32)>(seed: u64, prop: F) {
+    let mut rng = Pcg32::new(seed);
+    prop(&mut rng);
+}
+
+/// Assert two f32 slices match within tolerance, with a useful diff message.
+pub fn assert_allclose(got: &[f32], want: &[f32], rtol: f32, atol: f32) {
+    assert_eq!(got.len(), want.len(), "length mismatch: {} vs {}", got.len(), want.len());
+    let mut worst = (0usize, 0.0f32);
+    for (i, (&g, &w)) in got.iter().zip(want).enumerate() {
+        let tol = atol + rtol * w.abs();
+        let err = (g - w).abs();
+        if err > tol && err > worst.1 {
+            worst = (i, err);
+        }
+    }
+    if worst.1 > 0.0 {
+        let i = worst.0;
+        panic!(
+            "allclose failed: worst at [{i}]: got {} want {} (|err| {} > atol {} + rtol {} * |want|); \
+             {} / {} elements out of tolerance",
+            got[i], want[i], worst.1, atol, rtol,
+            got.iter().zip(want).filter(|(g, w)| (*g - *w).abs() > atol + rtol * w.abs()).count(),
+            got.len(),
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall("trivial", 50, |_| count += 1);
+        assert_eq!(count, scaled(50));
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let r = std::panic::catch_unwind(|| {
+            forall("always-fails", 5, |_| panic!("boom"));
+        });
+        let msg = match r {
+            Err(p) => p.downcast_ref::<String>().unwrap().clone(),
+            Ok(_) => panic!("should have failed"),
+        };
+        assert!(msg.contains("always-fails"));
+        assert!(msg.contains("seed"));
+        assert!(msg.contains("boom"));
+    }
+
+    #[test]
+    fn case_seeds_are_deterministic_and_distinct() {
+        let s: Vec<u64> = (0..10).map(|i| case_seed(1, i)).collect();
+        let mut d = s.clone();
+        d.sort_unstable();
+        d.dedup();
+        assert_eq!(d.len(), 10);
+        assert_eq!(s, (0..10).map(|i| case_seed(1, i)).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn allclose_accepts_and_rejects() {
+        assert_allclose(&[1.0, 2.0], &[1.0 + 1e-7, 2.0], 1e-5, 1e-5);
+        let r = std::panic::catch_unwind(|| {
+            assert_allclose(&[1.0, 2.0], &[1.5, 2.0], 1e-5, 1e-5);
+        });
+        assert!(r.is_err());
+    }
+}

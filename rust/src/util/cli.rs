@@ -1,0 +1,143 @@
+//! Tiny CLI flag parser (offline substitute for `clap`).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+//! Unknown flags are collected so callers can reject or ignore them; `help()`
+//! renders a usage block from the registered options.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments plus registered option metadata for help text.
+#[derive(Debug, Default)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    positional: Vec<String>,
+    registered: Vec<(String, String, String)>, // (name, default, help)
+    program: String,
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping the program name).
+    pub fn from_env() -> Self {
+        let mut it = std::env::args();
+        let program = it.next().unwrap_or_default();
+        let mut a = Self::parse(it.collect());
+        a.program = program;
+        a
+    }
+
+    /// Parse from an explicit token list (used by tests).
+    pub fn parse(tokens: Vec<String>) -> Self {
+        let mut flags = BTreeMap::new();
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < tokens.len() {
+            let t = &tokens[i];
+            if let Some(body) = t.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < tokens.len() && !tokens[i + 1].starts_with("--") {
+                    flags.insert(body.to_string(), tokens[i + 1].clone());
+                    i += 1;
+                } else {
+                    flags.insert(body.to_string(), "true".to_string());
+                }
+            } else {
+                positional.push(t.clone());
+            }
+            i += 1;
+        }
+        Args { flags, positional, registered: Vec::new(), program: String::new() }
+    }
+
+    /// Register an option (for help text) and fetch it with a default.
+    pub fn opt(&mut self, name: &str, default: &str, help: &str) -> String {
+        self.registered.push((name.to_string(), default.to_string(), help.to_string()));
+        self.flags.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn opt_usize(&mut self, name: &str, default: usize, help: &str) -> usize {
+        self.opt(name, &default.to_string(), help)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} expects an integer"))
+    }
+
+    pub fn opt_f64(&mut self, name: &str, default: f64, help: &str) -> f64 {
+        self.opt(name, &default.to_string(), help)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} expects a number"))
+    }
+
+    pub fn opt_bool(&mut self, name: &str, help: &str) -> bool {
+        self.registered.push((name.to_string(), "false".to_string(), help.to_string()));
+        matches!(self.flags.get(name).map(|s| s.as_str()), Some("true") | Some("1"))
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+
+    /// Render usage text from registered options.
+    pub fn help(&self, about: &str) -> String {
+        let mut out = format!("{about}\n\nOptions:\n");
+        for (name, default, help) in &self.registered {
+            out.push_str(&format!("  --{name:<18} {help} (default: {default})\n"));
+        }
+        out
+    }
+
+    /// If `--help` was passed, print usage and exit.
+    pub fn maybe_help(&self, about: &str) {
+        if self.has("help") {
+            println!("{}", self.help(about));
+            std::process::exit(0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|t| t.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_key_value_styles() {
+        // NOTE grammar: a bare `--flag` greedily binds the next non-flag
+        // token as its value, so boolean flags go last or use `--flag=true`
+        // (subcommands always come first in this CLI).
+        let mut a = Args::parse(toks("run --n 64 --replicas=10 --verbose"));
+        assert_eq!(a.opt_usize("n", 0, ""), 64);
+        assert_eq!(a.opt_usize("replicas", 0, ""), 10);
+        assert!(a.opt_bool("verbose", ""));
+        assert_eq!(a.positional(), &["run".to_string()]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let mut a = Args::parse(vec![]);
+        assert_eq!(a.opt("variant", "vgg16-224", ""), "vgg16-224");
+        assert_eq!(a.opt_f64("alpha", 4.0, ""), 4.0);
+        assert!(!a.opt_bool("quick", ""));
+    }
+
+    #[test]
+    fn trailing_flag_is_boolean() {
+        let mut a = Args::parse(toks("--quick"));
+        assert!(a.opt_bool("quick", ""));
+    }
+
+    #[test]
+    fn help_lists_registered() {
+        let mut a = Args::parse(vec![]);
+        a.opt("alpha", "4", "compression ratio");
+        let h = a.help("demo");
+        assert!(h.contains("--alpha"));
+        assert!(h.contains("compression ratio"));
+    }
+}

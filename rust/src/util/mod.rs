@@ -1,0 +1,22 @@
+//! Offline-environment substrates.
+//!
+//! The baked cargo registry only carries the `xla` crate closure, so the
+//! usual ecosystem crates (rand, serde, clap, criterion, proptest) are
+//! unavailable. Each submodule is a small, tested, from-scratch replacement
+//! for exactly the slice of functionality this project needs:
+//!
+//! * [`rng`] — SplitMix64 + PCG32, uniform/normal/shuffle (replaces `rand`).
+//! * [`json`] — minimal JSON parse/serialize for `artifacts/manifest.json`
+//!   and report emission (replaces `serde_json`).
+//! * [`bench`] — warmup/iteration timing harness with percentiles
+//!   (replaces `criterion`; used by all `cargo bench` targets).
+//! * [`check`] — mini property-testing: seeded generators + `forall` with
+//!   failing-seed reporting (replaces `proptest`).
+//! * [`cli`] — tiny flag parser for the `spectral-flow` binary and the
+//!   examples (replaces `clap`).
+
+pub mod bench;
+pub mod check;
+pub mod cli;
+pub mod json;
+pub mod rng;

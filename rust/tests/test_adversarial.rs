@@ -1,0 +1,199 @@
+//! Adversarial and fuzz coverage: inputs chosen to break the invariants
+//! that the happy-path tests take for granted — scheduler edge patterns,
+//! FSM configuration fuzz, and parser robustness.
+
+use spectral_flow::schedule::{Schedule, Scheduler};
+use spectral_flow::sim::controller::{Controller, LoopConfig, State};
+use spectral_flow::util::check::forall;
+use spectral_flow::util::json::Json;
+use spectral_flow::util::rng::Pcg32;
+
+// ---------------- scheduler: adversarial patterns --------------------------
+
+#[test]
+fn scheduler_all_kernels_identical() {
+    // Degenerate overlap: one index node covers everyone each cycle.
+    let kernels = vec![vec![0u16, 7, 13, 42]; 64];
+    for sch in [Scheduler::ExactCover, Scheduler::LowestIndexFirst] {
+        let s = sch.run(&kernels, 1, 0);
+        s.validate(&kernels).unwrap();
+        assert_eq!(s.cycles(), 4, "{sch:?}");
+        assert!((s.pe_utilization() - 1.0).abs() < 1e-12);
+    }
+    // The random baseline does NOT synchronize identical kernels — each
+    // picks an independent random index, so with r=1 most kernels idle
+    // every cycle. That asymmetry is exactly what Fig. 8 plots.
+    let s = Scheduler::Random.run(&kernels, 1, 0);
+    s.validate(&kernels).unwrap();
+    assert!(s.cycles() > 4);
+}
+
+#[test]
+fn scheduler_fully_disjoint_kernels() {
+    // Zero overlap: utilization is capped by r/N' exactly.
+    let n = 16usize;
+    let nnz = 4usize;
+    let kernels: Vec<Vec<u16>> = (0..n)
+        .map(|k| (0..nnz).map(|j| (k * nnz + j) as u16).collect())
+        .collect();
+    for r in [1usize, 2, 4, 8] {
+        let s = Scheduler::ExactCover.run(&kernels, r, 0);
+        s.validate(&kernels).unwrap();
+        // total edges = n·nnz; each cycle serves ≤ r kernels (disjoint ⇒
+        // one kernel per distinct index)
+        assert!(s.cycles() >= (n * nnz).div_ceil(r));
+        assert!(s.pe_utilization() <= r as f64 / n as f64 + 1e-9);
+    }
+}
+
+#[test]
+fn scheduler_power_law_hub_index() {
+    // One hub index shared by all kernels + unique tails: the hub must not
+    // be wasted early (Alg 2's "leave high-degree nodes untouched").
+    let n = 32usize;
+    let mut kernels: Vec<Vec<u16>> = (0..n)
+        .map(|k| {
+            let mut v = vec![0u16]; // hub
+            v.push((k + 1) as u16);
+            v.push((k + 100) as u16);
+            v.sort_unstable();
+            v
+        })
+        .collect();
+    kernels.sort();
+    let s = Scheduler::ExactCover.run(&kernels, 4, 0);
+    s.validate(&kernels).unwrap();
+    // lower bound: 3 nnz per kernel, ≤ 4 distinct indices/cycle; tails are
+    // unique so tail edges = 2n need ≥ 2n/4 cycles... but the hub cycle can
+    // serve all. A good schedule stays close to 2n/3-ish; a bad one that
+    // burns the hub early approaches 3n/4 cycles. Bound generously:
+    assert!(
+        s.cycles() <= 2 * n / 3 + 6,
+        "hub wasted: {} cycles for {} kernels",
+        s.cycles(),
+        n
+    );
+}
+
+#[test]
+fn scheduler_ragged_nnz_mix() {
+    forall("ragged nnz mix", 30, |rng| {
+        // kernels with wildly different nnz (1..=32) — lower bound is the
+        // max nnz; validation must still hold.
+        let n = rng.range(2, 48);
+        let kernels: Vec<Vec<u16>> = (0..n)
+            .map(|_| {
+                let nnz = rng.range(1, 33);
+                let mut v: Vec<u16> =
+                    rng.sample_indices(64, nnz).into_iter().map(|i| i as u16).collect();
+                v.sort_unstable();
+                v
+            })
+            .collect();
+        let r = rng.range(1, 12);
+        let s = Scheduler::ExactCover.run(&kernels, r, 0);
+        s.validate(&kernels).unwrap();
+        assert!(s.cycles() >= Schedule::lower_bound(&kernels, r));
+    });
+}
+
+// ---------------- controller: configuration fuzz ---------------------------
+
+#[test]
+fn controller_fuzz_invariants() {
+    forall("controller fuzz", 60, |rng| {
+        let cfg = LoopConfig {
+            n: rng.range(1, 40),
+            p: rng.range(1, 40),
+            m: rng.range(1, 10),
+            ns: rng.range(1, 44),
+            ps: rng.range(1, 44),
+            p_par: rng.range(1, 8),
+            n_par: rng.range(1, 8),
+        };
+        let mut ctl = Controller::new(cfg);
+        let mut phases = Vec::new();
+        while let Some(p) = ctl.next_phase() {
+            phases.push(p);
+            assert!(phases.len() < 2_000_000, "FSM diverged: {cfg:?}");
+        }
+        // every output tile (n, p) written exactly once
+        let written: usize = phases
+            .iter()
+            .filter(|p| p.state == State::WriteOut)
+            .map(|p| p.tiles * p.kernels)
+            .sum();
+        assert_eq!(written, cfg.n * cfg.p, "{cfg:?}");
+        // ProcConv parallelism bounds respected
+        for p in phases.iter().filter(|p| p.state == State::ProcConv) {
+            assert!(p.kernels >= 1 && p.kernels <= cfg.n_par, "{cfg:?}");
+            assert!(p.tiles >= 1 && p.tiles <= cfg.p_par, "{cfg:?}");
+            assert!(p.channel < cfg.m);
+        }
+        // kernel transfer telescoping (Eq 13 kernel-reload factor)
+        let ns_eff = cfg.ns.min(cfg.n);
+        let ps_eff = cfg.ps.min(cfg.p);
+        let kernel_reads: usize = phases
+            .iter()
+            .filter(|p| p.state == State::ReadKernel)
+            .map(|p| p.kernels)
+            .sum();
+        assert_eq!(
+            kernel_reads,
+            cfg.p.div_ceil(ps_eff) * cfg.m * cfg.n,
+            "{cfg:?}"
+        );
+        let _ = ns_eff;
+    });
+}
+
+// ---------------- json: robustness fuzz -------------------------------------
+
+#[test]
+fn json_never_panics_on_garbage() {
+    forall("json garbage", 300, |rng| {
+        let len = rng.range(0, 64);
+        let bytes: Vec<u8> = (0..len)
+            .map(|_| b" {}[]\",:0123456789.eE+-truefalsenull\\x"[rng.range(0, 38)])
+            .collect();
+        if let Ok(s) = std::str::from_utf8(&bytes) {
+            let _ = Json::parse(s); // must return, never panic
+        }
+    });
+}
+
+#[test]
+fn json_roundtrip_fuzz() {
+    fn gen(rng: &mut Pcg32, depth: usize) -> Json {
+        match if depth == 0 { rng.range(0, 4) } else { rng.range(0, 6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.f32() < 0.5),
+            2 => Json::Num((rng.range(0, 100_000) as f64) - 50_000.0),
+            3 => Json::Str(format!("s{}", rng.next_u32())),
+            4 => Json::Arr((0..rng.range(0, 4)).map(|_| gen(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.range(0, 4))
+                    .map(|i| (format!("k{i}"), gen(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    forall("json roundtrip", 150, |rng| {
+        let v = gen(rng, 3);
+        let text = v.to_string();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("{text}: {e}"));
+        assert_eq!(v, back);
+    });
+}
+
+// ---------------- rng: stream independence under forking --------------------
+
+#[test]
+fn rng_forked_streams_statistically_distinct() {
+    forall("rng forks", 20, |rng| {
+        let mut a = rng.fork(1);
+        let mut b = rng.fork(2);
+        let matches = (0..512).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(matches < 3, "streams collide: {matches}/512");
+    });
+}

@@ -1,0 +1,138 @@
+//! Integration: complexity analysis × dataflow optimizer over the real
+//! VGG16 workloads — the Fig. 2 / Fig. 7 / Table 1 / Table 2 claims.
+
+use spectral_flow::analysis::*;
+use spectral_flow::dataflow::*;
+use spectral_flow::model::Network;
+use spectral_flow::util::check::forall;
+
+fn layers(alpha: usize) -> Vec<LayerParams> {
+    Network::vgg16_224()
+        .optimized_convs()
+        .iter()
+        .map(|c| LayerParams::from_layer(c, alpha))
+        .collect()
+}
+
+#[test]
+fn fig2_flow3_never_wins_on_transfers() {
+    // Paper §5.2: "streaming partial sums ... brings no advantages at all".
+    let arch = ArchParams::paper();
+    for l in layers(4) {
+        let t3 = transfers_flow(Flow::StreamPsums, &l, &arch).total();
+        let t1 = transfers_flow(Flow::ReuseKernels, &l, &arch).total();
+        let t2 = transfers_flow(Flow::ReuseInputs, &l, &arch).total();
+        assert!(t3 >= t1.min(t2), "psum streaming should never be best");
+    }
+}
+
+#[test]
+fn fig2_flow1_trades_brams_for_transfers() {
+    // Flow #1 moves the least data but explodes BRAMs on large layers;
+    // Flow #2 is the reverse — the tradeoff motivating the flexible flow.
+    let arch = ArchParams::paper();
+    let ls = layers(4);
+    let early = &ls[0]; // conv1_2: 1444 tiles
+    assert!(bram_flow1(early, &arch) > bram_flow2(early, &arch));
+    assert!(
+        transfers_flow1(early, &arch).total() < transfers_flow2(early, &arch).total()
+    );
+}
+
+#[test]
+fn table2_bandwidths_in_paper_band() {
+    // Paper Table 2 reports 3.5–9.9 GB/s per layer at τ=20 ms. Require the
+    // same order of magnitude: every layer within [1, 20] GB/s and the max
+    // within [6, 16] GB/s.
+    let net = Network::vgg16_224();
+    let cfg = OptimizerConfig::paper();
+    let plan = optimize_network_at(&net, ArchParams::paper(), &cfg).unwrap();
+    for lp in &plan.layers {
+        let gbps = lp.bandwidth / 1e9;
+        assert!((0.5..20.0).contains(&gbps), "{}: {gbps} GB/s", lp.layer_name);
+    }
+    let max = plan.bw_max / 1e9;
+    assert!((5.0..16.0).contains(&max), "bw_max {max} GB/s");
+}
+
+#[test]
+fn table1_streaming_params_lattice() {
+    // Published Table 1 has Ns multiples of 64 and Ps multiples of 9 — the
+    // plan must live on the same lattice (keep-everything settings exempt).
+    let net = Network::vgg16_224();
+    let cfg = OptimizerConfig::paper();
+    let plan = optimize_network_at(&net, ArchParams::paper(), &cfg).unwrap();
+    for lp in &plan.layers {
+        assert!(
+            lp.stream.ns % 64 == 0 || lp.stream.ns == lp.params.n,
+            "{}: Ns={}",
+            lp.layer_name,
+            lp.stream.ns
+        );
+        assert!(
+            lp.stream.ps % 9 == 0 || lp.stream.ps == lp.params.p,
+            "{}: Ps={}",
+            lp.layer_name,
+            lp.stream.ps
+        );
+    }
+}
+
+#[test]
+fn optimizer_respects_budget_under_sweep() {
+    forall("optimizer feasibility", 20, |rng| {
+        let net = Network::vgg16_224();
+        let alpha = [2usize, 4, 8][rng.range(0, 3)];
+        let budget = 800 + rng.range(0, 1600) as u64;
+        let cfg = OptimizerConfig {
+            alpha,
+            bram_budget: budget,
+            ..OptimizerConfig::paper()
+        };
+        if let Some(plan) = optimize_network_at(&net, ArchParams::paper(), &cfg) {
+            for lp in &plan.layers {
+                assert!(lp.brams <= budget, "{} over budget", lp.layer_name);
+            }
+        }
+    });
+}
+
+#[test]
+fn tighter_budget_never_reduces_transfers() {
+    // Shrinking the BRAM budget restricts the lattice ⇒ total transfers are
+    // monotonically non-decreasing.
+    let net = Network::vgg16_224();
+    let mut prev: Option<u64> = None;
+    for budget in [2160u64, 1400, 1000, 700] {
+        let cfg = OptimizerConfig { bram_budget: budget, ..OptimizerConfig::paper() };
+        if let Some(plan) = optimize_network_at(&net, ArchParams::paper(), &cfg) {
+            if let Some(p) = prev {
+                assert!(plan.total_transfers() >= p, "budget {budget}");
+            }
+            prev = Some(plan.total_transfers());
+        }
+    }
+    assert!(prev.is_some());
+}
+
+#[test]
+fn alpha8_reduces_kernel_traffic_vs_alpha4() {
+    let net = Network::vgg16_224();
+    let arch = ArchParams::paper();
+    let p4 = optimize_network_at(&net, arch, &OptimizerConfig { alpha: 4, ..OptimizerConfig::paper() }).unwrap();
+    let p8 = optimize_network_at(&net, arch, &OptimizerConfig { alpha: 8, ..OptimizerConfig::paper() }).unwrap();
+    let k4: u64 = p4.layers.iter().map(|l| l.transfers.kernels).sum();
+    let k8: u64 = p8.layers.iter().map(|l| l.transfers.kernels).sum();
+    assert!(k8 < k4);
+}
+
+#[test]
+fn k16_has_higher_kernel_pressure() {
+    // §6.1: "the model with 16×16 spectral kernels needs 4× more storage
+    // for kernels ... still causes huge communication overhead".
+    let k8 = Network::vgg16_224();
+    let k16 = Network::vgg16_224_k16();
+    let kw8: u64 = k8.optimized_convs().iter().map(|c| LayerParams::from_layer(c, 4).sparse_kernel_words()).sum();
+    let kw16: u64 = k16.optimized_convs().iter().map(|c| LayerParams::from_layer(c, 4).sparse_kernel_words()).sum();
+    assert!(kw16 == 4 * kw8, "{kw16} vs 4×{kw8}");
+}

@@ -1,0 +1,133 @@
+//! Integration: the serving coordinator — batching server over the demo
+//! variant, plus pure-logic batcher/metrics properties that need no
+//! artifacts.
+
+use std::time::Duration;
+
+use spectral_flow::coordinator::{
+    Batcher, BatcherConfig, Metrics, Server, ServerConfig, WeightMode,
+};
+use spectral_flow::tensor::Tensor;
+use spectral_flow::util::check::forall;
+use spectral_flow::util::rng::Pcg32;
+
+fn artifacts_ready() -> bool {
+    let ok = std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/manifest.json"))
+        .exists();
+    if !ok {
+        eprintln!("SKIP: run `make artifacts` to enable server tests");
+    }
+    ok
+}
+
+fn demo_server(max_batch: usize) -> Server {
+    Server::start(ServerConfig {
+        artifacts_dir: concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").into(),
+        variant: "demo".into(),
+        mode: WeightMode::Pruned { alpha: 4 },
+        seed: 7,
+        batcher: BatcherConfig { max_batch, max_wait: Duration::from_millis(5) },
+    })
+    .expect("server starts")
+}
+
+#[test]
+fn serves_concurrent_clients() {
+    if !artifacts_ready() {
+        return;
+    }
+    let server = demo_server(4);
+    let mut rng = Pcg32::new(1);
+    // submit 12 requests from 3 cloned clients via async handles
+    let mut rxs = Vec::new();
+    for _ in 0..3 {
+        let c = server.client();
+        for _ in 0..4 {
+            let img = Tensor::randn(&[1, 16, 16], &mut rng, 1.0);
+            rxs.push(c.infer_async(img).unwrap());
+        }
+    }
+    for rx in rxs {
+        let resp = rx.recv().unwrap().unwrap();
+        assert_eq!(resp.logits.len(), 10);
+        assert!(resp.batch_size >= 1 && resp.batch_size <= 4);
+    }
+    let m = server.metrics().unwrap();
+    assert_eq!(m.count(), 12);
+    assert!(m.mean_batch_size() >= 1.0);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn same_image_same_logits_through_server() {
+    if !artifacts_ready() {
+        return;
+    }
+    let server = demo_server(2);
+    let client = server.client();
+    let mut rng = Pcg32::new(2);
+    let img = Tensor::randn(&[1, 16, 16], &mut rng, 1.0);
+    let a = client.infer(img.clone()).unwrap();
+    let b = client.infer(img).unwrap();
+    assert_eq!(a.logits, b.logits);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn bad_input_errors_do_not_kill_server() {
+    if !artifacts_ready() {
+        return;
+    }
+    let server = demo_server(1);
+    let client = server.client();
+    let bad = Tensor::zeros(&[3, 16, 16]); // wrong channel count
+    assert!(client.infer(bad).is_err());
+    // server still alive
+    let mut rng = Pcg32::new(3);
+    let good = Tensor::randn(&[1, 16, 16], &mut rng, 1.0);
+    assert!(client.infer(good).is_ok());
+    server.shutdown().unwrap();
+}
+
+// ---------- pure-logic properties (no artifacts needed) -------------------
+
+#[test]
+fn batcher_conservation_under_adversarial_timing() {
+    forall("batcher conservation", 60, |rng| {
+        use std::time::Instant;
+        let mut b = Batcher::new(BatcherConfig {
+            max_batch: rng.range(1, 6),
+            max_wait: Duration::from_millis(rng.range(1, 10) as u64),
+        });
+        let n = rng.range(1, 60);
+        let mut now = Instant::now();
+        let mut out = Vec::new();
+        for i in 0..n {
+            now += Duration::from_millis(rng.range(0, 12) as u64);
+            if let Some(batch) = b.poll(now) {
+                out.extend(batch);
+            }
+            if let Some(batch) = b.push(i, now) {
+                out.extend(batch);
+            }
+        }
+        out.extend(b.take().unwrap_or_default());
+        assert_eq!(out, (0..n).collect::<Vec<_>>());
+    });
+}
+
+#[test]
+fn metrics_percentiles_are_order_statistics() {
+    forall("metrics percentiles", 40, |rng| {
+        let mut m = Metrics::new();
+        let n = rng.range(1, 200);
+        let mut vals: Vec<u64> = (0..n).map(|_| rng.range(1, 100_000) as u64).collect();
+        for &v in &vals {
+            m.record_request(Duration::from_micros(v));
+        }
+        vals.sort_unstable();
+        assert_eq!(m.p50().unwrap(), Duration::from_micros(vals[(n - 1) / 2 + (n - 1) % 2]));
+        assert!(m.p99().unwrap() <= Duration::from_micros(*vals.last().unwrap()));
+        assert!(m.p50().unwrap() <= m.p95().unwrap());
+    });
+}

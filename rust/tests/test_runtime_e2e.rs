@@ -1,0 +1,93 @@
+//! Integration: the PJRT runtime + inference engine over the real AOT
+//! artifacts. Requires `make artifacts`; tests skip (with a loud message)
+//! when `artifacts/manifest.json` is absent so `cargo test` stays green in
+//! a fresh checkout.
+
+use spectral_flow::coordinator::{InferenceEngine, WeightMode};
+use spectral_flow::runtime::Runtime;
+use spectral_flow::util::check::assert_allclose;
+
+fn artifacts_dir() -> Option<String> {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if std::path::Path::new(&format!("{dir}/manifest.json")).exists() {
+        Some(dir.to_string())
+    } else {
+        eprintln!("SKIP: run `make artifacts` to enable runtime e2e tests");
+        None
+    }
+}
+
+#[test]
+fn manifest_loads_and_validates() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::open(&dir).unwrap();
+    assert_eq!(rt.manifest.fft_size, 8);
+    assert_eq!(rt.manifest.kernel_k, 3);
+    assert_eq!(rt.manifest.tile, 6);
+    for v in ["demo", "vgg16-cifar", "vgg16-224"] {
+        assert!(rt.manifest.variants.contains_key(v), "missing variant {v}");
+    }
+    assert_eq!(rt.manifest.variant("vgg16-224").unwrap().layers.len(), 13);
+}
+
+#[test]
+fn demo_executables_compile_and_cache() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::open(&dir).unwrap();
+    let n = rt.warm_variant("demo").unwrap();
+    assert_eq!(n, 2);
+    assert_eq!(rt.cached_executables(), 2);
+    // second warm hits the cache (no recompilation, count unchanged)
+    rt.warm_variant("demo").unwrap();
+    assert_eq!(rt.cached_executables(), 2);
+}
+
+#[test]
+fn spectral_conv_via_pjrt_matches_spatial_reference() {
+    // THE cross-layer correctness gate: JAX/Pallas-lowered executable
+    // (FFT → Hadamard → IFFT) + Rust tiling/OaA == naive spatial conv.
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = InferenceEngine::new(&dir, "demo", WeightMode::Dense, 1234).unwrap();
+    let img = engine.synthetic_image(5);
+    let got = engine.conv_layer(0, &img).unwrap();
+    let want = engine.conv_layer_reference(0, &img).unwrap();
+    assert_allclose(got.data(), want.data(), 1e-3, 1e-3);
+    // layer 2 as well (8→8 channels at 8×8 spatial)
+    let x2 = spectral_flow::nn::maxpool2(&got);
+    let got2 = engine.conv_layer(1, &x2).unwrap();
+    let want2 = engine.conv_layer_reference(1, &x2).unwrap();
+    assert_allclose(got2.data(), want2.data(), 1e-3, 1e-2);
+}
+
+#[test]
+fn forward_deterministic_and_shaped() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut e1 = InferenceEngine::new(&dir, "demo", WeightMode::Pruned { alpha: 4 }, 7).unwrap();
+    let mut e2 = InferenceEngine::new(&dir, "demo", WeightMode::Pruned { alpha: 4 }, 7).unwrap();
+    let img = e1.synthetic_image(3);
+    let a = e1.forward(&img).unwrap();
+    let b = e2.forward(&img).unwrap();
+    assert_eq!(a.len(), 10);
+    assert_allclose(&a, &b, 1e-6, 1e-6);
+}
+
+#[test]
+fn forward_rejects_bad_shapes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = InferenceEngine::new(&dir, "demo", WeightMode::Dense, 7).unwrap();
+    let bad = spectral_flow::tensor::Tensor::zeros(&[1, 8, 8]);
+    assert!(engine.forward(&bad).is_err());
+}
+
+#[test]
+fn cifar_vgg16_full_forward() {
+    let Some(dir) = artifacts_dir() else { return };
+    let t0 = std::time::Instant::now();
+    let mut engine =
+        InferenceEngine::new(&dir, "vgg16-cifar", WeightMode::Pruned { alpha: 4 }, 7).unwrap();
+    let img = engine.synthetic_image(1);
+    let logits = engine.forward(&img).unwrap();
+    assert_eq!(logits.len(), 10);
+    assert!(logits.iter().all(|v| v.is_finite()));
+    eprintln!("cifar forward total {:?}", t0.elapsed());
+}

@@ -1,0 +1,139 @@
+//! Integration: exact-cover scheduler vs baselines on paper-scale kernel
+//! groups — the Fig. 8/9/10 claims, plus exhaustive invariant fuzzing.
+
+use spectral_flow::schedule::tables::compile_tables;
+use spectral_flow::schedule::{Schedule, Scheduler};
+use spectral_flow::sparse::{prune_magnitude, prune_random};
+use spectral_flow::util::check::forall;
+use spectral_flow::util::rng::Pcg32;
+
+fn util(sch: Scheduler, kernels: &[Vec<u16>], r: usize, seed: u64) -> f64 {
+    sch.run(kernels, r, seed).pe_utilization()
+}
+
+#[test]
+fn invariants_hold_for_every_scheduler_everywhere() {
+    forall("all schedulers valid", 60, |rng| {
+        let n = rng.range(1, 65);
+        let alpha = [2usize, 4, 8][rng.range(0, 3)];
+        let r = rng.range(1, 21);
+        let layer = if rng.f32() < 0.5 {
+            prune_random(n, 1, 8, alpha, rng)
+        } else {
+            prune_magnitude(n, 1, 8, alpha, rng)
+        };
+        let kernels = layer.group_indices(0, n, 0);
+        let lb = Schedule::lower_bound(&kernels, r);
+        for sch in Scheduler::ALL {
+            let s = sch.run(&kernels, r, rng.next_u64());
+            s.validate(&kernels).unwrap_or_else(|e| panic!("{sch:?}: {e}"));
+            assert!(s.cycles() >= lb, "{sch:?} below lower bound");
+            assert!(s.pe_utilization() <= 1.0 + 1e-12);
+        }
+    });
+}
+
+#[test]
+fn fig9_paper_point_exact_cover_over_80pct() {
+    // Paper Fig 9 (ADMM kernels): exact-cover reaches >80% with r=10 even
+    // at α=8 (indices "largely scattered"); lowest-index-first needs r≈16
+    // for comparable utilization.
+    let mut rng = Pcg32::new(1);
+    let layer = prune_magnitude(64, 24, 8, 8, &mut rng);
+    let mut ec_sum = 0.0;
+    let mut li_sum = 0.0;
+    let groups = 24;
+    for m in 0..groups {
+        let kernels = layer.group_indices(0, 64, m);
+        ec_sum += util(Scheduler::ExactCover, &kernels, 10, m as u64);
+        li_sum += util(Scheduler::LowestIndexFirst, &kernels, 10, m as u64);
+    }
+    let (ec, li) = (ec_sum / groups as f64, li_sum / groups as f64);
+    assert!(ec > 0.80, "exact-cover at r=10, α=8: {ec}");
+    assert!(ec > li, "exact-cover {ec} must beat lowest-index {li}");
+    // and lowest-index-first catches up with more replicas (paper: r=16)
+    let mut li16 = 0.0;
+    for m in 0..groups {
+        let kernels = layer.group_indices(0, 64, m);
+        li16 += util(Scheduler::LowestIndexFirst, &kernels, 16, m as u64);
+    }
+    assert!(li16 / groups as f64 > li, "LI must improve with replicas");
+}
+
+#[test]
+fn fig8_correlated_patterns_help_lowest_index() {
+    // Paper: lowest-index-first "deeply relies on the condition that
+    // indices in different kernels are close, like kernels in conv5_*".
+    // ADMM-like magnitude pruning produces exactly that correlation; the
+    // LI gap to exact-cover must shrink vs random patterns.
+    let mut rng = Pcg32::new(2);
+    let clustered = prune_magnitude(64, 4, 8, 4, &mut rng);
+    let random = prune_random(64, 4, 8, 4, &mut rng);
+    let gap = |layer: &spectral_flow::sparse::SparseLayer| {
+        let mut ec = 0.0;
+        let mut li = 0.0;
+        for m in 0..4 {
+            let k = layer.group_indices(0, 64, m);
+            ec += util(Scheduler::ExactCover, &k, 8, m as u64);
+            li += util(Scheduler::LowestIndexFirst, &k, 8, m as u64);
+        }
+        (ec - li) / 4.0
+    };
+    let g_clustered = gap(&clustered);
+    let g_random = gap(&random);
+    assert!(
+        g_clustered < g_random + 0.02,
+        "LI should be closer to EC on clustered patterns: {g_clustered} vs {g_random}"
+    );
+}
+
+#[test]
+fn utilization_monotone_in_replicas_for_exact_cover() {
+    forall("EC monotone in r", 20, |rng| {
+        let layer = prune_random(32, 1, 8, 4, rng);
+        let kernels = layer.group_indices(0, 32, 0);
+        let mut prev = 0.0;
+        for r in [2usize, 4, 8, 16, 32] {
+            let u = util(Scheduler::ExactCover, &kernels, r, 0);
+            assert!(u + 1e-9 >= prev, "r={r}: {u} < {prev}");
+            prev = u;
+        }
+        // unconstrained r ⇒ perfect utilization on equal-nnz kernels
+        assert!((prev - 1.0).abs() < 1e-9);
+    });
+}
+
+#[test]
+fn k16_kernels_schedule_correctly() {
+    let mut rng = Pcg32::new(3);
+    let layer = prune_random(32, 1, 16, 4, &mut rng); // 256-point freq plane
+    let kernels = layer.group_indices(0, 32, 0);
+    let s = Scheduler::ExactCover.run(&kernels, 10, 0);
+    s.validate(&kernels).unwrap();
+    assert!(s.pe_utilization() > 0.5);
+}
+
+#[test]
+fn tables_compile_for_all_schedulers() {
+    let mut rng = Pcg32::new(4);
+    let layer = prune_magnitude(64, 2, 8, 4, &mut rng);
+    let kernels = layer.group_indices(0, 64, 1);
+    for sch in Scheduler::ALL {
+        let s = sch.run(&kernels, 10, 9);
+        let t = compile_tables(&s, &layer, 0, 1, 64);
+        assert_eq!(t.cycles(), s.cycles());
+        let valid: usize = t.value.iter().flatten().filter(|v| v.valid).count();
+        assert_eq!(valid as u64, layer.total_nnz() / 2 / 64 * 64); // 64 kernels × 16 nnz at channel 1
+    }
+}
+
+#[test]
+fn ragged_last_group_schedules() {
+    // cout=100 with N'=64 → second group has 36 kernels.
+    let mut rng = Pcg32::new(5);
+    let layer = prune_random(100, 1, 8, 4, &mut rng);
+    let kernels = layer.group_indices(1, 64, 0);
+    assert_eq!(kernels.len(), 36);
+    let s = Scheduler::ExactCover.run(&kernels, 8, 0);
+    s.validate(&kernels).unwrap();
+}

@@ -1,0 +1,122 @@
+//! Integration: the cycle-level simulator end to end — Table 3's
+//! qualitative claims on the real VGG16 workload (CIFAR scale for speed;
+//! the 224 rows run in `cargo bench --bench bench_simulator`).
+
+use spectral_flow::analysis::{transfers_flex, ArchParams, LayerParams, StreamParams};
+use spectral_flow::model::Network;
+use spectral_flow::schedule::Scheduler;
+use spectral_flow::sim::baselines::{run_baseline, BaselineConfig, FixedStream};
+use spectral_flow::sim::{estimate_resources, simulate_layer, SimConfig};
+use spectral_flow::sparse::prune_magnitude;
+use spectral_flow::util::rng::Pcg32;
+
+#[test]
+fn ddr_accounting_matches_eq13_on_vgg_layers() {
+    // The FSM's transfer accounting must telescope to the closed form for
+    // every layer and several streaming settings.
+    let net = Network::vgg16_cifar();
+    let arch = ArchParams { p_par: 4, n_par: 32, replicas: 8 };
+    let cfg = SimConfig { sample_groups: Some(4), ..SimConfig::default() };
+    let mut rng = Pcg32::new(0);
+    for conv in net.optimized_convs().iter().take(6) {
+        let sparse = prune_magnitude(conv.cout, conv.cin, conv.fft, 4, &mut rng);
+        let p = conv.num_tiles();
+        for stream in [
+            StreamParams { ns: conv.cout, ps: p },
+            StreamParams { ns: 32.min(conv.cout), ps: p },
+            StreamParams { ns: conv.cout, ps: 4.min(p) },
+        ] {
+            let res = simulate_layer(conv, &sparse, &arch, &stream, &cfg);
+            let l = LayerParams::from_layer(conv, 4);
+            let want = transfers_flex(&l, &stream).total() * cfg.word_bytes;
+            assert_eq!(res.ddr_bytes, want, "{} {stream:?}", conv.name);
+        }
+    }
+}
+
+#[test]
+fn flexible_plan_beats_fixed_flows_in_sim() {
+    let net = Network::vgg16_cifar();
+    let ours = run_baseline(&BaselineConfig::this_work(), &net, Some(6), 1);
+    let mut k_cfg = BaselineConfig::this_work();
+    k_cfg.fixed_stream = Some(FixedStream::StreamKernels);
+    let kfixed = run_baseline(&k_cfg, &net, Some(6), 1);
+    assert!(ours.total_ddr_bytes() < kfixed.total_ddr_bytes());
+    assert!(ours.latency_secs() <= kfixed.latency_secs() * 1.02);
+}
+
+#[test]
+fn scheduler_choice_moves_latency_not_bytes() {
+    let net = Network::vgg16_cifar();
+    let mut li = BaselineConfig::this_work();
+    li.scheduler = Scheduler::LowestIndexFirst;
+    li.arch.replicas = 6;
+    let mut ec = BaselineConfig::this_work();
+    ec.arch.replicas = 6;
+    let r_li = run_baseline(&li, &net, Some(6), 2);
+    let r_ec = run_baseline(&ec, &net, Some(6), 2);
+    assert_eq!(r_li.total_ddr_bytes(), r_ec.total_ddr_bytes());
+    assert!(r_ec.avg_pe_utilization() > r_li.avg_pe_utilization());
+    assert!(r_ec.latency_secs() <= r_li.latency_secs());
+}
+
+#[test]
+fn latency_scales_with_clock() {
+    let net = Network::demo();
+    let mut rng = Pcg32::new(3);
+    let sparse: Vec<_> = net
+        .convs
+        .iter()
+        .map(|c| prune_magnitude(c.cout, c.cin, c.fft, 4, &mut rng))
+        .collect();
+    let arch = ArchParams { p_par: 2, n_par: 4, replicas: 8 };
+    let layers: Vec<_> = net
+        .convs
+        .iter()
+        .zip(&sparse)
+        .map(|(c, s)| (c, s, StreamParams { ns: c.cout, ps: c.num_tiles() }))
+        .collect();
+    let fast = SimConfig { clock_hz: 400e6, ddr_bytes_per_sec: 1e12, sample_groups: None, ..SimConfig::default() };
+    let slow = SimConfig { clock_hz: 200e6, ddr_bytes_per_sec: 1e12, sample_groups: None, ..SimConfig::default() };
+    let rf = spectral_flow::sim::simulate_network(&layers, &arch, &fast);
+    let rs = spectral_flow::sim::simulate_network(&layers, &arch, &slow);
+    let ratio = rs.latency_secs() / rf.latency_secs();
+    assert!((ratio - 2.0).abs() < 0.05, "clock scaling ratio {ratio}");
+}
+
+#[test]
+fn required_bandwidth_consistent_with_compute_bound() {
+    // Give the sim exactly the bandwidth it says it needs: the run must be
+    // compute-bound (total ≈ compute + fill).
+    let net = Network::vgg16_cifar();
+    let conv = &net.convs[5];
+    let mut rng = Pcg32::new(4);
+    let sparse = prune_magnitude(conv.cout, conv.cin, conv.fft, 4, &mut rng);
+    let arch = ArchParams::paper();
+    let stream = StreamParams { ns: conv.cout, ps: conv.num_tiles() };
+    let probe = SimConfig { sample_groups: Some(8), ..SimConfig::default() };
+    let r0 = simulate_layer(conv, &sparse, &arch, &stream, &probe);
+    let need = r0.saturating_bandwidth(probe.clock_hz);
+    let tuned = SimConfig { ddr_bytes_per_sec: need * 1.01, ..probe };
+    let r1 = simulate_layer(conv, &sparse, &arch, &stream, &tuned);
+    assert!(r1.total_cycles <= r1.compute_cycles() + r1.fill_cycles + 1);
+}
+
+#[test]
+fn resource_estimate_fits_u200_for_paper_plan() {
+    use spectral_flow::dataflow::{optimize_network_at, OptimizerConfig};
+    let net = Network::vgg16_224();
+    let plan = optimize_network_at(&net, ArchParams::paper(), &OptimizerConfig::paper()).unwrap();
+    let plans: Vec<_> = plan.layers.iter().map(|l| (l.params, l.stream)).collect();
+    let r = estimate_resources(&ArchParams::paper(), &plans, 8);
+    assert!(r.fits_u200(), "{}", r.utilization_report());
+    assert!(r.dsp >= 2000, "PE array should dominate DSPs: {}", r.dsp);
+}
+
+#[test]
+fn dense_alpha1_is_much_slower() {
+    let net = Network::vgg16_cifar();
+    let ours = run_baseline(&BaselineConfig::this_work(), &net, Some(6), 5);
+    let dense = run_baseline(&BaselineConfig::dense_spectral_26(), &net, Some(6), 5);
+    assert!(dense.latency_secs() > 2.0 * ours.latency_secs());
+}

@@ -1,0 +1,115 @@
+//! Integration: the pure-Rust spectral pipeline (FFT → Hadamard → IFFT →
+//! OaA) against the naive spatial convolution — the same equivalence the
+//! Python side proves for the AOT'd path, proven here for the coordinator's
+//! CPU substrate (no artifacts needed).
+
+use spectral_flow::fft::{fft2d, ifft2d, im2tiles, overlap_add, spectral_kernels, Complex, TileGeometry};
+use spectral_flow::nn::conv2d_same_ref;
+use spectral_flow::tensor::Tensor;
+use spectral_flow::util::check::{assert_allclose, forall};
+use spectral_flow::util::rng::Pcg32;
+
+/// Full spectral 'SAME' conv in Rust (reference-grade; the fast path runs
+/// inside the XLA executables).
+fn spectral_conv_rust(x: &Tensor, w: &Tensor, fft: usize) -> Tensor {
+    let (m, h) = (x.shape()[0], x.shape()[1]);
+    let n = w.shape()[0];
+    let k = w.shape()[2];
+    let geo = TileGeometry::new(h, fft, k);
+    let tiles = im2tiles(x, &geo);
+    let ws = spectral_kernels(w, fft);
+    let t = geo.num_tiles();
+    let k2 = fft * fft;
+    let mut out_tiles = Tensor::zeros(&[t, n, fft, fft]);
+    let mut xs_buf: Vec<Vec<Complex>> = Vec::with_capacity(m);
+    for ti in 0..t {
+        // FFT all input channels of this tile
+        xs_buf.clear();
+        for c in 0..m {
+            let plane: Vec<Complex> = (0..k2)
+                .map(|i| Complex::new(tiles.at(&[ti, c, i / fft, i % fft]), 0.0))
+                .collect();
+            xs_buf.push(fft2d(&plane, fft));
+        }
+        for o in 0..n {
+            let mut acc = vec![Complex::ZERO; k2];
+            for c in 0..m {
+                for i in 0..k2 {
+                    let (wr, wi) = ws.at(&[o, c, i / fft, i % fft]);
+                    acc[i] = acc[i].add(xs_buf[c][i].mul(Complex::new(wr, wi)));
+                }
+            }
+            let y = ifft2d(&acc, fft);
+            for (i, v) in y.iter().enumerate() {
+                out_tiles.set(&[ti, o, i / fft, i % fft], v.re);
+            }
+        }
+    }
+    overlap_add(&out_tiles, &geo, n)
+}
+
+#[test]
+fn spectral_equals_spatial_small() {
+    let mut rng = Pcg32::new(1);
+    let x = Tensor::randn(&[3, 10, 10], &mut rng, 1.0);
+    let w = Tensor::randn(&[5, 3, 3, 3], &mut rng, 0.2);
+    let got = spectral_conv_rust(&x, &w, 8);
+    let want = conv2d_same_ref(&x, &w);
+    assert_allclose(got.data(), want.data(), 1e-3, 1e-3);
+}
+
+#[test]
+fn spectral_equals_spatial_sweep() {
+    forall("rust spectral == spatial", 12, |rng| {
+        let h = rng.range(4, 18);
+        let m = rng.range(1, 4);
+        let n = rng.range(1, 4);
+        let x = Tensor::randn(&[m, h, h], rng, 1.0);
+        let w = Tensor::randn(&[n, m, 3, 3], rng, 0.3);
+        let got = spectral_conv_rust(&x, &w, 8);
+        let want = conv2d_same_ref(&x, &w);
+        assert_allclose(got.data(), want.data(), 2e-3, 2e-3);
+    });
+}
+
+#[test]
+fn spectral_equals_spatial_k16() {
+    // K=16 (Table 1 lower half geometry): tile h' = 14.
+    let mut rng = Pcg32::new(2);
+    let x = Tensor::randn(&[2, 20, 20], &mut rng, 1.0);
+    let w = Tensor::randn(&[2, 2, 3, 3], &mut rng, 0.2);
+    let got = spectral_conv_rust(&x, &w, 16);
+    let want = conv2d_same_ref(&x, &w);
+    assert_allclose(got.data(), want.data(), 2e-3, 2e-3);
+}
+
+#[test]
+fn pruned_kernels_change_output_gracefully() {
+    // α=4 pruning keeps 75%+ of kernel energy under magnitude pruning for
+    // smooth kernels; the pruned spectral conv must stay correlated with
+    // the dense one (sanity on the Pruned weight mode).
+    use spectral_flow::sparse::prune_magnitude;
+    let mut rng = Pcg32::new(3);
+    let x = Tensor::randn(&[4, 12, 12], &mut rng, 1.0);
+    let sparse = prune_magnitude(4, 4, 8, 4, &mut rng);
+    let planes = sparse.to_dense_planes();
+    // dense path: spectral conv with the pruned planes, computed tile-wise
+    let geo = TileGeometry::new(12, 8, 3);
+    let tiles = im2tiles(&x, &geo);
+    let t = geo.num_tiles();
+    let mut energy_out = 0.0f64;
+    for ti in 0..t {
+        for c in 0..4 {
+            let plane: Vec<Complex> = (0..64)
+                .map(|i| Complex::new(tiles.at(&[ti, c, i / 8, i % 8]), 0.0))
+                .collect();
+            let xs = fft2d(&plane, 8);
+            for i in 0..64 {
+                let (wr, wi) = planes.at(&[0, c, i / 8, i % 8]);
+                let y = xs[i].mul(Complex::new(wr, wi));
+                energy_out += (y.abs() as f64).powi(2);
+            }
+        }
+    }
+    assert!(energy_out.is_finite() && energy_out > 0.0);
+}
