@@ -5,8 +5,6 @@
 //! cargo run --release --example accelerator_sim [-- --samples 24 --full]
 //! ```
 
-use anyhow::Result;
-
 use spectral_flow::analysis::ArchParams;
 use spectral_flow::dataflow::{optimize_network_at, OptimizerConfig};
 use spectral_flow::model::Network;
@@ -14,6 +12,7 @@ use spectral_flow::report::{fmt_gbps, fmt_ms, fmt_pct, Table};
 use spectral_flow::sim::baselines::{run_baseline, sparse_spatial_17_latency, BaselineConfig};
 use spectral_flow::sim::{estimate_resources, SimConfig};
 use spectral_flow::util::cli::Args;
+use spectral_flow::util::error::Result;
 
 fn main() -> Result<()> {
     let mut args = Args::from_env();

@@ -7,8 +7,6 @@
 //! cargo run --release --example dataflow_explorer [-- --alpha 4]
 //! ```
 
-use anyhow::Result;
-
 use spectral_flow::analysis::{
     bram_flow, transfers_flow, ArchParams, Flow, LayerParams,
 };
@@ -16,6 +14,7 @@ use spectral_flow::dataflow::{optimize_network, optimize_network_at, OptimizerCo
 use spectral_flow::model::Network;
 use spectral_flow::report::{fmt_bytes, fmt_gbps, fmt_ms, Table};
 use spectral_flow::util::cli::Args;
+use spectral_flow::util::error::Result;
 
 fn main() -> Result<()> {
     let mut args = Args::from_env();

@@ -1,16 +1,18 @@
-//! Quickstart: load the `demo` artifact, run one spectral conv layer through
-//! the PJRT executable, and validate it against the pure-Rust spatial
-//! convolution reference — the smallest end-to-end proof that all three
-//! layers (Pallas kernel → JAX model → Rust coordinator) compose.
+//! Quickstart: build the `demo` engine, run one spectral conv layer through
+//! the backend, and validate it against the pure-Rust spatial convolution
+//! reference — the smallest end-to-end proof that the spectral pipeline
+//! (tile → FFT → Hadamard → IFFT → overlap-add) composes.
+//!
+//! Runs fully offline on the default `interp` backend — no artifacts, no
+//! network, no external crates:
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart
 //! ```
-
-use anyhow::Result;
 
 use spectral_flow::coordinator::{InferenceEngine, WeightMode};
 use spectral_flow::util::check::assert_allclose;
+use spectral_flow::util::error::Result;
 
 fn main() -> Result<()> {
     println!("spectral-flow quickstart");
@@ -20,12 +22,13 @@ fn main() -> Result<()> {
     let t0 = std::time::Instant::now();
     let mut engine = InferenceEngine::new("artifacts", "demo", WeightMode::Dense, 42)?;
     println!(
-        "loaded + compiled {} executables in {:?}",
+        "engine up ({} layers, backend {}) in {:?}",
         engine.variant.layers.len(),
+        engine.backend_name(),
         t0.elapsed()
     );
 
-    // 1. One conv layer: PJRT spectral path vs Rust spatial reference.
+    // 1. One conv layer: backend spectral path vs Rust spatial reference.
     let img = engine.synthetic_image(1);
     let spectral = engine.conv_layer(0, &img)?;
     let spatial = engine.conv_layer_reference(0, &img)?;

@@ -8,8 +8,6 @@
 //! cargo run --release --example scheduler_demo [-- --samples 16]
 //! ```
 
-use anyhow::Result;
-
 use spectral_flow::model::Network;
 use spectral_flow::report::{fmt_pct, Table};
 use spectral_flow::schedule::tables::compile_tables;
@@ -17,6 +15,7 @@ use spectral_flow::schedule::{schedule_exact_cover, Scheduler};
 use spectral_flow::sim::execute_tables;
 use spectral_flow::sparse::{prune_magnitude, prune_random, SparseLayer};
 use spectral_flow::util::cli::Args;
+use spectral_flow::util::error::Result;
 use spectral_flow::util::rng::Pcg32;
 
 const N_PAR: usize = 64;

@@ -1,24 +1,25 @@
 //! End-to-end driver (DESIGN.md E10): serve batched VGG16 inference through
-//! the full three-layer stack — Rust batching server → PJRT executables
-//! (JAX-lowered spectral conv with the Pallas Hadamard kernel inside) →
+//! the full stack — Rust batching server → spectral backend (pure-Rust
+//! `interp` by default; PJRT executables behind the `pjrt` feature) →
 //! Rust OaA/pool/FC — and report latency/throughput. Also measures the
 //! single-image 224×224 forward pass, the workload Table 3's latency column
 //! talks about. Results are recorded in EXPERIMENTS.md.
 //!
+//! Runs fully offline with no artifacts:
+//!
 //! ```bash
-//! make artifacts && cargo run --release --example vgg16_e2e
+//! cargo run --release --example vgg16_e2e
 //! # options: --requests 32 --batch 4 --variant vgg16-cifar --skip-224
 //! ```
 
 use std::time::Instant;
-
-use anyhow::Result;
 
 use spectral_flow::coordinator::{
     BatcherConfig, InferenceEngine, Server, ServerConfig, WeightMode,
 };
 use spectral_flow::tensor::Tensor;
 use spectral_flow::util::cli::Args;
+use spectral_flow::util::error::Result;
 use spectral_flow::util::rng::Pcg32;
 
 fn main() -> Result<()> {
@@ -43,10 +44,11 @@ fn main() -> Result<()> {
             max_batch: batch,
             max_wait: std::time::Duration::from_millis(10),
         },
+        ..ServerConfig::default()
     };
     let t0 = Instant::now();
     let server = Server::start(cfg)?;
-    println!("  server up (weights + {variant} executables compiled) in {:?}", t0.elapsed());
+    println!("  server up (weights + {variant} executables prepared) in {:?}", t0.elapsed());
 
     let client = server.client();
     let mut rng = Pcg32::new(99);
@@ -83,7 +85,7 @@ fn main() -> Result<()> {
         let t2 = Instant::now();
         let mut engine =
             InferenceEngine::new("artifacts", "vgg16-224", WeightMode::Pruned { alpha: 4 }, 7)?;
-        println!("  engine up in {:?} (13 conv layers, 9 executables)", t2.elapsed());
+        println!("  engine up in {:?} (13 conv layers)", t2.elapsed());
         let img = engine.synthetic_image(1);
         // warm once (first-touch allocations), then measure.
         let _ = engine.forward(&img)?;
@@ -101,7 +103,7 @@ fn main() -> Result<()> {
                 .unwrap()
         );
         println!(
-            "  note: this is CPU-PJRT wallclock of the numerics path; the paper's\n\
+            "  note: this is CPU wallclock of the software numerics path; the paper's\n\
              \x20 9 ms is the simulated U200 — see `accelerator_sim` for that row."
         );
     }

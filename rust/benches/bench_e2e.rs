@@ -1,12 +1,12 @@
-//! Bench E10 — the real-numerics end-to-end path through PJRT: per-layer
-//! executable latency, full forward passes, and the serving loop. This is
-//! the path the §Perf optimization pass iterates on (EXPERIMENTS.md §Perf).
-//!
-//! Requires `make artifacts`; exits early (successfully) without them so
-//! `cargo bench` stays green in a fresh checkout.
+//! Bench E10 — the real-numerics end-to-end path through the spectral
+//! backend: per-layer latency, full forward passes, and the serving loop.
+//! This is the path the §Perf optimization pass iterates on (EXPERIMENTS.md
+//! §Perf). Runs on the offline `interp` backend by default (no artifacts
+//! needed); with `--features pjrt` + `make artifacts` the same bench times
+//! the PJRT executables.
 //!
 //! ```bash
-//! make artifacts && cargo bench --bench bench_e2e [-- --quick]
+//! cargo bench --bench bench_e2e [-- --quick]
 //! ```
 
 use std::time::{Duration, Instant};
@@ -19,18 +19,15 @@ use spectral_flow::util::bench::{quick_requested, Bench};
 use spectral_flow::util::rng::Pcg32;
 
 fn main() {
-    if !std::path::Path::new("artifacts/manifest.json").exists() {
-        println!("SKIP bench_e2e: run `make artifacts` first");
-        return;
-    }
     let quick = quick_requested();
     let mut b = if quick { Bench::quick() } else { Bench::new() };
 
-    // ---- per-layer executable latency (demo + cifar shapes) --------------
+    // ---- per-layer backend latency (demo + cifar shapes) -----------------
     let mut engine = InferenceEngine::new("artifacts", "demo", WeightMode::Dense, 42)
         .expect("demo engine");
+    println!("backend: {}", engine.backend_name());
     let img = engine.synthetic_image(1);
-    b.run("e2e/demo_conv_layer0_pjrt", || engine.conv_layer(0, &img).unwrap().len());
+    b.run("e2e/demo_conv_layer0", || engine.conv_layer(0, &img).unwrap().len());
     b.run("e2e/demo_forward", || engine.forward(&img).unwrap().len());
 
     let t0 = Instant::now();
@@ -38,7 +35,7 @@ fn main() {
         .expect("cifar engine");
     b.record("e2e/cifar_engine_startup", t0.elapsed(), 1);
     let cimg = cifar.synthetic_image(2);
-    b.run("e2e/cifar_conv1_1_pjrt", || cifar.conv_layer(0, &cimg).unwrap().len());
+    b.run("e2e/cifar_conv1_1", || cifar.conv_layer(0, &cimg).unwrap().len());
     b.run("e2e/cifar_vgg16_forward", || cifar.forward(&cimg).unwrap().len());
 
     // ---- serving throughput ----------------------------------------------
@@ -48,6 +45,7 @@ fn main() {
         mode: WeightMode::Pruned { alpha: 4 },
         seed: 7,
         batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(5) },
+        ..ServerConfig::default()
     })
     .expect("server");
     let client = server.client();

@@ -1,22 +1,25 @@
-//! The inference engine: drives one model variant's AOT executables through
-//! the full spectral pipeline (paper Eq. 4) plus the CPU-side head.
+//! The inference engine: drives one model variant through the configured
+//! [`SpectralBackend`](crate::runtime::SpectralBackend) plus the CPU-side
+//! head — the full spectral pipeline of paper Eq. 4.
 //!
 //! Per conv layer (the paper's §5.1 process, CPU side in Rust):
 //!
 //! ```text
-//! im2tiles → [PJRT: FFT → Hadamard (Pallas) → IFFT] → overlap-add
+//! im2tiles → [backend: FFT → Hadamard → IFFT] → overlap-add
 //!          → bias → ReLU → (maxpool)
 //! ```
 //!
-//! then flatten → FC stack → logits.
+//! then flatten → FC stack → logits. The backend is `interp` by default
+//! (pure Rust, runs offline with no artifacts); with the `pjrt` feature the
+//! same engine drives AOT-compiled XLA executables instead.
 
-use anyhow::{anyhow, Result};
-
+use crate::err;
 use crate::fft::{im2tiles, overlap_add, spectral_kernels, TileGeometry};
 use crate::nn;
-use crate::runtime::{Runtime, VariantEntry};
+use crate::runtime::{freq_major_planes, BackendKind, Runtime, VariantEntry, WeightId};
 use crate::sparse::{prune_magnitude, SparseLayer};
 use crate::tensor::{ComplexTensor, Tensor};
+use crate::util::error::Result;
 use crate::util::rng::Pcg32;
 
 /// How layer weights are generated (no trained checkpoints exist for the
@@ -91,51 +94,59 @@ impl Weights {
     }
 }
 
-/// The engine: runtime + weights + variant description.
+/// The engine: runtime (backend + manifest) + weights + variant description.
 pub struct InferenceEngine {
     runtime: Runtime,
     pub variant_name: String,
     pub variant: VariantEntry,
     pub weights: Weights,
-    /// Per-layer (w_re, w_im) device buffers — uploaded once at startup
-    /// (§Perf L3: avoids a ~134 MB Literal conversion per deep-layer call).
-    weight_buffers: Vec<(xla::PjRtBuffer, xla::PjRtBuffer)>,
+    /// Per-layer weight handles — uploaded once at startup (§Perf L3:
+    /// avoids a ~134 MB conversion per deep-layer call on PJRT; on interp
+    /// it pins the frequency-major layout the MAC loop streams).
+    weight_ids: Vec<WeightId>,
     kernel_k: usize,
     fft: usize,
 }
 
 impl InferenceEngine {
-    /// Build an engine over `artifacts/` for a named variant, pre-compiling
-    /// all of its executables.
+    /// Build an engine for a named variant on the default (`interp`)
+    /// backend, preparing all of its executables.
     pub fn new(
         artifacts_dir: &str,
         variant: &str,
         mode: WeightMode,
         seed: u64,
     ) -> Result<Self> {
-        let mut runtime = Runtime::open(artifacts_dir)?;
+        Self::new_with(artifacts_dir, variant, mode, seed, BackendKind::default())
+    }
+
+    /// Build an engine on an explicit backend.
+    pub fn new_with(
+        artifacts_dir: &str,
+        variant: &str,
+        mode: WeightMode,
+        seed: u64,
+        backend: BackendKind,
+    ) -> Result<Self> {
+        let mut runtime = Runtime::open_with(artifacts_dir, backend)?;
         let v = runtime.manifest.variant(variant)?.clone();
         let fft = runtime.manifest.fft_size;
         let k = runtime.manifest.kernel_k;
         runtime.warm_variant(variant)?;
         let weights = Weights::generate(&v, fft, k, mode, seed);
-        let mut weight_buffers = Vec::with_capacity(v.layers.len());
+        let mut weight_ids = Vec::with_capacity(v.layers.len());
         for (l, w) in v.layers.iter().zip(&weights.convs) {
-            // frequency-major [F, M, N] — the executable's weight layout,
-            // computed once here instead of per request inside the graph
-            let (re, im) = crate::runtime::freq_major_planes(&w.spectral);
-            let dims = [fft * fft, l.cin, l.cout];
-            weight_buffers.push((
-                runtime.upload(&re, &dims)?,
-                runtime.upload(&im, &dims)?,
-            ));
+            // frequency-major [F, M, N] — the backend's weight layout,
+            // computed once here instead of per request
+            let (re, im) = freq_major_planes(&w.spectral);
+            weight_ids.push(runtime.upload_weights(&re, &im, [fft * fft, l.cin, l.cout])?);
         }
         Ok(InferenceEngine {
             runtime,
             variant_name: variant.to_string(),
             variant: v,
             weights,
-            weight_buffers,
+            weight_ids,
             kernel_k: k,
             fft,
         })
@@ -145,11 +156,16 @@ impl InferenceEngine {
         self.fft
     }
 
-    /// Run one conv layer through the PJRT executable (the "FPGA" side).
+    /// Backend/platform name serving this engine.
+    pub fn backend_name(&self) -> String {
+        self.runtime.platform()
+    }
+
+    /// Run one conv layer through the backend (the "FPGA" side).
     pub fn conv_layer(&mut self, idx: usize, x: &Tensor) -> Result<Tensor> {
         let l = self.variant.layers[idx].clone();
         if x.shape() != [l.cin, l.h, l.h] {
-            return Err(anyhow!(
+            return Err(err!(
                 "layer {} expects [{}, {}, {}], got {:?}",
                 l.name,
                 l.cin,
@@ -160,16 +176,7 @@ impl InferenceEngine {
         }
         let geo = TileGeometry::new(l.h, self.fft, self.kernel_k);
         let tiles = im2tiles(x, &geo);
-        let tiles_buf = self.runtime.upload(
-            tiles.data(),
-            &[geo.num_tiles(), l.cin, self.fft, self.fft],
-        )?;
-        let (w_re, w_im) = {
-            let (a, b) = &self.weight_buffers[idx];
-            (a, b)
-        };
-        let exe = self.runtime.conv_executable(&l.file)?;
-        let out_tiles = exe.run_buffers(&tiles_buf, w_re, w_im)?;
+        let out_tiles = self.runtime.run_conv(&l.file, &tiles, self.weight_ids[idx])?;
         let mut out = overlap_add(&out_tiles, &geo, l.cout);
         nn::add_bias(&mut out, &self.weights.convs[idx].bias);
         nn::relu(&mut out);
@@ -180,7 +187,7 @@ impl InferenceEngine {
     pub fn forward(&mut self, image: &Tensor) -> Result<Vec<f32>> {
         let want = [self.variant.input_c, self.variant.input_hw, self.variant.input_hw];
         if image.shape() != want {
-            return Err(anyhow!("input shape {:?} != {:?}", image.shape(), want));
+            return Err(err!("input shape {:?} != {:?}", image.shape(), want));
         }
         let mut x = image.clone();
         for i in 0..self.variant.layers.len() {
@@ -211,7 +218,7 @@ impl InferenceEngine {
         let w = self.weights.convs[idx]
             .spatial
             .as_ref()
-            .ok_or_else(|| anyhow!("reference path needs WeightMode::Dense"))?;
+            .ok_or_else(|| err!("reference path needs WeightMode::Dense"))?;
         let mut out = nn::conv2d_same_ref(x, w);
         nn::add_bias(&mut out, &self.weights.convs[idx].bias);
         nn::relu(&mut out);

@@ -1,10 +1,13 @@
-//! Layer-3 coordinator: the serving engine around the AOT'd executables.
+//! Layer-3 coordinator: the serving engine around the spectral-conv
+//! backend.
 //!
 //! Mirrors the paper's CPU–FPGA split at system level: the "FPGA" is the
-//! PJRT executable (spectral conv per tile batch), everything else —
-//! tiling, OaA, bias/ReLU, pooling, the FC head, request batching and
-//! metrics — runs here, in Rust, on the request path. Python exists only
-//! in the build pipeline.
+//! [`SpectralBackend`](crate::runtime::SpectralBackend) (spectral conv per
+//! tile batch — the pure-Rust `interp` interpreter by default, AOT'd PJRT
+//! executables behind the `pjrt` feature), everything else — tiling, OaA,
+//! bias/ReLU, pooling, the FC head, request batching and metrics — runs
+//! here, in Rust, on the request path. Python exists only in the (optional)
+//! artifact build pipeline.
 //!
 //! * [`engine`] — [`engine::InferenceEngine`]: weights + per-layer forward.
 //! * [`batcher`] — deadline/size-bounded request batching.

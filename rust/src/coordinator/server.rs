@@ -1,20 +1,21 @@
 //! The serving loop: one executor thread owning the [`InferenceEngine`],
 //! fed by client handles through an MPSC channel, with deadline batching.
 //!
-//! PJRT objects hold raw FFI pointers, so the engine is constructed *inside*
-//! the worker thread and never crosses a thread boundary; clients exchange
-//! plain tensors. (tokio is unavailable offline — std::thread + channels,
-//! see DESIGN.md.)
+//! The engine is constructed *inside* the worker thread and never crosses a
+//! thread boundary (PJRT objects hold raw FFI pointers; the interp backend
+//! simply doesn't need to move); clients exchange plain tensors. (tokio is
+//! unavailable offline — std::thread + channels, see DESIGN.md.)
 
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
-
 use super::batcher::{Batcher, BatcherConfig};
 use super::engine::{InferenceEngine, WeightMode};
 use super::metrics::Metrics;
+use crate::err;
+use crate::runtime::BackendKind;
 use crate::tensor::Tensor;
+use crate::util::error::Result;
 
 /// Server configuration.
 #[derive(Debug, Clone)]
@@ -24,6 +25,8 @@ pub struct ServerConfig {
     pub mode: WeightMode,
     pub seed: u64,
     pub batcher: BatcherConfig,
+    /// Which spectral-conv backend the worker's engine runs on.
+    pub backend: BackendKind,
 }
 
 impl Default for ServerConfig {
@@ -34,6 +37,7 @@ impl Default for ServerConfig {
             mode: WeightMode::Pruned { alpha: 4 },
             seed: 7,
             batcher: BatcherConfig::default(),
+            backend: BackendKind::default(),
         }
     }
 }
@@ -76,8 +80,8 @@ impl Client {
         let (reply, rx) = mpsc::channel();
         self.tx
             .send(Msg::Infer(Request { image, submitted: Instant::now(), reply }))
-            .map_err(|_| anyhow!("server stopped"))?;
-        rx.recv().map_err(|_| anyhow!("server dropped request"))?
+            .map_err(|_| err!("server stopped"))?;
+        rx.recv().map_err(|_| err!("server dropped request"))?
     }
 
     /// Fire-and-collect: submit without waiting; returns the receiver.
@@ -85,7 +89,7 @@ impl Client {
         let (reply, rx) = mpsc::channel();
         self.tx
             .send(Msg::Infer(Request { image, submitted: Instant::now(), reply }))
-            .map_err(|_| anyhow!("server stopped"))?;
+            .map_err(|_| err!("server stopped"))?;
         Ok(rx)
     }
 }
@@ -102,7 +106,7 @@ impl Server {
             .expect("spawn worker");
         ready_rx
             .recv()
-            .map_err(|_| anyhow!("server worker died during startup"))??;
+            .map_err(|_| err!("server worker died during startup"))??;
         Ok(Server { tx, worker: Some(worker) })
     }
 
@@ -113,15 +117,15 @@ impl Server {
     /// Snapshot current metrics.
     pub fn metrics(&self) -> Result<Metrics> {
         let (tx, rx) = mpsc::channel();
-        self.tx.send(Msg::Snapshot(tx)).map_err(|_| anyhow!("server stopped"))?;
-        rx.recv().map_err(|_| anyhow!("server stopped"))
+        self.tx.send(Msg::Snapshot(tx)).map_err(|_| err!("server stopped"))?;
+        rx.recv().map_err(|_| err!("server stopped"))
     }
 
     /// Graceful shutdown (flushes pending batches).
     pub fn shutdown(mut self) -> Result<()> {
         let _ = self.tx.send(Msg::Shutdown);
         if let Some(w) = self.worker.take() {
-            w.join().map_err(|_| anyhow!("worker panicked"))??;
+            w.join().map_err(|_| err!("worker panicked"))??;
         }
         Ok(())
     }
@@ -141,18 +145,22 @@ fn worker_loop(
     rx: mpsc::Receiver<Msg>,
     ready: mpsc::Sender<Result<()>>,
 ) -> Result<()> {
-    let mut engine =
-        match InferenceEngine::new(&cfg.artifacts_dir, &cfg.variant, cfg.mode, cfg.seed) {
-            Ok(e) => {
-                let _ = ready.send(Ok(()));
-                e
-            }
-            Err(e) => {
-                let msg = format!("{e:#}");
-                let _ = ready.send(Err(anyhow!(msg)));
-                return Err(e);
-            }
-        };
+    let mut engine = match InferenceEngine::new_with(
+        &cfg.artifacts_dir,
+        &cfg.variant,
+        cfg.mode,
+        cfg.seed,
+        cfg.backend,
+    ) {
+        Ok(e) => {
+            let _ = ready.send(Ok(()));
+            e
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e.clone()));
+            return Err(e);
+        }
+    };
     let mut batcher: Batcher<Request> = Batcher::new(cfg.batcher);
     let mut metrics = Metrics::new();
 

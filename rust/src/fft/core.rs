@@ -110,23 +110,37 @@ pub fn ifft1d(x: &[Complex]) -> Vec<Complex> {
 
 /// Forward 2D FFT on a row-major `n x n` plane.
 pub fn fft2d(x: &[Complex], n: usize) -> Vec<Complex> {
-    fft2d_impl(x, n, false)
+    let mut out = x.to_vec();
+    fft2d_inplace(&mut out, n);
+    out
 }
 
 /// Inverse 2D FFT with 1/N² normalization.
 pub fn ifft2d(x: &[Complex], n: usize) -> Vec<Complex> {
-    let mut out = fft2d_impl(x, n, true);
-    let inv = 1.0 / (n * n) as f32;
-    for v in &mut out {
-        v.re *= inv;
-        v.im *= inv;
-    }
+    let mut out = x.to_vec();
+    ifft2d_inplace(&mut out, n);
     out
 }
 
-fn fft2d_impl(x: &[Complex], n: usize, inverse: bool) -> Vec<Complex> {
-    assert_eq!(x.len(), n * n, "plane must be n x n");
-    let mut out = x.to_vec();
+/// In-place forward 2D FFT (allocation-free except an `n`-element column
+/// scratch) — the interp backend's hot path uses this on its scratch
+/// buffers directly.
+pub fn fft2d_inplace(buf: &mut [Complex], n: usize) {
+    fft2d_impl(buf, n, false);
+}
+
+/// In-place inverse 2D FFT with 1/N² normalization.
+pub fn ifft2d_inplace(buf: &mut [Complex], n: usize) {
+    fft2d_impl(buf, n, true);
+    let inv = 1.0 / (n * n) as f32;
+    for v in buf {
+        v.re *= inv;
+        v.im *= inv;
+    }
+}
+
+fn fft2d_impl(out: &mut [Complex], n: usize, inverse: bool) {
+    assert_eq!(out.len(), n * n, "plane must be n x n");
     // rows
     for r in 0..n {
         fft_inplace(&mut out[r * n..(r + 1) * n], inverse);
@@ -142,7 +156,6 @@ fn fft2d_impl(x: &[Complex], n: usize, inverse: bool) -> Vec<Complex> {
             out[r * n + c] = col[r];
         }
     }
-    out
 }
 
 #[cfg(test)]
@@ -256,6 +269,6 @@ mod tests {
     #[test]
     #[should_panic(expected = "power of two")]
     fn non_pow2_rejected() {
-        fft1d(&vec![Complex::ZERO; 6]);
+        fft1d(&[Complex::ZERO; 6]);
     }
 }

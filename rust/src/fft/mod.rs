@@ -7,5 +7,5 @@
 mod core;
 mod tiling;
 
-pub use core::{fft1d, fft2d, ifft1d, ifft2d, Complex};
+pub use core::{fft1d, fft2d, fft2d_inplace, ifft1d, ifft2d, ifft2d_inplace, Complex};
 pub use tiling::{im2tiles, overlap_add, spectral_kernels, tiles_per_side, TileGeometry};

@@ -7,14 +7,17 @@
 //! The crate is the **Layer-3 coordinator**: it owns the dataflow optimizer
 //! (paper Alg. 1), the exact-cover memory-access scheduler (paper Alg. 2),
 //! a cycle-level model of the paper's FPGA accelerator, and a serving engine
-//! that executes spectral VGG16 inference through AOT-compiled XLA
-//! executables (built once by `make artifacts`; Python is never on the
-//! request path).
+//! that executes spectral VGG16 inference through a pluggable
+//! [`runtime::SpectralBackend`]. The default `interp` backend is pure Rust
+//! and runs fully offline with zero external dependencies; the optional
+//! `pjrt` cargo feature swaps in AOT-compiled XLA executables (built once
+//! by `make artifacts`; Python is never on the request path). See README.md
+//! for the workspace layout and how to run everything offline.
 //!
 //! Module map (see DESIGN.md for the full system inventory):
 //!
-//! * [`util`] — offline-environment substrates: RNG, JSON, bench harness,
-//!   mini property-testing.
+//! * [`util`] — offline-environment substrates: RNG, JSON, errors, bench
+//!   harness, mini property-testing.
 //! * [`tensor`] — dense f32 tensors + complex planes.
 //! * [`fft`] — radix-2 FFT, tiling (`im2tiles`) and overlap-and-add.
 //! * [`nn`] — CPU-side ops: ReLU, maxpool, dense/FC, naive conv reference.
@@ -24,7 +27,8 @@
 //! * [`dataflow`] — flexible-dataflow optimizer (paper Alg. 1).
 //! * [`schedule`] — exact-cover scheduler + baselines (paper Alg. 2).
 //! * [`sim`] — cycle-level accelerator simulator (the U200 substitute).
-//! * [`runtime`] — PJRT executable loading/execution (the `xla` crate).
+//! * [`runtime`] — the [`runtime::SpectralBackend`] trait, the pure-Rust
+//!   `interp` backend, and (feature `pjrt`) the PJRT executable loader.
 //! * [`coordinator`] — batching inference server (the e2e driver).
 //! * [`report`] — ASCII/CSV emitters for every paper table and figure.
 

@@ -4,21 +4,38 @@
 //! "Per-experiment index"); the benches regenerate the same tables with
 //! timing, the CLI is for interactive exploration.
 
-use anyhow::{anyhow, Result};
-
 use spectral_flow::analysis::{
     transfers_flow, ArchParams, Flow, LayerParams,
 };
 use spectral_flow::coordinator::{InferenceEngine, WeightMode};
 use spectral_flow::dataflow::{optimize_network_at, OptimizerConfig};
+use spectral_flow::err;
 use spectral_flow::model::Network;
 use spectral_flow::report::{fmt_bytes, fmt_gbps, fmt_ms, fmt_pct, Table};
+use spectral_flow::runtime::BackendKind;
 use spectral_flow::schedule::Scheduler;
 use spectral_flow::sim::baselines::{run_baseline, sparse_spatial_17_latency, BaselineConfig};
 use spectral_flow::sim::{estimate_resources, SimConfig};
 use spectral_flow::sparse::prune_magnitude;
 use spectral_flow::util::cli::Args;
+use spectral_flow::util::error::Result;
 use spectral_flow::util::rng::Pcg32;
+
+/// Parse `--backend` into a [`BackendKind`], with a clear error when the
+/// binary was built without the `pjrt` feature.
+fn parse_backend(name: &str) -> Result<BackendKind> {
+    match name {
+        "interp" => Ok(BackendKind::Interp),
+        #[cfg(feature = "pjrt")]
+        "pjrt" => Ok(BackendKind::Pjrt),
+        #[cfg(not(feature = "pjrt"))]
+        "pjrt" => Err(err!(
+            "this binary was built without the `pjrt` feature; \
+             rebuild with `cargo build --features pjrt` (see README.md)"
+        )),
+        other => Err(err!("unknown backend {other:?} (expected interp|pjrt)")),
+    }
+}
 
 const ABOUT: &str = "spectral-flow — flexible-dataflow sparse spectral CNN accelerator \
 (FPGA '20 reproduction)\n\n\
@@ -88,7 +105,7 @@ fn optimize(mut args: Args) -> Result<()> {
         ..OptimizerConfig::paper()
     };
     let plan = optimize_network_at(&net, ArchParams::paper(), &cfg)
-        .ok_or_else(|| anyhow!("no feasible plan"))?;
+        .ok_or_else(|| err!("no feasible plan"))?;
     let mut t = Table::new(
         &format!("Tables 1+2 — VGG16 K=8 α={alpha}, P'=9 N'=64, τ={tau_ms} ms"),
         &["layer", "Ps", "Ns", "BRAMs", "transfers", "τ_i", "BW"],
@@ -192,9 +209,10 @@ fn serve(mut args: Args) -> Result<()> {
     let batch = args.opt_usize("batch", 4, "max batch size");
     let wait_ms = args.opt_usize("wait-ms", 10, "batch deadline (ms)");
     let artifacts = args.opt("artifacts", "artifacts", "artifacts directory");
+    let backend = parse_backend(&args.opt("backend", "interp", "spectral backend (interp|pjrt)"))?;
     args.maybe_help("serve: run the batching server on synthetic traffic");
     let server = Server::start(ServerConfig {
-        artifacts_dir: artifacts,
+        artifacts_dir: artifacts.clone(),
         variant: variant.clone(),
         mode: WeightMode::Pruned { alpha: 4 },
         seed: 7,
@@ -202,10 +220,13 @@ fn serve(mut args: Args) -> Result<()> {
             max_batch: batch,
             max_wait: std::time::Duration::from_millis(wait_ms as u64),
         },
+        backend,
     })?;
     let client = server.client();
     let mut rng = Pcg32::new(123);
-    let m = spectral_flow::runtime::Runtime::open("artifacts")?;
+    // Manifest-only read to shape the synthetic requests: always use the
+    // cheap interp backend here — the server worker owns the real one.
+    let m = spectral_flow::runtime::Runtime::open(&artifacts)?;
     let vdesc = m.manifest.variant(&variant)?.clone();
     let t0 = std::time::Instant::now();
     let rxs: Result<Vec<_>> = (0..requests)
@@ -218,7 +239,7 @@ fn serve(mut args: Args) -> Result<()> {
         })
         .collect();
     for rx in rxs? {
-        rx.recv().map_err(|_| anyhow!("server dropped request"))??;
+        rx.recv().map_err(|_| err!("server dropped request"))??;
     }
     let wall = t0.elapsed();
     let metrics = server.metrics()?;
@@ -233,11 +254,17 @@ fn infer(mut args: Args) -> Result<()> {
     let variant = args.opt("variant", "demo", "model variant (demo|vgg16-cifar|vgg16-224)");
     let artifacts = args.opt("artifacts", "artifacts", "artifacts directory");
     let pruned = args.opt_bool("pruned", "use magnitude-pruned (α=4) kernels");
-    args.maybe_help("infer: single-image forward pass through the PJRT executables");
+    let backend = parse_backend(&args.opt("backend", "interp", "spectral backend (interp|pjrt)"))?;
+    args.maybe_help("infer: single-image forward pass through the spectral backend");
     let mode = if pruned { WeightMode::Pruned { alpha: 4 } } else { WeightMode::Dense };
     let t0 = std::time::Instant::now();
-    let mut engine = InferenceEngine::new(&artifacts, &variant, mode, 7)?;
-    println!("engine up in {:?} ({} executables)", t0.elapsed(), engine.variant.layers.len());
+    let mut engine = InferenceEngine::new_with(&artifacts, &variant, mode, 7, backend)?;
+    println!(
+        "engine up in {:?} ({} layers, backend {})",
+        t0.elapsed(),
+        engine.variant.layers.len(),
+        engine.backend_name()
+    );
     let img = engine.synthetic_image(1);
     let t1 = std::time::Instant::now();
     let logits = engine.forward(&img)?;

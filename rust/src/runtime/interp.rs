@@ -1,0 +1,248 @@
+//! Pure-Rust spectral-conv backend (the offline default).
+//!
+//! Executes exactly what the AOT'd XLA executable computes, using the
+//! crate's own [`fft`](crate::fft) substrate: per input tile, 2D-FFT every
+//! input channel, multiply-accumulate against the frequency-major kernel
+//! planes (`[K², M, N]` — the same layout
+//! [`freq_major_planes`](super::freq_major_planes) feeds PJRT), then
+//! 2D-IFFT each output channel and keep the real part. The engine wraps
+//! this with `im2tiles` / `overlap_add`, so the end-to-end path is the
+//! paper's Eq. 4 with zero external dependencies.
+//!
+//! Throughput note: this is the software *reference* path (the role the
+//! paper's CPU/GPU baselines play); the per-tile MAC is O(K²·M·N) complex
+//! ops, frequency-major so the weight row `[N]` streams contiguously.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::err;
+use crate::fft::{fft2d_inplace, ifft2d_inplace, Complex};
+use crate::tensor::Tensor;
+use crate::util::error::Result;
+
+use super::{ExecutableEntry, SpectralBackend, WeightId};
+
+#[derive(Debug, Clone, Copy)]
+struct Shape {
+    tiles: usize,
+    cin: usize,
+    cout: usize,
+    fft: usize,
+}
+
+struct WeightPlanes {
+    re: Vec<f32>,
+    im: Vec<f32>,
+    /// `[F, M, N]` with `F = K²`.
+    dims: [usize; 3],
+}
+
+/// The interpreter backend: shape registry + uploaded weight planes.
+#[derive(Default)]
+pub struct InterpBackend {
+    shapes: HashMap<String, Shape>,
+    weights: Vec<WeightPlanes>,
+}
+
+impl InterpBackend {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl SpectralBackend for InterpBackend {
+    fn name(&self) -> String {
+        "interp".to_string()
+    }
+
+    fn prepare(&mut self, file: &str, meta: &ExecutableEntry, _artifacts_dir: &Path)
+        -> Result<()> {
+        if !meta.fft_size.is_power_of_two() {
+            return Err(err!("{file}: FFT size {} is not a power of two", meta.fft_size));
+        }
+        self.shapes.insert(
+            file.to_string(),
+            Shape { tiles: meta.tiles, cin: meta.cin, cout: meta.cout, fft: meta.fft_size },
+        );
+        Ok(())
+    }
+
+    fn upload_weights(&mut self, re: &[f32], im: &[f32], dims: [usize; 3]) -> Result<WeightId> {
+        let want = dims[0] * dims[1] * dims[2];
+        if re.len() != want || im.len() != want {
+            return Err(err!(
+                "weight planes {}x{} don't match dims {dims:?} (= {want} elements)",
+                re.len(),
+                im.len()
+            ));
+        }
+        self.weights.push(WeightPlanes { re: re.to_vec(), im: im.to_vec(), dims });
+        Ok(self.weights.len() - 1)
+    }
+
+    fn run_conv(&mut self, file: &str, tiles: &Tensor, wid: WeightId) -> Result<Tensor> {
+        let s = *self
+            .shapes
+            .get(file)
+            .ok_or_else(|| err!("{file} not prepared (warm the variant first)"))?;
+        let (t, m, n, k) = (s.tiles, s.cin, s.cout, s.fft);
+        let f = k * k;
+        let want_in = [t, m, k, k];
+        if tiles.shape() != want_in {
+            return Err(err!(
+                "input tiles shape {:?} != executable shape {:?}",
+                tiles.shape(),
+                want_in
+            ));
+        }
+        let w = self
+            .weights
+            .get(wid)
+            .ok_or_else(|| err!("weight handle {wid} unknown"))?;
+        if w.dims != [f, m, n] {
+            return Err(err!(
+                "weight dims {:?} != executable dims {:?}",
+                w.dims,
+                [f, m, n]
+            ));
+        }
+
+        let td = tiles.data();
+        let mut out = Tensor::zeros(&[t, n, k, k]);
+        let od = out.data_mut();
+        // scratch reused across tiles — no per-channel allocations on the
+        // request path: FFTs run in place on these buffers
+        let mut xs = vec![Complex::ZERO; m * f];
+        let mut acc = vec![Complex::ZERO; n * f];
+        for ti in 0..t {
+            for mi in 0..m {
+                let base = (ti * m + mi) * f;
+                let chan = &mut xs[mi * f..(mi + 1) * f];
+                for (p, &v) in chan.iter_mut().zip(&td[base..base + f]) {
+                    *p = Complex::new(v, 0.0);
+                }
+                fft2d_inplace(chan, k);
+            }
+            for a in acc.iter_mut() {
+                *a = Complex::ZERO;
+            }
+            // frequency-major MAC: for each (freq, cin), stream the [N] row
+            for fi in 0..f {
+                for mi in 0..m {
+                    let x = xs[mi * f + fi];
+                    let row = (fi * m + mi) * n;
+                    for ni in 0..n {
+                        let (wr, wi) = (w.re[row + ni], w.im[row + ni]);
+                        let a = &mut acc[ni * f + fi];
+                        a.re += x.re * wr - x.im * wi;
+                        a.im += x.re * wi + x.im * wr;
+                    }
+                }
+            }
+            for ni in 0..n {
+                let plane = &mut acc[ni * f..(ni + 1) * f];
+                ifft2d_inplace(plane, k);
+                let base = (ti * n + ni) * f;
+                for (o, c) in od[base..base + f].iter_mut().zip(plane.iter()) {
+                    *o = c.re;
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    fn prepared(&self) -> usize {
+        self.shapes.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::{fft2d, ifft2d, spectral_kernels};
+    use crate::runtime::freq_major_planes;
+    use crate::util::check::{assert_allclose, forall};
+    use crate::util::rng::Pcg32;
+
+    fn entry(tiles: usize, cin: usize, cout: usize, fft: usize) -> ExecutableEntry {
+        ExecutableEntry { tiles, cin, cout, fft_size: fft, sha256: "t".into(), bytes: 0 }
+    }
+
+    /// Reference: per-tile dense Hadamard pipeline written independently of
+    /// the backend's loop structure.
+    fn reference_conv(tiles: &Tensor, planes: &crate::tensor::ComplexTensor, fft: usize)
+        -> Tensor {
+        let (t, m) = (tiles.shape()[0], tiles.shape()[1]);
+        let n = planes.shape()[0];
+        let f = fft * fft;
+        let mut out = Tensor::zeros(&[t, n, fft, fft]);
+        for ti in 0..t {
+            let xs: Vec<Vec<Complex>> = (0..m)
+                .map(|mi| {
+                    let p: Vec<Complex> = (0..f)
+                        .map(|i| Complex::new(tiles.at(&[ti, mi, i / fft, i % fft]), 0.0))
+                        .collect();
+                    fft2d(&p, fft)
+                })
+                .collect();
+            for ni in 0..n {
+                let mut acc = vec![Complex::ZERO; f];
+                for (mi, x) in xs.iter().enumerate() {
+                    for i in 0..f {
+                        let (wr, wi) = planes.at(&[ni, mi, i / fft, i % fft]);
+                        acc[i] = acc[i].add(x[i].mul(Complex::new(wr, wi)));
+                    }
+                }
+                for (i, c) in ifft2d(&acc, fft).iter().enumerate() {
+                    out.set(&[ti, ni, i / fft, i % fft], c.re);
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matches_dense_hadamard_reference() {
+        forall("interp == dense hadamard", 10, |rng| {
+            let (t, m, n, fft) = (rng.range(1, 4), rng.range(1, 4), rng.range(1, 4), 8);
+            let tiles = Tensor::randn(&[t, m, fft, fft], rng, 1.0);
+            let spatial = Tensor::randn(&[n, m, 3, 3], rng, 0.3);
+            let planes = spectral_kernels(&spatial, fft);
+            let (re, im) = freq_major_planes(&planes);
+
+            let mut b = InterpBackend::new();
+            b.prepare("x", &entry(t, m, n, fft), Path::new(".")).unwrap();
+            let wid = b.upload_weights(&re, &im, [fft * fft, m, n]).unwrap();
+            let got = b.run_conv("x", &tiles, wid).unwrap();
+            let want = reference_conv(&tiles, &planes, fft);
+            assert_allclose(got.data(), want.data(), 1e-4, 1e-4);
+        });
+    }
+
+    #[test]
+    fn rejects_shape_mismatches() {
+        let mut rng = Pcg32::new(1);
+        let mut b = InterpBackend::new();
+        b.prepare("x", &entry(2, 1, 1, 8), Path::new(".")).unwrap();
+        let wid = b.upload_weights(&[0.0; 64], &[0.0; 64], [64, 1, 1]).unwrap();
+        // wrong tile count
+        let bad = Tensor::randn(&[3, 1, 8, 8], &mut rng, 1.0);
+        assert!(b.run_conv("x", &bad, wid).is_err());
+        // unknown executable
+        let ok = Tensor::randn(&[2, 1, 8, 8], &mut rng, 1.0);
+        assert!(b.run_conv("y", &ok, wid).is_err());
+        // bad weight handle
+        assert!(b.run_conv("x", &ok, wid + 7).is_err());
+        // bad weight dims at upload
+        assert!(b.upload_weights(&[0.0; 3], &[0.0; 3], [64, 1, 1]).is_err());
+    }
+
+    #[test]
+    fn prepare_is_idempotent() {
+        let mut b = InterpBackend::new();
+        b.prepare("x", &entry(1, 1, 1, 8), Path::new(".")).unwrap();
+        b.prepare("x", &entry(1, 1, 1, 8), Path::new(".")).unwrap();
+        assert_eq!(b.prepared(), 1);
+    }
+}

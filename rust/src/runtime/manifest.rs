@@ -1,9 +1,12 @@
-//! `artifacts/manifest.json` schema (written by `python/compile/aot.py`).
+//! `artifacts/manifest.json` schema (written by `python/compile/aot.py`),
+//! plus the built-in synthesized manifest used when no artifacts exist
+//! (the offline `interp` backend needs only shapes, not HLO files).
 
 use std::collections::BTreeMap;
 
-use anyhow::{anyhow, Result};
-
+use crate::err;
+use crate::model::Network;
+use crate::util::error::Result;
 use crate::util::json::Json;
 
 /// One executable's metadata.
@@ -53,34 +56,34 @@ pub struct Manifest {
 fn req_usize(j: &Json, key: &str) -> Result<usize> {
     j.get(key)
         .and_then(Json::as_usize)
-        .ok_or_else(|| anyhow!("manifest: missing/invalid '{key}'"))
+        .ok_or_else(|| err!("manifest: missing/invalid '{key}'"))
 }
 
 fn req_str(j: &Json, key: &str) -> Result<String> {
     j.get(key)
         .and_then(Json::as_str)
         .map(str::to_string)
-        .ok_or_else(|| anyhow!("manifest: missing/invalid '{key}'"))
+        .ok_or_else(|| err!("manifest: missing/invalid '{key}'"))
 }
 
 impl Manifest {
     pub fn parse(text: &str) -> Result<Manifest> {
-        let j = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let j = Json::parse(text).map_err(|e| err!("manifest: {e}"))?;
         let format = req_str(&j, "format")?;
         if format != "hlo-text-v1" {
-            return Err(anyhow!("unsupported manifest format {format:?}"));
+            return Err(err!("unsupported manifest format {format:?}"));
         }
         let mut variants = BTreeMap::new();
         for (name, v) in j
             .get("variants")
             .and_then(Json::as_obj)
-            .ok_or_else(|| anyhow!("manifest: missing 'variants'"))?
+            .ok_or_else(|| err!("manifest: missing 'variants'"))?
         {
             let mut layers = Vec::new();
             for l in v
                 .get("layers")
                 .and_then(Json::as_arr)
-                .ok_or_else(|| anyhow!("variant {name}: missing 'layers'"))?
+                .ok_or_else(|| err!("variant {name}: missing 'layers'"))?
             {
                 layers.push(LayerEntry {
                     name: req_str(l, "name")?,
@@ -98,9 +101,9 @@ impl Manifest {
             let fc = v
                 .get("fc")
                 .and_then(Json::as_arr)
-                .ok_or_else(|| anyhow!("variant {name}: missing 'fc'"))?
+                .ok_or_else(|| err!("variant {name}: missing 'fc'"))?
                 .iter()
-                .map(|x| x.as_usize().ok_or_else(|| anyhow!("bad fc width")))
+                .map(|x| x.as_usize().ok_or_else(|| err!("bad fc width")))
                 .collect::<Result<Vec<_>>>()?;
             variants.insert(
                 name.clone(),
@@ -116,7 +119,7 @@ impl Manifest {
         for (file, e) in j
             .get("executables")
             .and_then(Json::as_obj)
-            .ok_or_else(|| anyhow!("manifest: missing 'executables'"))?
+            .ok_or_else(|| err!("manifest: missing 'executables'"))?
         {
             executables.insert(
                 file.clone(),
@@ -147,7 +150,7 @@ impl Manifest {
     /// matching shape, and tile geometry is self-consistent.
     pub fn validate(&self) -> Result<()> {
         if self.tile + self.kernel_k - 1 != self.fft_size {
-            return Err(anyhow!(
+            return Err(err!(
                 "tile {} + k {} - 1 != K {}",
                 self.tile,
                 self.kernel_k,
@@ -159,9 +162,9 @@ impl Manifest {
                 let e = self
                     .executables
                     .get(&l.file)
-                    .ok_or_else(|| anyhow!("{name}/{}: file {} unregistered", l.name, l.file))?;
+                    .ok_or_else(|| err!("{name}/{}: file {} unregistered", l.name, l.file))?;
                 if e.tiles != l.tiles || e.cin != l.cin || e.cout != l.cout {
-                    return Err(anyhow!(
+                    return Err(err!(
                         "{name}/{}: shape mismatch with executable {}",
                         l.name,
                         l.file
@@ -169,7 +172,7 @@ impl Manifest {
                 }
                 let side = l.h.div_ceil(self.tile);
                 if side * side != l.tiles {
-                    return Err(anyhow!(
+                    return Err(err!(
                         "{name}/{}: tiles {} != ceil({}/{})²",
                         l.name,
                         l.tiles,
@@ -184,11 +187,75 @@ impl Manifest {
 
     pub fn variant(&self, name: &str) -> Result<&VariantEntry> {
         self.variants.get(name).ok_or_else(|| {
-            anyhow!(
+            err!(
                 "variant {name:?} not in manifest (have: {:?})",
                 self.variants.keys().collect::<Vec<_>>()
             )
         })
+    }
+
+    /// Dedup key for one executable shape (mirrors `aot.py`'s naming).
+    pub fn shape_key(tiles: usize, cin: usize, cout: usize, fft: usize) -> String {
+        format!("conv_t{tiles}_m{cin}_n{cout}_k{fft}.hlo.txt")
+    }
+
+    /// Synthesize the manifest from the built-in [`Network`] presets.
+    ///
+    /// Used when `artifacts/manifest.json` is absent: the `interp` backend
+    /// executes shapes directly, so no HLO files are needed — only the
+    /// variant/executable geometry that `aot.py` would have written. The
+    /// synthesized manifest carries the same variants (`demo`,
+    /// `vgg16-cifar`, `vgg16-224`) at the paper's K=8/k=3/h'=6 point.
+    pub fn builtin() -> Manifest {
+        let (fft, k) = (8usize, 3usize);
+        let tile = fft - k + 1;
+        let mut variants = BTreeMap::new();
+        let mut executables = BTreeMap::new();
+        for net in [Network::demo(), Network::vgg16_cifar(), Network::vgg16_224()] {
+            let mut layers = Vec::new();
+            for conv in &net.convs {
+                debug_assert_eq!(conv.fft, fft, "builtin manifest is K=8 only");
+                let tiles = conv.num_tiles();
+                let file = Self::shape_key(tiles, conv.cin, conv.cout, fft);
+                executables.entry(file.clone()).or_insert(ExecutableEntry {
+                    tiles,
+                    cin: conv.cin,
+                    cout: conv.cout,
+                    fft_size: fft,
+                    sha256: "builtin".to_string(),
+                    bytes: 0,
+                });
+                layers.push(LayerEntry {
+                    name: conv.name.clone(),
+                    cin: conv.cin,
+                    cout: conv.cout,
+                    h: conv.h,
+                    tiles,
+                    pool_after: conv.pool_after,
+                    file,
+                });
+            }
+            variants.insert(
+                net.name.clone(),
+                VariantEntry {
+                    input_hw: net.input_hw,
+                    input_c: net.input_c,
+                    fc: net.fc.clone(),
+                    layers,
+                },
+            );
+        }
+        let m = Manifest {
+            fft_size: fft,
+            kernel_k: k,
+            tile,
+            word_bytes: 2,
+            hadamard_mode: "interp".to_string(),
+            variants,
+            executables,
+        };
+        debug_assert!(m.validate().is_ok());
+        m
     }
 }
 
@@ -244,6 +311,29 @@ mod tests {
     fn rejects_bad_format() {
         let bad = sample().replace("hlo-text-v1", "hlo-proto-v0");
         assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn builtin_manifest_is_valid_and_complete() {
+        let m = Manifest::builtin();
+        m.validate().unwrap();
+        assert_eq!(m.fft_size, 8);
+        assert_eq!(m.kernel_k, 3);
+        assert_eq!(m.tile, 6);
+        for v in ["demo", "vgg16-cifar", "vgg16-224"] {
+            assert!(m.variants.contains_key(v), "missing variant {v}");
+        }
+        assert_eq!(m.variant("demo").unwrap().layers.len(), 2);
+        assert_eq!(m.variant("vgg16-224").unwrap().layers.len(), 13);
+        // demo has exactly two distinct executable shapes
+        let demo_files: std::collections::BTreeSet<_> = m
+            .variant("demo")
+            .unwrap()
+            .layers
+            .iter()
+            .map(|l| l.file.clone())
+            .collect();
+        assert_eq!(demo_files.len(), 2);
     }
 
     #[test]

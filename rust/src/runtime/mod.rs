@@ -1,36 +1,94 @@
-//! PJRT runtime: load AOT-compiled HLO artifacts and execute them.
+//! Runtime layer: spectral-conv execution behind the [`SpectralBackend`]
+//! trait.
 //!
-//! Wraps the `xla` crate (`PjRtClient::cpu()` → `HloModuleProto::
-//! from_text_file` → `compile` → `execute`) following
-//! /opt/xla-example/load_hlo. One compiled executable per layer *shape*
-//! (the manifest's dedup keys); compilation happens once at engine startup
-//! and executables are cached for the life of the process — Python never
-//! runs on this path.
+//! The coordinator drives one *executable* per layer shape (the manifest's
+//! dedup keys). Two backends implement that contract:
+//!
+//! * [`interp`] (default, pure Rust, zero deps) — executes the spectral
+//!   pipeline directly: tile FFT → frequency-major MAC against the uploaded
+//!   kernel planes → IFFT. Works with the synthesized built-in manifest, so
+//!   the whole serving stack runs offline with no artifacts at all.
+//! * `pjrt` (behind the off-by-default `pjrt` cargo feature) — loads
+//!   AOT-compiled HLO artifacts (`make artifacts`) and executes them through
+//!   the `xla` crate (`PjRtClient::cpu()` → `HloModuleProto::from_text_file`
+//!   → `compile` → `execute`). Compilation happens once per shape at engine
+//!   startup; weights are uploaded once as device buffers. The `xla` crate
+//!   is not in the offline registry — see README.md "Backends" for how to
+//!   enable it.
+//!
+//! Both backends consume the same host-side weight layout
+//! ([`freq_major_planes`]) and the same manifest schema ([`Manifest`]),
+//! so the engine, server, examples and tests are backend-agnostic.
 
+mod interp;
 mod manifest;
+#[cfg(feature = "pjrt")]
+mod pjrt;
 
-pub use manifest::{LayerEntry, Manifest, VariantEntry};
+pub use interp::InterpBackend;
+pub use manifest::{ExecutableEntry, LayerEntry, Manifest, VariantEntry};
 
-use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, Context, Result};
-
+use crate::err;
 use crate::tensor::{ComplexTensor, Tensor};
+use crate::util::error::{Context, Result};
 
-/// A compiled spectral-conv executable for one (T, Cin, Cout, K) shape.
-pub struct ConvExecutable {
-    exe: xla::PjRtLoadedExecutable,
-    pub tiles: usize,
-    pub cin: usize,
-    pub cout: usize,
-    pub fft: usize,
+/// Handle to one layer's uploaded weight planes (backend-owned storage).
+pub type WeightId = usize;
+
+/// The spectral-conv execution contract.
+///
+/// An implementation owns per-shape executable state (keyed by manifest
+/// file name) and per-layer weight uploads; the engine talks to it only in
+/// terms of spatial tile tensors and frequency-major weight planes.
+pub trait SpectralBackend {
+    /// Human-readable backend/platform name (e.g. `"interp"`, `"cpu"`).
+    fn name(&self) -> String;
+
+    /// Register (and for PJRT: compile) the executable for one shape.
+    /// Idempotent — re-preparing a known `file` is a no-op.
+    fn prepare(&mut self, file: &str, meta: &ExecutableEntry, artifacts_dir: &Path)
+        -> Result<()>;
+
+    /// Upload frequency-major weight planes (layout of
+    /// [`freq_major_planes`]: `[K², M, N]` re/im) and return a handle.
+    fn upload_weights(&mut self, re: &[f32], im: &[f32], dims: [usize; 3]) -> Result<WeightId>;
+
+    /// Execute one spectral conv: spatial input tiles `[T, Cin, K, K]` →
+    /// spatial output tiles `[T, Cout, K, K]`, against weights `wid`.
+    fn run_conv(&mut self, file: &str, tiles: &Tensor, wid: WeightId) -> Result<Tensor>;
+
+    /// Number of distinct prepared executables (cache size).
+    fn prepared(&self) -> usize;
+}
+
+/// Backend selector (serving config / CLI surface).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendKind {
+    /// Pure-Rust interpreter (offline default).
+    #[default]
+    Interp,
+    /// AOT-compiled XLA executables via PJRT (needs the `pjrt` feature and
+    /// `make artifacts`).
+    #[cfg(feature = "pjrt")]
+    Pjrt,
+}
+
+impl BackendKind {
+    fn create(self) -> Result<Box<dyn SpectralBackend>> {
+        match self {
+            BackendKind::Interp => Ok(Box::new(InterpBackend::new())),
+            #[cfg(feature = "pjrt")]
+            BackendKind::Pjrt => Ok(Box::new(pjrt::PjrtBackend::new()?)),
+        }
+    }
 }
 
 /// Host-side layout conversion: spectral kernel planes `[N, M, K, K]` →
-/// frequency-major `[F, M, N]` (re, im) — the executable's weight layout.
-/// Computed once per engine startup (§Perf L2: doing this transpose inside
-/// the graph cost ~120 ms per request on 512×512 layers).
+/// frequency-major `[F, M, N]` (re, im) with `F = K²` — the backends'
+/// weight layout. Computed once per engine startup (§Perf L2: doing this
+/// transpose inside the graph cost ~120 ms per request on 512×512 layers).
 pub fn freq_major_planes(kernels: &ComplexTensor) -> (Vec<f32>, Vec<f32>) {
     let shape = kernels.shape();
     let (n, m, k) = (shape[0], shape[1], shape[2]);
@@ -51,131 +109,78 @@ pub fn freq_major_planes(kernels: &ComplexTensor) -> (Vec<f32>, Vec<f32>) {
     (re, im)
 }
 
-impl ConvExecutable {
-    /// One-shot execution: spatial input tiles `[T, Cin, K, K]` + spectral
-    /// kernel planes `[Cout, Cin, K, K]` → spatial output tiles
-    /// `[T, Cout, K, K]`. Converts the kernel layout per call; the serving
-    /// hot path uses [`Self::run_buffers`] with pre-uploaded weights.
-    pub fn run(&self, tiles: &Tensor, kernels: &ComplexTensor) -> Result<Tensor> {
-        let k = self.fft;
-        let want_in = [self.tiles, self.cin, k, k];
-        let want_w = [self.cout, self.cin, k, k];
-        if tiles.shape() != want_in {
-            return Err(anyhow!(
-                "input tiles shape {:?} != executable shape {:?}",
-                tiles.shape(),
-                want_in
-            ));
+/// Inverse of [`freq_major_planes`]: frequency-major `[F, M, N]` re/im →
+/// spectral kernel planes `[N, M, K, K]` (`F` must equal `K²`).
+pub fn planes_from_freq_major(re: &[f32], im: &[f32], n: usize, m: usize, fft: usize)
+    -> ComplexTensor {
+    let f = fft * fft;
+    assert_eq!(re.len(), f * m * n, "freq-major length mismatch");
+    assert_eq!(im.len(), f * m * n, "freq-major length mismatch");
+    let mut out = ComplexTensor::zeros(&[n, m, fft, fft]);
+    let (or, oi) = (out.re.data_mut(), out.im.data_mut());
+    for ni in 0..n {
+        for mi in 0..m {
+            let dst = (ni * m + mi) * f;
+            for fi in 0..f {
+                let src = (fi * m + mi) * n + ni;
+                or[dst + fi] = re[src];
+                oi[dst + fi] = im[src];
+            }
         }
-        if kernels.shape() != want_w {
-            return Err(anyhow!(
-                "kernel shape {:?} != executable shape {:?}",
-                kernels.shape(),
-                want_w
-            ));
-        }
-        let dims: Vec<i64> = want_in.iter().map(|&d| d as i64).collect();
-        let wdims = [(k * k) as i64, self.cin as i64, self.cout as i64];
-        let (wre, wim) = freq_major_planes(kernels);
-        let lit_tiles = xla::Literal::vec1(tiles.data()).reshape(&dims)?;
-        let lit_wre = xla::Literal::vec1(&wre).reshape(&wdims)?;
-        let lit_wim = xla::Literal::vec1(&wim).reshape(&wdims)?;
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&[lit_tiles, lit_wre, lit_wim])?[0][0]
-            .to_literal_sync()?;
-        self.unpack(result)
     }
-
-    /// Hot-path execution with pre-uploaded device buffers (§Perf: the
-    /// per-call `Literal` conversion of a 512×512×8×8 kernel plane pair
-    /// costs ~0.5 s; weights are static, so the engine uploads them once
-    /// and re-uses the `PjRtBuffer`s — see EXPERIMENTS.md §Perf L3).
-    pub fn run_buffers(
-        &self,
-        tiles: &xla::PjRtBuffer,
-        w_re: &xla::PjRtBuffer,
-        w_im: &xla::PjRtBuffer,
-    ) -> Result<Tensor> {
-        let result = self
-            .exe
-            .execute_b::<&xla::PjRtBuffer>(&[tiles, w_re, w_im])?[0][0]
-            .to_literal_sync()?;
-        self.unpack(result)
-    }
-
-    fn unpack(&self, result: xla::Literal) -> Result<Tensor> {
-        // aot.py lowers with return_tuple=True → unwrap the 1-tuple.
-        let out = result.to_tuple1()?;
-        let data = out.to_vec::<f32>()?;
-        let k = self.fft;
-        Ok(Tensor::from_vec(&[self.tiles, self.cout, k, k], data))
-    }
+    out
 }
 
-/// The PJRT runtime: client + executable cache + manifest.
+/// The runtime: a backend + the manifest describing the model variants.
+///
+/// When `artifacts/manifest.json` exists it is parsed and validated;
+/// otherwise the built-in synthesized manifest ([`Manifest::builtin`]) is
+/// used, which is exactly what the `interp` backend needs to run offline.
 pub struct Runtime {
-    client: xla::PjRtClient,
+    backend: Box<dyn SpectralBackend>,
     artifacts_dir: PathBuf,
     pub manifest: Manifest,
-    cache: HashMap<String, ConvExecutable>,
 }
 
 impl Runtime {
-    /// Open `artifacts/` (produced by `make artifacts`).
+    /// Open with the default backend ([`BackendKind::Interp`]).
     pub fn open(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        Self::open_with(artifacts_dir, BackendKind::default())
+    }
+
+    /// Open `artifacts/` with an explicit backend.
+    pub fn open_with(artifacts_dir: impl AsRef<Path>, kind: BackendKind) -> Result<Self> {
         let dir = artifacts_dir.as_ref().to_path_buf();
         let manifest_path = dir.join("manifest.json");
-        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
-            format!(
-                "reading {} — run `make artifacts` first",
-                manifest_path.display()
-            )
-        })?;
-        let manifest = Manifest::parse(&text)?;
-        let client = xla::PjRtClient::cpu()?;
-        Ok(Runtime { client, artifacts_dir: dir, manifest, cache: HashMap::new() })
+        let manifest = if manifest_path.exists() {
+            let text = std::fs::read_to_string(&manifest_path)
+                .with_context(|| format!("reading {}", manifest_path.display()))?;
+            Manifest::parse(&text)?
+        } else {
+            Manifest::builtin()
+        };
+        let backend = kind.create()?;
+        Ok(Runtime { backend, artifacts_dir: dir, manifest })
     }
 
+    /// Backend/platform name.
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        self.backend.name()
     }
 
-    /// Upload an f32 host array to a device buffer (weights are uploaded
-    /// once at engine startup and reused every request).
-    pub fn upload(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
-        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    /// Prepare (compile/register) the executable for one manifest file.
+    pub fn prepare(&mut self, file: &str) -> Result<()> {
+        let meta = self
+            .manifest
+            .executables
+            .get(file)
+            .ok_or_else(|| err!("{file} not in manifest"))?
+            .clone();
+        self.backend.prepare(file, &meta, &self.artifacts_dir)
     }
 
-    /// Compile (or fetch from cache) the executable for an artifact file.
-    pub fn conv_executable(&mut self, file: &str) -> Result<&ConvExecutable> {
-        if !self.cache.contains_key(file) {
-            let meta = self
-                .manifest
-                .executables
-                .get(file)
-                .ok_or_else(|| anyhow!("{file} not in manifest"))?;
-            let path = self.artifacts_dir.join(file);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-            )?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self.client.compile(&comp)?;
-            self.cache.insert(
-                file.to_string(),
-                ConvExecutable {
-                    exe,
-                    tiles: meta.tiles,
-                    cin: meta.cin,
-                    cout: meta.cout,
-                    fft: meta.fft_size,
-                },
-            );
-        }
-        Ok(&self.cache[file])
-    }
-
-    /// Pre-compile all executables of a variant (startup warm-up).
+    /// Pre-prepare all executables of a variant (startup warm-up); returns
+    /// the number of layer entries processed.
     pub fn warm_variant(&mut self, variant: &str) -> Result<usize> {
         let files: Vec<String> = self
             .manifest
@@ -184,15 +189,89 @@ impl Runtime {
             .iter()
             .map(|l| l.file.clone())
             .collect();
-        let mut compiled = 0;
-        for f in files {
-            self.conv_executable(&f)?;
-            compiled += 1;
+        let mut processed = 0;
+        for f in &files {
+            self.prepare(f)?;
+            processed += 1;
         }
-        Ok(compiled)
+        Ok(processed)
     }
 
+    /// Upload one layer's frequency-major weight planes.
+    pub fn upload_weights(&mut self, re: &[f32], im: &[f32], dims: [usize; 3])
+        -> Result<WeightId> {
+        self.backend.upload_weights(re, im, dims)
+    }
+
+    /// Execute one spectral conv through the backend.
+    pub fn run_conv(&mut self, file: &str, tiles: &Tensor, wid: WeightId) -> Result<Tensor> {
+        self.backend.run_conv(file, tiles, wid)
+    }
+
+    /// Distinct prepared executables (cache size).
     pub fn cached_executables(&self) -> usize {
-        self.cache.len()
+        self.backend.prepared()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::forall;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn open_without_artifacts_synthesizes_manifest() {
+        let rt = Runtime::open("definitely-not-a-dir").unwrap();
+        assert_eq!(rt.platform(), "interp");
+        assert_eq!(rt.manifest.fft_size, 8);
+        assert!(rt.manifest.variants.contains_key("demo"));
+    }
+
+    #[test]
+    fn warm_variant_counts_and_caches() {
+        let mut rt = Runtime::open("definitely-not-a-dir").unwrap();
+        assert_eq!(rt.warm_variant("demo").unwrap(), 2);
+        assert_eq!(rt.cached_executables(), 2);
+        // idempotent: re-warming neither fails nor regrows the cache
+        assert_eq!(rt.warm_variant("demo").unwrap(), 2);
+        assert_eq!(rt.cached_executables(), 2);
+    }
+
+    #[test]
+    fn unknown_file_rejected() {
+        let mut rt = Runtime::open("definitely-not-a-dir").unwrap();
+        assert!(rt.prepare("nope.hlo.txt").is_err());
+    }
+
+    #[test]
+    fn freq_major_roundtrip() {
+        forall("freq-major transpose inverse", 25, |rng| {
+            let n = rng.range(1, 6);
+            let m = rng.range(1, 6);
+            let fft = [4usize, 8][rng.range(0, 2)];
+            let mut planes = ComplexTensor::zeros(&[n, m, fft, fft]);
+            for v in planes.re.data_mut() {
+                *v = rng.normal();
+            }
+            for v in planes.im.data_mut() {
+                *v = rng.normal();
+            }
+            let (re, im) = freq_major_planes(&planes);
+            let back = planes_from_freq_major(&re, &im, n, m, fft);
+            assert_eq!(planes, back);
+        });
+    }
+
+    #[test]
+    fn freq_major_layout_spot_check() {
+        // [N=1, M=1]: freq-major must equal the flat plane itself.
+        let mut rng = Pcg32::new(3);
+        let mut planes = ComplexTensor::zeros(&[1, 1, 4, 4]);
+        for v in planes.re.data_mut() {
+            *v = rng.normal();
+        }
+        let (re, _) = freq_major_planes(&planes);
+        assert_eq!(re, planes.re.data());
     }
 }

@@ -1,0 +1,124 @@
+//! PJRT backend (behind the `pjrt` cargo feature): load AOT-compiled HLO
+//! artifacts and execute them through the `xla` crate.
+//!
+//! Wraps `PjRtClient::cpu()` → `HloModuleProto::from_text_file` → `compile`
+//! → `execute`. One compiled executable per layer *shape* (the manifest's
+//! dedup keys); compilation happens once at engine startup and executables
+//! are cached for the life of the process — Python never runs on this path.
+//! Weights are uploaded once as device buffers (§Perf L3: the per-call
+//! `Literal` conversion of a 512×512×8×8 kernel plane pair costs ~0.5 s).
+//!
+//! NOTE: the `xla` crate is not in the offline registry. Building with
+//! `--features pjrt` requires adding the dependency to `rust/Cargo.toml`
+//! (see README.md "Backends").
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::err;
+use crate::tensor::Tensor;
+use crate::util::error::Result;
+
+use super::{ExecutableEntry, SpectralBackend, WeightId};
+
+/// A compiled spectral-conv executable for one (T, Cin, Cout, K) shape.
+struct ConvExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    tiles: usize,
+    cin: usize,
+    cout: usize,
+    fft: usize,
+}
+
+/// The PJRT backend: client + executable cache + uploaded weight buffers.
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+    cache: HashMap<String, ConvExecutable>,
+    weights: Vec<(xla::PjRtBuffer, xla::PjRtBuffer)>,
+}
+
+impl PjrtBackend {
+    pub fn new() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| err!("PjRtClient::cpu: {e:?}"))?;
+        Ok(PjrtBackend { client, cache: HashMap::new(), weights: Vec::new() })
+    }
+
+    fn upload(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| err!("buffer upload: {e:?}"))
+    }
+}
+
+impl SpectralBackend for PjrtBackend {
+    fn name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn prepare(&mut self, file: &str, meta: &ExecutableEntry, artifacts_dir: &Path)
+        -> Result<()> {
+        if self.cache.contains_key(file) {
+            return Ok(());
+        }
+        let path = artifacts_dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| err!("non-utf8 path"))?,
+        )
+        .map_err(|e| err!("loading {}: {e:?} — run `make artifacts` first", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(|e| err!("compiling {file}: {e:?}"))?;
+        self.cache.insert(
+            file.to_string(),
+            ConvExecutable {
+                exe,
+                tiles: meta.tiles,
+                cin: meta.cin,
+                cout: meta.cout,
+                fft: meta.fft_size,
+            },
+        );
+        Ok(())
+    }
+
+    fn upload_weights(&mut self, re: &[f32], im: &[f32], dims: [usize; 3]) -> Result<WeightId> {
+        let w_re = self.upload(re, &dims)?;
+        let w_im = self.upload(im, &dims)?;
+        self.weights.push((w_re, w_im));
+        Ok(self.weights.len() - 1)
+    }
+
+    fn run_conv(&mut self, file: &str, tiles: &Tensor, wid: WeightId) -> Result<Tensor> {
+        let exe = self
+            .cache
+            .get(file)
+            .ok_or_else(|| err!("{file} not prepared (warm the variant first)"))?;
+        let (t, m, n, k) = (exe.tiles, exe.cin, exe.cout, exe.fft);
+        let want_in = [t, m, k, k];
+        if tiles.shape() != want_in {
+            return Err(err!(
+                "input tiles shape {:?} != executable shape {:?}",
+                tiles.shape(),
+                want_in
+            ));
+        }
+        let tiles_buf = self.upload(tiles.data(), &want_in)?;
+        let (w_re, w_im) = self
+            .weights
+            .get(wid)
+            .ok_or_else(|| err!("weight handle {wid} unknown"))?;
+        let result = exe
+            .exe
+            .execute_b::<&xla::PjRtBuffer>(&[&tiles_buf, w_re, w_im])
+            .map_err(|e| err!("execute {file}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| err!("readback {file}: {e:?}"))?;
+        // aot.py lowers with return_tuple=True → unwrap the 1-tuple.
+        let out = result.to_tuple1().map_err(|e| err!("untuple {file}: {e:?}"))?;
+        let data = out.to_vec::<f32>().map_err(|e| err!("to_vec {file}: {e:?}"))?;
+        Ok(Tensor::from_vec(&[t, n, k, k], data))
+    }
+
+    fn prepared(&self) -> usize {
+        self.cache.len()
+    }
+}

@@ -2,8 +2,7 @@
 //!
 //! Usage pattern throughout the test suite:
 //!
-//! ```no_run
-//! // (no_run: doctest executables don't get the xla rpath linker flags)
+//! ```
 //! use spectral_flow::util::check::forall;
 //! forall("sum is commutative", 200, |rng| {
 //!     let a = rng.below(1000) as u64;

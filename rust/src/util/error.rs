@@ -1,0 +1,163 @@
+//! Minimal error type (offline substitute for `anyhow`).
+//!
+//! The offline-core path (interp backend, manifest parsing, the coordinator
+//! server) needs nothing fancier than a string-carrying error that threads
+//! through `?`, crosses channels (`Send`), and prints well from `main`. The
+//! [`err!`] macro mirrors `anyhow!`, and the [`Context`] trait mirrors the
+//! `.context(..)` / `.with_context(..)` combinators on both `Result` and
+//! `Option`.
+//!
+//! ```
+//! use spectral_flow::err;
+//! use spectral_flow::util::error::{Context, Result};
+//!
+//! fn parse(s: &str) -> Result<usize> {
+//!     s.parse::<usize>()
+//!         .map_err(|e| err!("bad count {s:?}: {e}"))?
+//!         .checked_mul(2)
+//!         .context("count overflows")
+//! }
+//! assert!(parse("21").is_ok());
+//! assert!(parse("x").is_err());
+//! ```
+
+use std::fmt;
+
+/// A string-carrying error. Construct with [`Error::msg`] or the [`err!`]
+/// macro (`crate::err!` / `spectral_flow::err!`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg(m: impl Into<String>) -> Self {
+        Error { msg: m.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<String> for Error {
+    fn from(s: String) -> Self {
+        Error { msg: s }
+    }
+}
+
+impl From<&str> for Error {
+    fn from(s: &str) -> Self {
+        Error { msg: s.to_string() }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error { msg: e.to_string() }
+    }
+}
+
+impl From<std::sync::mpsc::RecvError> for Error {
+    fn from(_: std::sync::mpsc::RecvError) -> Self {
+        Error { msg: "channel sender dropped".to_string() }
+    }
+}
+
+impl From<crate::util::json::JsonError> for Error {
+    fn from(e: crate::util::json::JsonError) -> Self {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// Crate-wide result alias (the `E` default lets signatures stay short).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `anyhow::Context`-style combinators for `Result` and `Option`.
+pub trait Context<T> {
+    /// Replace/augment the error with a fixed message.
+    fn context(self, msg: impl Into<String>) -> Result<T>;
+    /// Replace/augment the error with a lazily built message.
+    fn with_context<F: FnOnce() -> String>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, msg: impl Into<String>) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", msg.into())))
+    }
+
+    fn with_context<F: FnOnce() -> String>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, msg: impl Into<String>) -> Result<T> {
+        self.ok_or_else(|| Error::msg(msg.into()))
+    }
+
+    fn with_context<F: FnOnce() -> String>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// `anyhow!`-style formatted error constructor.
+///
+/// Exported at the crate root (`use spectral_flow::err;`).
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn displays_message() {
+        let e = Error::msg("boom");
+        assert_eq!(e.to_string(), "boom");
+        assert_eq!(format!("{e}"), "boom");
+    }
+
+    #[test]
+    fn macro_formats() {
+        let e = crate::err!("bad shape {:?} at layer {}", [1, 2], "conv1");
+        assert!(e.to_string().contains("[1, 2]"));
+        assert!(e.to_string().contains("conv1"));
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::fmt::Error> = Err(std::fmt::Error);
+        let e = r.context("while rendering").unwrap_err();
+        assert!(e.to_string().starts_with("while rendering: "));
+
+        let o: Option<u8> = None;
+        assert_eq!(o.context("missing").unwrap_err().to_string(), "missing");
+        let o2: Option<u8> = Some(3);
+        assert_eq!(o2.with_context(|| "unused".into()).unwrap(), 3);
+    }
+
+    #[test]
+    fn converts_io_and_json_errors() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert!(e.to_string().contains("gone"));
+        let je = crate::util::json::Json::parse("{").unwrap_err();
+        let e2: Error = je.into();
+        assert!(e2.to_string().contains("json error"));
+    }
+
+    #[test]
+    fn error_is_send_and_static() {
+        fn assert_send<T: Send + 'static>() {}
+        assert_send::<Error>();
+    }
+}

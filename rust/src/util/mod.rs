@@ -8,6 +8,8 @@
 //! * [`rng`] — SplitMix64 + PCG32, uniform/normal/shuffle (replaces `rand`).
 //! * [`json`] — minimal JSON parse/serialize for `artifacts/manifest.json`
 //!   and report emission (replaces `serde_json`).
+//! * [`error`] — string-carrying `Error`/`Result` + `err!` macro + `Context`
+//!   combinators (replaces `anyhow` on the offline-core path).
 //! * [`bench`] — warmup/iteration timing harness with percentiles
 //!   (replaces `criterion`; used by all `cargo bench` targets).
 //! * [`check`] — mini property-testing: seeded generators + `forall` with
@@ -18,5 +20,6 @@
 pub mod bench;
 pub mod check;
 pub mod cli;
+pub mod error;
 pub mod json;
 pub mod rng;

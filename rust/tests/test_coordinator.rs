@@ -1,6 +1,6 @@
 //! Integration: the serving coordinator — batching server over the demo
-//! variant, plus pure-logic batcher/metrics properties that need no
-//! artifacts.
+//! variant on the offline `interp` backend (no artifacts needed), plus
+//! pure-logic batcher/metrics properties.
 
 use std::time::Duration;
 
@@ -11,15 +11,6 @@ use spectral_flow::tensor::Tensor;
 use spectral_flow::util::check::forall;
 use spectral_flow::util::rng::Pcg32;
 
-fn artifacts_ready() -> bool {
-    let ok = std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/manifest.json"))
-        .exists();
-    if !ok {
-        eprintln!("SKIP: run `make artifacts` to enable server tests");
-    }
-    ok
-}
-
 fn demo_server(max_batch: usize) -> Server {
     Server::start(ServerConfig {
         artifacts_dir: concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").into(),
@@ -27,15 +18,13 @@ fn demo_server(max_batch: usize) -> Server {
         mode: WeightMode::Pruned { alpha: 4 },
         seed: 7,
         batcher: BatcherConfig { max_batch, max_wait: Duration::from_millis(5) },
+        ..ServerConfig::default()
     })
     .expect("server starts")
 }
 
 #[test]
 fn serves_concurrent_clients() {
-    if !artifacts_ready() {
-        return;
-    }
     let server = demo_server(4);
     let mut rng = Pcg32::new(1);
     // submit 12 requests from 3 cloned clients via async handles
@@ -60,9 +49,6 @@ fn serves_concurrent_clients() {
 
 #[test]
 fn same_image_same_logits_through_server() {
-    if !artifacts_ready() {
-        return;
-    }
     let server = demo_server(2);
     let client = server.client();
     let mut rng = Pcg32::new(2);
@@ -75,9 +61,6 @@ fn same_image_same_logits_through_server() {
 
 #[test]
 fn bad_input_errors_do_not_kill_server() {
-    if !artifacts_ready() {
-        return;
-    }
     let server = demo_server(1);
     let client = server.client();
     let bad = Tensor::zeros(&[3, 16, 16]); // wrong channel count
@@ -87,6 +70,15 @@ fn bad_input_errors_do_not_kill_server() {
     let good = Tensor::randn(&[1, 16, 16], &mut rng, 1.0);
     assert!(client.infer(good).is_ok());
     server.shutdown().unwrap();
+}
+
+#[test]
+fn unknown_variant_fails_startup_with_error() {
+    let r = Server::start(ServerConfig {
+        variant: "no-such-variant".into(),
+        ..ServerConfig::default()
+    });
+    assert!(r.is_err(), "startup must surface engine construction errors");
 }
 
 // ---------- pure-logic properties (no artifacts needed) -------------------

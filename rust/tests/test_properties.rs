@@ -1,0 +1,176 @@
+//! Property tests for the numeric contracts the backend refactor leans on
+//! (via `util::check::forall`):
+//!
+//! * the radix-2 FFT agrees with a naive O(n²) DFT and round-trips
+//!   (`ifft(fft(x)) ≈ x` to 1e-5) at the paper's sizes K ∈ {8, 16};
+//! * `freq_major_planes` ↔ `planes_from_freq_major` is an exact transpose
+//!   inverse;
+//! * the full spectral pipeline through the `interp` backend
+//!   (im2tiles → FFT → frequency-major MAC → IFFT → overlap-add) equals the
+//!   naive spatial convolution on small random layers.
+
+use std::path::Path;
+
+use spectral_flow::fft::{
+    fft1d, fft2d, ifft1d, ifft2d, im2tiles, overlap_add, spectral_kernels, Complex, TileGeometry,
+};
+use spectral_flow::nn::conv2d_same_ref;
+use spectral_flow::runtime::{
+    freq_major_planes, planes_from_freq_major, ExecutableEntry, InterpBackend, SpectralBackend,
+};
+use spectral_flow::tensor::{ComplexTensor, Tensor};
+use spectral_flow::util::check::{assert_allclose, forall};
+use spectral_flow::util::rng::Pcg32;
+
+// ---------------- FFT: naive-DFT cross-check + round-trip ------------------
+
+/// O(n²) reference DFT, accumulated in f64 with exact wrapped angles.
+fn dft1d(x: &[Complex]) -> Vec<Complex> {
+    let n = x.len();
+    (0..n)
+        .map(|k| {
+            let (mut re, mut im) = (0.0f64, 0.0f64);
+            for (j, c) in x.iter().enumerate() {
+                let ang = -2.0 * std::f64::consts::PI * ((j * k) % n) as f64 / n as f64;
+                let (s, cs) = ang.sin_cos();
+                re += c.re as f64 * cs - c.im as f64 * s;
+                im += c.re as f64 * s + c.im as f64 * cs;
+            }
+            Complex::new(re as f32, im as f32)
+        })
+        .collect()
+}
+
+fn randc(rng: &mut Pcg32, n: usize) -> Vec<Complex> {
+    (0..n).map(|_| Complex::new(rng.normal(), rng.normal())).collect()
+}
+
+fn split(v: &[Complex]) -> (Vec<f32>, Vec<f32>) {
+    (v.iter().map(|c| c.re).collect(), v.iter().map(|c| c.im).collect())
+}
+
+#[test]
+fn fft_matches_naive_dft_k8_k16() {
+    forall("fft == naive dft", 40, |rng| {
+        for k in [8usize, 16] {
+            let x = randc(rng, k);
+            let (gr, gi) = split(&fft1d(&x));
+            let (wr, wi) = split(&dft1d(&x));
+            assert_allclose(&gr, &wr, 1e-5, 1e-4);
+            assert_allclose(&gi, &wi, 1e-5, 1e-4);
+        }
+    });
+}
+
+#[test]
+fn fft_roundtrip_1e5_k8_k16() {
+    // The satellite contract: ifft(fft(x)) ≈ x to 1e-5 for K ∈ {8, 16}.
+    forall("fft roundtrip 1e-5", 60, |rng| {
+        for k in [8usize, 16] {
+            let x = randc(rng, k);
+            let y = ifft1d(&fft1d(&x));
+            let (gr, gi) = split(&y);
+            let (wr, wi) = split(&x);
+            assert_allclose(&gr, &wr, 1e-5, 1e-5);
+            assert_allclose(&gi, &wi, 1e-5, 1e-5);
+        }
+    });
+}
+
+#[test]
+fn fft2d_roundtrip_1e5_k8_k16() {
+    forall("fft2d roundtrip 1e-5", 30, |rng| {
+        for k in [8usize, 16] {
+            let p = randc(rng, k * k);
+            let q = ifft2d(&fft2d(&p, k), k);
+            let (gr, gi) = split(&q);
+            let (wr, wi) = split(&p);
+            assert_allclose(&gr, &wr, 1e-5, 1e-5);
+            assert_allclose(&gi, &wi, 1e-5, 1e-5);
+        }
+    });
+}
+
+// ---------------- freq-major layout: transpose inverse ---------------------
+
+#[test]
+fn freq_major_planes_transpose_inverse() {
+    forall("freq-major inverse", 30, |rng| {
+        let n = rng.range(1, 7);
+        let m = rng.range(1, 7);
+        let fft = [4usize, 8, 16][rng.range(0, 3)];
+        let mut planes = ComplexTensor::zeros(&[n, m, fft, fft]);
+        for v in planes.re.data_mut() {
+            *v = rng.normal();
+        }
+        for v in planes.im.data_mut() {
+            *v = rng.normal();
+        }
+        let (re, im) = freq_major_planes(&planes);
+        assert_eq!(re.len(), fft * fft * m * n);
+        let back = planes_from_freq_major(&re, &im, n, m, fft);
+        assert_eq!(planes, back, "transpose must invert exactly (bit-for-bit)");
+    });
+}
+
+// ---------------- interp backend: spectral == spatial ----------------------
+
+/// Full 'SAME' spectral conv through the interp backend (the engine's exact
+/// per-layer path: im2tiles → backend → overlap_add, minus bias/ReLU).
+fn spectral_conv_via_backend(x: &Tensor, w: &Tensor, fft: usize) -> Tensor {
+    let (m, h) = (x.shape()[0], x.shape()[1]);
+    let (n, k) = (w.shape()[0], w.shape()[2]);
+    let geo = TileGeometry::new(h, fft, k);
+    let tiles = im2tiles(x, &geo);
+    let planes = spectral_kernels(w, fft);
+    let (re, im) = freq_major_planes(&planes);
+    let mut backend = InterpBackend::new();
+    let meta = ExecutableEntry {
+        tiles: geo.num_tiles(),
+        cin: m,
+        cout: n,
+        fft_size: fft,
+        sha256: "test".into(),
+        bytes: 0,
+    };
+    backend.prepare("shape", &meta, Path::new(".")).unwrap();
+    let wid = backend.upload_weights(&re, &im, [fft * fft, m, n]).unwrap();
+    let out_tiles = backend.run_conv("shape", &tiles, wid).unwrap();
+    overlap_add(&out_tiles, &geo, n)
+}
+
+#[test]
+fn interp_backend_equals_spatial_conv() {
+    forall("interp backend == spatial conv", 12, |rng| {
+        let h = rng.range(4, 15);
+        let m = rng.range(1, 4);
+        let n = rng.range(1, 4);
+        let x = Tensor::randn(&[m, h, h], rng, 1.0);
+        let w = Tensor::randn(&[n, m, 3, 3], rng, 0.3);
+        let got = spectral_conv_via_backend(&x, &w, 8);
+        let want = conv2d_same_ref(&x, &w);
+        assert_allclose(got.data(), want.data(), 2e-3, 2e-3);
+    });
+}
+
+#[test]
+fn interp_backend_equals_spatial_conv_k16() {
+    // K=16 geometry (Table 1 lower half): tile h' = 14.
+    let mut rng = Pcg32::new(11);
+    let x = Tensor::randn(&[2, 20, 20], &mut rng, 1.0);
+    let w = Tensor::randn(&[3, 2, 3, 3], &mut rng, 0.2);
+    let got = spectral_conv_via_backend(&x, &w, 16);
+    let want = conv2d_same_ref(&x, &w);
+    assert_allclose(got.data(), want.data(), 2e-3, 2e-3);
+}
+
+#[test]
+fn interp_backend_identity_kernel() {
+    // Delta kernel at center → the whole pipeline is the identity.
+    let mut rng = Pcg32::new(12);
+    let x = Tensor::randn(&[1, 10, 10], &mut rng, 1.0);
+    let mut w = Tensor::zeros(&[1, 1, 3, 3]);
+    w.set(&[0, 0, 1, 1], 1.0);
+    let got = spectral_conv_via_backend(&x, &w, 8);
+    assert!(got.max_abs_diff(&x) < 1e-4, "err {}", got.max_abs_diff(&x));
+}
