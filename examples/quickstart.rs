@@ -11,6 +11,7 @@
 //! ```
 
 use spectral_flow::coordinator::{InferenceEngine, WeightMode};
+use spectral_flow::runtime::BackendKind;
 use spectral_flow::util::check::assert_allclose;
 use spectral_flow::util::error::Result;
 
@@ -38,7 +39,20 @@ fn main() -> Result<()> {
         spectral.max_abs_diff(&spatial)
     );
 
-    // 2. Full forward pass (conv → pool → conv → pool → FC → logits).
+    // 2. Tile-parallel backend: same layer on 2 interp threads must be
+    //    bit-for-bit identical to the serial path (tiles are independent).
+    let mut par = InferenceEngine::new_with(
+        "artifacts",
+        "demo",
+        WeightMode::Dense,
+        42,
+        BackendKind::Interp { threads: 2 },
+    )?;
+    let spectral2 = par.conv_layer(0, &img)?;
+    assert_eq!(spectral.data(), spectral2.data(), "threaded interp diverged");
+    println!("conv1 on 2 backend threads == serial, bit-for-bit ✓");
+
+    // 3. Full forward pass (conv → pool → conv → pool → FC → logits).
     let t1 = std::time::Instant::now();
     let logits = engine.forward(&img)?;
     println!(
@@ -47,7 +61,7 @@ fn main() -> Result<()> {
         logits.iter().map(|v| (v * 100.0).round() / 100.0).collect::<Vec<_>>()
     );
 
-    // 3. Same pass with pruned (α=4) spectral kernels — the paper's regime.
+    // 4. Same pass with pruned (α=4) spectral kernels — the paper's regime.
     let mut pruned =
         InferenceEngine::new("artifacts", "demo", WeightMode::Pruned { alpha: 4 }, 42)?;
     let logits_p = pruned.forward(&img)?;

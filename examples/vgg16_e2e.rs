@@ -17,6 +17,7 @@ use std::time::Instant;
 use spectral_flow::coordinator::{
     BatcherConfig, InferenceEngine, Server, ServerConfig, WeightMode,
 };
+use spectral_flow::runtime::BackendKind;
 use spectral_flow::tensor::Tensor;
 use spectral_flow::util::cli::Args;
 use spectral_flow::util::error::Result;
@@ -27,14 +28,19 @@ fn main() -> Result<()> {
     let requests = args.opt_usize("requests", 24, "number of inference requests");
     let batch = args.opt_usize("batch", 4, "max batch size");
     let variant = args.opt("variant", "vgg16-cifar", "serving variant");
+    let workers = args.opt_usize("workers", 1, "executor workers (one engine each)");
+    let threads = args.opt_usize("backend-threads", 1, "interp per-tile threads per engine");
     let skip_224 = args.opt_bool("skip-224", "skip the single-image 224x224 run");
-    args.maybe_help("vgg16_e2e: batched serving + single-image latency through PJRT");
+    args.maybe_help("vgg16_e2e: batched serving + single-image latency through the backend");
 
     println!("spectral-flow end-to-end driver");
     println!("===============================\n");
 
     // ---- Phase 1: batched serving on the CIFAR-scale VGG16 ---------------
-    println!("[1/2] serving {requests} requests ({variant}, α=4 pruned, batch ≤ {batch})");
+    println!(
+        "[1/2] serving {requests} requests ({variant}, α=4 pruned, batch ≤ {batch}, \
+         {workers} worker(s) × {threads} backend thread(s))"
+    );
     let cfg = ServerConfig {
         artifacts_dir: "artifacts".into(),
         variant: variant.clone(),
@@ -44,7 +50,8 @@ fn main() -> Result<()> {
             max_batch: batch,
             max_wait: std::time::Duration::from_millis(10),
         },
-        ..ServerConfig::default()
+        backend: BackendKind::Interp { threads },
+        workers,
     };
     let t0 = Instant::now();
     let server = Server::start(cfg)?;
@@ -68,9 +75,12 @@ fn main() -> Result<()> {
         ok += 1;
     }
     let wall = t1.elapsed();
-    let m = server.metrics()?;
+    let pm = server.pool_metrics()?;
+    let m = &pm.merged;
     println!("  completed {ok}/{requests} requests in {wall:?}");
-    println!("  {}", m.report());
+    for line in pm.report().lines() {
+        println!("  {line}");
+    }
     println!(
         "  throughput: {:.2} img/s (wall), per-request p50 {:?} / p95 {:?}",
         ok as f64 / wall.as_secs_f64(),

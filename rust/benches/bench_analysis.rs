@@ -89,4 +89,5 @@ fn main() {
         bram_flex(&ls[5], &arch, &s) + transfers_flex(&ls[5], &s).total()
     });
     let _ = b.write_csv("reports/bench_analysis.csv");
+    let _ = b.write_json("reports/BENCH_analysis.json");
 }

@@ -92,4 +92,5 @@ fn main() {
         optimize_network(&net, &cfg).unwrap().bw_max
     });
     let _ = b.write_csv("reports/bench_dataflow.csv");
+    let _ = b.write_json("reports/BENCH_dataflow.json");
 }

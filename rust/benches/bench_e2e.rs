@@ -14,6 +14,7 @@ use std::time::{Duration, Instant};
 use spectral_flow::coordinator::{
     BatcherConfig, InferenceEngine, Server, ServerConfig, WeightMode,
 };
+use spectral_flow::runtime::BackendKind;
 use spectral_flow::tensor::Tensor;
 use spectral_flow::util::bench::{quick_requested, Bench};
 use spectral_flow::util::rng::Pcg32;
@@ -38,37 +39,60 @@ fn main() {
     b.run("e2e/cifar_conv1_1", || cifar.conv_layer(0, &cimg).unwrap().len());
     b.run("e2e/cifar_vgg16_forward", || cifar.forward(&cimg).unwrap().len());
 
-    // ---- serving throughput ----------------------------------------------
-    let server = Server::start(ServerConfig {
-        artifacts_dir: "artifacts".into(),
-        variant: "vgg16-cifar".into(),
-        mode: WeightMode::Pruned { alpha: 4 },
-        seed: 7,
-        batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(5) },
-        ..ServerConfig::default()
-    })
-    .expect("server");
-    let client = server.client();
-    let mut rng = Pcg32::new(5);
-    let n = if quick { 6 } else { 16 };
-    let t0 = Instant::now();
-    let rxs: Vec<_> = (0..n)
-        .map(|_| client.infer_async(Tensor::randn(&[3, 32, 32], &mut rng, 1.0)).unwrap())
-        .collect();
-    for rx in rxs {
-        rx.recv().unwrap().unwrap();
+    // ---- threads sweep: tile-parallel interp backend ---------------------
+    // The acceptance target is ≥2× forward throughput at 4 backend threads
+    // vs 1 on a multi-core runner (tiles are the paper's P' dimension).
+    for threads in [1usize, 2, 4] {
+        let mut e = InferenceEngine::new_with(
+            "artifacts",
+            "vgg16-cifar",
+            WeightMode::Pruned { alpha: 4 },
+            7,
+            BackendKind::Interp { threads },
+        )
+        .expect("cifar engine (threads sweep)");
+        b.run(&format!("e2e/cifar_forward_threads{threads}"), || {
+            e.forward(&cimg).unwrap().len()
+        });
     }
-    let wall = t0.elapsed();
-    b.record("e2e/serve_cifar_batched_per_request", wall, n);
-    let m = server.metrics().expect("metrics");
-    println!(
-        "serving: {n} requests in {wall:?} → {:.2} img/s, p50 {:?}, p95 {:?}, mean batch {:.1}",
-        n as f64 / wall.as_secs_f64(),
-        m.p50().unwrap_or_default(),
-        m.p95().unwrap_or_default(),
-        m.mean_batch_size()
-    );
-    server.shutdown().unwrap();
+
+    // ---- serving throughput: pool-size sweep ------------------------------
+    // One engine per worker; closed batches go to the least-loaded worker.
+    let worker_counts: &[usize] = if quick { &[1, 2] } else { &[1, 2, 4] };
+    for &workers in worker_counts {
+        let server = Server::start(ServerConfig {
+            artifacts_dir: "artifacts".into(),
+            variant: "vgg16-cifar".into(),
+            mode: WeightMode::Pruned { alpha: 4 },
+            seed: 7,
+            batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(5) },
+            workers,
+            ..ServerConfig::default()
+        })
+        .expect("server");
+        let client = server.client();
+        let mut rng = Pcg32::new(5);
+        let n = if quick { 6 } else { 16 };
+        let t0 = Instant::now();
+        let rxs: Vec<_> = (0..n)
+            .map(|_| client.infer_async(Tensor::randn(&[3, 32, 32], &mut rng, 1.0)).unwrap())
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap().unwrap();
+        }
+        let wall = t0.elapsed();
+        b.record(&format!("e2e/serve_cifar_batched_per_request_workers{workers}"), wall, n);
+        let m = server.metrics().expect("metrics");
+        println!(
+            "serving[{workers}w]: {n} requests in {wall:?} → {:.2} img/s, \
+             p50 {:?}, p95 {:?}, mean batch {:.1}",
+            n as f64 / wall.as_secs_f64(),
+            m.p50().unwrap_or_default(),
+            m.p95().unwrap_or_default(),
+            m.mean_batch_size()
+        );
+        server.shutdown().unwrap();
+    }
 
     // ---- single-image 224 (skipped in quick mode: ~seconds per pass) -----
     if !quick {
@@ -83,4 +107,5 @@ fn main() {
         b.record("e2e/vgg16_224_forward_single", t1.elapsed(), 1);
     }
     let _ = b.write_csv("reports/bench_e2e.csv");
+    let _ = b.write_json("reports/BENCH_e2e.json");
 }

@@ -122,4 +122,5 @@ fn main() {
         Scheduler::ExactCover.run(&k8, 10, 0).cycles()
     });
     let _ = b.write_csv("reports/bench_scheduling.csv");
+    let _ = b.write_json("reports/BENCH_scheduling.json");
 }

@@ -100,4 +100,5 @@ fn main() {
         run_baseline(&BaselineConfig::this_work(), &cifar, Some(samples), 2020).latency_secs()
     });
     let _ = b.write_csv("reports/bench_simulator.csv");
+    let _ = b.write_json("reports/BENCH_simulator.json");
 }

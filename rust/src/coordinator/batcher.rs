@@ -151,6 +151,49 @@ mod tests {
     }
 
     #[test]
+    fn empty_batcher_is_inert() {
+        // the dispatch loop leans on these: an empty batcher must neither
+        // close batches nor report a deadline to park on
+        let mut b: Batcher<u32> = Batcher::new(cfg(4, 10));
+        let t = Instant::now();
+        assert!(b.poll(t).is_none());
+        assert!(b.poll(t + Duration::from_secs(60)).is_none());
+        assert!(b.time_to_deadline(t).is_none());
+        assert!(b.take().is_none());
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn closes_exactly_at_deadline() {
+        // the deadline boundary is inclusive (`>=`): polling at exactly
+        // t0 + max_wait closes the batch, so a worker woken by a
+        // recv_timeout of `time_to_deadline` never spins on a zero wait
+        let mut b = Batcher::new(cfg(10, 10));
+        let t0 = Instant::now();
+        b.push(1, t0);
+        let deadline = t0 + Duration::from_millis(10);
+        assert_eq!(b.time_to_deadline(deadline).unwrap(), Duration::ZERO);
+        assert_eq!(b.poll(deadline).unwrap(), vec![1]);
+    }
+
+    #[test]
+    fn reopens_cleanly_after_take() {
+        let mut b = Batcher::new(cfg(10, 10));
+        let t0 = Instant::now();
+        b.push(1, t0);
+        assert_eq!(b.take().unwrap(), vec![1]);
+        // take() clears the deadline: no stale closes, no park hint
+        assert!(b.time_to_deadline(t0).is_none());
+        assert!(b.poll(t0 + Duration::from_secs(1)).is_none());
+        // a later push reopens with a fresh clock at its own `now`
+        let t1 = t0 + Duration::from_millis(100);
+        assert!(b.push(2, t1).is_none());
+        assert_eq!(b.time_to_deadline(t1).unwrap(), Duration::from_millis(10));
+        assert!(b.poll(t1 + Duration::from_millis(9)).is_none());
+        assert_eq!(b.poll(t1 + Duration::from_millis(10)).unwrap(), vec![2]);
+    }
+
+    #[test]
     fn park_time_hint() {
         let mut b = Batcher::new(cfg(10, 20));
         let t0 = Instant::now();

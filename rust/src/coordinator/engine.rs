@@ -12,6 +12,14 @@
 //! then flatten → FC stack → logits. The backend is `interp` by default
 //! (pure Rust, runs offline with no artifacts); with the `pjrt` feature the
 //! same engine drives AOT-compiled XLA executables instead.
+//!
+//! Thread confinement: an engine (and its backend) is owned by exactly one
+//! thread for its whole life — the server pool constructs one engine
+//! *inside* each executor worker. PJRT state holds raw FFI pointers that
+//! must not migrate; the interp backend may itself fan out scoped threads
+//! per request ([`BackendKind::Interp`]'s `threads`), which is fine because
+//! those never outlive the call. Weight generation is a pure function of
+//! `(variant, mode, seed)`, so pool replicas are bit-identical.
 
 use crate::err;
 use crate::fft::{im2tiles, overlap_add, spectral_kernels, TileGeometry};

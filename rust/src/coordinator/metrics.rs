@@ -1,9 +1,13 @@
 //! Serving metrics: latency distribution + throughput.
+//!
+//! Each executor worker owns one [`Metrics`] (thread-confined, like its
+//! engine); the server merges the per-worker accumulators into one
+//! [`PoolMetrics`] snapshot on demand.
 
 use std::time::Duration;
 
-/// Latency/throughput accumulator (single-threaded; the server owns one and
-/// snapshots it on demand).
+/// Latency/throughput accumulator (single-threaded; each executor worker
+/// owns one and snapshots it on demand).
 #[derive(Debug, Clone, Default)]
 pub struct Metrics {
     latencies_us: Vec<u64>,
@@ -30,6 +34,23 @@ impl Metrics {
     pub fn record_batch(&mut self, size: usize) {
         self.batches += 1;
         self.batch_sizes += size as u64;
+    }
+
+    /// Fold another accumulator into this one (per-worker → merged
+    /// snapshot): latencies concatenate, batch counters add, and the
+    /// observation window spans both.
+    pub fn merge_from(&mut self, other: &Metrics) {
+        self.latencies_us.extend_from_slice(&other.latencies_us);
+        self.batches += other.batches;
+        self.batch_sizes += other.batch_sizes;
+        self.started = match (self.started, other.started) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        };
+        self.finished = match (self.finished, other.finished) {
+            (Some(a), Some(b)) => Some(a.max(b)),
+            (a, b) => a.or(b),
+        };
     }
 
     pub fn count(&self) -> usize {
@@ -98,6 +119,35 @@ impl Metrics {
     }
 }
 
+/// Pool-wide snapshot: the merged view plus one [`Metrics`] per executor
+/// worker (index = worker id), so per-worker load skew is observable.
+#[derive(Debug, Clone, Default)]
+pub struct PoolMetrics {
+    pub merged: Metrics,
+    pub per_worker: Vec<Metrics>,
+}
+
+impl PoolMetrics {
+    /// Merge a vector of per-worker accumulators into a snapshot.
+    pub fn from_workers(per_worker: Vec<Metrics>) -> Self {
+        let mut merged = Metrics::new();
+        for m in &per_worker {
+            merged.merge_from(m);
+        }
+        PoolMetrics { merged, per_worker }
+    }
+
+    /// One line per worker plus the merged line.
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        for (i, m) in self.per_worker.iter().enumerate() {
+            out.push_str(&format!("worker {i}: {}\n", m.report()));
+        }
+        out.push_str(&format!("merged:   {}", self.merged.report()));
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -128,5 +178,34 @@ mod tests {
         m.record_batch(4);
         m.record_batch(8);
         assert!((m.mean_batch_size() - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_concatenates_and_spans() {
+        let mut a = Metrics::new();
+        a.record_batch(2);
+        a.record_request(Duration::from_micros(100));
+        a.record_request(Duration::from_micros(300));
+        let mut b = Metrics::new();
+        b.record_batch(1);
+        b.record_request(Duration::from_micros(200));
+        let snap = PoolMetrics::from_workers(vec![a, b]);
+        assert_eq!(snap.merged.count(), 3);
+        assert!((snap.merged.mean_batch_size() - 1.5).abs() < 1e-12);
+        assert_eq!(snap.merged.p50().unwrap(), Duration::from_micros(200));
+        assert_eq!(snap.per_worker.len(), 2);
+        assert!(snap.report().contains("worker 1"));
+    }
+
+    #[test]
+    fn merge_with_empty_is_identity() {
+        let mut a = Metrics::new();
+        a.record_request(Duration::from_micros(50));
+        let mut merged = Metrics::new();
+        merged.merge_from(&Metrics::new());
+        merged.merge_from(&a);
+        merged.merge_from(&Metrics::new());
+        assert_eq!(merged.count(), 1);
+        assert_eq!(merged.p50().unwrap(), Duration::from_micros(50));
     }
 }

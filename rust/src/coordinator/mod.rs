@@ -11,9 +11,12 @@
 //!
 //! * [`engine`] — [`engine::InferenceEngine`]: weights + per-layer forward.
 //! * [`batcher`] — deadline/size-bounded request batching.
-//! * [`server`] — worker thread + client handles (std::thread + channels;
-//!   tokio is unavailable in the offline registry — DESIGN.md).
-//! * [`metrics`] — latency percentiles and throughput counters.
+//! * [`server`] — executor-worker pool + dispatcher + client handles
+//!   (std::thread + channels; tokio is unavailable in the offline
+//!   registry — DESIGN.md). Each worker owns its own engine, constructed
+//!   in-thread and never moved across threads (the PJRT FFI constraint).
+//! * [`metrics`] — latency percentiles and throughput counters, per worker
+//!   and merged.
 
 pub mod batcher;
 pub mod engine;
@@ -22,5 +25,5 @@ pub mod server;
 
 pub use batcher::{Batcher, BatcherConfig};
 pub use engine::{InferenceEngine, WeightMode, Weights};
-pub use metrics::Metrics;
-pub use server::{Server, ServerConfig};
+pub use metrics::{Metrics, PoolMetrics};
+pub use server::{Client, Server, ServerConfig};

@@ -1,17 +1,29 @@
-//! The serving loop: one executor thread owning the [`InferenceEngine`],
-//! fed by client handles through an MPSC channel, with deadline batching.
+//! The serving loop: a pool of executor workers, each owning its own
+//! [`InferenceEngine`], fed by a dispatcher thread that batches client
+//! requests and routes each closed batch to the least-loaded worker.
 //!
-//! The engine is constructed *inside* the worker thread and never crosses a
-//! thread boundary (PJRT objects hold raw FFI pointers; the interp backend
-//! simply doesn't need to move); clients exchange plain tensors. (tokio is
-//! unavailable offline — std::thread + channels, see DESIGN.md.)
+//! Thread-confinement rule: every engine is constructed *inside* its worker
+//! thread and never crosses a thread boundary (PJRT objects hold raw FFI
+//! pointers; the interp backend simply doesn't need to move). Clients
+//! exchange plain tensors. Engines are built from the same config/seed, so
+//! every worker computes bit-identical outputs — which worker serves a
+//! request is invisible in the logits. (tokio is unavailable offline —
+//! std::thread + channels, see DESIGN.md.)
+//!
+//! ```text
+//! clients ──mpsc──► dispatcher (Batcher) ──per-worker mpsc──► executor 0..N-1
+//!                        ▲                                      each: engine
+//!                        └───── least-loaded pick (atomics) ◄── + Metrics
+//! ```
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use super::batcher::{Batcher, BatcherConfig};
 use super::engine::{InferenceEngine, WeightMode};
-use super::metrics::Metrics;
+use super::metrics::{Metrics, PoolMetrics};
 use crate::err;
 use crate::runtime::BackendKind;
 use crate::tensor::Tensor;
@@ -25,8 +37,11 @@ pub struct ServerConfig {
     pub mode: WeightMode,
     pub seed: u64,
     pub batcher: BatcherConfig,
-    /// Which spectral-conv backend the worker's engine runs on.
+    /// Which spectral-conv backend the workers' engines run on (for
+    /// [`BackendKind::Interp`] this carries the per-tile thread count).
     pub backend: BackendKind,
+    /// Number of executor workers, each owning its own engine (0 acts as 1).
+    pub workers: usize,
 }
 
 impl Default for ServerConfig {
@@ -38,6 +53,7 @@ impl Default for ServerConfig {
             seed: 7,
             batcher: BatcherConfig::default(),
             backend: BackendKind::default(),
+            workers: 1,
         }
     }
 }
@@ -54,18 +70,34 @@ pub struct Response {
     pub logits: Vec<f32>,
     pub latency: Duration,
     pub batch_size: usize,
+    /// Which pool worker executed the request.
+    pub worker: usize,
 }
 
 enum Msg {
     Infer(Request),
+    Snapshot(mpsc::Sender<PoolMetrics>),
+    Shutdown,
+}
+
+enum WorkerMsg {
+    Batch(Vec<Request>),
     Snapshot(mpsc::Sender<Metrics>),
     Shutdown,
+}
+
+/// Dispatcher-side handle to one executor worker.
+struct WorkerSlot {
+    tx: mpsc::Sender<WorkerMsg>,
+    /// Requests dispatched but not yet answered (the load-balancing key).
+    load: Arc<AtomicUsize>,
 }
 
 /// Running server + client handle factory.
 pub struct Server {
     tx: mpsc::Sender<Msg>,
-    worker: Option<std::thread::JoinHandle<Result<()>>>,
+    dispatcher: Option<std::thread::JoinHandle<Result<()>>>,
+    workers: Vec<std::thread::JoinHandle<Result<()>>>,
 }
 
 /// Cheap cloneable client handle.
@@ -95,37 +127,68 @@ impl Client {
 }
 
 impl Server {
-    /// Start the worker; blocks until the engine has loaded (compile
-    /// warm-up) so the first request doesn't pay startup cost.
+    /// Start the pool; blocks until every worker's engine has loaded
+    /// (compile warm-up) so the first request doesn't pay startup cost.
+    /// Any engine construction error fails the whole startup.
     pub fn start(cfg: ServerConfig) -> Result<Server> {
-        let (tx, rx) = mpsc::channel::<Msg>();
+        let n = cfg.workers.max(1);
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-        let worker = std::thread::Builder::new()
-            .name("sf-serve".into())
-            .spawn(move || worker_loop(cfg, rx, ready_tx))
-            .expect("spawn worker");
-        ready_rx
-            .recv()
-            .map_err(|_| err!("server worker died during startup"))??;
-        Ok(Server { tx, worker: Some(worker) })
+        let mut slots = Vec::with_capacity(n);
+        let mut workers = Vec::with_capacity(n);
+        for wi in 0..n {
+            let (wtx, wrx) = mpsc::channel::<WorkerMsg>();
+            let load = Arc::new(AtomicUsize::new(0));
+            let wcfg = cfg.clone();
+            let wready = ready_tx.clone();
+            let wload = load.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("sf-exec-{wi}"))
+                .spawn(move || worker_loop(wi, wcfg, wrx, wready, wload))
+                .expect("spawn executor worker");
+            slots.push(WorkerSlot { tx: wtx, load });
+            workers.push(handle);
+        }
+        drop(ready_tx);
+        // Wait for all engines; on failure, dropping `slots` disconnects the
+        // surviving workers and they exit on their own.
+        for _ in 0..n {
+            ready_rx
+                .recv()
+                .map_err(|_| err!("executor worker died during startup"))??;
+        }
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let batcher_cfg = cfg.batcher;
+        let dispatcher = std::thread::Builder::new()
+            .name("sf-dispatch".into())
+            .spawn(move || dispatcher_loop(batcher_cfg, rx, slots))
+            .expect("spawn dispatcher");
+        Ok(Server { tx, dispatcher: Some(dispatcher), workers })
     }
 
     pub fn client(&self) -> Client {
         Client { tx: self.tx.clone() }
     }
 
-    /// Snapshot current metrics.
+    /// Merged metrics snapshot across the pool.
     pub fn metrics(&self) -> Result<Metrics> {
+        Ok(self.pool_metrics()?.merged)
+    }
+
+    /// Per-worker + merged metrics snapshot.
+    pub fn pool_metrics(&self) -> Result<PoolMetrics> {
         let (tx, rx) = mpsc::channel();
         self.tx.send(Msg::Snapshot(tx)).map_err(|_| err!("server stopped"))?;
         rx.recv().map_err(|_| err!("server stopped"))
     }
 
-    /// Graceful shutdown (flushes pending batches).
+    /// Graceful shutdown (flushes pending batches, drains every worker).
     pub fn shutdown(mut self) -> Result<()> {
         let _ = self.tx.send(Msg::Shutdown);
-        if let Some(w) = self.worker.take() {
-            w.join().map_err(|_| err!("worker panicked"))??;
+        if let Some(d) = self.dispatcher.take() {
+            d.join().map_err(|_| err!("dispatcher panicked"))??;
+        }
+        for w in self.workers.drain(..) {
+            w.join().map_err(|_| err!("executor worker panicked"))??;
         }
         Ok(())
     }
@@ -134,16 +197,23 @@ impl Server {
 impl Drop for Server {
     fn drop(&mut self) {
         let _ = self.tx.send(Msg::Shutdown);
-        if let Some(w) = self.worker.take() {
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
+        }
+        for w in self.workers.drain(..) {
             let _ = w.join();
         }
     }
 }
 
+/// One executor: builds its engine in-thread (thread confinement), then
+/// serves dispatched batches and metric snapshots until shutdown.
 fn worker_loop(
+    id: usize,
     cfg: ServerConfig,
-    rx: mpsc::Receiver<Msg>,
+    rx: mpsc::Receiver<WorkerMsg>,
     ready: mpsc::Sender<Result<()>>,
+    load: Arc<AtomicUsize>,
 ) -> Result<()> {
     let mut engine = match InferenceEngine::new_with(
         &cfg.artifacts_dir,
@@ -161,19 +231,70 @@ fn worker_loop(
             return Err(e);
         }
     };
-    let mut batcher: Batcher<Request> = Batcher::new(cfg.batcher);
+    // Release the ready sender now: if a sibling worker panics before its
+    // send, Server::start's recv loop must observe the disconnect instead
+    // of blocking on senders parked in still-alive workers.
+    drop(ready);
     let mut metrics = Metrics::new();
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            WorkerMsg::Batch(batch) => {
+                let size = batch.len();
+                metrics.record_batch(size);
+                for req in batch {
+                    let result = engine.forward(&req.image).map(|logits| {
+                        let latency = req.submitted.elapsed();
+                        metrics.record_request(latency);
+                        Response { logits, latency, batch_size: size, worker: id }
+                    });
+                    let _ = req.reply.send(result);
+                    load.fetch_sub(1, Ordering::Relaxed);
+                }
+            }
+            WorkerMsg::Snapshot(tx) => {
+                let _ = tx.send(metrics.clone());
+            }
+            WorkerMsg::Shutdown => break,
+        }
+    }
+    Ok(())
+}
 
-    let run_batch = |batch: Vec<Request>, engine: &mut InferenceEngine, metrics: &mut Metrics| {
-        let size = batch.len();
-        metrics.record_batch(size);
-        for req in batch {
-            let result = engine.forward(&req.image).map(|logits| {
-                let latency = req.submitted.elapsed();
-                metrics.record_request(latency);
-                Response { logits, latency, batch_size: size }
-            });
-            let _ = req.reply.send(result);
+/// The dispatcher: batches incoming requests against the deadline/size
+/// policy and hands each closed batch to the least-loaded worker.
+fn dispatcher_loop(
+    cfg: BatcherConfig,
+    rx: mpsc::Receiver<Msg>,
+    workers: Vec<WorkerSlot>,
+) -> Result<()> {
+    let mut batcher: Batcher<Request> = Batcher::new(cfg);
+
+    let dispatch = |mut batch: Vec<Request>| {
+        loop {
+            // least-loaded pick: `load` counts dispatched-but-unanswered
+            // requests; Relaxed is fine — it's a heuristic, not a lock
+            let slot = workers
+                .iter()
+                .min_by_key(|w| w.load.load(Ordering::Relaxed))
+                .expect("pool has at least one worker");
+            if slot.load.load(Ordering::Relaxed) == usize::MAX {
+                // every worker is dead; dropping the batch drops the reply
+                // senders, so clients observe "server dropped request"
+                return;
+            }
+            slot.load.fetch_add(batch.len(), Ordering::Relaxed);
+            match slot.tx.send(WorkerMsg::Batch(batch)) {
+                Ok(()) => return,
+                Err(mpsc::SendError(msg)) => {
+                    // the worker died: poison its load so it is never
+                    // picked again and retry the batch on a survivor
+                    slot.load.store(usize::MAX, Ordering::Relaxed);
+                    match msg {
+                        WorkerMsg::Batch(b) => batch = b,
+                        _ => return,
+                    }
+                }
+            }
         }
     };
 
@@ -193,22 +314,41 @@ fn worker_loop(
         match msg {
             Some(Msg::Infer(req)) => {
                 if let Some(batch) = batcher.push(req, Instant::now()) {
-                    run_batch(batch, &mut engine, &mut metrics);
+                    dispatch(batch);
                 }
             }
             Some(Msg::Snapshot(tx)) => {
-                let _ = tx.send(metrics.clone());
+                // fan the snapshot out to every worker first, then collect:
+                // the waits overlap, so the stall is one queue drain (the
+                // slowest worker), not the sum over workers
+                let pending: Vec<Option<mpsc::Receiver<Metrics>>> = workers
+                    .iter()
+                    .map(|w| {
+                        let (mtx, mrx) = mpsc::channel();
+                        w.tx.send(WorkerMsg::Snapshot(mtx)).ok().map(|_| mrx)
+                    })
+                    .collect();
+                let per_worker = pending
+                    .into_iter()
+                    // a dead worker reports as empty
+                    .map(|mrx| mrx.and_then(|rx| rx.recv().ok()).unwrap_or_default())
+                    .collect();
+                let _ = tx.send(PoolMetrics::from_workers(per_worker));
             }
             Some(Msg::Shutdown) => break,
             None => {}
         }
         if let Some(batch) = batcher.poll(Instant::now()) {
-            run_batch(batch, &mut engine, &mut metrics);
+            dispatch(batch);
         }
     }
-    // flush
+    // flush the open batch, then drain the pool (queued batches are
+    // processed before the Shutdown message — channel FIFO order)
     if let Some(batch) = batcher.take() {
-        run_batch(batch, &mut engine, &mut metrics);
+        dispatch(batch);
+    }
+    for w in &workers {
+        let _ = w.tx.send(WorkerMsg::Shutdown);
     }
     Ok(())
 }

@@ -29,7 +29,8 @@
 //! * [`sim`] — cycle-level accelerator simulator (the U200 substitute).
 //! * [`runtime`] — the [`runtime::SpectralBackend`] trait, the pure-Rust
 //!   `interp` backend, and (feature `pjrt`) the PJRT executable loader.
-//! * [`coordinator`] — batching inference server (the e2e driver).
+//! * [`coordinator`] — batching inference server: a dispatcher over a pool
+//!   of engine-owning executor workers (the e2e driver).
 //! * [`report`] — ASCII/CSV emitters for every paper table and figure.
 
 pub mod analysis;

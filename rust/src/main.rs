@@ -22,10 +22,11 @@ use spectral_flow::util::error::Result;
 use spectral_flow::util::rng::Pcg32;
 
 /// Parse `--backend` into a [`BackendKind`], with a clear error when the
-/// binary was built without the `pjrt` feature.
-fn parse_backend(name: &str) -> Result<BackendKind> {
+/// binary was built without the `pjrt` feature. `threads` is the interp
+/// backend's per-tile thread count (`--backend-threads`; ignored by pjrt).
+fn parse_backend(name: &str, threads: usize) -> Result<BackendKind> {
     match name {
-        "interp" => Ok(BackendKind::Interp),
+        "interp" => Ok(BackendKind::Interp { threads }),
         #[cfg(feature = "pjrt")]
         "pjrt" => Ok(BackendKind::Pjrt),
         #[cfg(not(feature = "pjrt"))]
@@ -209,8 +210,11 @@ fn serve(mut args: Args) -> Result<()> {
     let batch = args.opt_usize("batch", 4, "max batch size");
     let wait_ms = args.opt_usize("wait-ms", 10, "batch deadline (ms)");
     let artifacts = args.opt("artifacts", "artifacts", "artifacts directory");
-    let backend = parse_backend(&args.opt("backend", "interp", "spectral backend (interp|pjrt)"))?;
-    args.maybe_help("serve: run the batching server on synthetic traffic");
+    let workers = args.opt_usize("workers", 1, "executor workers (one engine each)");
+    let threads = args.opt_usize("backend-threads", 1, "interp per-tile threads per engine");
+    let backend_name = args.opt("backend", "interp", "spectral backend (interp|pjrt)");
+    let backend = parse_backend(&backend_name, threads)?;
+    args.maybe_help("serve: run the batching server pool on synthetic traffic");
     let server = Server::start(ServerConfig {
         artifacts_dir: artifacts.clone(),
         variant: variant.clone(),
@@ -221,6 +225,7 @@ fn serve(mut args: Args) -> Result<()> {
             max_wait: std::time::Duration::from_millis(wait_ms as u64),
         },
         backend,
+        workers,
     })?;
     let client = server.client();
     let mut rng = Pcg32::new(123);
@@ -242,7 +247,7 @@ fn serve(mut args: Args) -> Result<()> {
         rx.recv().map_err(|_| err!("server dropped request"))??;
     }
     let wall = t0.elapsed();
-    let metrics = server.metrics()?;
+    let metrics = server.pool_metrics()?;
     println!("{requests} requests in {wall:?} → {:.2} img/s", requests as f64 / wall.as_secs_f64());
     println!("{}", metrics.report());
     server.shutdown()?;
@@ -254,7 +259,9 @@ fn infer(mut args: Args) -> Result<()> {
     let variant = args.opt("variant", "demo", "model variant (demo|vgg16-cifar|vgg16-224)");
     let artifacts = args.opt("artifacts", "artifacts", "artifacts directory");
     let pruned = args.opt_bool("pruned", "use magnitude-pruned (α=4) kernels");
-    let backend = parse_backend(&args.opt("backend", "interp", "spectral backend (interp|pjrt)"))?;
+    let threads = args.opt_usize("backend-threads", 1, "interp per-tile threads");
+    let backend_name = args.opt("backend", "interp", "spectral backend (interp|pjrt)");
+    let backend = parse_backend(&backend_name, threads)?;
     args.maybe_help("infer: single-image forward pass through the spectral backend");
     let mode = if pruned { WeightMode::Pruned { alpha: 4 } } else { WeightMode::Dense };
     let t0 = std::time::Instant::now();

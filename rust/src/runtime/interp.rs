@@ -12,6 +12,12 @@
 //! Throughput note: this is the software *reference* path (the role the
 //! paper's CPU/GPU baselines play); the per-tile MAC is O(K²·M·N) complex
 //! ops, frequency-major so the weight row `[N]` streams contiguously.
+//!
+//! Tiles are independent (the paper's P'-parallel dimension), so
+//! [`InterpBackend::with_threads`] fans the per-tile loop out over scoped
+//! threads, each with its own scratch buffers, writing disjoint output
+//! slices. The per-tile arithmetic is identical in every configuration, so
+//! outputs are bit-for-bit equal for any thread count.
 
 use std::collections::HashMap;
 use std::path::Path;
@@ -39,15 +45,79 @@ struct WeightPlanes {
 }
 
 /// The interpreter backend: shape registry + uploaded weight planes.
-#[derive(Default)]
 pub struct InterpBackend {
     shapes: HashMap<String, Shape>,
     weights: Vec<WeightPlanes>,
+    /// Worker threads for the per-tile loop (1 = serial).
+    threads: usize,
+}
+
+impl Default for InterpBackend {
+    fn default() -> Self {
+        Self::with_threads(1)
+    }
 }
 
 impl InterpBackend {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Backend with a tile-parallel hot loop over `threads` scoped worker
+    /// threads (`0` and `1` both mean serial).
+    pub fn with_threads(threads: usize) -> Self {
+        InterpBackend {
+            shapes: HashMap::new(),
+            weights: Vec::new(),
+            threads: threads.max(1),
+        }
+    }
+}
+
+/// One tile of the spectral conv: FFT every input channel of `in_tile`
+/// (`[M, K²]` spatial), frequency-major MAC against the kernel planes,
+/// IFFT each output channel into `out_tile` (`[N, K²]` spatial, real part).
+/// `xs`/`acc` are caller-owned scratch (`[M, K²]` / `[N, K²]` complex) so
+/// the request path does no per-tile allocation.
+fn conv_tile(
+    in_tile: &[f32],
+    out_tile: &mut [f32],
+    w: &WeightPlanes,
+    s: Shape,
+    xs: &mut [Complex],
+    acc: &mut [Complex],
+) {
+    let (m, n, k) = (s.cin, s.cout, s.fft);
+    let f = k * k;
+    for mi in 0..m {
+        let chan = &mut xs[mi * f..(mi + 1) * f];
+        for (p, &v) in chan.iter_mut().zip(&in_tile[mi * f..(mi + 1) * f]) {
+            *p = Complex::new(v, 0.0);
+        }
+        fft2d_inplace(chan, k);
+    }
+    for a in acc.iter_mut() {
+        *a = Complex::ZERO;
+    }
+    // frequency-major MAC: for each (freq, cin), stream the [N] row
+    for fi in 0..f {
+        for mi in 0..m {
+            let x = xs[mi * f + fi];
+            let row = (fi * m + mi) * n;
+            for ni in 0..n {
+                let (wr, wi) = (w.re[row + ni], w.im[row + ni]);
+                let a = &mut acc[ni * f + fi];
+                a.re += x.re * wr - x.im * wi;
+                a.im += x.re * wi + x.im * wr;
+            }
+        }
+    }
+    for ni in 0..n {
+        let plane = &mut acc[ni * f..(ni + 1) * f];
+        ifft2d_inplace(plane, k);
+        for (o, c) in out_tile[ni * f..(ni + 1) * f].iter_mut().zip(plane.iter()) {
+            *o = c.re;
+        }
     }
 }
 
@@ -111,43 +181,48 @@ impl SpectralBackend for InterpBackend {
         let td = tiles.data();
         let mut out = Tensor::zeros(&[t, n, k, k]);
         let od = out.data_mut();
-        // scratch reused across tiles — no per-channel allocations on the
-        // request path: FFTs run in place on these buffers
-        let mut xs = vec![Complex::ZERO; m * f];
-        let mut acc = vec![Complex::ZERO; n * f];
-        for ti in 0..t {
-            for mi in 0..m {
-                let base = (ti * m + mi) * f;
-                let chan = &mut xs[mi * f..(mi + 1) * f];
-                for (p, &v) in chan.iter_mut().zip(&td[base..base + f]) {
-                    *p = Complex::new(v, 0.0);
+        let threads = self.threads.min(t).max(1);
+        if threads == 1 {
+            // scratch reused across tiles — no per-tile allocations on the
+            // request path: FFTs run in place on these buffers
+            let mut xs = vec![Complex::ZERO; m * f];
+            let mut acc = vec![Complex::ZERO; n * f];
+            for (ti, out_tile) in od.chunks_mut(n * f).enumerate() {
+                conv_tile(&td[ti * m * f..(ti + 1) * m * f], out_tile, w, s, &mut xs, &mut acc);
+            }
+        } else {
+            // fan tiles out over scoped threads: each thread takes a
+            // contiguous chunk of tiles, owns its scratch, and writes a
+            // disjoint slice of the output — no locks, no result reordering.
+            // Balanced partition (sizes differ by at most one) so every
+            // requested thread gets work even when `threads` ∤ `t`.
+            let (base, extra) = (t / threads, t % threads);
+            std::thread::scope(|scope| {
+                let mut rest = od;
+                let mut start = 0usize;
+                for ci in 0..threads {
+                    let len = base + usize::from(ci < extra);
+                    let (out_chunk, tail) = rest.split_at_mut(len * n * f);
+                    rest = tail;
+                    let first = start;
+                    start += len;
+                    scope.spawn(move || {
+                        let mut xs = vec![Complex::ZERO; m * f];
+                        let mut acc = vec![Complex::ZERO; n * f];
+                        for (j, out_tile) in out_chunk.chunks_mut(n * f).enumerate() {
+                            let ti = first + j;
+                            conv_tile(
+                                &td[ti * m * f..(ti + 1) * m * f],
+                                out_tile,
+                                w,
+                                s,
+                                &mut xs,
+                                &mut acc,
+                            );
+                        }
+                    });
                 }
-                fft2d_inplace(chan, k);
-            }
-            for a in acc.iter_mut() {
-                *a = Complex::ZERO;
-            }
-            // frequency-major MAC: for each (freq, cin), stream the [N] row
-            for fi in 0..f {
-                for mi in 0..m {
-                    let x = xs[mi * f + fi];
-                    let row = (fi * m + mi) * n;
-                    for ni in 0..n {
-                        let (wr, wi) = (w.re[row + ni], w.im[row + ni]);
-                        let a = &mut acc[ni * f + fi];
-                        a.re += x.re * wr - x.im * wi;
-                        a.im += x.re * wi + x.im * wr;
-                    }
-                }
-            }
-            for ni in 0..n {
-                let plane = &mut acc[ni * f..(ni + 1) * f];
-                ifft2d_inplace(plane, k);
-                let base = (ti * n + ni) * f;
-                for (o, c) in od[base..base + f].iter_mut().zip(plane.iter()) {
-                    *o = c.re;
-                }
-            }
+            });
         }
         Ok(out)
     }
@@ -236,6 +311,31 @@ mod tests {
         assert!(b.run_conv("x", &ok, wid + 7).is_err());
         // bad weight dims at upload
         assert!(b.upload_weights(&[0.0; 3], &[0.0; 3], [64, 1, 1]).is_err());
+    }
+
+    #[test]
+    fn threaded_matches_serial_bit_for_bit() {
+        // tiles are independent and the per-tile arithmetic identical, so
+        // any thread count must reproduce the serial output exactly —
+        // including thread counts that don't divide the tile count and
+        // counts larger than it.
+        let mut rng = Pcg32::new(9);
+        let (t, m, n, fft) = (7, 3, 4, 8);
+        let tiles = Tensor::randn(&[t, m, fft, fft], &mut rng, 1.0);
+        let spatial = Tensor::randn(&[n, m, 3, 3], &mut rng, 0.3);
+        let planes = spectral_kernels(&spatial, fft);
+        let (re, im) = freq_major_planes(&planes);
+        let run = |threads: usize| {
+            let mut b = InterpBackend::with_threads(threads);
+            b.prepare("x", &entry(t, m, n, fft), Path::new(".")).unwrap();
+            let wid = b.upload_weights(&re, &im, [fft * fft, m, n]).unwrap();
+            b.run_conv("x", &tiles, wid).unwrap()
+        };
+        let serial = run(1);
+        for threads in [2, 3, 4, 16] {
+            let par = run(threads);
+            assert_eq!(par.data(), serial.data(), "threads={threads} diverged");
+        }
     }
 
     #[test]

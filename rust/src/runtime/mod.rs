@@ -64,21 +64,29 @@ pub trait SpectralBackend {
 }
 
 /// Backend selector (serving config / CLI surface).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum BackendKind {
-    /// Pure-Rust interpreter (offline default).
-    #[default]
-    Interp,
+    /// Pure-Rust interpreter (offline default). `threads` is the number of
+    /// worker threads the per-tile hot loop fans out over (1 = serial; the
+    /// paper's P'-parallel input tiles, in software). Results are
+    /// bit-identical for every thread count — tiles are independent.
+    Interp { threads: usize },
     /// AOT-compiled XLA executables via PJRT (needs the `pjrt` feature and
     /// `make artifacts`).
     #[cfg(feature = "pjrt")]
     Pjrt,
 }
 
+impl Default for BackendKind {
+    fn default() -> Self {
+        BackendKind::Interp { threads: 1 }
+    }
+}
+
 impl BackendKind {
     fn create(self) -> Result<Box<dyn SpectralBackend>> {
         match self {
-            BackendKind::Interp => Ok(Box::new(InterpBackend::new())),
+            BackendKind::Interp { threads } => Ok(Box::new(InterpBackend::with_threads(threads))),
             #[cfg(feature = "pjrt")]
             BackendKind::Pjrt => Ok(Box::new(pjrt::PjrtBackend::new()?)),
         }

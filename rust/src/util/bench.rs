@@ -164,6 +164,7 @@ impl Bench {
     /// Append all results to a CSV file (with header if new).
     pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
         use std::io::Write;
+        ensure_parent_dir(path)?;
         let new = !std::path::Path::new(path).exists();
         let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
         if new {
@@ -174,12 +175,56 @@ impl Bench {
         }
         Ok(())
     }
+
+    /// Overwrite `path` with all results as a JSON array — the
+    /// machine-readable bench artifact CI uploads (`BENCH_*.json`).
+    pub fn write_json(&self, path: &str) -> std::io::Result<()> {
+        use crate::util::json::Json;
+        use std::collections::BTreeMap;
+        use std::io::Write;
+        ensure_parent_dir(path)?;
+        let arr = Json::Arr(
+            self.results
+                .iter()
+                .map(|m| {
+                    let mut o = BTreeMap::new();
+                    o.insert("name".to_string(), Json::Str(m.name.clone()));
+                    o.insert("iters".to_string(), Json::Num(m.iters as f64));
+                    o.insert("mean_ns".to_string(), Json::Num(m.mean_ns));
+                    o.insert("stddev_ns".to_string(), Json::Num(m.stddev_ns));
+                    o.insert("median_ns".to_string(), Json::Num(m.median_ns));
+                    o.insert("p10_ns".to_string(), Json::Num(m.p10_ns));
+                    o.insert("p90_ns".to_string(), Json::Num(m.p90_ns));
+                    Json::Obj(o)
+                })
+                .collect(),
+        );
+        let text = arr.to_string();
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(text.as_bytes())?;
+        writeln!(f)?;
+        Ok(())
+    }
 }
 
-/// `true` when `--quick` appears in the bench args or SF_BENCH_QUICK=1.
+/// Create `path`'s parent directory if needed (report emitters write into
+/// `reports/`, which a fresh checkout doesn't have).
+fn ensure_parent_dir(path: &str) -> std::io::Result<()> {
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    Ok(())
+}
+
+/// `true` when `--quick` appears in the bench args, or `SF_BENCH_QUICK=1` /
+/// `BENCH_QUICK=1` is set in the environment (the CI bench-smoke knob).
 pub fn quick_requested() -> bool {
+    let env_quick = |k: &str| std::env::var(k).map(|v| v == "1").unwrap_or(false);
     std::env::args().any(|a| a == "--quick")
-        || std::env::var("SF_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+        || env_quick("SF_BENCH_QUICK")
+        || env_quick("BENCH_QUICK")
 }
 
 #[cfg(test)]
@@ -208,5 +253,27 @@ mod tests {
         b.record("ext", Duration::from_millis(10), 10);
         assert_eq!(b.results().len(), 1);
         assert!((b.results()[0].mean_ns - 1e6).abs() < 1.0);
+    }
+
+    #[test]
+    fn json_artifact_roundtrips() {
+        use crate::util::json::Json;
+        let mut b = Bench::quick();
+        b.record("e2e/x", Duration::from_millis(2), 4);
+        b.record("e2e/y", Duration::from_millis(1), 2);
+        let path = std::env::temp_dir().join("BENCH_bench_unit_test.json");
+        let path = path.to_str().unwrap().to_string();
+        b.write_json(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let parsed = Json::parse(&text).unwrap();
+        match parsed {
+            Json::Arr(v) => {
+                assert_eq!(v.len(), 2);
+                assert_eq!(v[0].get("name"), Some(&Json::Str("e2e/x".into())));
+                assert!(v[0].get("mean_ns").and_then(|j| j.as_f64()).unwrap() > 0.0);
+            }
+            other => panic!("expected array, got {other:?}"),
+        }
+        let _ = std::fs::remove_file(&path);
     }
 }

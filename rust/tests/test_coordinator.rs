@@ -7,20 +7,24 @@ use std::time::Duration;
 use spectral_flow::coordinator::{
     Batcher, BatcherConfig, Metrics, Server, ServerConfig, WeightMode,
 };
+use spectral_flow::runtime::BackendKind;
 use spectral_flow::tensor::Tensor;
 use spectral_flow::util::check::forall;
 use spectral_flow::util::rng::Pcg32;
 
-fn demo_server(max_batch: usize) -> Server {
-    Server::start(ServerConfig {
+fn demo_config(max_batch: usize) -> ServerConfig {
+    ServerConfig {
         artifacts_dir: concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").into(),
         variant: "demo".into(),
         mode: WeightMode::Pruned { alpha: 4 },
         seed: 7,
         batcher: BatcherConfig { max_batch, max_wait: Duration::from_millis(5) },
         ..ServerConfig::default()
-    })
-    .expect("server starts")
+    }
+}
+
+fn demo_server(max_batch: usize) -> Server {
+    Server::start(demo_config(max_batch)).expect("server starts")
 }
 
 #[test]
@@ -70,6 +74,73 @@ fn bad_input_errors_do_not_kill_server() {
     let good = Tensor::randn(&[1, 16, 16], &mut rng, 1.0);
     assert!(client.infer(good).is_ok());
     server.shutdown().unwrap();
+}
+
+#[test]
+fn pool_matches_serial_bit_for_bit() {
+    // The tentpole contract: a 4-worker pool with a tile-parallel (2-thread)
+    // interp backend, hit by many concurrent clients, must produce logits
+    // identical — bit for bit — to the single-worker serial path for every
+    // request. Workers replicate the same deterministic weights, and the
+    // tile-parallel loop reorders no arithmetic.
+    let mut rng = Pcg32::new(42);
+    let images: Vec<Tensor> =
+        (0..12).map(|_| Tensor::randn(&[1, 16, 16], &mut rng, 1.0)).collect();
+
+    // ground truth: serial single-worker server
+    let serial = demo_server(2);
+    let sc = serial.client();
+    let want: Vec<Vec<f32>> =
+        images.iter().map(|img| sc.infer(img.clone()).unwrap().logits).collect();
+    serial.shutdown().unwrap();
+
+    // pool: 4 workers × 2 backend threads, one blocking client thread per
+    // request so batches really interleave across workers
+    let pool = Server::start(ServerConfig {
+        workers: 4,
+        backend: BackendKind::Interp { threads: 2 },
+        ..demo_config(2)
+    })
+    .expect("pool starts");
+    std::thread::scope(|s| {
+        let handles: Vec<_> = images
+            .iter()
+            .map(|img| {
+                let c = pool.client();
+                let img = img.clone();
+                s.spawn(move || c.infer(img).unwrap())
+            })
+            .collect();
+        for (h, want) in handles.into_iter().zip(&want) {
+            let resp = h.join().expect("client thread");
+            assert!(resp.worker < 4);
+            assert_eq!(&resp.logits, want, "pool output diverged from serial path");
+        }
+    });
+
+    let pm = pool.pool_metrics().unwrap();
+    assert_eq!(pm.per_worker.len(), 4);
+    assert_eq!(pm.merged.count(), 12);
+    assert_eq!(pm.per_worker.iter().map(|m| m.count()).sum::<usize>(), 12);
+    pool.shutdown().unwrap();
+}
+
+#[test]
+fn pool_survives_bad_inputs_and_keeps_counting() {
+    let pool = Server::start(ServerConfig { workers: 2, ..demo_config(1) }).expect("pool");
+    let client = pool.client();
+    let mut rng = Pcg32::new(8);
+    for i in 0..6 {
+        if i % 3 == 0 {
+            assert!(client.infer(Tensor::zeros(&[3, 16, 16])).is_err());
+        } else {
+            assert!(client.infer(Tensor::randn(&[1, 16, 16], &mut rng, 1.0)).is_ok());
+        }
+    }
+    // only successful forwards are recorded; both workers stayed alive
+    let pm = pool.pool_metrics().unwrap();
+    assert_eq!(pm.merged.count(), 4);
+    pool.shutdown().unwrap();
 }
 
 #[test]
