@@ -61,11 +61,13 @@ fn main() -> Result<()> {
         logits.iter().map(|v| (v * 100.0).round() / 100.0).collect::<Vec<_>>()
     );
 
-    // 4. Same pass with pruned (α=4) spectral kernels — the paper's regime.
+    // 4. Same pass with pruned (α=4) spectral kernels — the paper's
+    //    regime: kernels upload in CSR form and the backend's sparse MAC
+    //    touches only the K²/α stored non-zeros (see docs/ARCHITECTURE.md).
     let mut pruned =
         InferenceEngine::new("artifacts", "demo", WeightMode::Pruned { alpha: 4 }, 42)?;
     let logits_p = pruned.forward(&img)?;
-    println!("forward with α=4 pruned kernels → {} logits ✓", logits_p.len());
+    println!("forward with α=4 pruned kernels (sparse CSR MAC) → {} logits ✓", logits_p.len());
 
     println!("\nquickstart OK");
     Ok(())

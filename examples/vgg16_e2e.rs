@@ -9,7 +9,7 @@
 //!
 //! ```bash
 //! cargo run --release --example vgg16_e2e
-//! # options: --requests 32 --batch 4 --variant vgg16-cifar --skip-224
+//! # options: --requests 32 --batch 4 --variant vgg16-cifar --alpha 4 --skip-224
 //! ```
 
 use std::time::Instant;
@@ -30,21 +30,25 @@ fn main() -> Result<()> {
     let variant = args.opt("variant", "vgg16-cifar", "serving variant");
     let workers = args.opt_usize("workers", 1, "executor workers (one engine each)");
     let threads = args.opt_usize("backend-threads", 1, "interp per-tile threads per engine");
+    let alpha = args.opt_usize("alpha", 4, "compression ratio α (≤1 = dense, >1 = sparse path)");
     let skip_224 = args.opt_bool("skip-224", "skip the single-image 224x224 run");
     args.maybe_help("vgg16_e2e: batched serving + single-image latency through the backend");
+    let mode = WeightMode::from_alpha(alpha);
 
     println!("spectral-flow end-to-end driver");
     println!("===============================\n");
 
     // ---- Phase 1: batched serving on the CIFAR-scale VGG16 ---------------
     println!(
-        "[1/2] serving {requests} requests ({variant}, α=4 pruned, batch ≤ {batch}, \
-         {workers} worker(s) × {threads} backend thread(s))"
+        "[1/2] serving {requests} requests ({variant}, α={} → {}, batch ≤ {batch}, \
+         {workers} worker(s) × {threads} backend thread(s))",
+        mode.alpha(),
+        if mode.alpha() > 1 { "sparse CSR MAC" } else { "dense MAC" }
     );
     let cfg = ServerConfig {
         artifacts_dir: "artifacts".into(),
         variant: variant.clone(),
-        mode: WeightMode::Pruned { alpha: 4 },
+        mode,
         seed: 7,
         batcher: BatcherConfig {
             max_batch: batch,
@@ -93,8 +97,7 @@ fn main() -> Result<()> {
     if !skip_224 {
         println!("\n[2/2] single-image VGG16-224 forward (the paper's latency workload)");
         let t2 = Instant::now();
-        let mut engine =
-            InferenceEngine::new("artifacts", "vgg16-224", WeightMode::Pruned { alpha: 4 }, 7)?;
+        let mut engine = InferenceEngine::new("artifacts", "vgg16-224", mode, 7)?;
         println!("  engine up in {:?} (13 conv layers)", t2.elapsed());
         let img = engine.synthetic_image(1);
         // warm once (first-touch allocations), then measure.

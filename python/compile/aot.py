@@ -63,6 +63,10 @@ def build(out_dir: str, mode: str, only=None, verbose: bool = True) -> dict:
         "tile": M.TILE,
         "hadamard_mode": mode,
         "word_bytes": 2,  # paper's 16-bit fixed point for the bandwidth model
+        # compression ratio the artifacts are built for: the AOT graphs are
+        # dense (explicit zeros), so record 1; the Rust serving CLI treats
+        # this as the --alpha default (0 sentinel = "manifest default")
+        "alpha": 1,
         "variants": {},
         "executables": {},
     }

@@ -39,6 +39,77 @@ fn main() {
     b.run("e2e/cifar_conv1_1", || cifar.conv_layer(0, &cimg).unwrap().len());
     b.run("e2e/cifar_vgg16_forward", || cifar.forward(&cimg).unwrap().len());
 
+    // ---- α sweep: dense vs sparse execution ------------------------------
+    // The compression→latency story of Table 3: α=1 runs the dense
+    // frequency-major MAC, α>1 uploads CSR kernels and runs the sparse MAC
+    // (K²/α non-zeros touched). Runs in quick mode too, so CI's
+    // BENCH_QUICK=1 artifact records dense-vs-sparse latency per commit.
+    for alpha in [1usize, 4, 8] {
+        let mut e = InferenceEngine::new(
+            "artifacts",
+            "vgg16-cifar",
+            WeightMode::from_alpha(alpha),
+            7,
+        )
+        .expect("cifar engine (alpha sweep)");
+        b.run(&format!("e2e/cifar_forward_alpha{alpha}"), || e.forward(&cimg).unwrap().len());
+    }
+
+    // ---- MAC microbench: sparse vs dense on identical values -------------
+    // Same layer shape, same non-zero values: the dense path multiplies the
+    // explicit zeros, the sparse path skips them — §4's α× compute cut,
+    // isolated from FFT/OaA overhead. Also asserts the equivalence gate
+    // (sparse == dense-with-zeros within 1e-4).
+    {
+        use spectral_flow::runtime::{
+            freq_major_planes, ExecutableEntry, InterpBackend, SparseDataflow, SpectralBackend,
+        };
+        use spectral_flow::sparse::prune_magnitude;
+        let (t, m, n, fft, alpha) = (16usize, 128usize, 128usize, 8usize, 4usize);
+        let mut rng = Pcg32::new(77);
+        let layer = prune_magnitude(n, m, fft, alpha, &mut rng);
+        let tiles = Tensor::randn(&[t, m, fft, fft], &mut rng, 1.0);
+        let e = ExecutableEntry {
+            tiles: t,
+            cin: m,
+            cout: n,
+            fft_size: fft,
+            sha256: "bench".into(),
+            bytes: 0,
+        };
+        let dir = std::path::Path::new(".");
+
+        let mut dense = InterpBackend::new();
+        dense.prepare("x", &e, dir).expect("prepare dense");
+        let (re, im) = freq_major_planes(&layer.to_dense_planes());
+        let dw = dense.upload_weights(&re, &im, [fft * fft, m, n]).expect("upload dense");
+
+        let mut sparse = InterpBackend::new();
+        sparse.prepare("x", &e, dir).expect("prepare sparse");
+        // all tiles resident (the deep-layer Alg. 1 optimum): each kernel
+        // row streams exactly once per conv
+        sparse.set_sparse_dataflow("x", SparseDataflow { tile_block: t }).unwrap();
+        let sw = sparse.upload_sparse(&layer).expect("upload sparse");
+
+        let want = dense.run_conv("x", &tiles, dw).unwrap();
+        let got = sparse.run_conv("x", &tiles, sw).unwrap();
+        let diff = got.max_abs_diff(&want);
+        assert!(diff < 1e-4, "sparse MAC diverged from dense-with-zeros: {diff}");
+
+        let md = b
+            .run("e2e/mac_dense_t16_c128", || dense.run_conv("x", &tiles, dw).unwrap().len())
+            .mean_ns;
+        let ms = b
+            .run(&format!("e2e/mac_sparse_alpha{alpha}_t16_c128"), || {
+                sparse.run_conv("x", &tiles, sw).unwrap().len()
+            })
+            .mean_ns;
+        println!(
+            "mac sparse α={alpha} vs dense: {:.2}× faster, max |err| = {diff:.2e}",
+            md / ms
+        );
+    }
+
     // ---- threads sweep: tile-parallel interp backend ---------------------
     // The acceptance target is ≥2× forward throughput at 4 backend threads
     // vs 1 on a multi-core runner (tiles are the paper's P' dimension).

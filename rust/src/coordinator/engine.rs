@@ -21,10 +21,14 @@
 //! those never outlive the call. Weight generation is a pure function of
 //! `(variant, mode, seed)`, so pool replicas are bit-identical.
 
+use crate::analysis::{ArchParams, LayerParams};
+use crate::dataflow::{optimize_layer, OptimizerConfig};
 use crate::err;
 use crate::fft::{im2tiles, overlap_add, spectral_kernels, TileGeometry};
 use crate::nn;
-use crate::runtime::{freq_major_planes, BackendKind, Runtime, VariantEntry, WeightId};
+use crate::runtime::{
+    freq_major_planes, BackendKind, LayerEntry, Runtime, SparseDataflow, VariantEntry, WeightId,
+};
 use crate::sparse::{prune_magnitude, SparseLayer};
 use crate::tensor::{ComplexTensor, Tensor};
 use crate::util::error::Result;
@@ -37,9 +41,56 @@ pub enum WeightMode {
     /// Dense spatial 3×3 kernels, FFT'd to spectral planes. Numerics are
     /// checkable against a spatial convolution reference.
     Dense,
-    /// Magnitude-pruned ("ADMM-like") spectral kernels at ratio α. The
-    /// spectral path is then the definition of the network.
+    /// Magnitude-pruned ("ADMM-like") spectral kernels at ratio α,
+    /// uploaded in sparse (CSR) form and executed by the backend's sparse
+    /// MAC. The spectral path is then the definition of the network.
     Pruned { alpha: usize },
+}
+
+impl WeightMode {
+    /// Map the `--alpha` knob to a mode: `α ≤ 1` is dense, `α > 1` prunes
+    /// each K×K spectral kernel to K²/α non-zeros.
+    pub fn from_alpha(alpha: usize) -> Self {
+        if alpha <= 1 {
+            WeightMode::Dense
+        } else {
+            WeightMode::Pruned { alpha }
+        }
+    }
+
+    /// The compression ratio this mode runs at (1 = dense).
+    pub fn alpha(&self) -> usize {
+        match self {
+            WeightMode::Dense => 1,
+            WeightMode::Pruned { alpha } => *alpha,
+        }
+    }
+}
+
+/// Per-layer streaming decision for the sparse execution path: run the
+/// flexible-dataflow inner loop (paper Alg. 1 / [`optimize_layer`]) on this
+/// layer's geometry at the paper's architecture point, and hand the chosen
+/// `Ps` to the backend as its resident-tile block ([`SparseDataflow`]).
+/// This is where the planner stops being a paper artifact: the same search
+/// that produces Table 1 now picks the serving loop order. τ cancels in the
+/// per-layer argmin (bandwidth = volume/τ at fixed τ), so any positive
+/// value yields the same streaming optimum; infeasible-BRAM layers fall
+/// back to pure tile-major execution.
+fn sparse_dataflow_for(l: &LayerEntry, fft: usize, tile: usize, alpha: usize) -> SparseDataflow {
+    let params = LayerParams {
+        m: l.cin,
+        n: l.cout,
+        h_in: l.h,
+        tile,
+        k2: fft * fft,
+        p: l.tiles,
+        alpha: alpha.max(1),
+    };
+    let cfg = OptimizerConfig { alpha: alpha.max(1), ..OptimizerConfig::paper() };
+    match optimize_layer(&params, &ArchParams::paper(), &cfg, 1.0) {
+        Some(plan) => SparseDataflow::from_stream(&plan.stream),
+        None => SparseDataflow::default(),
+    }
 }
 
 /// One conv layer's parameters on the engine side.
@@ -142,12 +193,29 @@ impl InferenceEngine {
         let k = runtime.manifest.kernel_k;
         runtime.warm_variant(variant)?;
         let weights = Weights::generate(&v, fft, k, mode, seed);
+        let tile = runtime.manifest.tile;
         let mut weight_ids = Vec::with_capacity(v.layers.len());
         for (l, w) in v.layers.iter().zip(&weights.convs) {
-            // frequency-major [F, M, N] — the backend's weight layout,
-            // computed once here instead of per request
-            let (re, im) = freq_major_planes(&w.spectral);
-            weight_ids.push(runtime.upload_weights(&re, &im, [fft * fft, l.cin, l.cout])?);
+            let wid = match &w.sparse {
+                // Pruned layers upload in CSR form, and Alg. 1's per-layer
+                // streaming optimum becomes the backend's loop order. The
+                // hint is keyed by the dedup'd executable (tiles/cin/cout/K):
+                // same-key layers re-plan with their own h, last write wins —
+                // h only nudges the optimizer's transfer totals, so a clash
+                // can cost streaming efficiency, never correctness.
+                Some(sp) => {
+                    runtime
+                        .set_sparse_dataflow(&l.file, sparse_dataflow_for(l, fft, tile, sp.alpha))?;
+                    runtime.upload_sparse(sp)?
+                }
+                // Dense layers keep the frequency-major [F, M, N] planes —
+                // computed once here instead of per request.
+                None => {
+                    let (re, im) = freq_major_planes(&w.spectral);
+                    runtime.upload_weights(&re, &im, [fft * fft, l.cin, l.cout])?
+                }
+            };
+            weight_ids.push(wid);
         }
         Ok(InferenceEngine {
             runtime,
@@ -241,5 +309,49 @@ impl InferenceEngine {
             &mut rng,
             1.0,
         )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alpha_mode_mapping() {
+        assert_eq!(WeightMode::from_alpha(0), WeightMode::Dense);
+        assert_eq!(WeightMode::from_alpha(1), WeightMode::Dense);
+        assert_eq!(WeightMode::from_alpha(4), WeightMode::Pruned { alpha: 4 });
+        assert_eq!(WeightMode::Dense.alpha(), 1);
+        assert_eq!(WeightMode::Pruned { alpha: 8 }.alpha(), 8);
+    }
+
+    fn layer(cin: usize, cout: usize, h: usize, tiles: usize) -> LayerEntry {
+        LayerEntry {
+            name: "t".into(),
+            cin,
+            cout,
+            h,
+            tiles,
+            pool_after: false,
+            file: "t.hlo.txt".into(),
+        }
+    }
+
+    #[test]
+    fn deep_layer_keeps_all_tiles_resident() {
+        // conv5_3-sized (512×512 channels, 9 tiles): Table 1's optimum is
+        // Ps = P — the sparse MAC should load each kernel row exactly once.
+        let d = sparse_dataflow_for(&layer(512, 512, 14, 9), 8, 6, 4);
+        assert_eq!(d.tile_block, 9);
+    }
+
+    #[test]
+    fn early_layer_blocks_are_multiples_of_p_par() {
+        // conv1_2-sized (64×64 channels, 1444 tiles): the optimizer streams
+        // tile groups; whatever Ps it picks lies on the P'-lattice and is
+        // at least one architecture group.
+        let d = sparse_dataflow_for(&layer(64, 64, 224, 1444), 8, 6, 4);
+        assert!(d.tile_block >= 9, "got block {}", d.tile_block);
+        assert!(d.tile_block == 1444 || d.tile_block % 9 == 0, "got block {}", d.tile_block);
     }
 }

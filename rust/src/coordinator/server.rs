@@ -34,6 +34,10 @@ use crate::util::error::Result;
 pub struct ServerConfig {
     pub artifacts_dir: String,
     pub variant: String,
+    /// Weight regime every worker engine replicates: the compression knob α
+    /// rides here ([`WeightMode::from_alpha`]) — `Dense` executes the dense
+    /// frequency-major MAC, `Pruned { alpha }` uploads CSR kernels and runs
+    /// the backend's sparse path.
     pub mode: WeightMode,
     pub seed: u64,
     pub batcher: BatcherConfig,

@@ -11,8 +11,38 @@
 //! [`runtime::SpectralBackend`]. The default `interp` backend is pure Rust
 //! and runs fully offline with zero external dependencies; the optional
 //! `pjrt` cargo feature swaps in AOT-compiled XLA executables (built once
-//! by `make artifacts`; Python is never on the request path). See README.md
-//! for the workspace layout and how to run everything offline.
+//! by `make artifacts`; Python is never on the request path).
+//!
+//! Pruned models run a real **sparse execution path**: kernels upload in
+//! CSR form ([`runtime::SparseWeightPlanes`]) and the backend's sparse MAC
+//! touches only the K²/α stored non-zeros, with the per-layer loop order
+//! chosen by the same Alg. 1 optimum that produces the paper's Table 1
+//! ([`runtime::SparseDataflow`]). See `docs/ARCHITECTURE.md` for the
+//! serving dataflow and `docs/PAPER_MAP.md` for the equation→code map.
+//!
+//! ## Quickstart
+//!
+//! No artifacts are needed — the runtime synthesizes its manifest from the
+//! built-in model presets, so this runs anywhere the crate compiles:
+//!
+//! ```
+//! use spectral_flow::coordinator::{InferenceEngine, WeightMode};
+//!
+//! // α=4: each 8×8 spectral kernel keeps 16 non-zeros; the engine uploads
+//! // CSR kernels and the interp backend runs its sparse MAC. α=1
+//! // (`WeightMode::from_alpha(1)` == `WeightMode::Dense`) is the dense path.
+//! let mut engine = InferenceEngine::new(
+//!     "artifacts",                       // absent ⇒ built-in manifest
+//!     "demo",                            // demo | vgg16-cifar | vgg16-224
+//!     WeightMode::from_alpha(4),
+//!     7,                                 // weight seed (deterministic)
+//! )
+//! .unwrap();
+//! let image = engine.synthetic_image(1);
+//! let logits = engine.forward(&image).unwrap();
+//! assert_eq!(logits.len(), 10);
+//! assert!(logits.iter().all(|v| v.is_finite()));
+//! ```
 //!
 //! Module map (see DESIGN.md for the full system inventory):
 //!
@@ -28,7 +58,8 @@
 //! * [`schedule`] — exact-cover scheduler + baselines (paper Alg. 2).
 //! * [`sim`] — cycle-level accelerator simulator (the U200 substitute).
 //! * [`runtime`] — the [`runtime::SpectralBackend`] trait, the pure-Rust
-//!   `interp` backend, and (feature `pjrt`) the PJRT executable loader.
+//!   `interp` backend with dense + sparse MACs, the CSR weight form, and
+//!   (feature `pjrt`) the PJRT executable loader.
 //! * [`coordinator`] — batching inference server: a dispatcher over a pool
 //!   of engine-owning executor workers (the e2e driver).
 //! * [`report`] — ASCII/CSV emitters for every paper table and figure.

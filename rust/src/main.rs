@@ -213,12 +213,20 @@ fn serve(mut args: Args) -> Result<()> {
     let workers = args.opt_usize("workers", 1, "executor workers (one engine each)");
     let threads = args.opt_usize("backend-threads", 1, "interp per-tile threads per engine");
     let backend_name = args.opt("backend", "interp", "spectral backend (interp|pjrt)");
+    let alpha = args.opt_usize("alpha", 0, "compression ratio α (0 = manifest default, 1 = dense)");
     let backend = parse_backend(&backend_name, threads)?;
     args.maybe_help("serve: run the batching server pool on synthetic traffic");
+    // Manifest-only read to shape the synthetic requests and resolve the α
+    // default: always use the cheap interp backend here — the server worker
+    // owns the real one.
+    let m = spectral_flow::runtime::Runtime::open(&artifacts)?;
+    let vdesc = m.manifest.variant(&variant)?.clone();
+    let mode = WeightMode::from_alpha(m.manifest.resolve_alpha(alpha));
+    println!("serving {variant} at α={} ({mode:?})", mode.alpha());
     let server = Server::start(ServerConfig {
         artifacts_dir: artifacts.clone(),
         variant: variant.clone(),
-        mode: WeightMode::Pruned { alpha: 4 },
+        mode,
         seed: 7,
         batcher: BatcherConfig {
             max_batch: batch,
@@ -229,10 +237,6 @@ fn serve(mut args: Args) -> Result<()> {
     })?;
     let client = server.client();
     let mut rng = Pcg32::new(123);
-    // Manifest-only read to shape the synthetic requests: always use the
-    // cheap interp backend here — the server worker owns the real one.
-    let m = spectral_flow::runtime::Runtime::open(&artifacts)?;
-    let vdesc = m.manifest.variant(&variant)?.clone();
     let t0 = std::time::Instant::now();
     let rxs: Result<Vec<_>> = (0..requests)
         .map(|_| {
@@ -258,19 +262,24 @@ fn serve(mut args: Args) -> Result<()> {
 fn infer(mut args: Args) -> Result<()> {
     let variant = args.opt("variant", "demo", "model variant (demo|vgg16-cifar|vgg16-224)");
     let artifacts = args.opt("artifacts", "artifacts", "artifacts directory");
-    let pruned = args.opt_bool("pruned", "use magnitude-pruned (α=4) kernels");
+    let alpha = args.opt_usize("alpha", 0, "compression ratio α (0 = manifest default, 1 = dense)");
     let threads = args.opt_usize("backend-threads", 1, "interp per-tile threads");
     let backend_name = args.opt("backend", "interp", "spectral backend (interp|pjrt)");
     let backend = parse_backend(&backend_name, threads)?;
     args.maybe_help("infer: single-image forward pass through the spectral backend");
-    let mode = if pruned { WeightMode::Pruned { alpha: 4 } } else { WeightMode::Dense };
+    // one extra (cheap) manifest read: the engine re-opens internally, but
+    // the mode must be known before the engine can be constructed
+    let mode = WeightMode::from_alpha(
+        spectral_flow::runtime::Runtime::open(&artifacts)?.manifest.resolve_alpha(alpha),
+    );
     let t0 = std::time::Instant::now();
     let mut engine = InferenceEngine::new_with(&artifacts, &variant, mode, 7, backend)?;
     println!(
-        "engine up in {:?} ({} layers, backend {})",
+        "engine up in {:?} ({} layers, backend {}, α={})",
         t0.elapsed(),
         engine.variant.layers.len(),
-        engine.backend_name()
+        engine.backend_name(),
+        mode.alpha()
     );
     let img = engine.synthetic_image(1);
     let t1 = std::time::Instant::now();

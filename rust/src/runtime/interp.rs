@@ -18,16 +18,33 @@
 //! threads, each with its own scratch buffers, writing disjoint output
 //! slices. The per-tile arithmetic is identical in every configuration, so
 //! outputs are bit-for-bit equal for any thread count.
+//!
+//! Pruned layers take the **sparse** path: weights uploaded via
+//! [`SpectralBackend::upload_sparse`] are kept as CSR rows
+//! ([`SparseWeightPlanes`]) and the MAC iterates only the K²/α non-zeros —
+//! the paper's §4 compute cut, executed. The sparse loop processes tiles in
+//! blocks of [`SparseDataflow::tile_block`] resident spectra (Alg. 1's Ps,
+//! set per executable by the engine), walking every kernel row once per
+//! block so kernel data streams `⌈P/Ps⌉` times instead of `P` times — the
+//! software analogue of the flexible dataflow's reuse choice.
 
 use std::collections::HashMap;
 use std::path::Path;
 
 use crate::err;
 use crate::fft::{fft2d_inplace, ifft2d_inplace, Complex};
+use crate::sparse::SparseLayer;
 use crate::tensor::Tensor;
 use crate::util::error::Result;
 
-use super::{ExecutableEntry, SpectralBackend, WeightId};
+use super::{ExecutableEntry, SparseDataflow, SparseWeightPlanes, SpectralBackend, WeightId};
+
+/// Cache budget for the sparse path's resident spectra, in complex slots
+/// across the per-thread `xs`+`acc` scratch (4 Mi slots ≈ 32 MB at 8 B
+/// each). The software analogue of Eq. 12's BRAM feasibility gate: the
+/// planner's Ps is honored up to this cap, so a hostile manifest can't make
+/// one worker thread allocate unbounded resident state.
+const SPARSE_RESIDENT_SLOTS: usize = 4 << 20;
 
 #[derive(Debug, Clone, Copy)]
 struct Shape {
@@ -44,10 +61,28 @@ struct WeightPlanes {
     dims: [usize; 3],
 }
 
-/// The interpreter backend: shape registry + uploaded weight planes.
+/// One uploaded layer: dense frequency-major planes or sparse CSR rows.
+enum WeightStore {
+    Dense(WeightPlanes),
+    Sparse(SparseWeightPlanes),
+}
+
+impl WeightStore {
+    fn dims(&self) -> [usize; 3] {
+        match self {
+            WeightStore::Dense(w) => w.dims,
+            WeightStore::Sparse(w) => w.dims,
+        }
+    }
+}
+
+/// The interpreter backend: shape registry + uploaded weights (dense planes
+/// or sparse CSR rows) + per-executable sparse streaming hints.
 pub struct InterpBackend {
     shapes: HashMap<String, Shape>,
-    weights: Vec<WeightPlanes>,
+    weights: Vec<WeightStore>,
+    /// Per-executable sparse streaming decision (absent ⇒ tile_block 1).
+    flows: HashMap<String, SparseDataflow>,
     /// Worker threads for the per-tile loop (1 = serial).
     threads: usize,
 }
@@ -69,9 +104,39 @@ impl InterpBackend {
         InterpBackend {
             shapes: HashMap::new(),
             weights: Vec::new(),
+            flows: HashMap::new(),
             threads: threads.max(1),
         }
     }
+}
+
+/// Split the output into `threads` contiguous tile chunks (sizes differ by
+/// at most one) and run `body(first_tile, chunk)` on each, in a scoped
+/// thread per chunk — or inline when `threads == 1`. Chunks are disjoint
+/// output slices, so there are no locks and no result reordering; the
+/// per-tile arithmetic is whatever `body` does, identically in both modes.
+fn for_tile_chunks<F>(od: &mut [f32], tile_elems: usize, t: usize, threads: usize, body: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    if threads <= 1 {
+        body(0, od);
+        return;
+    }
+    let (base, extra) = (t / threads, t % threads);
+    std::thread::scope(|scope| {
+        let mut rest = od;
+        let mut start = 0usize;
+        for ci in 0..threads {
+            let len = base + usize::from(ci < extra);
+            let (out_chunk, tail) = std::mem::take(&mut rest).split_at_mut(len * tile_elems);
+            rest = tail;
+            let first = start;
+            start += len;
+            let body = &body;
+            scope.spawn(move || body(first, out_chunk));
+        }
+    });
 }
 
 /// One tile of the spectral conv: FFT every input channel of `in_tile`
@@ -121,6 +186,79 @@ fn conv_tile(
     }
 }
 
+/// Sparse spectral conv for one contiguous chunk of tiles (`first..first +
+/// len` of the full input, `out_chunk` = that chunk's `[len, N, K²]`
+/// output). Tiles are processed in blocks of up to `block` resident
+/// spectra: FFT the block's input channels, walk every kernel's CSR row
+/// **once** across the block (the kernel value sits in registers while the
+/// `block` tiles consume it — Alg. 1's Ps-reuse, in software), then IFFT.
+///
+/// Accumulation order into each `(tile, n, fi)` slot is `(m ascending, nnz
+/// ascending)` — the same order the dense MAC uses for its non-zero terms —
+/// so results match the dense path on identical values to fp round-off of
+/// the elided zero terms, and are bit-identical across `block` sizes and
+/// thread counts.
+fn conv_tiles_sparse(
+    in_tiles: &[f32],
+    out_chunk: &mut [f32],
+    first: usize,
+    w: &SparseWeightPlanes,
+    s: Shape,
+    block: usize,
+) {
+    let (m, n, k) = (s.cin, s.cout, s.fft);
+    let f = k * k;
+    let len = out_chunk.len() / (n * f);
+    let block = block.clamp(1, len.max(1));
+    let mut xs = vec![Complex::ZERO; block * m * f];
+    let mut acc = vec![Complex::ZERO; block * n * f];
+    let mut start = 0usize;
+    while start < len {
+        let b = block.min(len - start);
+        for bi in 0..b {
+            let ti = first + start + bi;
+            let src = &in_tiles[ti * m * f..(ti + 1) * m * f];
+            for mi in 0..m {
+                let chan = &mut xs[(bi * m + mi) * f..(bi * m + mi + 1) * f];
+                for (p, &v) in chan.iter_mut().zip(&src[mi * f..(mi + 1) * f]) {
+                    *p = Complex::new(v, 0.0);
+                }
+                fft2d_inplace(chan, k);
+            }
+        }
+        for a in acc[..b * n * f].iter_mut() {
+            *a = Complex::ZERO;
+        }
+        // the sparse MAC: only the K²/α stored non-zeros are touched
+        for ni in 0..n {
+            for mi in 0..m {
+                let (idx, wre, wim) = w.row(ni, mi);
+                for ((&fi, &wr), &wi) in idx.iter().zip(wre).zip(wim) {
+                    let fi = fi as usize;
+                    for bi in 0..b {
+                        let x = xs[(bi * m + mi) * f + fi];
+                        let a = &mut acc[(bi * n + ni) * f + fi];
+                        a.re += x.re * wr - x.im * wi;
+                        a.im += x.re * wi + x.im * wr;
+                    }
+                }
+            }
+        }
+        for bi in 0..b {
+            let ti = start + bi;
+            for ni in 0..n {
+                let plane = &mut acc[(bi * n + ni) * f..(bi * n + ni + 1) * f];
+                ifft2d_inplace(plane, k);
+                let dst = &mut out_chunk[(ti * n + ni) * f..(ti * n + ni + 1) * f];
+                for (o, c) in dst.iter_mut().zip(plane.iter()) {
+                    *o = c.re;
+                }
+            }
+        }
+        start += b;
+    }
+}
+
 impl SpectralBackend for InterpBackend {
     fn name(&self) -> String {
         "interp".to_string()
@@ -147,8 +285,44 @@ impl SpectralBackend for InterpBackend {
                 im.len()
             ));
         }
-        self.weights.push(WeightPlanes { re: re.to_vec(), im: im.to_vec(), dims });
+        self.weights
+            .push(WeightStore::Dense(WeightPlanes { re: re.to_vec(), im: im.to_vec(), dims }));
         Ok(self.weights.len() - 1)
+    }
+
+    fn upload_sparse(&mut self, layer: &SparseLayer) -> Result<WeightId> {
+        if !layer.fft.is_power_of_two() {
+            return Err(err!("sparse layer FFT size {} is not a power of two", layer.fft));
+        }
+        // validate like upload_weights does: SparseLayer fields are pub, so
+        // a hand-built layer can carry out-of-plane indices that would
+        // otherwise read a neighboring channel's spectrum in the MAC
+        let k2 = layer.k2();
+        if layer.kernels.len() != layer.cout * layer.cin {
+            return Err(err!(
+                "sparse layer has {} kernels, expected {}×{}",
+                layer.kernels.len(),
+                layer.cout,
+                layer.cin
+            ));
+        }
+        for kern in &layer.kernels {
+            if kern.indices.len() != kern.values.len() {
+                return Err(err!("sparse kernel indices/values length mismatch"));
+            }
+            if let Some(&top) = kern.indices.iter().max() {
+                if top as usize >= k2 {
+                    return Err(err!("sparse kernel index {top} out of K²={k2}"));
+                }
+            }
+        }
+        self.weights.push(WeightStore::Sparse(SparseWeightPlanes::from_layer(layer)));
+        Ok(self.weights.len() - 1)
+    }
+
+    fn set_sparse_dataflow(&mut self, file: &str, flow: SparseDataflow) -> Result<()> {
+        self.flows.insert(file.to_string(), flow);
+        Ok(())
     }
 
     fn run_conv(&mut self, file: &str, tiles: &Tensor, wid: WeightId) -> Result<Tensor> {
@@ -166,14 +340,14 @@ impl SpectralBackend for InterpBackend {
                 want_in
             ));
         }
-        let w = self
+        let store = self
             .weights
             .get(wid)
             .ok_or_else(|| err!("weight handle {wid} unknown"))?;
-        if w.dims != [f, m, n] {
+        if store.dims() != [f, m, n] {
             return Err(err!(
                 "weight dims {:?} != executable dims {:?}",
-                w.dims,
+                store.dims(),
                 [f, m, n]
             ));
         }
@@ -181,48 +355,40 @@ impl SpectralBackend for InterpBackend {
         let td = tiles.data();
         let mut out = Tensor::zeros(&[t, n, k, k]);
         let od = out.data_mut();
+        // fan tiles out over scoped threads (serial when threads == 1):
+        // each chunk is a contiguous tile range with its own scratch,
+        // writing a disjoint output slice — no locks, no result reordering.
         let threads = self.threads.min(t).max(1);
-        if threads == 1 {
-            // scratch reused across tiles — no per-tile allocations on the
-            // request path: FFTs run in place on these buffers
-            let mut xs = vec![Complex::ZERO; m * f];
-            let mut acc = vec![Complex::ZERO; n * f];
-            for (ti, out_tile) in od.chunks_mut(n * f).enumerate() {
-                conv_tile(&td[ti * m * f..(ti + 1) * m * f], out_tile, w, s, &mut xs, &mut acc);
+        match store {
+            WeightStore::Dense(w) => {
+                for_tile_chunks(od, n * f, t, threads, |first, out_chunk| {
+                    // scratch reused across the chunk's tiles — no per-tile
+                    // allocations on the request path: FFTs run in place
+                    let mut xs = vec![Complex::ZERO; m * f];
+                    let mut acc = vec![Complex::ZERO; n * f];
+                    for (j, out_tile) in out_chunk.chunks_mut(n * f).enumerate() {
+                        let ti = first + j;
+                        conv_tile(
+                            &td[ti * m * f..(ti + 1) * m * f],
+                            out_tile,
+                            w,
+                            s,
+                            &mut xs,
+                            &mut acc,
+                        );
+                    }
+                });
             }
-        } else {
-            // fan tiles out over scoped threads: each thread takes a
-            // contiguous chunk of tiles, owns its scratch, and writes a
-            // disjoint slice of the output — no locks, no result reordering.
-            // Balanced partition (sizes differ by at most one) so every
-            // requested thread gets work even when `threads` ∤ `t`.
-            let (base, extra) = (t / threads, t % threads);
-            std::thread::scope(|scope| {
-                let mut rest = od;
-                let mut start = 0usize;
-                for ci in 0..threads {
-                    let len = base + usize::from(ci < extra);
-                    let (out_chunk, tail) = rest.split_at_mut(len * n * f);
-                    rest = tail;
-                    let first = start;
-                    start += len;
-                    scope.spawn(move || {
-                        let mut xs = vec![Complex::ZERO; m * f];
-                        let mut acc = vec![Complex::ZERO; n * f];
-                        for (j, out_tile) in out_chunk.chunks_mut(n * f).enumerate() {
-                            let ti = first + j;
-                            conv_tile(
-                                &td[ti * m * f..(ti + 1) * m * f],
-                                out_tile,
-                                w,
-                                s,
-                                &mut xs,
-                                &mut acc,
-                            );
-                        }
-                    });
-                }
-            });
+            WeightStore::Sparse(w) => {
+                // resident-tile block = the planner's Ps, clamped by the
+                // scratch cache budget (the Eq. 12 analogue)
+                let hinted = self.flows.get(file).map_or(1, |d| d.tile_block);
+                let cap = (SPARSE_RESIDENT_SLOTS / ((m + n) * f).max(1)).max(1);
+                let block = hinted.clamp(1, cap);
+                for_tile_chunks(od, n * f, t, threads, |first, out_chunk| {
+                    conv_tiles_sparse(td, out_chunk, first, w, s, block);
+                });
+            }
         }
         Ok(out)
     }
@@ -344,5 +510,90 @@ mod tests {
         b.prepare("x", &entry(1, 1, 1, 8), Path::new(".")).unwrap();
         b.prepare("x", &entry(1, 1, 1, 8), Path::new(".")).unwrap();
         assert_eq!(b.prepared(), 1);
+    }
+
+    #[test]
+    fn sparse_matches_dense_with_explicit_zeros() {
+        // The tentpole equivalence gate: the sparse MAC (only non-zeros
+        // touched) must equal the dense MAC over the same planes with the
+        // pruned slots as explicit zeros, at α ∈ {1, 4} (α=1 keeps every
+        // index — the degenerate all-resident pattern).
+        use crate::sparse::{prune_magnitude, prune_random};
+        forall("sparse MAC == dense-with-zeros", 8, |rng| {
+            let (t, m, n, fft) = (rng.range(1, 6), rng.range(1, 5), rng.range(1, 5), 8);
+            let alpha = [1usize, 4][rng.range(0, 2)];
+            let layer = if rng.range(0, 2) == 0 {
+                prune_magnitude(n, m, fft, alpha, rng)
+            } else {
+                prune_random(n, m, fft, alpha, rng)
+            };
+            let tiles = Tensor::randn(&[t, m, fft, fft], rng, 1.0);
+            let e = entry(t, m, n, fft);
+
+            let mut dense = InterpBackend::new();
+            dense.prepare("x", &e, Path::new(".")).unwrap();
+            let (re, im) = freq_major_planes(&layer.to_dense_planes());
+            let dw = dense.upload_weights(&re, &im, [fft * fft, m, n]).unwrap();
+            let want = dense.run_conv("x", &tiles, dw).unwrap();
+
+            let mut sparse = InterpBackend::new();
+            sparse.prepare("x", &e, Path::new(".")).unwrap();
+            let sw = sparse.upload_sparse(&layer).unwrap();
+            let got = sparse.run_conv("x", &tiles, sw).unwrap();
+
+            assert_allclose(got.data(), want.data(), 1e-5, 1e-5);
+        });
+    }
+
+    #[test]
+    fn sparse_bit_identical_across_blocks_and_threads() {
+        // Block size (the Ps analogue) and thread count partition work but
+        // never reorder per-tile arithmetic: outputs must be bit-for-bit
+        // equal in every configuration.
+        use crate::sparse::prune_magnitude;
+        let mut rng = Pcg32::new(21);
+        let (t, m, n, fft) = (7, 3, 5, 8);
+        let layer = prune_magnitude(n, m, fft, 4, &mut rng);
+        let tiles = Tensor::randn(&[t, m, fft, fft], &mut rng, 1.0);
+        let run = |threads: usize, block: usize| {
+            let mut b = InterpBackend::with_threads(threads);
+            b.prepare("x", &entry(t, m, n, fft), Path::new(".")).unwrap();
+            b.set_sparse_dataflow("x", SparseDataflow { tile_block: block }).unwrap();
+            let wid = b.upload_sparse(&layer).unwrap();
+            b.run_conv("x", &tiles, wid).unwrap()
+        };
+        let baseline = run(1, 1);
+        for threads in [1usize, 2, 3, 16] {
+            for block in [1usize, 2, 3, 7, 100] {
+                let got = run(threads, block);
+                assert_eq!(
+                    got.data(),
+                    baseline.data(),
+                    "threads={threads} block={block} diverged"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_rejects_dim_mismatch() {
+        use crate::sparse::prune_random;
+        let mut rng = Pcg32::new(6);
+        let layer = prune_random(2, 3, 8, 4, &mut rng); // dims [64, 3, 2]
+        let mut b = InterpBackend::new();
+        b.prepare("x", &entry(2, 1, 1, 8), Path::new(".")).unwrap();
+        let wid = b.upload_sparse(&layer).unwrap();
+        let tiles = Tensor::randn(&[2, 1, 8, 8], &mut rng, 1.0);
+        assert!(b.run_conv("x", &tiles, wid).is_err(), "shape mismatch must be caught");
+    }
+
+    #[test]
+    fn sparse_upload_rejects_out_of_plane_indices() {
+        use crate::sparse::prune_random;
+        let mut rng = Pcg32::new(7);
+        let mut layer = prune_random(2, 2, 8, 4, &mut rng);
+        layer.kernels[1].indices[0] = 64; // K²=64 ⇒ valid indices are 0..64
+        let mut b = InterpBackend::new();
+        assert!(b.upload_sparse(&layer).is_err(), "index ≥ K² must be rejected at upload");
     }
 }

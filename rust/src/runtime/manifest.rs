@@ -49,6 +49,10 @@ pub struct Manifest {
     pub tile: usize,
     pub word_bytes: usize,
     pub hadamard_mode: String,
+    /// Compression ratio α the artifacts were built for (paper §4: each
+    /// K×K kernel keeps K²/α non-zeros). `1` = dense — also the default
+    /// when the field is absent, so pre-α manifests keep parsing.
+    pub alpha: usize,
     pub variants: BTreeMap<String, VariantEntry>,
     pub executables: BTreeMap<String, ExecutableEntry>,
 }
@@ -133,12 +137,21 @@ impl Manifest {
                 },
             );
         }
+        // α is optional for backward compatibility: manifests written
+        // before the sparsity knob existed parse as dense (α = 1).
+        let alpha = match j.get("alpha") {
+            None => 1,
+            Some(v) => v
+                .as_usize()
+                .ok_or_else(|| err!("manifest: invalid 'alpha'"))?,
+        };
         let m = Manifest {
             fft_size: req_usize(&j, "fft_size")?,
             kernel_k: req_usize(&j, "kernel_k")?,
             tile: req_usize(&j, "tile")?,
             word_bytes: req_usize(&j, "word_bytes")?,
             hadamard_mode: req_str(&j, "hadamard_mode")?,
+            alpha,
             variants,
             executables,
         };
@@ -146,9 +159,77 @@ impl Manifest {
         Ok(m)
     }
 
+    /// Serialize back to the `manifest.json` schema — [`Manifest::parse`]'s
+    /// inverse (round-trip is exact; key order is canonicalized). Lets
+    /// tools rewrite a manifest at a different α and pins the schema in the
+    /// round-trip test.
+    pub fn to_json(&self) -> String {
+        use crate::util::json::{arr, num, obj, s, Json};
+        let variants = Json::Obj(
+            self.variants
+                .iter()
+                .map(|(name, v)| {
+                    let layers = arr(v
+                        .layers
+                        .iter()
+                        .map(|l| {
+                            obj(vec![
+                                ("name", s(&l.name)),
+                                ("cin", num(l.cin as f64)),
+                                ("cout", num(l.cout as f64)),
+                                ("h", num(l.h as f64)),
+                                ("tiles", num(l.tiles as f64)),
+                                ("pool_after", Json::Bool(l.pool_after)),
+                                ("file", s(&l.file)),
+                            ])
+                        })
+                        .collect());
+                    let body = obj(vec![
+                        ("input_hw", num(v.input_hw as f64)),
+                        ("input_c", num(v.input_c as f64)),
+                        ("fc", arr(v.fc.iter().map(|&x| num(x as f64)).collect())),
+                        ("layers", layers),
+                    ]);
+                    (name.clone(), body)
+                })
+                .collect(),
+        );
+        let executables = Json::Obj(
+            self.executables
+                .iter()
+                .map(|(file, e)| {
+                    let body = obj(vec![
+                        ("tiles", num(e.tiles as f64)),
+                        ("cin", num(e.cin as f64)),
+                        ("cout", num(e.cout as f64)),
+                        ("fft_size", num(e.fft_size as f64)),
+                        ("sha256", s(&e.sha256)),
+                        ("bytes", num(e.bytes as f64)),
+                    ]);
+                    (file.clone(), body)
+                })
+                .collect(),
+        );
+        obj(vec![
+            ("format", s("hlo-text-v1")),
+            ("fft_size", num(self.fft_size as f64)),
+            ("kernel_k", num(self.kernel_k as f64)),
+            ("tile", num(self.tile as f64)),
+            ("word_bytes", num(self.word_bytes as f64)),
+            ("hadamard_mode", s(&self.hadamard_mode)),
+            ("alpha", num(self.alpha as f64)),
+            ("variants", variants),
+            ("executables", executables),
+        ])
+        .to_string()
+    }
+
     /// Cross-checks: every layer's file exists in `executables` with a
     /// matching shape, and tile geometry is self-consistent.
     pub fn validate(&self) -> Result<()> {
+        if self.alpha == 0 {
+            return Err(err!("alpha 0 is invalid (1 = dense, >1 = pruned)"));
+        }
         if self.tile + self.kernel_k - 1 != self.fft_size {
             return Err(err!(
                 "tile {} + k {} - 1 != K {}",
@@ -183,6 +264,18 @@ impl Manifest {
             }
         }
         Ok(())
+    }
+
+    /// Resolve a CLI-style α knob against this manifest: `0` means "use
+    /// the manifest's recorded default", anything else wins as given.
+    /// (Shared by `infer` and `serve` so the sentinel semantics can't
+    /// drift between subcommands.)
+    pub fn resolve_alpha(&self, cli_alpha: usize) -> usize {
+        if cli_alpha == 0 {
+            self.alpha
+        } else {
+            cli_alpha
+        }
     }
 
     pub fn variant(&self, name: &str) -> Result<&VariantEntry> {
@@ -251,6 +344,9 @@ impl Manifest {
             tile,
             word_bytes: 2,
             hadamard_mode: "interp".to_string(),
+            // dense by default — the α knob is per engine (WeightMode), the
+            // manifest field only records what artifacts were built for
+            alpha: 1,
             variants,
             executables,
         };
@@ -311,6 +407,35 @@ mod tests {
     fn rejects_bad_format() {
         let bad = sample().replace("hlo-text-v1", "hlo-proto-v0");
         assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn alpha_absent_defaults_to_dense() {
+        // pre-α manifests (like `sample()`) must keep parsing unchanged
+        let m = Manifest::parse(&sample()).unwrap();
+        assert_eq!(m.alpha, 1);
+    }
+
+    #[test]
+    fn alpha_parses_and_zero_rejected() {
+        let with = sample().replace("\"word_bytes\": 2,", "\"word_bytes\": 2, \"alpha\": 4,");
+        assert_eq!(Manifest::parse(&with).unwrap().alpha, 4);
+        let zero = sample().replace("\"word_bytes\": 2,", "\"word_bytes\": 2, \"alpha\": 0,");
+        assert!(Manifest::parse(&zero).is_err());
+        let junk = sample().replace("\"word_bytes\": 2,", "\"word_bytes\": 2, \"alpha\": 1.5,");
+        assert!(Manifest::parse(&junk).is_err());
+    }
+
+    #[test]
+    fn json_roundtrip_is_exact() {
+        // parse(to_json(m)) == m for both a hand-written manifest with α
+        // and the synthesized builtin (α = 1, three variants, dedup'd
+        // executables) — pins the full schema, not just the new field.
+        let mut hand = Manifest::parse(&sample()).unwrap();
+        hand.alpha = 8;
+        assert_eq!(Manifest::parse(&hand.to_json()).unwrap(), hand);
+        let builtin = Manifest::builtin();
+        assert_eq!(Manifest::parse(&builtin.to_json()).unwrap(), builtin);
     }
 
     #[test]

@@ -4,7 +4,8 @@
 //! The coordinator drives one *executable* per layer shape (the manifest's
 //! dedup keys). Two backends implement that contract:
 //!
-//! * [`interp`] (default, pure Rust, zero deps) — executes the spectral
+//! * `interp` ([`InterpBackend`], the default; pure Rust, zero deps) —
+//!   executes the spectral
 //!   pipeline directly: tile FFT → frequency-major MAC against the uploaded
 //!   kernel planes → IFFT. Works with the synthesized built-in manifest, so
 //!   the whole serving stack runs offline with no artifacts at all.
@@ -19,18 +20,30 @@
 //! Both backends consume the same host-side weight layout
 //! ([`freq_major_planes`]) and the same manifest schema ([`Manifest`]),
 //! so the engine, server, examples and tests are backend-agnostic.
+//!
+//! Pruned layers additionally have a **sparse** weight form
+//! ([`SparseWeightPlanes`], CSR-like lists over the K² frequency plane):
+//! [`SpectralBackend::upload_sparse`] hands a [`crate::sparse::SparseLayer`]
+//! to the backend, which either executes it natively (interp's sparse MAC
+//! iterates only the K²/α non-zeros) or densifies transparently (the
+//! default, used by PJRT). [`SpectralBackend::set_sparse_dataflow`] threads
+//! the per-layer streaming optimum of [`crate::dataflow`] (Alg. 1) into the
+//! sparse hot loop — see [`SparseDataflow`].
 
 mod interp;
 mod manifest;
 #[cfg(feature = "pjrt")]
 mod pjrt;
+mod sparse;
 
 pub use interp::InterpBackend;
 pub use manifest::{ExecutableEntry, LayerEntry, Manifest, VariantEntry};
+pub use self::sparse::{SparseDataflow, SparseWeightPlanes};
 
 use std::path::{Path, PathBuf};
 
 use crate::err;
+use crate::sparse::SparseLayer;
 use crate::tensor::{ComplexTensor, Tensor};
 use crate::util::error::{Context, Result};
 
@@ -54,6 +67,23 @@ pub trait SpectralBackend {
     /// Upload frequency-major weight planes (layout of
     /// [`freq_major_planes`]: `[K², M, N]` re/im) and return a handle.
     fn upload_weights(&mut self, re: &[f32], im: &[f32], dims: [usize; 3]) -> Result<WeightId>;
+
+    /// Upload one pruned layer's kernels in sparse form. Backends with a
+    /// native sparse path (interp) keep the CSR lists and execute only the
+    /// K²/α non-zeros; the default implementation densifies to explicit
+    /// zeros and defers to [`Self::upload_weights`], so every backend
+    /// accepts pruned layers and all of them compute the same values.
+    fn upload_sparse(&mut self, layer: &SparseLayer) -> Result<WeightId> {
+        let (re, im) = freq_major_planes(&layer.to_dense_planes());
+        self.upload_weights(&re, &im, [layer.k2(), layer.cin, layer.cout])
+    }
+
+    /// Per-executable streaming hint for the sparse path (the Alg. 1
+    /// optimum — see [`SparseDataflow`]). No-op by default: backends that
+    /// densify have no kernel stream to block.
+    fn set_sparse_dataflow(&mut self, _file: &str, _flow: SparseDataflow) -> Result<()> {
+        Ok(())
+    }
 
     /// Execute one spectral conv: spatial input tiles `[T, Cin, K, K]` →
     /// spatial output tiles `[T, Cout, K, K]`, against weights `wid`.
@@ -209,6 +239,18 @@ impl Runtime {
     pub fn upload_weights(&mut self, re: &[f32], im: &[f32], dims: [usize; 3])
         -> Result<WeightId> {
         self.backend.upload_weights(re, im, dims)
+    }
+
+    /// Upload one pruned layer in sparse (CSR) form; backends without a
+    /// native sparse path densify transparently.
+    pub fn upload_sparse(&mut self, layer: &SparseLayer) -> Result<WeightId> {
+        self.backend.upload_sparse(layer)
+    }
+
+    /// Thread one executable's streaming decision (Alg. 1's per-layer
+    /// optimum) into the backend's sparse hot loop.
+    pub fn set_sparse_dataflow(&mut self, file: &str, flow: SparseDataflow) -> Result<()> {
+        self.backend.set_sparse_dataflow(file, flow)
     }
 
     /// Execute one spectral conv through the backend.

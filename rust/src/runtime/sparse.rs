@@ -1,0 +1,183 @@
+//! Sparse weight representation + dataflow hint for the execution path.
+//!
+//! [`crate::sparse`] generates *pruned kernels* (index patterns + values,
+//! paper §4); this module is their **runtime** form: a CSR-like layout over
+//! the K² frequency plane, one row per (output-channel, input-channel)
+//! kernel, that the backend's sparse MAC streams to touch only the K²/α
+//! non-zeros. [`SparseDataflow`] carries the per-layer streaming decision of
+//! the flexible-dataflow optimizer (paper Alg. 1 / [`crate::dataflow`]) to
+//! the backend: how many input-tile spectra stay resident while the kernel
+//! lists stream past — the executing analogue of the paper's
+//! reuse-kernels-vs-activations choice.
+
+use crate::analysis::StreamParams;
+use crate::sparse::SparseLayer;
+
+/// One layer's kernels in CSR-like form over the flattened K×K frequency
+/// plane: row `(n, m)` (output-channel-major) holds the sorted frequency
+/// indices and complex values of kernel `W[n, m]`'s non-zeros.
+///
+/// This is the layout the sparse MAC iterates — the sparse counterpart of
+/// the dense frequency-major planes
+/// ([`freq_major_planes`](super::freq_major_planes)), carrying the same
+/// values at the same frequencies with the zeros elided.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SparseWeightPlanes {
+    /// `[F, M, N]` with `F = K²` — the dense-plane dims this sparsifies.
+    pub dims: [usize; 3],
+    /// Compression ratio α the layer was pruned at (1 = nothing pruned).
+    pub alpha: usize,
+    /// Row offsets, length `N·M + 1`; row `(n, m)` lives at `n·M + m`.
+    row_ptr: Vec<usize>,
+    /// Frequency indices (`0..F`), sorted within each row.
+    idx: Vec<u32>,
+    re: Vec<f32>,
+    im: Vec<f32>,
+}
+
+impl SparseWeightPlanes {
+    /// Build the CSR form from a pruned layer (`sparse::prune_magnitude` /
+    /// `prune_random` output). Index order within a row follows the
+    /// kernel's sorted index list, so iteration order is deterministic.
+    pub fn from_layer(l: &SparseLayer) -> Self {
+        let (n, m) = (l.cout, l.cin);
+        let mut row_ptr = Vec::with_capacity(n * m + 1);
+        row_ptr.push(0usize);
+        let total: usize = l.total_nnz() as usize;
+        let mut idx = Vec::with_capacity(total);
+        let mut re = Vec::with_capacity(total);
+        let mut im = Vec::with_capacity(total);
+        for ni in 0..n {
+            for mi in 0..m {
+                let k = l.kernel(ni, mi);
+                for (&fi, &(vr, vi)) in k.indices.iter().zip(&k.values) {
+                    idx.push(fi as u32);
+                    re.push(vr);
+                    im.push(vi);
+                }
+                row_ptr.push(idx.len());
+            }
+        }
+        SparseWeightPlanes { dims: [l.k2(), m, n], alpha: l.alpha, row_ptr, idx, re, im }
+    }
+
+    /// Non-zeros of kernel `(n, m)`: (frequency indices, re, im), all the
+    /// same length. Indices are sorted ascending.
+    pub fn row(&self, n: usize, m: usize) -> (&[u32], &[f32], &[f32]) {
+        let r = n * self.dims[1] + m;
+        let (lo, hi) = (self.row_ptr[r], self.row_ptr[r + 1]);
+        (&self.idx[lo..hi], &self.re[lo..hi], &self.im[lo..hi])
+    }
+
+    /// Total stored non-zeros across the layer.
+    pub fn nnz(&self) -> usize {
+        self.idx.len()
+    }
+
+    /// Densify back to the frequency-major `[F, M, N]` (re, im) layout —
+    /// the verification bridge to the dense path (pruned slots are explicit
+    /// zeros, exactly what [`SparseLayer::to_dense_planes`] +
+    /// [`freq_major_planes`](super::freq_major_planes) produce).
+    pub fn to_freq_major(&self) -> (Vec<f32>, Vec<f32>) {
+        let [f, m, n] = self.dims;
+        let mut re = vec![0.0f32; f * m * n];
+        let mut im = vec![0.0f32; f * m * n];
+        for ni in 0..n {
+            for mi in 0..m {
+                let (idx, wre, wim) = self.row(ni, mi);
+                for ((&fi, &vr), &vi) in idx.iter().zip(wre).zip(wim) {
+                    let dst = (fi as usize * m + mi) * n + ni;
+                    re[dst] = vr;
+                    im[dst] = vi;
+                }
+            }
+        }
+        (re, im)
+    }
+}
+
+/// Per-executable streaming decision for the sparse MAC — what Alg. 1's
+/// per-layer `(Ns, Ps)` optimum means *in software*.
+///
+/// On the FPGA, `Ps` tiles stay resident while kernel groups stream from
+/// DDR; the bigger `Ps`, the fewer times each kernel is re-fetched
+/// (Eq. 13's `⌈P/Ps⌉` factor). The interp backend's analogue: keep
+/// `tile_block` input-tile *spectra* resident and walk every kernel's CSR
+/// row once per block, so a layer's kernel lists stream from memory
+/// `⌈P/tile_block⌉` times instead of `P` times. `tile_block = 1` is pure
+/// tile-major execution (kernels stream per tile — Flow #2 flavor);
+/// `tile_block = P` loads each kernel row exactly once (Flow #1 flavor).
+/// `Ns` has no software meaning — RAM imposes no kernel-residency cap, the
+/// cache-budget clamp lives in the backend (the Eq. 12 analogue).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SparseDataflow {
+    /// Input-tile spectra kept resident per kernel stream (the paper's Ps).
+    pub tile_block: usize,
+}
+
+impl Default for SparseDataflow {
+    fn default() -> Self {
+        SparseDataflow { tile_block: 1 }
+    }
+}
+
+impl SparseDataflow {
+    /// Adopt the streaming parameters a [`crate::dataflow::LayerPlan`]
+    /// chose for this layer.
+    pub fn from_stream(s: &StreamParams) -> Self {
+        SparseDataflow { tile_block: s.ps.max(1) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::freq_major_planes;
+    use crate::sparse::{prune_magnitude, prune_random};
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn csr_counts_and_rows_match_layer() {
+        let mut rng = Pcg32::new(11);
+        let l = prune_random(6, 3, 8, 4, &mut rng);
+        let w = SparseWeightPlanes::from_layer(&l);
+        assert_eq!(w.dims, [64, 3, 6]);
+        assert_eq!(w.alpha, 4);
+        assert_eq!(w.nnz() as u64, l.total_nnz());
+        for n in 0..6 {
+            for m in 0..3 {
+                let (idx, re, im) = w.row(n, m);
+                let k = l.kernel(n, m);
+                assert_eq!(idx.len(), k.nnz());
+                assert_eq!(re.len(), k.nnz());
+                assert_eq!(im.len(), k.nnz());
+                for (j, &fi) in idx.iter().enumerate() {
+                    assert_eq!(fi, k.indices[j] as u32);
+                    assert_eq!((re[j], im[j]), k.values[j]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn to_freq_major_matches_dense_conversion() {
+        // The CSR densification and the dense-plane transpose must agree
+        // bit for bit — this is the bridge the equivalence tests stand on.
+        let mut rng = Pcg32::new(12);
+        let l = prune_magnitude(5, 4, 8, 4, &mut rng);
+        let w = SparseWeightPlanes::from_layer(&l);
+        let (sre, sim) = w.to_freq_major();
+        let (dre, dim) = freq_major_planes(&l.to_dense_planes());
+        assert_eq!(sre, dre);
+        assert_eq!(sim, dim);
+    }
+
+    #[test]
+    fn dataflow_from_stream_clamps() {
+        let d = SparseDataflow::from_stream(&StreamParams { ns: 64, ps: 9 });
+        assert_eq!(d.tile_block, 9);
+        let z = SparseDataflow::from_stream(&StreamParams { ns: 64, ps: 0 });
+        assert_eq!(z.tile_block, 1);
+        assert_eq!(SparseDataflow::default().tile_block, 1);
+    }
+}

@@ -126,6 +126,22 @@ fn pool_matches_serial_bit_for_bit() {
 }
 
 #[test]
+fn dense_alpha1_mode_serves() {
+    // α threading: `WeightMode::from_alpha(1)` must select the dense MAC
+    // and serve normally — the CLI's `--alpha 1` path.
+    let server = Server::start(ServerConfig {
+        mode: WeightMode::from_alpha(1),
+        ..demo_config(2)
+    })
+    .expect("dense server");
+    let client = server.client();
+    let mut rng = Pcg32::new(17);
+    let r = client.infer(Tensor::randn(&[1, 16, 16], &mut rng, 1.0)).unwrap();
+    assert_eq!(r.logits.len(), 10);
+    server.shutdown().unwrap();
+}
+
+#[test]
 fn pool_survives_bad_inputs_and_keeps_counting() {
     let pool = Server::start(ServerConfig { workers: 2, ..demo_config(1) }).expect("pool");
     let client = pool.client();

@@ -67,6 +67,48 @@ fn forward_deterministic_and_shaped() {
 }
 
 #[test]
+fn pruned_engine_conv_matches_dense_plane_reference() {
+    // The sparse execution gate at engine level: a Pruned engine uploads
+    // CSR kernels and runs the sparse MAC; pushing the *same* spectral
+    // planes (pruned slots as explicit zeros) through a dense upload must
+    // produce the same layer output. This pins the whole sparse path —
+    // CSR build, dataflow hint, blocked MAC — against the dense semantics.
+    use spectral_flow::fft::{im2tiles, overlap_add, TileGeometry};
+    use spectral_flow::nn;
+    use spectral_flow::runtime::{
+        freq_major_planes, ExecutableEntry, InterpBackend, SpectralBackend,
+    };
+
+    let mut engine =
+        InferenceEngine::new(&artifacts_dir(), "demo", WeightMode::Pruned { alpha: 4 }, 99)
+            .unwrap();
+    let planes = engine.weights.convs[0].spectral.clone();
+    let bias = engine.weights.convs[0].bias.clone();
+    let img = engine.synthetic_image(2);
+    let got = engine.conv_layer(0, &img).unwrap();
+
+    let geo = TileGeometry::new(16, 8, 3);
+    let tiles = im2tiles(&img, &geo);
+    let entry = ExecutableEntry {
+        tiles: geo.num_tiles(),
+        cin: 1,
+        cout: 8,
+        fft_size: 8,
+        sha256: "ref".into(),
+        bytes: 0,
+    };
+    let mut b = InterpBackend::new();
+    b.prepare("ref", &entry, std::path::Path::new(".")).unwrap();
+    let (re, im) = freq_major_planes(&planes);
+    let wid = b.upload_weights(&re, &im, [64, 1, 8]).unwrap();
+    let out_tiles = b.run_conv("ref", &tiles, wid).unwrap();
+    let mut want = overlap_add(&out_tiles, &geo, 8);
+    nn::add_bias(&mut want, &bias);
+    nn::relu(&mut want);
+    assert_allclose(got.data(), want.data(), 1e-4, 1e-4);
+}
+
+#[test]
 fn forward_rejects_bad_shapes() {
     let mut engine = InferenceEngine::new(&artifacts_dir(), "demo", WeightMode::Dense, 7).unwrap();
     let bad = spectral_flow::tensor::Tensor::zeros(&[1, 8, 8]);
