@@ -11,7 +11,7 @@
 use spectral_flow::model::Network;
 use spectral_flow::report::{fmt_pct, Table};
 use spectral_flow::schedule::tables::compile_tables;
-use spectral_flow::schedule::{schedule_exact_cover, Scheduler};
+use spectral_flow::schedule::{sampled_layer_utilization, schedule_exact_cover, Scheduler};
 use spectral_flow::sim::execute_tables;
 use spectral_flow::sparse::{prune_magnitude, prune_random, SparseLayer};
 use spectral_flow::util::cli::Args;
@@ -20,18 +20,12 @@ use spectral_flow::util::rng::Pcg32;
 
 const N_PAR: usize = 64;
 
+/// Sampling seed: historical value, keeps regenerated figures comparable.
+const SAMPLE_SEED: u64 = 77;
+
 /// MAC-weighted average PE utilization of one scheduler over a layer.
 fn layer_utilization(sparse: &SparseLayer, sch: Scheduler, r: usize, samples: usize) -> f64 {
-    let total = sparse.num_groups(N_PAR) * sparse.cin;
-    let picks = Pcg32::new(77).sample_indices(total, samples.min(total));
-    let (mut reads, mut slots) = (0u64, 0u64);
-    for p in picks {
-        let (g, m) = (p / sparse.cin, p % sparse.cin);
-        let s = sch.run(&sparse.group_indices(g, N_PAR, m), r, p as u64);
-        reads += s.total_reads() as u64;
-        slots += (s.cycles() * N_PAR.min(s.num_kernels)) as u64;
-    }
-    reads as f64 / slots as f64
+    sampled_layer_utilization(sparse, sch, N_PAR, r, samples, SAMPLE_SEED)
 }
 
 /// Sparse layers for one (α, pattern) setting, generated once per sweep.

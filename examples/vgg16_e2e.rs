@@ -18,6 +18,7 @@ use spectral_flow::coordinator::{
     BatcherConfig, InferenceEngine, Server, ServerConfig, WeightMode,
 };
 use spectral_flow::runtime::BackendKind;
+use spectral_flow::schedule::SchedulePolicy;
 use spectral_flow::tensor::Tensor;
 use spectral_flow::util::cli::Args;
 use spectral_flow::util::error::Result;
@@ -31,19 +32,26 @@ fn main() -> Result<()> {
     let workers = args.opt_usize("workers", 1, "executor workers (one engine each)");
     let threads = args.opt_usize("backend-threads", 1, "interp per-tile threads per engine");
     let alpha = args.opt_usize("alpha", 4, "compression ratio α (≤1 = dense, >1 = sparse path)");
+    let scheduler_name = args.opt(
+        "scheduler",
+        "exact-cover",
+        "sparse access scheduler (exact-cover|lowest-index|off)",
+    );
     let skip_224 = args.opt_bool("skip-224", "skip the single-image 224x224 run");
     args.maybe_help("vgg16_e2e: batched serving + single-image latency through the backend");
     let mode = WeightMode::from_alpha(alpha);
+    let scheduler = SchedulePolicy::parse(&scheduler_name)?;
 
     println!("spectral-flow end-to-end driver");
     println!("===============================\n");
 
     // ---- Phase 1: batched serving on the CIFAR-scale VGG16 ---------------
     println!(
-        "[1/2] serving {requests} requests ({variant}, α={} → {}, batch ≤ {batch}, \
-         {workers} worker(s) × {threads} backend thread(s))",
+        "[1/2] serving {requests} requests ({variant}, α={} → {}, scheduler {}, \
+         batch ≤ {batch}, {workers} worker(s) × {threads} backend thread(s))",
         mode.alpha(),
-        if mode.alpha() > 1 { "sparse CSR MAC" } else { "dense MAC" }
+        if mode.alpha() > 1 { "sparse CSR MAC" } else { "dense MAC" },
+        scheduler.label(),
     );
     let cfg = ServerConfig {
         artifacts_dir: "artifacts".into(),
@@ -56,6 +64,7 @@ fn main() -> Result<()> {
         },
         backend: BackendKind::Interp { threads },
         workers,
+        scheduler,
     };
     let t0 = Instant::now();
     let server = Server::start(cfg)?;
@@ -73,9 +82,11 @@ fn main() -> Result<()> {
         pending.push(client.infer_async(img)?);
     }
     let mut ok = 0usize;
+    let mut pe_util: Option<f64> = None;
     for rx in pending {
         let resp = rx.recv()??;
         assert_eq!(resp.logits.len(), 10);
+        pe_util = pe_util.or(resp.pe_utilization);
         ok += 1;
     }
     let wall = t1.elapsed();
@@ -91,13 +102,28 @@ fn main() -> Result<()> {
         m.p50().unwrap_or_default(),
         m.p95().unwrap_or_default()
     );
+    if let Some(u) = pe_util {
+        println!("  schedule PE utilization (responses): {:.1}%", 100.0 * u);
+    }
+    if let Some(s) = &m.schedule {
+        for line in s.report_layers().lines() {
+            println!("  sched {line}");
+        }
+    }
     server.shutdown()?;
 
     // ---- Phase 2: single-image 224×224 latency (Table 3's workload) ------
     if !skip_224 {
         println!("\n[2/2] single-image VGG16-224 forward (the paper's latency workload)");
         let t2 = Instant::now();
-        let mut engine = InferenceEngine::new("artifacts", "vgg16-224", mode, 7)?;
+        let mut engine = InferenceEngine::new_with_opts(
+            "artifacts",
+            "vgg16-224",
+            mode,
+            7,
+            BackendKind::Interp { threads },
+            scheduler,
+        )?;
         println!("  engine up in {:?} (13 conv layers)", t2.elapsed());
         let img = engine.synthetic_image(1);
         // warm once (first-touch allocations), then measure.

@@ -4,8 +4,14 @@ Hypothesis sweeps shapes; fixed cases pin the paper's operating points
 (K=8 → F=64, VGG channel widths).
 """
 
-import numpy as np
 import pytest
+
+# optional deps — skip the module (not fail) when absent
+pytest.importorskip("numpy", reason="optional dep: numpy")
+pytest.importorskip("hypothesis", reason="optional dep: hypothesis")
+pytest.importorskip("jax", reason="optional dep: jax")
+
+import numpy as np
 from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp

@@ -3,8 +3,14 @@ IFFT + OaA) equals spatial 'SAME' convolution, and the variant registry is
 self-consistent with the Rust coordinator's expectations.
 """
 
-import numpy as np
 import pytest
+
+# optional deps — skip the module (not fail) when absent
+pytest.importorskip("numpy", reason="optional dep: numpy")
+pytest.importorskip("hypothesis", reason="optional dep: hypothesis")
+pytest.importorskip("jax", reason="optional dep: jax")
+
+import numpy as np
 from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp

@@ -15,6 +15,7 @@ use spectral_flow::coordinator::{
     BatcherConfig, InferenceEngine, Server, ServerConfig, WeightMode,
 };
 use spectral_flow::runtime::BackendKind;
+use spectral_flow::schedule::SchedulePolicy;
 use spectral_flow::tensor::Tensor;
 use spectral_flow::util::bench::{quick_requested, Bench};
 use spectral_flow::util::rng::Pcg32;
@@ -39,20 +40,37 @@ fn main() {
     b.run("e2e/cifar_conv1_1", || cifar.conv_layer(0, &cimg).unwrap().len());
     b.run("e2e/cifar_vgg16_forward", || cifar.forward(&cimg).unwrap().len());
 
-    // ---- α sweep: dense vs sparse execution ------------------------------
-    // The compression→latency story of Table 3: α=1 runs the dense
-    // frequency-major MAC, α>1 uploads CSR kernels and runs the sparse MAC
-    // (K²/α non-zeros touched). Runs in quick mode too, so CI's
-    // BENCH_QUICK=1 artifact records dense-vs-sparse latency per commit.
+    // ---- α sweep: dense vs unscheduled-sparse vs scheduled-sparse --------
+    // The compression→latency story of Table 3, now with the Alg. 2 axis:
+    // α=1 runs the dense frequency-major MAC; α>1 uploads CSR kernels and
+    // runs the sparse MAC either in storage order (`_alphaN`, scheduler
+    // off — the PR 3 path and the historical bench name) or in exact-cover
+    // schedule order (`_alphaN_scheduled`). Runs in quick mode too, so
+    // CI's BENCH_QUICK=1 artifact records the full sweep per commit and
+    // the bench-regression gate watches all three execution modes.
     for alpha in [1usize, 4, 8] {
-        let mut e = InferenceEngine::new(
-            "artifacts",
-            "vgg16-cifar",
-            WeightMode::from_alpha(alpha),
-            7,
-        )
-        .expect("cifar engine (alpha sweep)");
-        b.run(&format!("e2e/cifar_forward_alpha{alpha}"), || e.forward(&cimg).unwrap().len());
+        let policies: &[(SchedulePolicy, &str)] = if alpha == 1 {
+            &[(SchedulePolicy::Off, "")] // dense: no sparse walk to schedule
+        } else {
+            &[(SchedulePolicy::Off, ""), (SchedulePolicy::ExactCover, "_scheduled")]
+        };
+        for &(policy, suffix) in policies {
+            let mut e = InferenceEngine::new_with_opts(
+                "artifacts",
+                "vgg16-cifar",
+                WeightMode::from_alpha(alpha),
+                7,
+                BackendKind::default(),
+                policy,
+            )
+            .expect("cifar engine (alpha sweep)");
+            b.run(&format!("e2e/cifar_forward_alpha{alpha}{suffix}"), || {
+                e.forward(&cimg).unwrap().len()
+            });
+            if let Some(sm) = e.schedule_metrics() {
+                println!("  {}", sm.report());
+            }
+        }
     }
 
     // ---- MAC microbench: sparse vs dense on identical values -------------
@@ -91,10 +109,35 @@ fn main() {
         sparse.set_sparse_dataflow("x", SparseDataflow { tile_block: t }).unwrap();
         let sw = sparse.upload_sparse(&layer).expect("upload sparse");
 
+        // third contender: the same CSR upload executed in Alg. 2 schedule
+        // order through the banked weight store
+        use spectral_flow::runtime::SparseWeightPlanes;
+        use spectral_flow::schedule::{LayerSchedule, DEFAULT_WEIGHT_BANKS};
+        let mut sched = InterpBackend::new();
+        sched.prepare("x", &e, dir).expect("prepare scheduled");
+        sched.set_sparse_dataflow("x", SparseDataflow { tile_block: t }).unwrap();
+        let cw = sched.upload_sparse(&layer).expect("upload scheduled");
+        let planes = SparseWeightPlanes::from_layer(&layer);
+        let plan = LayerSchedule::build(
+            &planes,
+            64,
+            10,
+            DEFAULT_WEIGHT_BANKS,
+            SchedulePolicy::ExactCover,
+        )
+        .expect("plan");
+        sched.set_schedule(cw, &plan).unwrap();
+
         let want = dense.run_conv("x", &tiles, dw).unwrap();
         let got = sparse.run_conv("x", &tiles, sw).unwrap();
         let diff = got.max_abs_diff(&want);
         assert!(diff < 1e-4, "sparse MAC diverged from dense-with-zeros: {diff}");
+        let got_sched = sched.run_conv("x", &tiles, cw).unwrap();
+        assert_eq!(
+            got_sched.data(),
+            got.data(),
+            "scheduled MAC must be bit-identical to the unscheduled sparse MAC"
+        );
 
         let md = b
             .run("e2e/mac_dense_t16_c128", || dense.run_conv("x", &tiles, dw).unwrap().len())
@@ -104,9 +147,17 @@ fn main() {
                 sparse.run_conv("x", &tiles, sw).unwrap().len()
             })
             .mean_ns;
+        let mc = b
+            .run(&format!("e2e/mac_scheduled_alpha{alpha}_t16_c128"), || {
+                sched.run_conv("x", &tiles, cw).unwrap().len()
+            })
+            .mean_ns;
         println!(
-            "mac sparse α={alpha} vs dense: {:.2}× faster, max |err| = {diff:.2e}",
-            md / ms
+            "mac sparse α={alpha} vs dense: {:.2}× faster (scheduled {:.2}×), \
+             max |err| = {diff:.2e}, plan util {}",
+            md / ms,
+            md / mc,
+            spectral_flow::report::fmt_pct(plan.stats.pe_utilization()),
         );
     }
 

@@ -8,24 +8,19 @@
 
 use spectral_flow::model::Network;
 use spectral_flow::report::{fmt_pct, Table};
-use spectral_flow::schedule::Scheduler;
+use spectral_flow::schedule::{sampled_layer_utilization, Scheduler};
 use spectral_flow::sparse::{prune_magnitude, prune_random, SparseLayer};
 use spectral_flow::util::bench::{quick_requested, Bench};
 use spectral_flow::util::rng::Pcg32;
 
 const N_PAR: usize = 64;
 
+/// Sampling seed: kept at the historical value so regenerated figures stay
+/// comparable run over run.
+const SAMPLE_SEED: u64 = 7;
+
 fn layer_util(sparse: &SparseLayer, sch: Scheduler, r: usize, samples: usize) -> f64 {
-    let total = sparse.num_groups(N_PAR) * sparse.cin;
-    let picks = Pcg32::new(7).sample_indices(total, samples.min(total));
-    let (mut reads, mut slots) = (0u64, 0u64);
-    for p in picks {
-        let (g, m) = (p / sparse.cin, p % sparse.cin);
-        let s = sch.run(&sparse.group_indices(g, N_PAR, m), r, p as u64);
-        reads += s.total_reads() as u64;
-        slots += (s.cycles() * N_PAR.min(s.num_kernels)) as u64;
-    }
-    reads as f64 / slots as f64
+    sampled_layer_utilization(sparse, sch, N_PAR, r, samples, SAMPLE_SEED)
 }
 
 /// Sparse layers for one (α, pattern) setting — generated once and reused

@@ -21,14 +21,17 @@
 //! those never outlive the call. Weight generation is a pure function of
 //! `(variant, mode, seed)`, so pool replicas are bit-identical.
 
+use super::metrics::{LayerScheduleMetrics, ScheduleMetrics};
 use crate::analysis::{ArchParams, LayerParams};
 use crate::dataflow::{optimize_layer, OptimizerConfig};
 use crate::err;
 use crate::fft::{im2tiles, overlap_add, spectral_kernels, TileGeometry};
 use crate::nn;
 use crate::runtime::{
-    freq_major_planes, BackendKind, LayerEntry, Runtime, SparseDataflow, VariantEntry, WeightId,
+    freq_major_planes, BackendKind, LayerEntry, Runtime, SparseDataflow, SparseWeightPlanes,
+    VariantEntry, WeightId,
 };
+use crate::schedule::{LayerSchedule, SchedulePolicy, DEFAULT_WEIGHT_BANKS};
 use crate::sparse::{prune_magnitude, SparseLayer};
 use crate::tensor::{ComplexTensor, Tensor};
 use crate::util::error::Result;
@@ -165,6 +168,10 @@ pub struct InferenceEngine {
     weight_ids: Vec<WeightId>,
     kernel_k: usize,
     fft: usize,
+    /// Scheduling policy the sparse layers execute under.
+    scheduler: SchedulePolicy,
+    /// Static per-layer scheduling quality (None when dense or `Off`).
+    schedule_metrics: Option<ScheduleMetrics>,
 }
 
 impl InferenceEngine {
@@ -179,13 +186,27 @@ impl InferenceEngine {
         Self::new_with(artifacts_dir, variant, mode, seed, BackendKind::default())
     }
 
-    /// Build an engine on an explicit backend.
+    /// Build an engine on an explicit backend with the default scheduling
+    /// policy (Alg. 2 exact cover — the serving default).
     pub fn new_with(
         artifacts_dir: &str,
         variant: &str,
         mode: WeightMode,
         seed: u64,
         backend: BackendKind,
+    ) -> Result<Self> {
+        Self::new_with_opts(artifacts_dir, variant, mode, seed, backend, SchedulePolicy::default())
+    }
+
+    /// Build an engine with an explicit backend *and* scheduling policy
+    /// (`--scheduler {exact-cover,lowest-index,off}` on the CLI).
+    pub fn new_with_opts(
+        artifacts_dir: &str,
+        variant: &str,
+        mode: WeightMode,
+        seed: u64,
+        backend: BackendKind,
+        scheduler: SchedulePolicy,
     ) -> Result<Self> {
         let mut runtime = Runtime::open_with(artifacts_dir, backend)?;
         let v = runtime.manifest.variant(variant)?.clone();
@@ -194,7 +215,9 @@ impl InferenceEngine {
         runtime.warm_variant(variant)?;
         let weights = Weights::generate(&v, fft, k, mode, seed);
         let tile = runtime.manifest.tile;
+        let arch = ArchParams::paper();
         let mut weight_ids = Vec::with_capacity(v.layers.len());
+        let mut sched_layers = Vec::new();
         for (l, w) in v.layers.iter().zip(&weights.convs) {
             let wid = match &w.sparse {
                 // Pruned layers upload in CSR form, and Alg. 1's per-layer
@@ -206,7 +229,33 @@ impl InferenceEngine {
                 Some(sp) => {
                     runtime
                         .set_sparse_dataflow(&l.file, sparse_dataflow_for(l, fft, tile, sp.alpha))?;
-                    runtime.upload_sparse(sp)?
+                    let wid = runtime.upload_sparse(sp)?;
+                    // Alg. 2: plan every (group, channel) instance at the
+                    // paper's architecture point and execute in schedule
+                    // order. Keyed by the weight handle — schedules belong
+                    // to a non-zero pattern, not to the shape-deduped
+                    // executable (two layers may share `l.file`).
+                    let planes = SparseWeightPlanes::from_layer(sp);
+                    if let Some(plan) = LayerSchedule::build(
+                        &planes,
+                        arch.n_par,
+                        arch.replicas,
+                        DEFAULT_WEIGHT_BANKS,
+                        scheduler,
+                    ) {
+                        // only publish metrics when the backend will really
+                        // execute the plan — a densifying backend (PJRT)
+                        // returns false, and reporting exact-cover quality
+                        // for an execution that never happens would lie to
+                        // every dashboard downstream
+                        if runtime.set_schedule(wid, &plan)? {
+                            sched_layers.push(LayerScheduleMetrics {
+                                layer: l.name.clone(),
+                                stats: plan.stats,
+                            });
+                        }
+                    }
+                    wid
                 }
                 // Dense layers keep the frequency-major [F, M, N] planes —
                 // computed once here instead of per request.
@@ -217,6 +266,11 @@ impl InferenceEngine {
             };
             weight_ids.push(wid);
         }
+        let schedule_metrics = if sched_layers.is_empty() {
+            None
+        } else {
+            Some(ScheduleMetrics { scheduler: scheduler.label().to_string(), layers: sched_layers })
+        };
         Ok(InferenceEngine {
             runtime,
             variant_name: variant.to_string(),
@@ -225,6 +279,8 @@ impl InferenceEngine {
             weight_ids,
             kernel_k: k,
             fft,
+            scheduler,
+            schedule_metrics,
         })
     }
 
@@ -235,6 +291,18 @@ impl InferenceEngine {
     /// Backend/platform name serving this engine.
     pub fn backend_name(&self) -> String {
         self.runtime.platform()
+    }
+
+    /// The scheduling policy the sparse layers execute under.
+    pub fn scheduler(&self) -> SchedulePolicy {
+        self.scheduler
+    }
+
+    /// Per-layer Alg. 2 scheduling quality (PE utilization, cycles vs lower
+    /// bound, simulated bank conflicts). `None` when the engine serves
+    /// dense weights or was built with [`SchedulePolicy::Off`].
+    pub fn schedule_metrics(&self) -> Option<&ScheduleMetrics> {
+        self.schedule_metrics.as_ref()
     }
 
     /// Run one conv layer through the backend (the "FPGA" side).

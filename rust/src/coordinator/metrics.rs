@@ -1,10 +1,90 @@
-//! Serving metrics: latency distribution + throughput.
+//! Serving metrics: latency distribution + throughput, plus the static
+//! per-layer scheduling quality of the engine's Alg. 2 access plans.
 //!
 //! Each executor worker owns one [`Metrics`] (thread-confined, like its
 //! engine); the server merges the per-worker accumulators into one
-//! [`PoolMetrics`] snapshot on demand.
+//! [`PoolMetrics`] snapshot on demand. Scheduling metrics
+//! ([`ScheduleMetrics`]) are computed once at engine startup — they are a
+//! property of the weights + scheduler, not of traffic — and ride along in
+//! every snapshot so serving dashboards see PE utilization,
+//! cycles-vs-lower-bound, and simulated bank conflicts next to latency.
 
 use std::time::Duration;
+
+use crate::report::fmt_pct;
+use crate::schedule::ScheduleStats;
+
+/// One conv layer's scheduling quality (static, from
+/// [`crate::schedule::LayerSchedule`] at engine startup).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerScheduleMetrics {
+    /// Manifest layer name (e.g. `conv5_3`).
+    pub layer: String,
+    /// Aggregate cycles / lower bound / reads / bank conflicts.
+    pub stats: ScheduleStats,
+}
+
+/// Engine-wide scheduling metrics: one entry per pruned conv layer.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ScheduleMetrics {
+    /// Scheduler label ([`crate::schedule::SchedulePolicy::label`]).
+    pub scheduler: String,
+    pub layers: Vec<LayerScheduleMetrics>,
+}
+
+impl ScheduleMetrics {
+    /// Read-weighted network PE utilization (paper Eq. 14 across layers).
+    pub fn avg_pe_utilization(&self) -> f64 {
+        let reads: u64 = self.layers.iter().map(|l| l.stats.reads).sum();
+        let slots: u64 = self.layers.iter().map(|l| l.stats.slots).sum();
+        if slots == 0 {
+            return 1.0;
+        }
+        reads as f64 / slots as f64
+    }
+
+    pub fn total_cycles(&self) -> u64 {
+        self.layers.iter().map(|l| l.stats.cycles).sum()
+    }
+
+    pub fn total_lower_bound(&self) -> u64 {
+        self.layers.iter().map(|l| l.stats.lower_bound).sum()
+    }
+
+    pub fn total_bank_conflicts(&self) -> u64 {
+        self.layers.iter().map(|l| l.stats.bank_conflicts).sum()
+    }
+
+    /// One summary line (appended to the latency report).
+    pub fn report(&self) -> String {
+        let lb = self.total_lower_bound().max(1);
+        format!(
+            "sched[{}]: PE util {} cycles {} (lb {}, x{:.3}) bank-conflicts {}",
+            self.scheduler,
+            fmt_pct(self.avg_pe_utilization()),
+            self.total_cycles(),
+            self.total_lower_bound(),
+            self.total_cycles() as f64 / lb as f64,
+            self.total_bank_conflicts(),
+        )
+    }
+
+    /// Per-layer breakdown, one line per layer.
+    pub fn report_layers(&self) -> String {
+        let mut out = String::new();
+        for l in &self.layers {
+            out.push_str(&format!(
+                "{}: util {} cycles {} lb {} conflicts {}\n",
+                l.layer,
+                fmt_pct(l.stats.pe_utilization()),
+                l.stats.cycles,
+                l.stats.lower_bound,
+                l.stats.bank_conflicts,
+            ));
+        }
+        out
+    }
+}
 
 /// Latency/throughput accumulator (single-threaded; each executor worker
 /// owns one and snapshots it on demand).
@@ -15,6 +95,9 @@ pub struct Metrics {
     batch_sizes: u64,
     started: Option<std::time::Instant>,
     finished: Option<std::time::Instant>,
+    /// Static scheduling quality of the worker's engine (None when serving
+    /// dense weights or `--scheduler off`).
+    pub schedule: Option<ScheduleMetrics>,
 }
 
 impl Metrics {
@@ -43,6 +126,11 @@ impl Metrics {
         self.latencies_us.extend_from_slice(&other.latencies_us);
         self.batches += other.batches;
         self.batch_sizes += other.batch_sizes;
+        // schedule metrics are identical across pool replicas (same weights
+        // + scheduler per config), so the first snapshot wins
+        if self.schedule.is_none() {
+            self.schedule = other.schedule.clone();
+        }
         self.started = match (self.started, other.started) {
             (Some(a), Some(b)) => Some(a.min(b)),
             (a, b) => a.or(b),
@@ -106,7 +194,7 @@ impl Metrics {
     }
 
     pub fn report(&self) -> String {
-        format!(
+        let mut line = format!(
             "n={} mean={:?} p50={:?} p95={:?} p99={:?} batch={:.1} thpt={:.1}/s",
             self.count(),
             self.mean().unwrap_or_default(),
@@ -115,7 +203,11 @@ impl Metrics {
             self.p99().unwrap_or_default(),
             self.mean_batch_size(),
             self.throughput(),
-        )
+        );
+        if let Some(s) = &self.schedule {
+            line.push_str(&format!(" | {}", s.report()));
+        }
+        line
     }
 }
 
@@ -195,6 +287,51 @@ mod tests {
         assert_eq!(snap.merged.p50().unwrap(), Duration::from_micros(200));
         assert_eq!(snap.per_worker.len(), 2);
         assert!(snap.report().contains("worker 1"));
+    }
+
+    #[test]
+    fn schedule_metrics_aggregate_and_merge() {
+        let sched = ScheduleMetrics {
+            scheduler: "exact-cover".into(),
+            layers: vec![
+                LayerScheduleMetrics {
+                    layer: "conv1".into(),
+                    stats: ScheduleStats {
+                        cycles: 20,
+                        lower_bound: 16,
+                        reads: 64,
+                        slots: 80,
+                        bank_conflicts: 3,
+                    },
+                },
+                LayerScheduleMetrics {
+                    layer: "conv2".into(),
+                    stats: ScheduleStats {
+                        cycles: 10,
+                        lower_bound: 10,
+                        reads: 40,
+                        slots: 40,
+                        bank_conflicts: 0,
+                    },
+                },
+            ],
+        };
+        assert!((sched.avg_pe_utilization() - 104.0 / 120.0).abs() < 1e-12);
+        assert_eq!(sched.total_cycles(), 30);
+        assert_eq!(sched.total_lower_bound(), 26);
+        assert_eq!(sched.total_bank_conflicts(), 3);
+        assert!(sched.report().contains("exact-cover"));
+        assert!(sched.report_layers().contains("conv2"));
+
+        // merge: first Some wins, and the merged report carries it
+        let mut a = Metrics::new();
+        a.schedule = Some(sched.clone());
+        a.record_request(Duration::from_micros(10));
+        let mut b = Metrics::new();
+        b.record_request(Duration::from_micros(20));
+        let snap = PoolMetrics::from_workers(vec![b, a]);
+        assert_eq!(snap.merged.schedule.as_ref().unwrap(), &sched);
+        assert!(snap.report().contains("sched[exact-cover]"));
     }
 
     #[test]

@@ -25,5 +25,5 @@ pub mod server;
 
 pub use batcher::{Batcher, BatcherConfig};
 pub use engine::{InferenceEngine, WeightMode, Weights};
-pub use metrics::{Metrics, PoolMetrics};
-pub use server::{Client, Server, ServerConfig};
+pub use metrics::{LayerScheduleMetrics, Metrics, PoolMetrics, ScheduleMetrics};
+pub use server::{Client, Response, Server, ServerConfig};

@@ -26,6 +26,7 @@ use super::engine::{InferenceEngine, WeightMode};
 use super::metrics::{Metrics, PoolMetrics};
 use crate::err;
 use crate::runtime::BackendKind;
+use crate::schedule::SchedulePolicy;
 use crate::tensor::Tensor;
 use crate::util::error::Result;
 
@@ -46,6 +47,9 @@ pub struct ServerConfig {
     pub backend: BackendKind,
     /// Number of executor workers, each owning its own engine (0 acts as 1).
     pub workers: usize,
+    /// Alg. 2 access-scheduling policy for the sparse layers (exact cover
+    /// by default; `Off` reproduces the unscheduled PR 3 walk bit for bit).
+    pub scheduler: SchedulePolicy,
 }
 
 impl Default for ServerConfig {
@@ -58,6 +62,7 @@ impl Default for ServerConfig {
             batcher: BatcherConfig::default(),
             backend: BackendKind::default(),
             workers: 1,
+            scheduler: SchedulePolicy::default(),
         }
     }
 }
@@ -76,6 +81,9 @@ pub struct Response {
     pub batch_size: usize,
     /// Which pool worker executed the request.
     pub worker: usize,
+    /// Network PE utilization of the engine's Alg. 2 schedules (static per
+    /// engine; `None` when serving dense weights or `--scheduler off`).
+    pub pe_utilization: Option<f64>,
 }
 
 enum Msg {
@@ -219,12 +227,13 @@ fn worker_loop(
     ready: mpsc::Sender<Result<()>>,
     load: Arc<AtomicUsize>,
 ) -> Result<()> {
-    let mut engine = match InferenceEngine::new_with(
+    let mut engine = match InferenceEngine::new_with_opts(
         &cfg.artifacts_dir,
         &cfg.variant,
         cfg.mode,
         cfg.seed,
         cfg.backend,
+        cfg.scheduler,
     ) {
         Ok(e) => {
             let _ = ready.send(Ok(()));
@@ -240,6 +249,10 @@ fn worker_loop(
     // of blocking on senders parked in still-alive workers.
     drop(ready);
     let mut metrics = Metrics::new();
+    // static per-engine scheduling quality: snapshot once, ride along in
+    // every metrics merge and response
+    metrics.schedule = engine.schedule_metrics().cloned();
+    let pe_util = metrics.schedule.as_ref().map(|s| s.avg_pe_utilization());
     while let Ok(msg) = rx.recv() {
         match msg {
             WorkerMsg::Batch(batch) => {
@@ -249,7 +262,13 @@ fn worker_loop(
                     let result = engine.forward(&req.image).map(|logits| {
                         let latency = req.submitted.elapsed();
                         metrics.record_request(latency);
-                        Response { logits, latency, batch_size: size, worker: id }
+                        Response {
+                            logits,
+                            latency,
+                            batch_size: size,
+                            worker: id,
+                            pe_utilization: pe_util,
+                        }
                     });
                     let _ = req.reply.send(result);
                     load.fetch_sub(1, Ordering::Relaxed);

@@ -13,7 +13,8 @@ use spectral_flow::err;
 use spectral_flow::model::Network;
 use spectral_flow::report::{fmt_bytes, fmt_gbps, fmt_ms, fmt_pct, Table};
 use spectral_flow::runtime::BackendKind;
-use spectral_flow::schedule::Scheduler;
+use spectral_flow::schedule::{sampled_layer_utilization, SchedulePolicy, Scheduler};
+use spectral_flow::util::bench::{compare_benches, read_json_artifact};
 use spectral_flow::sim::baselines::{run_baseline, sparse_spatial_17_latency, BaselineConfig};
 use spectral_flow::sim::{estimate_resources, SimConfig};
 use spectral_flow::sparse::prune_magnitude;
@@ -40,7 +41,7 @@ fn parse_backend(name: &str, threads: usize) -> Result<BackendKind> {
 
 const ABOUT: &str = "spectral-flow — flexible-dataflow sparse spectral CNN accelerator \
 (FPGA '20 reproduction)\n\n\
-Usage: spectral-flow <analyze|optimize|schedule|simulate|infer|serve> [--help]";
+Usage: spectral-flow <analyze|optimize|schedule|simulate|infer|serve|bench-check> [--help]";
 
 fn main() -> Result<()> {
     let args = Args::from_env();
@@ -52,6 +53,7 @@ fn main() -> Result<()> {
         "simulate" => simulate(args),
         "infer" => infer(args),
         "serve" => serve(args),
+        "bench-check" => bench_check(args),
         _ => {
             args.maybe_help(ABOUT);
             println!("{ABOUT}");
@@ -144,23 +146,65 @@ fn schedule(mut args: Args) -> Result<()> {
         let sparse = prune_magnitude(conv.cout, conv.cin, conv.fft, alpha, &mut rng);
         let mut cells = vec![conv.name.clone()];
         for sch in Scheduler::ALL {
-            let total = sparse.num_groups(n_par) * sparse.cin;
-            let k = samples.min(total);
-            let picks = Pcg32::new(1).sample_indices(total, k);
-            let (mut reads, mut slots) = (0u64, 0u64);
-            for p in picks {
-                let (g, m) = (p / sparse.cin, p % sparse.cin);
-                let kernels = sparse.group_indices(g, n_par, m);
-                let s = sch.run(&kernels, replicas, p as u64);
-                reads += s.total_reads() as u64;
-                slots += (s.cycles() * n_par) as u64;
-            }
-            cells.push(fmt_pct(reads as f64 / slots as f64));
+            cells.push(fmt_pct(sampled_layer_utilization(
+                &sparse, sch, n_par, replicas, samples, 1,
+            )));
         }
         t.row(cells);
     }
     println!("{}", t.render());
     Ok(())
+}
+
+/// CI's bench-regression gate: compare a fresh `BENCH_*.json` against the
+/// committed baseline by median latency and fail on regressions.
+fn bench_check(mut args: Args) -> Result<()> {
+    let baseline = args.opt(
+        "baseline",
+        "rust/benches/baseline/BENCH_e2e.json",
+        "committed baseline artifact",
+    );
+    let current = args.opt("current", "rust/reports/BENCH_e2e.json", "freshly generated artifact");
+    let threshold_pct = args.opt_f64("threshold-pct", 25.0, "max allowed median regression");
+    let min_us = args.opt_f64("min-us", 50.0, "ignore benches with baseline median below this");
+    let absolute = args.opt_bool(
+        "absolute",
+        "compare raw medians (same-host); default divides out the host-speed factor",
+    );
+    let strict = args.opt_bool("strict", "enforce the gate even on a desk-estimate baseline");
+    args.maybe_help("bench-check: fail when current bench medians regress vs the baseline");
+    let base = read_json_artifact(&baseline)?;
+    let cur = read_json_artifact(&current)?;
+    let cmp = compare_benches(
+        &base.results,
+        &cur.results,
+        threshold_pct / 100.0,
+        min_us * 1e3,
+        !absolute,
+    );
+    print!("{}", cmp.report());
+    if cmp.rows.is_empty() {
+        return Err(err!("no comparable benches between {baseline} and {current}"));
+    }
+    let regs = cmp.regressions();
+    if regs.is_empty() {
+        println!("bench-check OK");
+        return Ok(());
+    }
+    if !base.is_measured() && !strict {
+        // the committed baseline is a desk estimate: report, don't gate —
+        // refresh it from a real run (README "Bench-regression gate") to arm
+        println!(
+            "bench-check: {} regression(s) vs a desk-estimate baseline — warning only; \
+             refresh the baseline to arm the gate",
+            regs.len()
+        );
+        return Ok(());
+    }
+    Err(err!(
+        "{} bench(es) regressed more than {threshold_pct}% vs {baseline}",
+        regs.len()
+    ))
 }
 
 /// Table 3: device-comparison rows via the cycle simulator.
@@ -214,7 +258,13 @@ fn serve(mut args: Args) -> Result<()> {
     let threads = args.opt_usize("backend-threads", 1, "interp per-tile threads per engine");
     let backend_name = args.opt("backend", "interp", "spectral backend (interp|pjrt)");
     let alpha = args.opt_usize("alpha", 0, "compression ratio α (0 = manifest default, 1 = dense)");
+    let scheduler_name = args.opt(
+        "scheduler",
+        "exact-cover",
+        "sparse access scheduler (exact-cover|lowest-index|off)",
+    );
     let backend = parse_backend(&backend_name, threads)?;
+    let scheduler = SchedulePolicy::parse(&scheduler_name)?;
     args.maybe_help("serve: run the batching server pool on synthetic traffic");
     // Manifest-only read to shape the synthetic requests and resolve the α
     // default: always use the cheap interp backend here — the server worker
@@ -222,7 +272,11 @@ fn serve(mut args: Args) -> Result<()> {
     let m = spectral_flow::runtime::Runtime::open(&artifacts)?;
     let vdesc = m.manifest.variant(&variant)?.clone();
     let mode = WeightMode::from_alpha(m.manifest.resolve_alpha(alpha));
-    println!("serving {variant} at α={} ({mode:?})", mode.alpha());
+    println!(
+        "serving {variant} at α={} ({mode:?}), scheduler {}",
+        mode.alpha(),
+        scheduler.label()
+    );
     let server = Server::start(ServerConfig {
         artifacts_dir: artifacts.clone(),
         variant: variant.clone(),
@@ -234,6 +288,7 @@ fn serve(mut args: Args) -> Result<()> {
         },
         backend,
         workers,
+        scheduler,
     })?;
     let client = server.client();
     let mut rng = Pcg32::new(123);
@@ -265,7 +320,13 @@ fn infer(mut args: Args) -> Result<()> {
     let alpha = args.opt_usize("alpha", 0, "compression ratio α (0 = manifest default, 1 = dense)");
     let threads = args.opt_usize("backend-threads", 1, "interp per-tile threads");
     let backend_name = args.opt("backend", "interp", "spectral backend (interp|pjrt)");
+    let scheduler_name = args.opt(
+        "scheduler",
+        "exact-cover",
+        "sparse access scheduler (exact-cover|lowest-index|off)",
+    );
     let backend = parse_backend(&backend_name, threads)?;
+    let scheduler = SchedulePolicy::parse(&scheduler_name)?;
     args.maybe_help("infer: single-image forward pass through the spectral backend");
     // one extra (cheap) manifest read: the engine re-opens internally, but
     // the mode must be known before the engine can be constructed
@@ -273,14 +334,35 @@ fn infer(mut args: Args) -> Result<()> {
         spectral_flow::runtime::Runtime::open(&artifacts)?.manifest.resolve_alpha(alpha),
     );
     let t0 = std::time::Instant::now();
-    let mut engine = InferenceEngine::new_with(&artifacts, &variant, mode, 7, backend)?;
+    let mut engine =
+        InferenceEngine::new_with_opts(&artifacts, &variant, mode, 7, backend, scheduler)?;
     println!(
-        "engine up in {:?} ({} layers, backend {}, α={})",
+        "engine up in {:?} ({} layers, backend {}, α={}, scheduler {})",
         t0.elapsed(),
         engine.variant.layers.len(),
         engine.backend_name(),
-        mode.alpha()
+        mode.alpha(),
+        engine.scheduler().label(),
     );
+    if let Some(sm) = engine.schedule_metrics() {
+        // Alg. 2 plan quality: per-layer PE utilization, cycles vs the
+        // information-theoretic lower bound, simulated bank conflicts
+        let mut t = Table::new(
+            &format!("Schedule quality ({})", sm.scheduler),
+            &["layer", "PE util", "cycles", "lower bound", "bank conflicts"],
+        );
+        for l in &sm.layers {
+            t.row(vec![
+                l.layer.clone(),
+                fmt_pct(l.stats.pe_utilization()),
+                l.stats.cycles.to_string(),
+                l.stats.lower_bound.to_string(),
+                l.stats.bank_conflicts.to_string(),
+            ]);
+        }
+        println!("{}", t.render());
+        println!("{}", sm.report());
+    }
     let img = engine.synthetic_image(1);
     let t1 = std::time::Instant::now();
     let logits = engine.forward(&img)?;

@@ -27,12 +27,21 @@
 //! set per executable by the engine), walking every kernel row once per
 //! block so kernel data streams `⌈P/Ps⌉` times instead of `P` times — the
 //! software analogue of the flexible dataflow's reuse choice.
+//!
+//! When the engine additionally attaches an Alg. 2 access plan
+//! ([`SpectralBackend::set_schedule`]), the sparse MAC runs
+//! **schedule-driven**: the layer's weights are compiled into a banked
+//! store (`B` banks over the K² plane) and the walk follows the plan's
+//! conflict-free cycle-sets instead of CSR storage order — bit-identical to
+//! the unscheduled walk (see `conv_tiles_scheduled`), so scheduling is a
+//! pure loop-order/metrics change, never a numerics change.
 
 use std::collections::HashMap;
 use std::path::Path;
 
 use crate::err;
 use crate::fft::{fft2d_inplace, ifft2d_inplace, Complex};
+use crate::schedule::LayerSchedule;
 use crate::sparse::SparseLayer;
 use crate::tensor::Tensor;
 use crate::util::error::Result;
@@ -76,13 +85,112 @@ impl WeightStore {
     }
 }
 
+/// One (kernel-group, input-channel) scheduling instance compiled to a flat
+/// read stream: entries in cycle order, weights resolved to (bank, slot)
+/// locations in the layer's banked store.
+struct ScheduledStream {
+    /// Entry offsets per cycle-set (`len = cycles + 1`): the scheduled MAC
+    /// walks [`crate::schedule::Schedule`] cycles through these bounds.
+    cycle_ptr: Vec<u32>,
+    /// Global output channel n per entry.
+    chan: Vec<u16>,
+    /// Flattened frequency index per entry.
+    fi: Vec<u16>,
+    /// Weight location: bank id (`fi mod B`) + slot within that bank.
+    bank: Vec<u16>,
+    slot: Vec<u32>,
+}
+
+/// A sparse layer compiled against its [`LayerSchedule`]: the software
+/// analogue of Fig. 6's INDEX/VALUE hand-off. Weights live in `B` bank
+/// arrays over the K² frequency plane (`bank(f) = f mod B`); each cycle-set
+/// issues its reads bank-major, so at most one read hits a bank per beat —
+/// conflicts the plan counted ([`crate::schedule::ScheduleStats`]) are
+/// exactly the extra beats this layout would need in hardware. Execution
+/// order is channel-serial (M' = 1, §5.1) then schedule order, which keeps
+/// every accumulator slot's contribution order identical to the unscheduled
+/// CSR walk — see [`conv_tiles_scheduled`].
+struct BankedWeights {
+    cin: usize,
+    num_groups: usize,
+    bank_re: Vec<Vec<f32>>,
+    bank_im: Vec<Vec<f32>>,
+    /// `streams[g · cin + m]`.
+    streams: Vec<ScheduledStream>,
+}
+
+/// Compile a layer plan + CSR rows into the banked form, validating that
+/// the plan really covers these weights (the engine builds plans from the
+/// same upload, but the backend must not trust that).
+fn compile_schedule(plan: &LayerSchedule, w: &SparseWeightPlanes) -> Result<BankedWeights> {
+    plan.validate(w)
+        .map_err(|e| err!("schedule does not match sparse weights: {e}"))?;
+    let banks = plan.banks.max(1);
+    let cin = plan.cin;
+    let num_groups = plan.num_groups();
+    let mut bank_re: Vec<Vec<f32>> = vec![Vec::new(); banks];
+    let mut bank_im: Vec<Vec<f32>> = vec![Vec::new(); banks];
+    let mut streams = Vec::with_capacity(num_groups * cin);
+    let mut total = 0usize;
+    for g in 0..num_groups {
+        for m in 0..cin {
+            let sched = plan.group(g, m);
+            let mut st = ScheduledStream {
+                cycle_ptr: Vec::with_capacity(sched.cycles() + 1),
+                chan: Vec::new(),
+                fi: Vec::new(),
+                bank: Vec::new(),
+                slot: Vec::new(),
+            };
+            st.cycle_ptr.push(0);
+            for set in &sched.sets {
+                // bank-major issue order within the cycle (≤ 1 read per
+                // bank per beat); numerically free — each accumulator slot
+                // receives exactly one contribution per input channel
+                let mut reads: Vec<(usize, u16, u16)> = set
+                    .reads
+                    .iter()
+                    .map(|&(k, i)| (i as usize % banks, k, i))
+                    .collect();
+                reads.sort_unstable();
+                for (b, k, i) in reads {
+                    let n = g * plan.n_par + k as usize;
+                    let (idx, wre, wim) = w.row(n, m);
+                    let pos = idx
+                        .binary_search(&(i as u32))
+                        .map_err(|_| err!("scheduled index {i} not in row ({n},{m})"))?;
+                    st.chan.push(n as u16);
+                    st.fi.push(i);
+                    st.bank.push(b as u16);
+                    st.slot.push(bank_re[b].len() as u32);
+                    bank_re[b].push(wre[pos]);
+                    bank_im[b].push(wim[pos]);
+                    total += 1;
+                }
+                st.cycle_ptr.push(st.chan.len() as u32);
+            }
+            streams.push(st);
+        }
+    }
+    if total != w.nnz() {
+        return Err(err!(
+            "schedule covers {total} reads, weights hold {} non-zeros",
+            w.nnz()
+        ));
+    }
+    Ok(BankedWeights { cin, num_groups, bank_re, bank_im, streams })
+}
+
 /// The interpreter backend: shape registry + uploaded weights (dense planes
-/// or sparse CSR rows) + per-executable sparse streaming hints.
+/// or sparse CSR rows) + per-executable sparse streaming hints + compiled
+/// per-upload access schedules.
 pub struct InterpBackend {
     shapes: HashMap<String, Shape>,
     weights: Vec<WeightStore>,
     /// Per-executable sparse streaming decision (absent ⇒ tile_block 1).
     flows: HashMap<String, SparseDataflow>,
+    /// Per-upload compiled schedule (absent ⇒ unscheduled CSR walk).
+    scheduled: HashMap<WeightId, BankedWeights>,
     /// Worker threads for the per-tile loop (1 = serial).
     threads: usize,
 }
@@ -105,6 +213,7 @@ impl InterpBackend {
             shapes: HashMap::new(),
             weights: Vec::new(),
             flows: HashMap::new(),
+            scheduled: HashMap::new(),
             threads: threads.max(1),
         }
     }
@@ -206,6 +315,91 @@ fn conv_tiles_sparse(
     s: Shape,
     block: usize,
 ) {
+    let (m, n) = (s.cin, s.cout);
+    let f = s.fft * s.fft;
+    for_sparse_blocks(in_tiles, out_chunk, first, s, block, |xs, acc, b| {
+        // the sparse MAC: only the K²/α stored non-zeros are touched
+        for ni in 0..n {
+            for mi in 0..m {
+                let (idx, wre, wim) = w.row(ni, mi);
+                for ((&fi, &wr), &wi) in idx.iter().zip(wre).zip(wim) {
+                    let fi = fi as usize;
+                    for bi in 0..b {
+                        let x = xs[(bi * m + mi) * f + fi];
+                        let a = &mut acc[(bi * n + ni) * f + fi];
+                        a.re += x.re * wr - x.im * wi;
+                        a.im += x.re * wi + x.im * wr;
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// Schedule-driven sparse conv for one chunk of tiles: same block frame as
+/// [`conv_tiles_sparse`], but the MAC walks the compiled
+/// [`LayerSchedule`] cycles — input channels serial (M' = 1), then each
+/// kernel group's cycle-sets in order, each cycle issuing its reads
+/// bank-major from the banked weight store into per-PE partial sums.
+///
+/// **Bit-identity argument** (the tentpole's correctness gate): a given
+/// accumulator slot `(tile, n, fi)` receives exactly one contribution per
+/// input channel `m` (row indices are distinct; the schedule covers every
+/// edge exactly once), and both walks process channels in ascending order —
+/// the row walk in its inner `mi` loop, this walk in its outer `mi` loop.
+/// Identical f32 products summed in an identical per-slot order, inside the
+/// identical FFT/IFFT block frame ⇒ outputs equal the unscheduled path bit
+/// for bit, for every scheduler, block size, and thread count.
+fn conv_tiles_scheduled(
+    in_tiles: &[f32],
+    out_chunk: &mut [f32],
+    first: usize,
+    bw: &BankedWeights,
+    s: Shape,
+    block: usize,
+) {
+    let (m, n) = (s.cin, s.cout);
+    let f = s.fft * s.fft;
+    for_sparse_blocks(in_tiles, out_chunk, first, s, block, |xs, acc, b| {
+        for mi in 0..bw.cin {
+            for g in 0..bw.num_groups {
+                let st = &bw.streams[g * bw.cin + mi];
+                for c in 0..st.cycle_ptr.len() - 1 {
+                    for e in st.cycle_ptr[c] as usize..st.cycle_ptr[c + 1] as usize {
+                        let ni = st.chan[e] as usize;
+                        let fi = st.fi[e] as usize;
+                        let (bk, sl) = (st.bank[e] as usize, st.slot[e] as usize);
+                        let (wr, wi) = (bw.bank_re[bk][sl], bw.bank_im[bk][sl]);
+                        for bi in 0..b {
+                            let x = xs[(bi * m + mi) * f + fi];
+                            let a = &mut acc[(bi * n + ni) * f + fi];
+                            a.re += x.re * wr - x.im * wi;
+                            a.im += x.re * wi + x.im * wr;
+                        }
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// Shared block frame of the sparse paths: process the chunk's tiles in
+/// blocks of up to `block` resident spectra — FFT the block's input
+/// channels into `xs`, run `mac(xs, acc, b)` to fill the block's output
+/// spectra, then IFFT into the chunk. Keeping the frame in one place
+/// guarantees the scheduled and unscheduled MACs see byte-identical inputs
+/// and write through identical drains, so the only thing that can differ
+/// between them is the MAC walk itself.
+fn for_sparse_blocks<F>(
+    in_tiles: &[f32],
+    out_chunk: &mut [f32],
+    first: usize,
+    s: Shape,
+    block: usize,
+    mut mac: F,
+) where
+    F: FnMut(&[Complex], &mut [Complex], usize),
+{
     let (m, n, k) = (s.cin, s.cout, s.fft);
     let f = k * k;
     let len = out_chunk.len() / (n * f);
@@ -229,21 +423,7 @@ fn conv_tiles_sparse(
         for a in acc[..b * n * f].iter_mut() {
             *a = Complex::ZERO;
         }
-        // the sparse MAC: only the K²/α stored non-zeros are touched
-        for ni in 0..n {
-            for mi in 0..m {
-                let (idx, wre, wim) = w.row(ni, mi);
-                for ((&fi, &wr), &wi) in idx.iter().zip(wre).zip(wim) {
-                    let fi = fi as usize;
-                    for bi in 0..b {
-                        let x = xs[(bi * m + mi) * f + fi];
-                        let a = &mut acc[(bi * n + ni) * f + fi];
-                        a.re += x.re * wr - x.im * wi;
-                        a.im += x.re * wi + x.im * wr;
-                    }
-                }
-            }
-        }
+        mac(&xs, &mut acc, b);
         for bi in 0..b {
             let ti = start + bi;
             for ni in 0..n {
@@ -325,6 +505,24 @@ impl SpectralBackend for InterpBackend {
         Ok(())
     }
 
+    fn set_schedule(&mut self, wid: WeightId, plan: &LayerSchedule) -> Result<bool> {
+        let store = self
+            .weights
+            .get(wid)
+            .ok_or_else(|| err!("weight handle {wid} unknown"))?;
+        let w = match store {
+            WeightStore::Sparse(w) => w,
+            WeightStore::Dense(_) => {
+                return Err(err!("set_schedule needs a sparse upload (weight {wid} is dense)"))
+            }
+        };
+        // compile eagerly: plan/weight mismatches surface at startup, and
+        // the request path stays allocation- and validation-free
+        let compiled = compile_schedule(plan, w)?;
+        self.scheduled.insert(wid, compiled);
+        Ok(true)
+    }
+
     fn run_conv(&mut self, file: &str, tiles: &Tensor, wid: WeightId) -> Result<Tensor> {
         let s = *self
             .shapes
@@ -385,9 +583,20 @@ impl SpectralBackend for InterpBackend {
                 let hinted = self.flows.get(file).map_or(1, |d| d.tile_block);
                 let cap = (SPARSE_RESIDENT_SLOTS / ((m + n) * f).max(1)).max(1);
                 let block = hinted.clamp(1, cap);
-                for_tile_chunks(od, n * f, t, threads, |first, out_chunk| {
-                    conv_tiles_sparse(td, out_chunk, first, w, s, block);
-                });
+                match self.scheduled.get(&wid) {
+                    // schedule-driven walk (Alg. 2 order, banked weights)
+                    Some(bw) => {
+                        for_tile_chunks(od, n * f, t, threads, |first, out_chunk| {
+                            conv_tiles_scheduled(td, out_chunk, first, bw, s, block);
+                        });
+                    }
+                    // unscheduled CSR storage-order walk (PR 3 path)
+                    None => {
+                        for_tile_chunks(od, n * f, t, threads, |first, out_chunk| {
+                            conv_tiles_sparse(td, out_chunk, first, w, s, block);
+                        });
+                    }
+                }
             }
         }
         Ok(out)
@@ -573,6 +782,76 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn scheduled_bit_identical_to_unscheduled_sparse() {
+        // THE tentpole gate: executing in Alg. 2 schedule order (either
+        // policy) must reproduce the storage-order sparse walk bit for bit,
+        // across block sizes and thread counts.
+        use crate::schedule::SchedulePolicy;
+        use crate::sparse::{prune_magnitude, prune_random};
+        forall("scheduled == unscheduled", 6, |rng| {
+            let (t, m, n, fft) = (rng.range(1, 6), rng.range(1, 5), rng.range(2, 7), 8);
+            let alpha = [2usize, 4][rng.range(0, 2)];
+            let layer = if rng.range(0, 2) == 0 {
+                prune_magnitude(n, m, fft, alpha, rng)
+            } else {
+                prune_random(n, m, fft, alpha, rng)
+            };
+            let tiles = Tensor::randn(&[t, m, fft, fft], rng, 1.0);
+            let e = entry(t, m, n, fft);
+            let planes = SparseWeightPlanes::from_layer(&layer);
+            let run = |policy: Option<SchedulePolicy>, threads: usize, block: usize| {
+                let mut b = InterpBackend::with_threads(threads);
+                b.prepare("x", &e, Path::new(".")).unwrap();
+                b.set_sparse_dataflow("x", SparseDataflow { tile_block: block }).unwrap();
+                let wid = b.upload_sparse(&layer).unwrap();
+                if let Some(p) = policy {
+                    let plan =
+                        crate::schedule::LayerSchedule::build(&planes, 4, 3, 8, p).unwrap();
+                    b.set_schedule(wid, &plan).unwrap();
+                }
+                b.run_conv("x", &tiles, wid).unwrap()
+            };
+            let baseline = run(None, 1, 1);
+            for policy in [SchedulePolicy::ExactCover, SchedulePolicy::LowestIndex] {
+                for (threads, block) in [(1, 1), (2, 3), (3, 100)] {
+                    let got = run(Some(policy), threads, block);
+                    assert_eq!(
+                        got.data(),
+                        baseline.data(),
+                        "{policy:?} threads={threads} block={block} diverged"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn set_schedule_rejects_dense_and_foreign_plans() {
+        use crate::schedule::{LayerSchedule, SchedulePolicy};
+        use crate::sparse::prune_random;
+        let mut rng = Pcg32::new(40);
+        let layer = prune_random(4, 2, 8, 4, &mut rng);
+        let other = prune_random(4, 2, 8, 4, &mut rng);
+        let planes = SparseWeightPlanes::from_layer(&layer);
+        let foreign = SparseWeightPlanes::from_layer(&other);
+        let plan = LayerSchedule::build(&planes, 4, 3, 8, SchedulePolicy::ExactCover).unwrap();
+        let bad = LayerSchedule::build(&foreign, 4, 3, 8, SchedulePolicy::ExactCover).unwrap();
+
+        let mut b = InterpBackend::new();
+        b.prepare("x", &entry(2, 2, 4, 8), Path::new(".")).unwrap();
+        let wid = b.upload_sparse(&layer).unwrap();
+        // plan built from different weights must be rejected at attach time
+        assert!(b.set_schedule(wid, &bad).is_err());
+        // unknown handle / dense upload rejected
+        assert!(b.set_schedule(wid + 7, &plan).is_err());
+        let (re, im) = freq_major_planes(&layer.to_dense_planes());
+        let dense = b.upload_weights(&re, &im, [64, 2, 4]).unwrap();
+        assert!(b.set_schedule(dense, &plan).is_err());
+        // and the good plan attaches cleanly, reporting native execution
+        assert!(b.set_schedule(wid, &plan).unwrap());
     }
 
     #[test]

@@ -43,6 +43,7 @@ pub use self::sparse::{SparseDataflow, SparseWeightPlanes};
 use std::path::{Path, PathBuf};
 
 use crate::err;
+use crate::schedule::LayerSchedule;
 use crate::sparse::SparseLayer;
 use crate::tensor::{ComplexTensor, Tensor};
 use crate::util::error::{Context, Result};
@@ -83,6 +84,19 @@ pub trait SpectralBackend {
     /// densify have no kernel stream to block.
     fn set_sparse_dataflow(&mut self, _file: &str, _flow: SparseDataflow) -> Result<()> {
         Ok(())
+    }
+
+    /// Attach an Alg. 2 conflict-free access plan to a sparse weight
+    /// upload: backends with a scheduled MAC (interp) compile it into their
+    /// banked weight store, execute the layer in schedule order, and return
+    /// `true`. Keyed by [`WeightId`] — not by executable file — because a
+    /// schedule is a property of one layer's *non-zero pattern*, and
+    /// shape-deduped executables are shared across layers with different
+    /// patterns. Default: `Ok(false)` — densifying backends (PJRT) have no
+    /// sparse walk to reorder, and the `false` tells the engine NOT to
+    /// publish schedule metrics for an execution that never happens.
+    fn set_schedule(&mut self, _wid: WeightId, _plan: &LayerSchedule) -> Result<bool> {
+        Ok(false)
     }
 
     /// Execute one spectral conv: spatial input tiles `[T, Cin, K, K]` →
@@ -251,6 +265,13 @@ impl Runtime {
     /// optimum) into the backend's sparse hot loop.
     pub fn set_sparse_dataflow(&mut self, file: &str, flow: SparseDataflow) -> Result<()> {
         self.backend.set_sparse_dataflow(file, flow)
+    }
+
+    /// Attach an Alg. 2 access plan to a sparse upload. Returns whether the
+    /// backend will actually execute it (see
+    /// [`SpectralBackend::set_schedule`]).
+    pub fn set_schedule(&mut self, wid: WeightId, plan: &LayerSchedule) -> Result<bool> {
+        self.backend.set_schedule(wid, plan)
     }
 
     /// Execute one spectral conv through the backend.

@@ -74,6 +74,35 @@ impl SparseWeightPlanes {
         self.idx.len()
     }
 
+    /// Kernel groups over the output-channel axis, `⌈N / n_par⌉` of them —
+    /// the scheduling granularity (paper §5.3: N' kernels in parallel).
+    pub fn num_groups(&self, n_par: usize) -> usize {
+        self.dims[2].div_ceil(n_par.max(1))
+    }
+
+    /// Index sets of one scheduling instance: the ≤ `n_par` CSR rows
+    /// `{(n, m)}` for `n ∈ [group·n_par, ..)` at fixed input channel `m` —
+    /// the [`crate::schedule`] adapter. Mirrors
+    /// [`crate::sparse::SparseLayer::group_indices`] but reads the runtime
+    /// CSR form, so the serving path schedules exactly the rows its MAC
+    /// will stream (frequency indices fit `u16`: K ≤ 16 ⇒ K² ≤ 256).
+    pub fn group_indices(&self, group: usize, n_par: usize, m: usize) -> Vec<Vec<u16>> {
+        let [_, _, n] = self.dims;
+        let start = group * n_par;
+        let end = (start + n_par).min(n);
+        (start..end)
+            .map(|ni| {
+                let (idx, _, _) = self.row(ni, m);
+                idx.iter()
+                    .map(|&fi| {
+                        debug_assert!(fi <= u16::MAX as u32);
+                        fi as u16
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
     /// Densify back to the frequency-major `[F, M, N]` (re, im) layout —
     /// the verification bridge to the dense path (pruned slots are explicit
     /// zeros, exactly what [`SparseLayer::to_dense_planes`] +
@@ -170,6 +199,24 @@ mod tests {
         let (dre, dim) = freq_major_planes(&l.to_dense_planes());
         assert_eq!(sre, dre);
         assert_eq!(sim, dim);
+    }
+
+    #[test]
+    fn group_indices_match_layer_groups() {
+        // The runtime CSR adapter must produce exactly the scheduling
+        // instances the offline SparseLayer view produces — the scheduler
+        // sees the same groups whichever side builds them.
+        let mut rng = Pcg32::new(13);
+        let l = prune_random(20, 3, 8, 4, &mut rng);
+        let w = SparseWeightPlanes::from_layer(&l);
+        assert_eq!(w.num_groups(8), l.num_groups(8));
+        for g in 0..w.num_groups(8) {
+            for m in 0..3 {
+                assert_eq!(w.group_indices(g, 8, m), l.group_indices(g, 8, m));
+            }
+        }
+        // ragged last group: 20 rows over n_par=8 ⇒ sizes 8, 8, 4
+        assert_eq!(w.group_indices(2, 8, 0).len(), 4);
     }
 
     #[test]

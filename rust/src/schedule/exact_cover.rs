@@ -325,6 +325,31 @@ fn select_indices(res: &Residual, r: usize) -> Vec<u16> {
     chosen
 }
 
+/// Work estimate for scheduling one group with [`schedule_exact_cover`]:
+/// every emitted cycle scans the live index nodes against the kernel masks,
+/// so total cost scales like `edges × kernels` word operations. The serving
+/// path compares this against a budget *before* scheduling (the software
+/// stand-in for "exact cover timed out") and falls back to the
+/// lowest-index-first baseline when a group would blow it.
+pub fn exact_cover_work(kernels: &[Vec<u16>]) -> u64 {
+    let edges: u64 = kernels.iter().map(|k| k.len() as u64).sum();
+    edges * kernels.len() as u64
+}
+
+/// Budgeted front-end for [`schedule_exact_cover`]: returns `None` (caller
+/// falls back to a cheaper scheduler) when [`exact_cover_work`] exceeds
+/// `max_work`, instead of spending unbounded startup time on a huge group.
+pub fn schedule_exact_cover_budgeted(
+    kernels: &[Vec<u16>],
+    replicas: usize,
+    max_work: u64,
+) -> Option<Schedule> {
+    if exact_cover_work(kernels) > max_work {
+        return None;
+    }
+    Some(schedule_exact_cover(kernels, replicas))
+}
+
 /// Paper Alg. 2: greedy approximate exact cover.
 ///
 /// `kernels[k]` = sorted non-zero indices of kernel `k`. Returns a schedule
@@ -471,6 +496,19 @@ mod tests {
         let a = schedule_exact_cover(&kernels, 8);
         let b = schedule_exact_cover(&kernels, 8);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn budgeted_falls_back_only_over_budget() {
+        let mut rng = Pcg32::new(11);
+        let kernels = random_group(&mut rng, 16, 64, 8);
+        let work = exact_cover_work(&kernels);
+        assert_eq!(work, 16 * 8 * 16);
+        // under budget: same schedule as the unbudgeted entry
+        let s = schedule_exact_cover_budgeted(&kernels, 8, work).unwrap();
+        assert_eq!(s, schedule_exact_cover(&kernels, 8));
+        // over budget: signals the caller to fall back
+        assert!(schedule_exact_cover_budgeted(&kernels, 8, work - 1).is_none());
     }
 
     #[test]

@@ -19,7 +19,13 @@ pub mod exact_cover;
 pub mod tables;
 
 pub use baselines::{schedule_lowest_index, schedule_random};
-pub use exact_cover::schedule_exact_cover;
+pub use exact_cover::{exact_cover_work, schedule_exact_cover, schedule_exact_cover_budgeted};
+pub use tables::{LayerSchedule, ScheduleStats, DEFAULT_WEIGHT_BANKS};
+
+use crate::err;
+use crate::sparse::SparseLayer;
+use crate::util::error::Result;
+use crate::util::rng::Pcg32;
 
 /// One read cycle: the (kernel, index) pairs served together.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -154,6 +160,111 @@ impl Scheduler {
     }
 }
 
+/// Sampled MAC-weighted PE utilization of one scheduler over a pruned
+/// layer's kernel groups (the Fig. 8/9/10 measurement). Samples
+/// `samples.min(total)` of the layer's `num_groups × cin` scheduling
+/// instances with a `seed`-derived pick set; per-instance scheduler seed is
+/// the instance id, so runs are reproducible across callers.
+///
+/// This is the one shared implementation behind the `schedule` CLI
+/// subcommand, `bench_scheduling`, and `scheduler_demo` — they used to carry
+/// three copies of this loop. One deliberate behavior change rode along:
+/// the slot denominator is `cycles · min(n_par, group kernels)` (the bench
+/// copies' form), not the CLI copy's old `cycles · n_par` — lanes that
+/// don't exist in a ragged last group no longer count as idle, so the CLI
+/// now reports slightly *higher* utilization for layers whose cout is not
+/// a multiple of N'.
+pub fn sampled_layer_utilization(
+    layer: &SparseLayer,
+    sch: Scheduler,
+    n_par: usize,
+    replicas: usize,
+    samples: usize,
+    seed: u64,
+) -> f64 {
+    let total = layer.num_groups(n_par) * layer.cin;
+    let picks = Pcg32::new(seed).sample_indices(total, samples.min(total));
+    let (mut reads, mut slots) = (0u64, 0u64);
+    for p in picks {
+        let (g, m) = (p / layer.cin, p % layer.cin);
+        let s = sch.run(&layer.group_indices(g, n_par, m), replicas, p as u64);
+        reads += s.total_reads() as u64;
+        slots += (s.cycles() * n_par.min(s.num_kernels)) as u64;
+    }
+    if slots == 0 {
+        return 1.0;
+    }
+    reads as f64 / slots as f64
+}
+
+/// Work budget above which [`SchedulePolicy::ExactCover`] falls back to
+/// lowest-index-first for a group (see [`exact_cover_work`]). Paper-scale
+/// groups (64 kernels × 16 nnz ⇒ 64Ki work units) sit ~3 orders of
+/// magnitude below this; the budget only trips on degenerate manifests.
+pub const EXACT_COVER_WORK_BUDGET: u64 = 1 << 26;
+
+/// Execution-facing scheduling policy — what the serving path runs, as
+/// opposed to [`Scheduler`], which the figure benches sweep (it adds the
+/// paper's `random` comparator, never wanted in serving). CLI surface:
+/// `--scheduler {exact-cover,lowest-index,off}` on `infer`/`serve`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SchedulePolicy {
+    /// Alg. 2 exact cover, with lowest-index fallback on trivial or
+    /// over-budget groups. The serving default.
+    #[default]
+    ExactCover,
+    /// Lowest-index-first everywhere ([16]'s scheme).
+    LowestIndex,
+    /// No scheduling: the sparse MAC walks CSR rows in storage order
+    /// (PR 3 behavior).
+    Off,
+}
+
+impl SchedulePolicy {
+    pub const ALL: [SchedulePolicy; 3] =
+        [SchedulePolicy::ExactCover, SchedulePolicy::LowestIndex, SchedulePolicy::Off];
+
+    /// Parse the CLI spelling. The single constructor every selection site
+    /// (CLI flags, engine startup, benches) goes through.
+    pub fn parse(name: &str) -> Result<SchedulePolicy> {
+        match name {
+            "exact-cover" | "ec" => Ok(SchedulePolicy::ExactCover),
+            "lowest-index" | "li" => Ok(SchedulePolicy::LowestIndex),
+            "off" | "none" => Ok(SchedulePolicy::Off),
+            other => Err(err!(
+                "unknown scheduler {other:?} (expected exact-cover|lowest-index|off)"
+            )),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            SchedulePolicy::ExactCover => "exact-cover",
+            SchedulePolicy::LowestIndex => "lowest-index",
+            SchedulePolicy::Off => "off",
+        }
+    }
+
+    /// Plan one kernel group under this policy. `None` means "execute
+    /// unscheduled" ([`SchedulePolicy::Off`]). Exact cover degrades to
+    /// lowest-index-first when the group is trivial (≤ 1 kernel — every
+    /// schedule is optimal) or over [`EXACT_COVER_WORK_BUDGET`]; both
+    /// fallbacks keep planning deterministic and cheap.
+    pub fn plan_group(&self, kernels: &[Vec<u16>], replicas: usize) -> Option<Schedule> {
+        match self {
+            SchedulePolicy::Off => None,
+            SchedulePolicy::LowestIndex => Some(schedule_lowest_index(kernels, replicas)),
+            SchedulePolicy::ExactCover => {
+                if kernels.len() <= 1 {
+                    return Some(schedule_lowest_index(kernels, replicas));
+                }
+                schedule_exact_cover_budgeted(kernels, replicas, EXACT_COVER_WORK_BUDGET)
+                    .or_else(|| Some(schedule_lowest_index(kernels, replicas)))
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -186,6 +297,47 @@ mod tests {
         // balanced: total/n
         assert_eq!(Schedule::lower_bound(&[vec![0, 1], vec![2, 3], vec![4, 5]], 1), 2);
         assert_eq!(Schedule::lower_bound(&[], 4), 0);
+    }
+
+    #[test]
+    fn policy_parse_and_labels() {
+        for p in SchedulePolicy::ALL {
+            assert_eq!(SchedulePolicy::parse(p.label()).unwrap(), p);
+        }
+        assert_eq!(SchedulePolicy::parse("ec").unwrap(), SchedulePolicy::ExactCover);
+        assert_eq!(SchedulePolicy::parse("none").unwrap(), SchedulePolicy::Off);
+        assert!(SchedulePolicy::parse("random").is_err());
+        assert_eq!(SchedulePolicy::default(), SchedulePolicy::ExactCover);
+    }
+
+    #[test]
+    fn policy_plan_group_modes() {
+        let kernels = vec![vec![0u16, 3], vec![1, 3], vec![0, 1]];
+        assert!(SchedulePolicy::Off.plan_group(&kernels, 4).is_none());
+        for p in [SchedulePolicy::ExactCover, SchedulePolicy::LowestIndex] {
+            let s = p.plan_group(&kernels, 4).unwrap();
+            s.validate(&kernels).unwrap();
+        }
+        // trivial group (1 kernel): exact cover falls back but still covers
+        let one = vec![vec![2u16, 5, 9]];
+        let s = SchedulePolicy::ExactCover.plan_group(&one, 1).unwrap();
+        s.validate(&one).unwrap();
+        assert_eq!(s.cycles(), 3);
+    }
+
+    #[test]
+    fn sampled_utilization_in_unit_range() {
+        use crate::sparse::prune_random;
+        let mut rng = Pcg32::new(17);
+        let layer = prune_random(32, 3, 8, 4, &mut rng);
+        for sch in Scheduler::ALL {
+            let u = sampled_layer_utilization(&layer, sch, 16, 8, 6, 7);
+            assert!(u > 0.0 && u <= 1.0 + 1e-12, "{sch:?}: {u}");
+        }
+        // reproducible for a fixed seed
+        let a = sampled_layer_utilization(&layer, Scheduler::ExactCover, 16, 8, 6, 7);
+        let b = sampled_layer_utilization(&layer, Scheduler::ExactCover, 16, 8, 6, 7);
+        assert_eq!(a, b);
     }
 
     #[test]

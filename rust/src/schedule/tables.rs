@@ -13,7 +13,8 @@
 //! directly, so the scheduler → hardware hand-off is the same data structure
 //! the paper describes.
 
-use super::Schedule;
+use super::{Schedule, SchedulePolicy};
+use crate::runtime::SparseWeightPlanes;
 use crate::sparse::SparseLayer;
 
 /// One PE lane's slot in a cycle of the VALUE table.
@@ -106,10 +107,174 @@ pub fn compile_tables(
     AccessTables { index, value, num_lanes: lanes }
 }
 
+/// Default weight-store bank count for the serving path's simulated bank
+/// model (see [`LayerSchedule`]): 8 banks over the K² frequency plane,
+/// `bank(f) = f mod 8` — one BRAM-ish bank per frequency-plane column at
+/// the paper's K=8 operating point.
+pub const DEFAULT_WEIGHT_BANKS: usize = 8;
+
+/// Aggregate scheduling quality of one layer — the serving-metrics payload
+/// (cycles vs lower bound, Eq. 14 utilization, simulated bank conflicts).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct ScheduleStats {
+    /// Total cycles over every (group, channel) instance of the layer.
+    pub cycles: u64,
+    /// Sum of [`Schedule::lower_bound`] over the same instances.
+    pub lower_bound: u64,
+    /// Total reads issued (= the layer's nnz).
+    pub reads: u64,
+    /// Total PE slots (`Σ cycles · group kernels`) — utilization denominator.
+    pub slots: u64,
+    /// Simulated weight-bank conflicts: per cycle, distinct frequency
+    /// indices mapping to the same `f mod B` bank beyond the first. The
+    /// schedule is conflict-free on the paper's r-replica *input* BRAMs by
+    /// construction; this counts stalls a B-banked *weight* store would add.
+    pub bank_conflicts: u64,
+}
+
+impl ScheduleStats {
+    /// PE utilization across the layer (paper Eq. 14).
+    pub fn pe_utilization(&self) -> f64 {
+        if self.slots == 0 {
+            return 1.0;
+        }
+        self.reads as f64 / self.slots as f64
+    }
+
+    /// Scheduled cycles relative to the information-theoretic lower bound
+    /// (1.0 = optimal).
+    pub fn cycles_over_lower_bound(&self) -> f64 {
+        if self.lower_bound == 0 {
+            return 1.0;
+        }
+        self.cycles as f64 / self.lower_bound as f64
+    }
+}
+
+/// A whole layer's compiled scheduling plan — one [`Schedule`] per
+/// (kernel-group, input-channel) instance, built from the runtime CSR rows
+/// ([`SparseWeightPlanes`]) so the serving path schedules exactly what its
+/// MAC streams. This is what the engine hands to
+/// [`crate::runtime::SpectralBackend::set_schedule`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerSchedule {
+    /// Kernels scheduled in parallel per group (paper N').
+    pub n_par: usize,
+    /// Input-tile replica bound r the schedules honor.
+    pub replicas: usize,
+    /// Weight-store banks B for the simulated conflict model.
+    pub banks: usize,
+    /// Output channels / input channels of the layer (CSR dims).
+    pub cout: usize,
+    pub cin: usize,
+    /// Policy the plan was built under (for labels/metrics).
+    pub policy: SchedulePolicy,
+    /// Schedules indexed `group · cin + m`.
+    pub groups: Vec<Schedule>,
+    /// Aggregate quality, computed once at build time.
+    pub stats: ScheduleStats,
+}
+
+impl LayerSchedule {
+    /// Plan every (group, channel) instance of a layer under `policy`.
+    /// Returns `None` for [`SchedulePolicy::Off`] — the caller keeps the
+    /// unscheduled CSR walk.
+    pub fn build(
+        planes: &SparseWeightPlanes,
+        n_par: usize,
+        replicas: usize,
+        banks: usize,
+        policy: SchedulePolicy,
+    ) -> Option<LayerSchedule> {
+        if policy == SchedulePolicy::Off {
+            return None;
+        }
+        let [_, cin, cout] = planes.dims;
+        let num_groups = planes.num_groups(n_par);
+        let mut groups = Vec::with_capacity(num_groups * cin);
+        let mut stats = ScheduleStats::default();
+        for g in 0..num_groups {
+            for m in 0..cin {
+                let kernels = planes.group_indices(g, n_par, m);
+                let s = policy
+                    .plan_group(&kernels, replicas)
+                    .expect("policy is not Off");
+                debug_assert!(s.validate(&kernels).is_ok());
+                stats.cycles += s.cycles() as u64;
+                stats.lower_bound += Schedule::lower_bound(&kernels, replicas) as u64;
+                stats.reads += s.total_reads() as u64;
+                stats.slots += (s.cycles() * kernels.len()) as u64;
+                stats.bank_conflicts += bank_conflicts(&s, banks);
+                groups.push(s);
+            }
+        }
+        Some(LayerSchedule {
+            n_par,
+            replicas,
+            banks,
+            cout,
+            cin,
+            policy,
+            groups,
+            stats,
+        })
+    }
+
+    /// The schedule of group `g` at input channel `m`.
+    pub fn group(&self, g: usize, m: usize) -> &Schedule {
+        &self.groups[g * self.cin + m]
+    }
+
+    pub fn num_groups(&self) -> usize {
+        self.cout.div_ceil(self.n_par.max(1))
+    }
+
+    /// Validate every instance against the CSR rows it must cover — the
+    /// backend's defense against a plan built from different weights.
+    pub fn validate(&self, planes: &SparseWeightPlanes) -> Result<(), String> {
+        let [_, cin, cout] = planes.dims;
+        if cin != self.cin || cout != self.cout {
+            return Err(format!(
+                "plan is for {}x{} channels, weights are {}x{}",
+                self.cout, self.cin, cout, cin
+            ));
+        }
+        for g in 0..self.num_groups() {
+            for m in 0..cin {
+                let kernels = planes.group_indices(g, self.n_par, m);
+                self.group(g, m)
+                    .validate(&kernels)
+                    .map_err(|e| format!("group {g} channel {m}: {e}"))?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Simulated weight-bank conflicts of one schedule: per cycle, every
+/// distinct frequency index past the first that lands in the same
+/// `f mod banks` bank.
+pub fn bank_conflicts(s: &Schedule, banks: usize) -> u64 {
+    let banks = banks.max(1);
+    let mut total = 0u64;
+    let mut per_bank = vec![0u32; banks];
+    for set in &s.sets {
+        per_bank.fill(0);
+        let mut idx: Vec<u16> = set.reads.iter().map(|&(_, i)| i).collect();
+        idx.sort_unstable();
+        idx.dedup();
+        for i in idx {
+            per_bank[i as usize % banks] += 1;
+        }
+        total += per_bank.iter().map(|&c| c.saturating_sub(1) as u64).sum::<u64>();
+    }
+    total
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::schedule::schedule_exact_cover;
+    use crate::schedule::{schedule_exact_cover, CycleSet};
     use crate::sparse::prune_random;
     use crate::util::rng::Pcg32;
 
@@ -169,6 +334,57 @@ mod tests {
         // group 0 at channel 1 covers all 16 kernels × nnz each
         let want: usize = (0..16).map(|n| layer.kernel(n, 1).nnz()).sum();
         assert_eq!(valid, want);
+    }
+
+    #[test]
+    fn layer_schedule_covers_every_row() {
+        let mut rng = Pcg32::new(31);
+        let layer = prune_random(20, 3, 8, 4, &mut rng); // ragged: groups of 8, 8, 4
+        let planes = SparseWeightPlanes::from_layer(&layer);
+        for policy in [SchedulePolicy::ExactCover, SchedulePolicy::LowestIndex] {
+            let plan = LayerSchedule::build(&planes, 8, 6, 8, policy).unwrap();
+            assert_eq!(plan.groups.len(), 3 * 3);
+            plan.validate(&planes).unwrap();
+            // reads = layer nnz, utilization in (0, 1]
+            assert_eq!(plan.stats.reads as usize, planes.nnz());
+            let u = plan.stats.pe_utilization();
+            assert!(u > 0.0 && u <= 1.0 + 1e-12, "{policy:?}: {u}");
+            assert!(plan.stats.cycles >= plan.stats.lower_bound);
+            assert!(plan.stats.cycles_over_lower_bound() >= 1.0);
+        }
+        assert!(LayerSchedule::build(&planes, 8, 6, 8, SchedulePolicy::Off).is_none());
+    }
+
+    #[test]
+    fn layer_schedule_validate_rejects_foreign_weights() {
+        let mut rng = Pcg32::new(32);
+        let a = SparseWeightPlanes::from_layer(&prune_random(8, 2, 8, 4, &mut rng));
+        let b = SparseWeightPlanes::from_layer(&prune_random(8, 2, 8, 4, &mut rng));
+        let plan = LayerSchedule::build(&a, 8, 6, 8, SchedulePolicy::ExactCover).unwrap();
+        plan.validate(&a).unwrap();
+        assert!(plan.validate(&b).is_err(), "plan from other weights must be rejected");
+        let c = SparseWeightPlanes::from_layer(&prune_random(8, 3, 8, 4, &mut rng));
+        assert!(plan.validate(&c).unwrap_err().contains("channels"));
+    }
+
+    #[test]
+    fn bank_conflict_counting() {
+        // one cycle reading indices {0, 8, 3} with 8 banks: 0 and 8 share
+        // bank 0 ⇒ 1 conflict; with 1 bank: 3 distinct ⇒ 2 conflicts.
+        let s = Schedule {
+            sets: vec![CycleSet { reads: vec![(0, 0), (1, 8), (2, 3)] }],
+            replicas: 3,
+            num_kernels: 3,
+        };
+        assert_eq!(bank_conflicts(&s, 8), 1);
+        assert_eq!(bank_conflicts(&s, 1), 2);
+        // a broadcast read (same index for every kernel) never conflicts
+        let bcast = Schedule {
+            sets: vec![CycleSet { reads: vec![(0, 5), (1, 5), (2, 5)] }],
+            replicas: 1,
+            num_kernels: 3,
+        };
+        assert_eq!(bank_conflicts(&bcast, 8), 0);
     }
 
     #[test]

@@ -207,6 +207,194 @@ impl Bench {
     }
 }
 
+/// A parsed bench artifact: measurements plus optional metadata. Raw
+/// [`Bench::write_json`] output is a bare array; committed baselines wrap
+/// it as `{"meta": {"provenance": ...}, "results": [...]}` so the
+/// regression gate knows whether the numbers were actually measured.
+pub struct BenchArtifact {
+    pub results: Vec<Measurement>,
+    /// `meta.provenance` when present (`"measured"` arms the CI gate;
+    /// `"desk-estimate"` keeps it warn-only until refreshed on real
+    /// hardware). A bare array counts as measured.
+    pub provenance: Option<String>,
+}
+
+impl BenchArtifact {
+    /// `true` unless the artifact explicitly declares itself an estimate.
+    pub fn is_measured(&self) -> bool {
+        self.provenance.as_deref().map(|p| p == "measured").unwrap_or(true)
+    }
+}
+
+/// Read a `BENCH_*.json` artifact (bare array or `{meta, results}` form).
+pub fn read_json_artifact(path: &str) -> crate::util::error::Result<BenchArtifact> {
+    use crate::err;
+    use crate::util::error::Context;
+    use crate::util::json::Json;
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let j = Json::parse(&text).map_err(|e| err!("{path}: {e}"))?;
+    let (items, provenance) = match &j {
+        Json::Arr(v) => (v.as_slice(), None),
+        Json::Obj(_) => {
+            let items = j
+                .get("results")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| err!("{path}: object artifact needs a 'results' array"))?;
+            let prov = j
+                .at(&["meta", "provenance"])
+                .and_then(Json::as_str)
+                .map(str::to_string);
+            (items, prov)
+        }
+        _ => return Err(err!("{path}: expected array or object artifact")),
+    };
+    let mut results = Vec::with_capacity(items.len());
+    for m in items {
+        let field = |k: &str| m.get(k).and_then(Json::as_f64);
+        results.push(Measurement {
+            name: m
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| err!("{path}: measurement without 'name'"))?
+                .to_string(),
+            iters: m.get("iters").and_then(Json::as_usize).unwrap_or(0),
+            mean_ns: field("mean_ns").unwrap_or(0.0),
+            stddev_ns: field("stddev_ns").unwrap_or(0.0),
+            median_ns: field("median_ns")
+                .ok_or_else(|| err!("{path}: measurement without 'median_ns'"))?,
+            p10_ns: field("p10_ns").unwrap_or(0.0),
+            p90_ns: field("p90_ns").unwrap_or(0.0),
+        });
+    }
+    Ok(BenchArtifact { results, provenance })
+}
+
+/// One baseline/current pair in a regression check.
+#[derive(Debug, Clone)]
+pub struct BenchDelta {
+    pub name: String,
+    pub base_ns: f64,
+    pub cur_ns: f64,
+    /// `cur / base`, divided by the host-speed scale in normalized mode —
+    /// 1.0 means unchanged, 2.0 means a 2× slowdown.
+    pub ratio: f64,
+}
+
+/// Fewest comparable benches for which host-speed normalization is
+/// trustworthy: below this the median ratio is dominated by the very
+/// benches it should judge (a lone survivor would always normalize its own
+/// regression away), so [`compare_benches`] falls back to absolute mode.
+pub const MIN_ROWS_TO_NORMALIZE: usize = 3;
+
+/// Result of comparing two bench artifacts by median latency.
+pub struct BenchComparison {
+    pub rows: Vec<BenchDelta>,
+    /// Baseline bench names (above the noise floor) with no counterpart in
+    /// the current artifact — renamed or deleted benches. Surfaced in the
+    /// report so a silently un-gated path is visible.
+    pub missing: Vec<String>,
+    /// Host-speed factor divided out of every ratio (1.0 in absolute mode):
+    /// the median of the raw `cur/base` ratios. Makes the gate portable
+    /// across runner generations — a uniformly faster machine doesn't mask
+    /// one bench regressing relative to the rest, and a uniformly slower
+    /// one doesn't flag everything. The flip side — a regression broad
+    /// enough to move the *median* also moves the scale — is why the report
+    /// prints the scale and warns when it drifts far from 1.0.
+    pub scale: f64,
+    /// Regression threshold as a fraction (0.25 = fail beyond +25%).
+    pub threshold: f64,
+}
+
+impl BenchComparison {
+    /// Benches whose (normalized) median regressed beyond the threshold.
+    pub fn regressions(&self) -> Vec<&BenchDelta> {
+        self.rows.iter().filter(|r| r.ratio > 1.0 + self.threshold).collect()
+    }
+
+    pub fn report(&self) -> String {
+        let mut out = format!(
+            "bench-check: {} benches, host scale {:.3}, threshold +{:.0}%\n",
+            self.rows.len(),
+            self.scale,
+            self.threshold * 100.0
+        );
+        for r in &self.rows {
+            let flag = if r.ratio > 1.0 + self.threshold { "  REGRESSED" } else { "" };
+            out.push_str(&format!(
+                "{:<52} {:>12} -> {:>12}  x{:.3}{}\n",
+                r.name,
+                Measurement::fmt_ns(r.base_ns),
+                Measurement::fmt_ns(r.cur_ns),
+                r.ratio,
+                flag
+            ));
+        }
+        for name in &self.missing {
+            out.push_str(&format!(
+                "{name:<52} MISSING from current artifact — this path is NOT gated\n"
+            ));
+        }
+        if !(0.77..=1.3).contains(&self.scale) {
+            out.push_str(&format!(
+                "warning: host scale {:.3} is far from 1.0 — either the runner changed, or a \
+                 regression broad enough to move the median is being normalized away; \
+                 cross-check with --absolute\n",
+                self.scale
+            ));
+        }
+        out
+    }
+}
+
+/// Compare `cur` against `base` by bench name over their shared benches,
+/// ignoring entries whose baseline median sits below `min_ns` (noise
+/// floor). `normalize` divides out the median `cur/base` ratio so only
+/// *relative* regressions (one path slowing down vs the rest) trip the
+/// gate; pass `false` for strict same-host absolute comparison. With fewer
+/// than [`MIN_ROWS_TO_NORMALIZE`] comparable benches, normalization is
+/// skipped (see the constant's docs).
+pub fn compare_benches(
+    base: &[Measurement],
+    cur: &[Measurement],
+    threshold: f64,
+    min_ns: f64,
+    normalize: bool,
+) -> BenchComparison {
+    let mut rows: Vec<BenchDelta> = Vec::new();
+    let mut missing: Vec<String> = Vec::new();
+    for b in base.iter().filter(|b| b.median_ns >= min_ns) {
+        match cur.iter().find(|c| c.name == b.name) {
+            Some(c) => rows.push(BenchDelta {
+                name: b.name.clone(),
+                base_ns: b.median_ns,
+                cur_ns: c.median_ns,
+                ratio: c.median_ns / b.median_ns.max(1e-9),
+            }),
+            None => missing.push(b.name.clone()),
+        }
+    }
+    let scale = if normalize && rows.len() >= MIN_ROWS_TO_NORMALIZE {
+        let mut ratios: Vec<f64> = rows.iter().map(|r| r.ratio).collect();
+        ratios.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // true median (middle-pair average on even counts): taking the
+        // upper element would let a lone regression among two survivors
+        // set the scale and normalize itself away
+        let mid = ratios.len() / 2;
+        let median = if ratios.len() % 2 == 0 {
+            (ratios[mid - 1] + ratios[mid]) / 2.0
+        } else {
+            ratios[mid]
+        };
+        median.max(1e-9)
+    } else {
+        1.0
+    };
+    for r in &mut rows {
+        r.ratio /= scale;
+    }
+    BenchComparison { rows, missing, scale, threshold }
+}
+
 /// Create `path`'s parent directory if needed (report emitters write into
 /// `reports/`, which a fresh checkout doesn't have).
 fn ensure_parent_dir(path: &str) -> std::io::Result<()> {
@@ -253,6 +441,158 @@ mod tests {
         b.record("ext", Duration::from_millis(10), 10);
         assert_eq!(b.results().len(), 1);
         assert!((b.results()[0].mean_ns - 1e6).abs() < 1.0);
+    }
+
+    fn meas(name: &str, median_ns: f64) -> Measurement {
+        Measurement {
+            name: name.into(),
+            iters: 10,
+            mean_ns: median_ns,
+            stddev_ns: 0.0,
+            median_ns,
+            p10_ns: median_ns,
+            p90_ns: median_ns,
+        }
+    }
+
+    #[test]
+    fn injected_2x_slowdown_fails_the_gate() {
+        // The bench-regression gate's core demonstration: same numbers pass,
+        // doubling one bench's median fails — in normalized and absolute
+        // mode both.
+        let base = vec![meas("e2e/a", 1e6), meas("e2e/b", 2e6), meas("e2e/c", 4e6)];
+        let mut cur = base.clone();
+        for normalize in [true, false] {
+            let ok = compare_benches(&base, &cur, 0.25, 0.0, normalize);
+            assert!(ok.regressions().is_empty(), "clean run must pass");
+        }
+        cur[1].median_ns *= 2.0; // inject the slowdown
+        for normalize in [true, false] {
+            let bad = compare_benches(&base, &cur, 0.25, 0.0, normalize);
+            let regs = bad.regressions();
+            assert_eq!(regs.len(), 1, "normalize={normalize}");
+            assert_eq!(regs[0].name, "e2e/b");
+            assert!(bad.report().contains("REGRESSED"));
+        }
+    }
+
+    #[test]
+    fn normalization_absorbs_uniform_host_speed() {
+        // A uniformly 1.6× slower host is a machine difference, not a
+        // regression: normalized mode passes, absolute mode (same-host
+        // comparisons) flags everything.
+        let base = vec![meas("a", 1e6), meas("b", 2e6), meas("c", 3e6)];
+        let cur: Vec<Measurement> = base.iter().map(|m| meas(&m.name, m.median_ns * 1.6)).collect();
+        let norm = compare_benches(&base, &cur, 0.25, 0.0, true);
+        assert!(norm.regressions().is_empty());
+        assert!((norm.scale - 1.6).abs() < 1e-9);
+        let abs = compare_benches(&base, &cur, 0.25, 0.0, false);
+        assert_eq!(abs.regressions().len(), 3);
+    }
+
+    #[test]
+    fn few_survivors_fall_back_to_absolute() {
+        // Below MIN_ROWS_TO_NORMALIZE the median is dominated by the very
+        // benches it should judge (a lone survivor would always normalize
+        // its own regression away) — so with 2 rows the gate compares
+        // absolutely and the 2× slowdown still trips it.
+        let base = vec![meas("a", 1e6), meas("b", 1e6)];
+        let cur = vec![meas("a", 1e6), meas("b", 2e6)];
+        let cmp = compare_benches(&base, &cur, 0.25, 0.0, true);
+        assert_eq!(cmp.scale, 1.0, "normalization must be skipped under the row minimum");
+        let regs = cmp.regressions();
+        assert_eq!(regs.len(), 1);
+        assert_eq!(regs[0].name, "b");
+        // single survivor: same story
+        let cmp1 = compare_benches(&base[1..], &cur[1..], 0.25, 0.0, true);
+        assert_eq!(cmp1.scale, 1.0);
+        assert_eq!(cmp1.regressions().len(), 1);
+    }
+
+    #[test]
+    fn even_count_median_splits_the_middle_pair() {
+        // 4 rows, one regressed 2×: sorted ratios [1, 1, 1, 2] → scale
+        // (1+1)/2 = 1.0, not the upper middle element — the regression
+        // can't drag the scale toward itself.
+        let base = vec![meas("a", 1e6), meas("b", 1e6), meas("c", 1e6), meas("d", 1e6)];
+        let mut cur = base.clone();
+        cur[3].median_ns = 2e6;
+        let cmp = compare_benches(&base, &cur, 0.25, 0.0, true);
+        assert_eq!(cmp.scale, 1.0);
+        assert_eq!(cmp.regressions().len(), 1);
+        assert_eq!(cmp.regressions()[0].name, "d");
+    }
+
+    #[test]
+    fn missing_benches_are_reported_not_dropped() {
+        // A renamed/deleted bench must show up in the report as un-gated,
+        // not vanish silently.
+        let base = vec![meas("kept", 1e6), meas("gone", 1e6), meas("tiny-gone", 1e3)];
+        let cur = vec![meas("kept", 1e6)];
+        let cmp = compare_benches(&base, &cur, 0.25, 50_000.0, true);
+        assert_eq!(cmp.rows.len(), 1);
+        // "tiny-gone" sits below the noise floor — never tracked at all
+        assert_eq!(cmp.missing, vec!["gone".to_string()]);
+        assert!(cmp.report().contains("MISSING"));
+        assert!(cmp.report().contains("gone"));
+    }
+
+    #[test]
+    fn scale_drift_warns_in_report() {
+        // A uniform 1.6× slowdown normalizes away (by design) but the
+        // report must call the drifted scale out for cross-checking.
+        let base = vec![meas("a", 1e6), meas("b", 2e6), meas("c", 3e6)];
+        let cur: Vec<Measurement> =
+            base.iter().map(|m| meas(&m.name, m.median_ns * 1.6)).collect();
+        let cmp = compare_benches(&base, &cur, 0.25, 0.0, true);
+        assert!(cmp.regressions().is_empty());
+        assert!(cmp.report().contains("warning: host scale"));
+        // near-1.0 scale stays quiet
+        let quiet = compare_benches(&base, &base, 0.25, 0.0, true);
+        assert!(!quiet.report().contains("warning"));
+    }
+
+    #[test]
+    fn noise_floor_and_disjoint_names() {
+        let base = vec![meas("tiny", 1e3), meas("big", 1e7)];
+        let cur = vec![meas("tiny", 5e3), meas("big", 1e7), meas("new", 1e6)];
+        // "tiny" is below the 50µs floor: ignored even at 5× slower;
+        // "new" has no baseline: ignored
+        let cmp = compare_benches(&base, &cur, 0.25, 50_000.0, false);
+        assert_eq!(cmp.rows.len(), 1);
+        assert!(cmp.regressions().is_empty());
+    }
+
+    #[test]
+    fn artifact_forms_parse_and_carry_provenance() {
+        let dir = std::env::temp_dir();
+        // bare array (what write_json emits) counts as measured
+        let raw = dir.join("BENCH_check_raw_test.json");
+        let mut b = Bench::quick();
+        b.record("e2e/x", Duration::from_millis(3), 3);
+        b.write_json(raw.to_str().unwrap()).unwrap();
+        let a = read_json_artifact(raw.to_str().unwrap()).unwrap();
+        assert!(a.is_measured());
+        assert_eq!(a.results.len(), 1);
+        assert_eq!(a.results[0].name, "e2e/x");
+        // wrapped object with desk-estimate provenance disarms the gate
+        let wrapped = dir.join("BENCH_check_wrapped_test.json");
+        std::fs::write(
+            &wrapped,
+            r#"{"meta": {"provenance": "desk-estimate"},
+                "results": [{"name": "e2e/x", "median_ns": 1000.0}]}"#,
+        )
+        .unwrap();
+        let w = read_json_artifact(wrapped.to_str().unwrap()).unwrap();
+        assert!(!w.is_measured());
+        assert_eq!(w.results[0].median_ns, 1000.0);
+        // junk is a parse error, not a panic
+        let junk = dir.join("BENCH_check_junk_test.json");
+        std::fs::write(&junk, "not json").unwrap();
+        assert!(read_json_artifact(junk.to_str().unwrap()).is_err());
+        for p in [raw, wrapped, junk] {
+            let _ = std::fs::remove_file(p);
+        }
     }
 
     #[test]

@@ -160,6 +160,62 @@ fn pool_survives_bad_inputs_and_keeps_counting() {
 }
 
 #[test]
+fn pool_surfaces_schedule_metrics() {
+    // Pruned serving under the default exact-cover policy: every response
+    // reports the engine's PE utilization, and the merged snapshot carries
+    // the per-layer schedule metrics; dense serving reports neither.
+    let server = demo_server(2);
+    let client = server.client();
+    let mut rng = Pcg32::new(23);
+    let r = client.infer(Tensor::randn(&[1, 16, 16], &mut rng, 1.0)).unwrap();
+    let u = r.pe_utilization.expect("pruned + scheduled ⇒ utilization reported");
+    assert!(u > 0.0 && u <= 1.0 + 1e-12, "utilization {u}");
+    let pm = server.pool_metrics().unwrap();
+    let sched = pm.merged.schedule.as_ref().expect("merged snapshot carries schedule");
+    assert_eq!(sched.scheduler, "exact-cover");
+    assert_eq!(sched.layers.len(), 2, "demo variant has 2 conv layers");
+    assert!(sched.total_cycles() >= sched.total_lower_bound());
+    assert!((sched.avg_pe_utilization() - u).abs() < 1e-12);
+    server.shutdown().unwrap();
+
+    let dense = Server::start(ServerConfig {
+        mode: WeightMode::from_alpha(1),
+        ..demo_config(2)
+    })
+    .expect("dense server");
+    let dc = dense.client();
+    let r = dc.infer(Tensor::randn(&[1, 16, 16], &mut rng, 1.0)).unwrap();
+    assert!(r.pe_utilization.is_none(), "dense serving has no schedule");
+    assert!(dense.pool_metrics().unwrap().merged.schedule.is_none());
+    dense.shutdown().unwrap();
+}
+
+#[test]
+fn scheduler_off_pool_matches_scheduled_pool_bit_for_bit() {
+    // `--scheduler off` (the PR 3 storage-order walk) and the scheduled
+    // default must be indistinguishable in the logits.
+    use spectral_flow::schedule::SchedulePolicy;
+    let mut rng = Pcg32::new(29);
+    let images: Vec<Tensor> =
+        (0..4).map(|_| Tensor::randn(&[1, 16, 16], &mut rng, 1.0)).collect();
+    let mut runs = Vec::new();
+    for policy in [SchedulePolicy::Off, SchedulePolicy::ExactCover, SchedulePolicy::LowestIndex]
+    {
+        let server = Server::start(ServerConfig { scheduler: policy, ..demo_config(2) })
+            .expect("server starts");
+        let client = server.client();
+        let logits: Vec<Vec<f32>> =
+            images.iter().map(|img| client.infer(img.clone()).unwrap().logits).collect();
+        server.shutdown().unwrap();
+        runs.push((policy, logits));
+    }
+    let (_, want) = &runs[0];
+    for (policy, got) in &runs[1..] {
+        assert_eq!(got, want, "{policy:?} diverged from the unscheduled pool");
+    }
+}
+
+#[test]
 fn unknown_variant_fails_startup_with_error() {
     let r = Server::start(ServerConfig {
         variant: "no-such-variant".into(),

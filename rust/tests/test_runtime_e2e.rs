@@ -109,6 +109,118 @@ fn pruned_engine_conv_matches_dense_plane_reference() {
 }
 
 #[test]
+fn scheduler_modes_bit_identical_across_threads_and_alpha() {
+    // Tentpole acceptance gate: the scheduled sparse MAC (either policy)
+    // must reproduce the unscheduled PR 3 walk bit for bit at the full
+    // engine level, for every backend thread count, at α ∈ {1, 4} (α=1 is
+    // the dense MAC — scheduling must be a no-op there too).
+    use spectral_flow::runtime::BackendKind;
+    use spectral_flow::schedule::SchedulePolicy;
+    let dir = artifacts_dir();
+    for alpha in [1usize, 4] {
+        let mode = WeightMode::from_alpha(alpha);
+        let forward = |policy: SchedulePolicy, threads: usize| {
+            let mut e = InferenceEngine::new_with_opts(
+                &dir,
+                "demo",
+                mode,
+                7,
+                BackendKind::Interp { threads },
+                policy,
+            )
+            .unwrap();
+            let img = e.synthetic_image(4);
+            e.forward(&img).unwrap()
+        };
+        let baseline = forward(SchedulePolicy::Off, 1);
+        for policy in
+            [SchedulePolicy::Off, SchedulePolicy::ExactCover, SchedulePolicy::LowestIndex]
+        {
+            for threads in [1usize, 3] {
+                let got = forward(policy, threads);
+                assert_eq!(
+                    got, baseline,
+                    "α={alpha} {policy:?} threads={threads} diverged bit-wise"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn scheduled_pruned_engine_close_to_dense_planes() {
+    // α=4 scheduled execution vs the same spectral planes (pruned slots as
+    // explicit zeros) through a dense engine-level upload: ≤1e-5. This is
+    // the dense-equivalence half of the acceptance gate; bit-identity to
+    // the unscheduled sparse walk is checked above.
+    use spectral_flow::fft::{im2tiles, overlap_add, TileGeometry};
+    use spectral_flow::nn;
+    use spectral_flow::runtime::{
+        freq_major_planes, ExecutableEntry, InterpBackend, SpectralBackend,
+    };
+    let mut engine =
+        InferenceEngine::new(&artifacts_dir(), "demo", WeightMode::Pruned { alpha: 4 }, 55)
+            .unwrap();
+    assert!(engine.schedule_metrics().is_some(), "default policy schedules pruned layers");
+    let planes = engine.weights.convs[0].spectral.clone();
+    let bias = engine.weights.convs[0].bias.clone();
+    let img = engine.synthetic_image(6);
+    let got = engine.conv_layer(0, &img).unwrap();
+
+    let geo = TileGeometry::new(16, 8, 3);
+    let tiles = im2tiles(&img, &geo);
+    let entry = ExecutableEntry {
+        tiles: geo.num_tiles(),
+        cin: 1,
+        cout: 8,
+        fft_size: 8,
+        sha256: "ref".into(),
+        bytes: 0,
+    };
+    let mut b = InterpBackend::new();
+    b.prepare("ref", &entry, std::path::Path::new(".")).unwrap();
+    let (re, im) = freq_major_planes(&planes);
+    let wid = b.upload_weights(&re, &im, [64, 1, 8]).unwrap();
+    let out_tiles = b.run_conv("ref", &tiles, wid).unwrap();
+    let mut want = overlap_add(&out_tiles, &geo, 8);
+    nn::add_bias(&mut want, &bias);
+    nn::relu(&mut want);
+    assert_allclose(got.data(), want.data(), 1e-5, 1e-5);
+}
+
+#[test]
+fn engine_schedule_metrics_shape() {
+    use spectral_flow::runtime::BackendKind;
+    use spectral_flow::schedule::SchedulePolicy;
+    let dir = artifacts_dir();
+    // pruned + exact-cover: one entry per conv layer, sane aggregates
+    let e = InferenceEngine::new(&dir, "demo", WeightMode::Pruned { alpha: 4 }, 7).unwrap();
+    let sm = e.schedule_metrics().unwrap();
+    assert_eq!(sm.scheduler, "exact-cover");
+    assert_eq!(sm.layers.len(), e.variant.layers.len());
+    for l in &sm.layers {
+        assert!(l.stats.cycles >= l.stats.lower_bound, "{}", l.layer);
+        let u = l.stats.pe_utilization();
+        assert!(u > 0.0 && u <= 1.0 + 1e-12, "{}: {u}", l.layer);
+    }
+    assert!(sm.report().contains("exact-cover"));
+    // scheduler off / dense mode: no metrics
+    let off = InferenceEngine::new_with_opts(
+        &dir,
+        "demo",
+        WeightMode::Pruned { alpha: 4 },
+        7,
+        BackendKind::default(),
+        SchedulePolicy::Off,
+    )
+    .unwrap();
+    assert!(off.schedule_metrics().is_none());
+    assert_eq!(off.scheduler(), SchedulePolicy::Off);
+    let dense = InferenceEngine::new(&dir, "demo", WeightMode::Dense, 7).unwrap();
+    assert!(dense.schedule_metrics().is_none());
+}
+
+#[test]
 fn forward_rejects_bad_shapes() {
     let mut engine = InferenceEngine::new(&artifacts_dir(), "demo", WeightMode::Dense, 7).unwrap();
     let bad = spectral_flow::tensor::Tensor::zeros(&[1, 8, 8]);

@@ -128,6 +128,48 @@ fn tables_compile_for_all_schedulers() {
 }
 
 #[test]
+fn identical_rows_forced_conflict_adversarial() {
+    // Adversarial case: two kernels share *every* frequency index. At r=1
+    // the only conflict-free option is broadcasting one shared index per
+    // cycle to both kernels — nnz cycles at 100% utilization. A schedule
+    // that instead serves the two rows different indices in one cycle is a
+    // forced replica conflict and `Schedule::validate` must reject it.
+    use spectral_flow::schedule::{CycleSet, SchedulePolicy};
+    let shared: Vec<u16> = vec![2, 7, 11, 40];
+    let kernels = vec![shared.clone(), shared.clone()];
+    for sch in [Scheduler::ExactCover, Scheduler::LowestIndexFirst] {
+        let s = sch.run(&kernels, 1, 9);
+        s.validate(&kernels).unwrap_or_else(|e| panic!("{sch:?}: {e}"));
+        assert_eq!(s.cycles(), shared.len(), "{sch:?} must broadcast shared indices");
+        assert!((s.pe_utilization() - 1.0).abs() < 1e-12);
+    }
+    // random picks indices independently, so it usually can't broadcast at
+    // r=1 — it must still terminate with a valid (longer) schedule
+    let s = Scheduler::Random.run(&kernels, 1, 9);
+    s.validate(&kernels).unwrap();
+    assert!(s.cycles() >= shared.len());
+    for policy in [SchedulePolicy::ExactCover, SchedulePolicy::LowestIndex] {
+        let s = policy.plan_group(&kernels, 1).unwrap();
+        s.validate(&kernels).unwrap();
+        assert_eq!(s.cycles(), shared.len());
+    }
+    // hand-built conflicting schedule: cycle 0 reads index 2 for kernel 0
+    // and index 7 for kernel 1 — two distinct indices, one replica
+    let bad = Schedule {
+        sets: vec![
+            CycleSet { reads: vec![(0, 2), (1, 7)] },
+            CycleSet { reads: vec![(0, 7), (1, 2)] },
+            CycleSet { reads: vec![(0, 11), (1, 11)] },
+            CycleSet { reads: vec![(0, 40), (1, 40)] },
+        ],
+        replicas: 1,
+        num_kernels: 2,
+    };
+    let err = bad.validate(&kernels).unwrap_err();
+    assert!(err.contains("C2"), "replica conflict must be flagged: {err}");
+}
+
+#[test]
 fn ragged_last_group_schedules() {
     // cout=100 with N'=64 → second group has 36 kernels.
     let mut rng = Pcg32::new(5);
