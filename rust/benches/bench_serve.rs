@@ -1,0 +1,91 @@
+//! Bench — serving latency **over the wire**: closed-loop HTTP load
+//! against the engine pool across the workers × backend-threads × α ×
+//! scheduler grid. Where `bench_e2e` times the engine in-process, this
+//! bench times the full request path (socket → admission → batcher → pool
+//! → JSON response) and records p50 (median) and p99 per grid point into
+//! `reports/BENCH_serve.json` — the artifact CI's bench-smoke job uploads
+//! and the serve-loadgen-smoke job reproduces from the CLI.
+//!
+//! ```bash
+//! cargo bench --bench bench_serve [-- --quick]
+//! ```
+
+use std::time::Duration;
+
+use spectral_flow::coordinator::{BatcherConfig, Server, ServerConfig, WeightMode};
+use spectral_flow::net::{loadgen, HttpFrontend, LoadGenConfig, LoadMode, NetConfig};
+use spectral_flow::runtime::BackendKind;
+use spectral_flow::schedule::SchedulePolicy;
+use spectral_flow::util::bench::{quick_requested, Bench};
+
+fn main() {
+    let quick = quick_requested();
+    let mut b = if quick { Bench::quick() } else { Bench::new() };
+
+    // α × scheduler axis: dense, unscheduled sparse, exact-cover sparse —
+    // the same execution modes bench_e2e names `_alphaN[_scheduled]`
+    let modes: &[(usize, SchedulePolicy, &str)] = &[
+        (1, SchedulePolicy::Off, "_alpha1"),
+        (4, SchedulePolicy::Off, "_alpha4"),
+        (4, SchedulePolicy::ExactCover, "_alpha4_scheduled"),
+    ];
+    let grid: Vec<(usize, usize)> = if quick {
+        vec![(1, 1), (2, 1)] // workers × backend-threads
+    } else {
+        vec![(1, 1), (2, 1), (1, 2), (2, 2)]
+    };
+    let requests = if quick { 8 } else { 32 };
+    let concurrency = 4;
+
+    for &(workers, threads) in &grid {
+        for &(alpha, policy, suffix) in modes {
+            if quick && alpha == 4 && policy == SchedulePolicy::Off {
+                continue; // quick mode: dense + scheduled only
+            }
+            let server = Server::start(ServerConfig {
+                artifacts_dir: "artifacts".into(),
+                variant: "demo".into(),
+                mode: WeightMode::from_alpha(alpha),
+                seed: 7,
+                batcher: BatcherConfig {
+                    max_batch: 4,
+                    max_wait: Duration::from_millis(2),
+                },
+                backend: BackendKind::Interp { threads },
+                workers,
+                scheduler: policy,
+            })
+            .expect("server starts");
+            let frontend = HttpFrontend::start(
+                server,
+                NetConfig { addr: "127.0.0.1:0".into(), ..NetConfig::default() },
+            )
+            .expect("frontend binds");
+            let report = loadgen::run(&LoadGenConfig {
+                addr: frontend.local_addr().to_string(),
+                mode: LoadMode::Closed { concurrency },
+                requests,
+                body: None,
+                timeout: Duration::from_secs(60),
+            })
+            .expect("loadgen runs");
+            assert_eq!(
+                report.ok, report.sent,
+                "serving under the admission bound must succeed 100%"
+            );
+            report.record_into(
+                &mut b,
+                &format!("serve/http_demo_c{concurrency}_w{workers}_t{threads}{suffix}"),
+            );
+            println!(
+                "  w={workers} t={threads} α={alpha} {}: {:.1} req/s",
+                policy.label(),
+                report.throughput()
+            );
+            frontend.shutdown().expect("graceful shutdown");
+        }
+    }
+
+    let _ = b.write_csv("reports/bench_serve.csv");
+    let _ = b.write_json("reports/BENCH_serve.json");
+}

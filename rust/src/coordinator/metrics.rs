@@ -86,11 +86,34 @@ impl ScheduleMetrics {
     }
 }
 
+/// Cap on retained latency samples per distribution. `serve --http` runs
+/// indefinitely, so sample storage must be bounded: past the cap the
+/// oldest half is dropped, keeping percentiles a sliding window over the
+/// most recent traffic while [`Metrics::count`]/throughput keep exact
+/// lifetime totals.
+pub const MAX_LATENCY_SAMPLES: usize = 1 << 16;
+
+fn push_bounded(v: &mut Vec<u64>, sample: u64) {
+    if v.len() >= MAX_LATENCY_SAMPLES {
+        v.drain(..MAX_LATENCY_SAMPLES / 2);
+    }
+    v.push(sample);
+}
+
 /// Latency/throughput accumulator (single-threaded; each executor worker
 /// owns one and snapshots it on demand).
 #[derive(Debug, Clone, Default)]
 pub struct Metrics {
     latencies_us: Vec<u64>,
+    /// Queue-wait portion of each latency (dispatcher + batcher + worker
+    /// queue time before the forward pass starts). Only populated by
+    /// [`Metrics::record_request_split`]; empty when the caller records
+    /// totals only.
+    queue_us: Vec<u64>,
+    /// Execute portion (the engine forward itself).
+    execute_us: Vec<u64>,
+    /// Lifetime request count (exact even after sample windowing).
+    completed: u64,
     batches: u64,
     batch_sizes: u64,
     started: Option<std::time::Instant>,
@@ -111,7 +134,17 @@ impl Metrics {
             self.started = Some(now);
         }
         self.finished = Some(now);
-        self.latencies_us.push(latency.as_micros() as u64);
+        self.completed += 1;
+        push_bounded(&mut self.latencies_us, latency.as_micros() as u64);
+    }
+
+    /// Record one request with its queue-wait vs execute breakdown (total
+    /// latency = queue + execute). The serving loop uses this; callers
+    /// without a breakdown keep using [`Metrics::record_request`].
+    pub fn record_request_split(&mut self, queue: Duration, execute: Duration) {
+        self.record_request(queue + execute);
+        push_bounded(&mut self.queue_us, queue.as_micros() as u64);
+        push_bounded(&mut self.execute_us, execute.as_micros() as u64);
     }
 
     pub fn record_batch(&mut self, size: usize) {
@@ -124,6 +157,9 @@ impl Metrics {
     /// observation window spans both.
     pub fn merge_from(&mut self, other: &Metrics) {
         self.latencies_us.extend_from_slice(&other.latencies_us);
+        self.queue_us.extend_from_slice(&other.queue_us);
+        self.execute_us.extend_from_slice(&other.execute_us);
+        self.completed += other.completed;
         self.batches += other.batches;
         self.batch_sizes += other.batch_sizes;
         // schedule metrics are identical across pool replicas (same weights
@@ -142,7 +178,7 @@ impl Metrics {
     }
 
     pub fn count(&self) -> usize {
-        self.latencies_us.len()
+        self.completed as usize
     }
 
     pub fn mean_batch_size(&self) -> f64 {
@@ -153,14 +189,33 @@ impl Metrics {
         }
     }
 
-    fn percentile(&self, p: f64) -> Option<Duration> {
-        if self.latencies_us.is_empty() {
+    /// Nearest-rank percentile over raw microsecond samples — the one
+    /// percentile definition this crate uses (the load generator reports
+    /// through it too, so `/metrics` and loadgen numbers agree on the
+    /// same data).
+    pub fn percentile_us(v: &[u64], p: f64) -> Option<Duration> {
+        if v.is_empty() {
             return None;
         }
-        let mut v = self.latencies_us.clone();
+        let mut v = v.to_vec();
         v.sort_unstable();
         let idx = ((v.len() - 1) as f64 * p).round() as usize;
         Some(Duration::from_micros(v[idx]))
+    }
+
+    fn percentile(&self, p: f64) -> Option<Duration> {
+        Self::percentile_us(&self.latencies_us, p)
+    }
+
+    /// Queue-wait percentile over the split-recorded requests (None when no
+    /// breakdown was recorded).
+    pub fn queue_percentile(&self, p: f64) -> Option<Duration> {
+        Self::percentile_us(&self.queue_us, p)
+    }
+
+    /// Execute-time percentile over the split-recorded requests.
+    pub fn execute_percentile(&self, p: f64) -> Option<Duration> {
+        Self::percentile_us(&self.execute_us, p)
     }
 
     pub fn p50(&self) -> Option<Duration> {
@@ -204,6 +259,9 @@ impl Metrics {
             self.mean_batch_size(),
             self.throughput(),
         );
+        if let (Some(q), Some(e)) = (self.queue_percentile(0.5), self.execute_percentile(0.5)) {
+            line.push_str(&format!(" queue-p50={q:?} exec-p50={e:?}"));
+        }
         if let Some(s) = &self.schedule {
             line.push_str(&format!(" | {}", s.report()));
         }
@@ -332,6 +390,54 @@ mod tests {
         let snap = PoolMetrics::from_workers(vec![b, a]);
         assert_eq!(snap.merged.schedule.as_ref().unwrap(), &sched);
         assert!(snap.report().contains("sched[exact-cover]"));
+    }
+
+    #[test]
+    fn split_breakdown_accumulates_and_merges() {
+        let mut a = Metrics::new();
+        a.record_request_split(Duration::from_micros(100), Duration::from_micros(900));
+        a.record_request_split(Duration::from_micros(300), Duration::from_micros(700));
+        // totals land in the latency distribution…
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.p50().unwrap(), Duration::from_micros(1000));
+        // …and the breakdown has its own percentiles
+        assert_eq!(a.queue_percentile(0.5).unwrap(), Duration::from_micros(300));
+        assert_eq!(a.execute_percentile(0.5).unwrap(), Duration::from_micros(900));
+        assert!(a.report().contains("queue-p50"));
+
+        // merging keeps the breakdown; a breakdown-less worker contributes
+        // totals only
+        let mut b = Metrics::new();
+        b.record_request(Duration::from_micros(500));
+        let snap = PoolMetrics::from_workers(vec![a, b]);
+        assert_eq!(snap.merged.count(), 3);
+        assert_eq!(snap.merged.queue_percentile(0.5).unwrap(), Duration::from_micros(300));
+
+        // no breakdown recorded → no breakdown reported
+        let plain = Metrics::new();
+        assert!(plain.queue_percentile(0.5).is_none());
+        assert!(!plain.report().contains("queue-p50"));
+    }
+
+    #[test]
+    fn sample_storage_is_bounded_but_count_is_exact() {
+        // serve --http runs forever: retained samples must cap out while
+        // the lifetime counters stay exact
+        let mut m = Metrics::new();
+        let n = MAX_LATENCY_SAMPLES + MAX_LATENCY_SAMPLES / 2;
+        for i in 0..n {
+            m.record_request_split(
+                Duration::from_micros(i as u64),
+                Duration::from_micros(1),
+            );
+        }
+        assert_eq!(m.count(), n, "count reports lifetime total");
+        assert!(m.latencies_us.len() <= MAX_LATENCY_SAMPLES);
+        assert!(m.queue_us.len() <= MAX_LATENCY_SAMPLES);
+        assert!(m.execute_us.len() <= MAX_LATENCY_SAMPLES);
+        // the window covers recent traffic: p50 sits in the upper half of
+        // the full series, not the (dropped) beginning
+        assert!(m.queue_percentile(0.5).unwrap() > Duration::from_micros(n as u64 / 2));
     }
 
     #[test]

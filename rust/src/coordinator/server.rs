@@ -78,6 +78,11 @@ struct Request {
 pub struct Response {
     pub logits: Vec<f32>,
     pub latency: Duration,
+    /// Time spent queued before the forward pass started (dispatcher +
+    /// batcher + worker queue); `latency ≈ queue_wait + execute`.
+    pub queue_wait: Duration,
+    /// Time the engine forward itself took.
+    pub execute: Duration,
     pub batch_size: usize,
     /// Which pool worker executed the request.
     pub worker: usize,
@@ -136,6 +141,16 @@ impl Client {
             .map_err(|_| err!("server stopped"))?;
         Ok(rx)
     }
+
+    /// Per-worker + merged metrics snapshot, same as
+    /// [`Server::pool_metrics`] but reachable from a cloned handle — the
+    /// HTTP front-end's `/metrics` endpoint answers from connection
+    /// threads that only hold a `Client`.
+    pub fn pool_metrics(&self) -> Result<PoolMetrics> {
+        let (tx, rx) = mpsc::channel();
+        self.tx.send(Msg::Snapshot(tx)).map_err(|_| err!("server stopped"))?;
+        rx.recv().map_err(|_| err!("server stopped"))
+    }
 }
 
 impl Server {
@@ -188,9 +203,7 @@ impl Server {
 
     /// Per-worker + merged metrics snapshot.
     pub fn pool_metrics(&self) -> Result<PoolMetrics> {
-        let (tx, rx) = mpsc::channel();
-        self.tx.send(Msg::Snapshot(tx)).map_err(|_| err!("server stopped"))?;
-        rx.recv().map_err(|_| err!("server stopped"))
+        self.client().pool_metrics()
     }
 
     /// Graceful shutdown (flushes pending batches, drains every worker).
@@ -259,12 +272,19 @@ fn worker_loop(
                 let size = batch.len();
                 metrics.record_batch(size);
                 for req in batch {
+                    // queue-wait ends (and execute begins) here: everything
+                    // before this instant was dispatcher/batcher/queue time
+                    let queue_wait = req.submitted.elapsed();
+                    let exec_start = Instant::now();
                     let result = engine.forward(&req.image).map(|logits| {
+                        let execute = exec_start.elapsed();
                         let latency = req.submitted.elapsed();
-                        metrics.record_request(latency);
+                        metrics.record_request_split(queue_wait, execute);
                         Response {
                             logits,
                             latency,
+                            queue_wait,
+                            execute,
                             batch_size: size,
                             worker: id,
                             pe_utilization: pe_util,

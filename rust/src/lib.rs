@@ -62,6 +62,10 @@
 //!   (feature `pjrt`) the PJRT executable loader.
 //! * [`coordinator`] — batching inference server: a dispatcher over a pool
 //!   of engine-owning executor workers (the e2e driver).
+//! * [`net`] — networked serving on `std::net`: minimal HTTP/1.1 front-end
+//!   (`POST /infer`, `GET /metrics`, `GET /healthz`) with admission
+//!   control over the engine pool, plus the open/closed-loop load
+//!   generator.
 //! * [`report`] — ASCII/CSV emitters for every paper table and figure.
 
 pub mod analysis;
@@ -69,6 +73,7 @@ pub mod coordinator;
 pub mod dataflow;
 pub mod fft;
 pub mod model;
+pub mod net;
 pub mod nn;
 pub mod report;
 pub mod runtime;

@@ -41,7 +41,8 @@ fn parse_backend(name: &str, threads: usize) -> Result<BackendKind> {
 
 const ABOUT: &str = "spectral-flow — flexible-dataflow sparse spectral CNN accelerator \
 (FPGA '20 reproduction)\n\n\
-Usage: spectral-flow <analyze|optimize|schedule|simulate|infer|serve|bench-check> [--help]";
+Usage: spectral-flow <analyze|optimize|schedule|simulate|infer|serve|loadgen|bench-check> \
+[--help]";
 
 fn main() -> Result<()> {
     let args = Args::from_env();
@@ -53,6 +54,7 @@ fn main() -> Result<()> {
         "simulate" => simulate(args),
         "infer" => infer(args),
         "serve" => serve(args),
+        "loadgen" => loadgen(args),
         "bench-check" => bench_check(args),
         _ => {
             args.maybe_help(ABOUT);
@@ -172,7 +174,35 @@ fn bench_check(mut args: Args) -> Result<()> {
         "compare raw medians (same-host); default divides out the host-speed factor",
     );
     let strict = args.opt_bool("strict", "enforce the gate even on a desk-estimate baseline");
+    let update = args.opt_bool(
+        "update-baseline",
+        "rewrite --baseline from --current with provenance=measured (arms the gate)",
+    );
     args.maybe_help("bench-check: fail when current bench medians regress vs the baseline");
+    if update {
+        // refresh path: the freshly generated artifact becomes the new
+        // measured baseline — run the bench twice on a quiet machine first
+        // (README "Bench-regression gate")
+        let cur = read_json_artifact(&current)?;
+        if cur.results.is_empty() {
+            return Err(err!("{current} has no measurements — run the bench first"));
+        }
+        spectral_flow::util::bench::write_measured_baseline(
+            &baseline,
+            &cur.results,
+            &format!(
+                "Refreshed via `spectral-flow bench-check --update-baseline` from {current}. \
+                 Quick-mode medians; the regression gate is armed (README \
+                 \"Bench-regression gate\")."
+            ),
+        )?;
+        println!(
+            "baseline {baseline} refreshed from {current}: {} benches, provenance=measured — \
+             the bench-regression gate is now armed",
+            cur.results.len()
+        );
+        return Ok(());
+    }
     let base = read_json_artifact(&baseline)?;
     let cur = read_json_artifact(&current)?;
     let cmp = compare_benches(
@@ -245,12 +275,15 @@ fn simulate(mut args: Args) -> Result<()> {
     Ok(())
 }
 
-/// Run the batching inference server against a synthetic request stream.
+/// Run the batching inference server — either against a synthetic
+/// in-process request stream (default) or as a networked HTTP endpoint
+/// (`--http <addr>`: POST /infer, GET /metrics, GET /healthz).
 fn serve(mut args: Args) -> Result<()> {
     use spectral_flow::coordinator::{BatcherConfig, Server, ServerConfig};
+    use spectral_flow::net::{HttpFrontend, NetConfig};
     use spectral_flow::tensor::Tensor;
     let variant = args.opt("variant", "vgg16-cifar", "model variant");
-    let requests = args.opt_usize("requests", 16, "number of requests to issue");
+    let requests = args.opt_usize("requests", 16, "synthetic requests to issue (no --http)");
     let batch = args.opt_usize("batch", 4, "max batch size");
     let wait_ms = args.opt_usize("wait-ms", 10, "batch deadline (ms)");
     let artifacts = args.opt("artifacts", "artifacts", "artifacts directory");
@@ -263,9 +296,15 @@ fn serve(mut args: Args) -> Result<()> {
         "exact-cover",
         "sparse access scheduler (exact-cover|lowest-index|off)",
     );
+    let http_addr = args.opt("http", "", "serve over HTTP on this addr (e.g. 127.0.0.1:7878)");
+    let max_inflight = args.opt_usize("max-inflight", 64, "HTTP admission bound (excess → 429)");
+    let duration_secs =
+        args.opt_usize("duration-secs", 0, "HTTP mode: stop after this many seconds (0 = forever)");
     let backend = parse_backend(&backend_name, threads)?;
     let scheduler = SchedulePolicy::parse(&scheduler_name)?;
-    args.maybe_help("serve: run the batching server pool on synthetic traffic");
+    args.maybe_help(
+        "serve: run the batching server pool (synthetic traffic, or HTTP with --http)",
+    );
     // Manifest-only read to shape the synthetic requests and resolve the α
     // default: always use the cheap interp backend here — the server worker
     // owns the real one.
@@ -290,6 +329,31 @@ fn serve(mut args: Args) -> Result<()> {
         workers,
         scheduler,
     })?;
+    if !http_addr.is_empty() {
+        // networked mode: hand the pool to the HTTP front-end and serve
+        // until the duration elapses (0 = until the process is killed)
+        let frontend = HttpFrontend::start(
+            server,
+            NetConfig {
+                addr: http_addr,
+                max_inflight,
+                input_shape: [vdesc.input_c, vdesc.input_hw, vdesc.input_hw],
+                ..NetConfig::default()
+            },
+        )?;
+        println!(
+            "listening on http://{} — POST /infer, GET /metrics, GET /healthz",
+            frontend.local_addr()
+        );
+        if duration_secs > 0 {
+            std::thread::sleep(std::time::Duration::from_secs(duration_secs as u64));
+            println!("duration elapsed — draining and shutting down");
+            return frontend.shutdown();
+        }
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
     let client = server.client();
     let mut rng = Pcg32::new(123);
     let t0 = std::time::Instant::now();
@@ -310,6 +374,58 @@ fn serve(mut args: Args) -> Result<()> {
     println!("{requests} requests in {wall:?} → {:.2} img/s", requests as f64 / wall.as_secs_f64());
     println!("{}", metrics.report());
     server.shutdown()?;
+    Ok(())
+}
+
+/// Drive load against a `serve --http` endpoint and report latency
+/// percentiles + throughput (optionally into a `BENCH_serve.json`).
+fn loadgen(mut args: Args) -> Result<()> {
+    use spectral_flow::net::{loadgen, LoadGenConfig, LoadMode};
+    let addr = args.opt("addr", "127.0.0.1:7878", "target host:port of a serve --http endpoint");
+    let mode_name = args.opt("mode", "closed", "closed (fixed concurrency) | open (fixed rate)");
+    let concurrency = args.opt_usize("concurrency", 4, "closed-loop concurrent connections");
+    let rate = args.opt_f64("rate", 20.0, "open-loop arrival rate (requests/second)");
+    let requests = args.opt_usize("requests", 64, "total requests to issue");
+    let timeout_ms = args.opt_usize("timeout-ms", 30_000, "per-request reply deadline");
+    let out = args.opt(
+        "out",
+        "rust/reports/BENCH_serve.json",
+        "bench artifact to write (\"none\" to skip)",
+    );
+    let name = args.opt("name", "serve/loadgen", "bench entry name for the artifact");
+    let strict = args.opt_bool("strict", "exit with an error unless every request succeeded");
+    args.maybe_help("loadgen: open/closed-loop HTTP load against a serve --http endpoint");
+    let mode = match mode_name.as_str() {
+        "closed" => LoadMode::Closed { concurrency },
+        "open" => LoadMode::Open { rate_hz: rate },
+        other => return Err(err!("unknown mode {other:?} (expected closed|open)")),
+    };
+    let report = loadgen::run(&LoadGenConfig {
+        addr,
+        mode,
+        requests,
+        body: None,
+        timeout: std::time::Duration::from_millis(timeout_ms as u64),
+    })?;
+    print!("{}", report.report());
+    if out != "none" {
+        let mut b = spectral_flow::util::bench::Bench::new();
+        report.record_into(&mut b, &name);
+        b.write_json(&out)?;
+        println!("wrote {out}");
+    }
+    if report.ok == 0 {
+        return Err(err!("no successful requests — is serve --http running at the target?"));
+    }
+    if strict && report.ok != report.sent {
+        return Err(err!(
+            "{} of {} requests did not succeed ({} rejected, {} failed)",
+            report.sent - report.ok,
+            report.sent,
+            report.rejected,
+            report.failed
+        ));
+    }
     Ok(())
 }
 

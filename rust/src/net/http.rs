@@ -1,0 +1,536 @@
+//! Minimal HTTP/1.1 on `std::net` (offline substitute for `hyper`).
+//!
+//! Exactly the slice the serving front-end needs: strict request parsing
+//! with hard caps on every dimension an untrusted peer controls (request
+//! line length, header count/length, body size, total read time),
+//! keep-alive connection reuse, and a response writer. The parser is
+//! deliberately conservative — anything outside the narrow grammar the
+//! front-end speaks (`GET`/`POST`, absolute path target, `HTTP/1.0|1.1`,
+//! `Content-Length`-framed bodies) is rejected with a 4xx/5xx rather than
+//! guessed at. Chunked transfer encoding is not implemented (501).
+//!
+//! Reading is deadline-based, not just timeout-based: [`HttpConn`] re-arms
+//! the socket read timeout to the *remaining* request budget before every
+//! `read`, so a slow-loris peer dripping one byte per poll still hits the
+//! deadline instead of resetting it ([`HttpLimits::read_timeout`] bounds
+//! the whole request read, headers and body together).
+//!
+//! The same [`HttpConn`] type also parses *responses*
+//! ([`HttpConn::read_response`]) so the load generator and the tests speak
+//! the protocol through one implementation.
+
+use std::io::{self, Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use crate::util::error::Error;
+
+/// Parse budget for one connection (every knob caps something a hostile
+/// peer controls).
+#[derive(Debug, Clone, Copy)]
+pub struct HttpLimits {
+    /// Maximum length of the request line and of each header line (bytes,
+    /// excluding CRLF).
+    pub max_line: usize,
+    /// Maximum number of header fields per request.
+    pub max_headers: usize,
+    /// Maximum `Content-Length` accepted (larger bodies get 413 before a
+    /// single body byte is read).
+    pub max_body: usize,
+    /// Total wall-clock budget for reading one request (headers + body).
+    /// Also bounds how long an idle keep-alive connection is held open.
+    pub read_timeout: Duration,
+    /// Requests served per connection before it is closed (keep-alive cap).
+    pub max_requests_per_conn: usize,
+}
+
+impl Default for HttpLimits {
+    fn default() -> Self {
+        HttpLimits {
+            max_line: 8 << 10,
+            max_headers: 64,
+            max_body: 16 << 20,
+            read_timeout: Duration::from_secs(10),
+            max_requests_per_conn: 1000,
+        }
+    }
+}
+
+/// Protocol-level error: `status` is the HTTP status to answer with
+/// (408 for deadline expiry), or `0` for transport failures where no
+/// response can be written (peer vanished mid-read).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HttpError {
+    pub status: u16,
+    pub message: String,
+}
+
+impl HttpError {
+    fn new(status: u16, message: impl Into<String>) -> Self {
+        HttpError { status, message: message.into() }
+    }
+
+    fn transport(e: io::Error) -> Self {
+        HttpError { status: 0, message: e.to_string() }
+    }
+
+    /// Deadline expiry (the slow-loris outcome).
+    pub fn is_timeout(&self) -> bool {
+        self.status == 408
+    }
+}
+
+impl std::fmt::Display for HttpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.status == 0 {
+            write!(f, "http transport error: {}", self.message)
+        } else {
+            write!(f, "http {}: {}", self.status, self.message)
+        }
+    }
+}
+
+impl From<HttpError> for Error {
+    fn from(e: HttpError) -> Self {
+        Error::msg(e.to_string())
+    }
+}
+
+/// One parsed request. Header names are lowercased at parse time; values
+/// keep their bytes (trimmed of surrounding whitespace).
+#[derive(Debug, Clone)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+    keep_alive: bool,
+}
+
+impl HttpRequest {
+    /// Case-insensitive header lookup (`name` must be lowercase).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+    }
+
+    /// Whether the peer asked to keep the connection open (HTTP/1.1
+    /// default, overridden by `Connection:` either way).
+    pub fn keep_alive(&self) -> bool {
+        self.keep_alive
+    }
+}
+
+/// Streams that can bound an individual `read` call. [`TcpStream`] re-arms
+/// its socket timeout; in-memory test readers are instantaneous and need
+/// nothing.
+pub trait TimeoutIo: Read {
+    fn arm(&mut self, _remaining: Duration) -> io::Result<()> {
+        Ok(())
+    }
+}
+
+impl TimeoutIo for TcpStream {
+    fn arm(&mut self, remaining: Duration) -> io::Result<()> {
+        // set_read_timeout rejects a zero Duration; the deadline check in
+        // `refill` already handled the expired case.
+        self.set_read_timeout(Some(remaining.max(Duration::from_millis(1))))
+    }
+}
+
+impl<T: AsRef<[u8]>> TimeoutIo for io::Cursor<T> {}
+
+/// Buffered, deadline-aware reader for one connection (request side on the
+/// server, response side in the load generator). Buffering lives here, not
+/// in a `BufReader`, so read-ahead bytes survive across keep-alive
+/// requests and every refill can re-arm the transport deadline.
+pub struct HttpConn<S: TimeoutIo> {
+    stream: S,
+    buf: Vec<u8>,
+    start: usize,
+}
+
+impl<S: TimeoutIo> HttpConn<S> {
+    pub fn new(stream: S) -> Self {
+        HttpConn { stream, buf: Vec::with_capacity(4096), start: 0 }
+    }
+
+    fn buffered(&self) -> &[u8] {
+        &self.buf[self.start..]
+    }
+
+    fn consume(&mut self, n: usize) {
+        self.start += n;
+        if self.start == self.buf.len() {
+            self.buf.clear();
+            self.start = 0;
+        }
+    }
+
+    /// Pull more bytes from the transport under the request deadline.
+    /// Returns the number of new bytes (0 = EOF).
+    fn refill(&mut self, deadline: Instant) -> Result<usize, HttpError> {
+        let remaining = deadline.saturating_duration_since(Instant::now());
+        if remaining.is_zero() {
+            return Err(HttpError::new(408, "read deadline expired"));
+        }
+        self.stream.arm(remaining).map_err(HttpError::transport)?;
+        let mut tmp = [0u8; 4096];
+        match self.stream.read(&mut tmp) {
+            Ok(0) => Ok(0),
+            Ok(n) => {
+                self.buf.extend_from_slice(&tmp[..n]);
+                Ok(n)
+            }
+            Err(e) if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) => {
+                Err(HttpError::new(408, "read deadline expired"))
+            }
+            Err(e) => Err(HttpError::transport(e)),
+        }
+    }
+
+    /// Read one CRLF-terminated line of at most `max` bytes. `Ok(None)` on
+    /// clean EOF at a line boundary.
+    fn read_line(&mut self, max: usize, deadline: Instant) -> Result<Option<String>, HttpError> {
+        let mut scanned = 0;
+        loop {
+            if let Some(i) = self.buffered()[scanned..].iter().position(|&b| b == b'\n') {
+                let end = scanned + i;
+                if end > max {
+                    return Err(HttpError::new(400, "header line too long"));
+                }
+                let mut line = self.buffered()[..end].to_vec();
+                self.consume(end + 1);
+                if line.last() == Some(&b'\r') {
+                    line.pop();
+                }
+                return match String::from_utf8(line) {
+                    Ok(s) => Ok(Some(s)),
+                    Err(_) => Err(HttpError::new(400, "non-utf8 bytes in header")),
+                };
+            }
+            scanned = self.buffered().len();
+            if scanned > max {
+                return Err(HttpError::new(400, "header line too long"));
+            }
+            if self.refill(deadline)? == 0 {
+                return if scanned == 0 {
+                    Ok(None)
+                } else {
+                    Err(HttpError::new(400, "truncated request"))
+                };
+            }
+        }
+    }
+
+    /// Read exactly `len` body bytes under the deadline.
+    fn read_body(&mut self, len: usize, deadline: Instant) -> Result<Vec<u8>, HttpError> {
+        let mut out = Vec::with_capacity(len.min(1 << 20));
+        loop {
+            let take = self.buffered().len().min(len - out.len());
+            out.extend_from_slice(&self.buffered()[..take]);
+            self.consume(take);
+            if out.len() == len {
+                return Ok(out);
+            }
+            if self.refill(deadline)? == 0 {
+                return Err(HttpError::new(400, "truncated body"));
+            }
+        }
+    }
+
+    /// Parse one request. `Ok(None)` means the peer closed (or idled past
+    /// the deadline) between requests — the clean keep-alive exit; errors
+    /// carry the status to answer with before closing.
+    pub fn read_request(&mut self, limits: &HttpLimits) -> Result<Option<HttpRequest>, HttpError> {
+        let deadline = Instant::now() + limits.read_timeout;
+        let start_line = match self.read_line(limits.max_line, deadline) {
+            Ok(None) => return Ok(None),
+            // idle keep-alive: the deadline expired with zero request bytes
+            // pending — that is a quiet close, not a slow peer to 408
+            Err(e) if e.is_timeout() && self.buffered().is_empty() => return Ok(None),
+            Ok(Some(l)) => l,
+            Err(e) => return Err(e),
+        };
+        let parts: Vec<&str> = start_line.split(' ').collect();
+        if parts.len() != 3 || parts.iter().any(|p| p.is_empty()) {
+            return Err(HttpError::new(400, "malformed request line"));
+        }
+        let (method, target, version) = (parts[0], parts[1], parts[2]);
+        if method.len() > 16 || !method.bytes().all(|b| b.is_ascii_uppercase()) {
+            return Err(HttpError::new(400, "malformed method"));
+        }
+        if !target.starts_with('/') || target.len() > limits.max_line {
+            return Err(HttpError::new(400, "target must be an absolute path"));
+        }
+        let mut keep_alive = match version {
+            "HTTP/1.1" => true,
+            "HTTP/1.0" => false,
+            _ => return Err(HttpError::new(505, "unsupported HTTP version")),
+        };
+        let mut headers: Vec<(String, String)> = Vec::new();
+        loop {
+            let line = match self.read_line(limits.max_line, deadline)? {
+                Some(l) => l,
+                None => return Err(HttpError::new(400, "truncated headers")),
+            };
+            if line.is_empty() {
+                break;
+            }
+            if headers.len() >= limits.max_headers {
+                return Err(HttpError::new(431, "too many header fields"));
+            }
+            let (name, value) = line
+                .split_once(':')
+                .ok_or_else(|| HttpError::new(400, "malformed header field"))?;
+            if name.is_empty() || name.contains(' ') || name.contains('\t') {
+                return Err(HttpError::new(400, "malformed header name"));
+            }
+            headers.push((name.to_ascii_lowercase(), value.trim().to_string()));
+        }
+        let header = |n: &str| headers.iter().find(|(k, _)| k == n).map(|(_, v)| v.as_str());
+        if header("transfer-encoding").is_some() {
+            return Err(HttpError::new(501, "transfer-encoding not supported"));
+        }
+        match header("connection").map(str::to_ascii_lowercase).as_deref() {
+            Some("close") => keep_alive = false,
+            Some("keep-alive") => keep_alive = true,
+            _ => {}
+        }
+        let body_len = match header("content-length") {
+            None => 0,
+            Some(v) => v
+                .parse::<usize>()
+                .map_err(|_| HttpError::new(400, "bad content-length"))?,
+        };
+        if body_len > limits.max_body {
+            return Err(HttpError::new(
+                413,
+                format!("body of {body_len} bytes exceeds the {} byte cap", limits.max_body),
+            ));
+        }
+        let body =
+            if body_len > 0 { self.read_body(body_len, deadline)? } else { Vec::new() };
+        Ok(Some(HttpRequest {
+            method: method.to_string(),
+            path: target.to_string(),
+            headers,
+            body,
+            keep_alive,
+        }))
+    }
+
+    /// Parse one response (client side: the load generator and tests).
+    /// Returns `(status, body)`; bodies must be `Content-Length`-framed,
+    /// which is the only framing [`write_response`] emits.
+    pub fn read_response(&mut self, limits: &HttpLimits) -> Result<(u16, Vec<u8>), HttpError> {
+        let deadline = Instant::now() + limits.read_timeout;
+        let status_line = match self.read_line(limits.max_line, deadline)? {
+            Some(l) => l,
+            None => return Err(HttpError::new(0, "connection closed before response")),
+        };
+        let mut parts = status_line.splitn(3, ' ');
+        let version = parts.next().unwrap_or("");
+        let status = parts
+            .next()
+            .and_then(|s| s.parse::<u16>().ok())
+            .ok_or_else(|| HttpError::new(0, "malformed status line"))?;
+        if !version.starts_with("HTTP/1.") {
+            return Err(HttpError::new(0, "malformed status line"));
+        }
+        let mut body_len = 0usize;
+        for _ in 0..limits.max_headers {
+            let line = match self.read_line(limits.max_line, deadline)? {
+                Some(l) => l,
+                None => return Err(HttpError::new(0, "truncated response headers")),
+            };
+            if line.is_empty() {
+                let body = if body_len > 0 {
+                    self.read_body(body_len.min(limits.max_body), deadline)?
+                } else {
+                    Vec::new()
+                };
+                return Ok((status, body));
+            }
+            if let Some((name, value)) = line.split_once(':') {
+                if name.eq_ignore_ascii_case("content-length") {
+                    body_len = value
+                        .trim()
+                        .parse()
+                        .map_err(|_| HttpError::new(0, "bad response content-length"))?;
+                }
+            }
+        }
+        Err(HttpError::new(0, "too many response headers"))
+    }
+}
+
+/// Reason phrase for the statuses this server emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        503 => "Service Unavailable",
+        505 => "HTTP Version Not Supported",
+        _ => "Unknown",
+    }
+}
+
+/// Write one `Content-Length`-framed response.
+pub fn write_response(
+    w: &mut impl Write,
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+    keep_alive: bool,
+) -> io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+        status,
+        reason(status),
+        content_type,
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
+    );
+    w.write_all(head.as_bytes())?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Render one `Content-Length`-framed request (the load generator's side).
+pub fn format_request(method: &str, path: &str, host: &str, body: &[u8]) -> Vec<u8> {
+    let head = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {host}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: keep-alive\r\n\r\n",
+        body.len(),
+    );
+    let mut out = Vec::with_capacity(head.len() + body.len());
+    out.extend_from_slice(head.as_bytes());
+    out.extend_from_slice(body);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn conn(bytes: &[u8]) -> HttpConn<io::Cursor<Vec<u8>>> {
+        HttpConn::new(io::Cursor::new(bytes.to_vec()))
+    }
+
+    fn parse(bytes: &[u8]) -> Result<Option<HttpRequest>, HttpError> {
+        conn(bytes).read_request(&HttpLimits::default())
+    }
+
+    #[test]
+    fn parses_get_and_post() {
+        let r = parse(b"GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n").unwrap().unwrap();
+        assert_eq!(r.method, "GET");
+        assert_eq!(r.path, "/healthz");
+        assert!(r.keep_alive());
+        assert_eq!(r.header("host"), Some("x"));
+
+        let r = parse(b"POST /infer HTTP/1.1\r\nContent-Length: 4\r\n\r\nabcd")
+            .unwrap()
+            .unwrap();
+        assert_eq!(r.body, b"abcd");
+    }
+
+    #[test]
+    fn keep_alive_rules() {
+        let r = parse(b"GET / HTTP/1.0\r\n\r\n").unwrap().unwrap();
+        assert!(!r.keep_alive(), "1.0 defaults to close");
+        let r = parse(b"GET / HTTP/1.1\r\nConnection: close\r\n\r\n").unwrap().unwrap();
+        assert!(!r.keep_alive());
+        let r = parse(b"GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n").unwrap().unwrap();
+        assert!(r.keep_alive());
+    }
+
+    #[test]
+    fn two_requests_on_one_connection() {
+        let mut c = conn(b"GET /a HTTP/1.1\r\n\r\nGET /b HTTP/1.1\r\n\r\n");
+        let l = HttpLimits::default();
+        assert_eq!(c.read_request(&l).unwrap().unwrap().path, "/a");
+        assert_eq!(c.read_request(&l).unwrap().unwrap().path, "/b");
+        assert!(c.read_request(&l).unwrap().is_none(), "clean EOF after the last request");
+    }
+
+    #[test]
+    fn rejects_malformed_request_lines() {
+        for bad in [
+            &b"NOT A VALID LINE AT ALL\r\n\r\n"[..],
+            b"GET /\r\n\r\n",
+            b"GET  / HTTP/1.1\r\n\r\n",
+            b"get / HTTP/1.1\r\n\r\n",
+            b"GET x HTTP/1.1\r\n\r\n",
+            b"\r\nGET / HTTP/1.1\r\n\r\n",
+        ] {
+            let e = parse(bad).unwrap_err();
+            assert_eq!(e.status, 400, "{:?}", String::from_utf8_lossy(bad));
+        }
+        assert_eq!(parse(b"GET / HTTP/2.0\r\n\r\n").unwrap_err().status, 505);
+    }
+
+    #[test]
+    fn rejects_bad_headers_and_bodies() {
+        assert_eq!(parse(b"GET / HTTP/1.1\r\nno-colon-here\r\n\r\n").unwrap_err().status, 400);
+        assert_eq!(
+            parse(b"GET / HTTP/1.1\r\nContent-Length: ten\r\n\r\n").unwrap_err().status,
+            400
+        );
+        assert_eq!(
+            parse(b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n")
+                .unwrap_err()
+                .status,
+            501
+        );
+        // truncated body: Content-Length promises more than the wire has
+        assert_eq!(
+            parse(b"POST / HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc").unwrap_err().status,
+            400
+        );
+    }
+
+    #[test]
+    fn caps_enforced() {
+        let limits =
+            HttpLimits { max_line: 32, max_headers: 2, max_body: 8, ..HttpLimits::default() };
+        let long = format!("GET /{} HTTP/1.1\r\n\r\n", "a".repeat(100));
+        assert_eq!(conn(long.as_bytes()).read_request(&limits).unwrap_err().status, 400);
+        let many = b"GET / HTTP/1.1\r\na: 1\r\nb: 2\r\nc: 3\r\n\r\n";
+        assert_eq!(conn(many).read_request(&limits).unwrap_err().status, 431);
+        // oversized Content-Length is rejected before any body byte is read
+        let big = b"POST / HTTP/1.1\r\nContent-Length: 999\r\n\r\n";
+        assert_eq!(conn(big).read_request(&limits).unwrap_err().status, 413);
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let mut wire = Vec::new();
+        write_response(&mut wire, 429, "application/json", b"{\"error\":\"busy\"}", true)
+            .unwrap();
+        let (status, body) = conn(&wire).read_response(&HttpLimits::default()).unwrap();
+        assert_eq!(status, 429);
+        assert_eq!(body, b"{\"error\":\"busy\"}");
+        let text = String::from_utf8(wire).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"));
+        assert!(text.contains("Connection: keep-alive"));
+    }
+
+    #[test]
+    fn request_formatting_roundtrips() {
+        let wire = format_request("POST", "/infer", "h:1", b"{\"seed\":7}");
+        let r = parse(&wire).unwrap().unwrap();
+        assert_eq!(r.method, "POST");
+        assert_eq!(r.path, "/infer");
+        assert_eq!(r.body, b"{\"seed\":7}");
+        assert!(r.keep_alive());
+    }
+}

@@ -1,0 +1,466 @@
+//! Open/closed-loop HTTP load generator for the serving front-end.
+//!
+//! Two canonical load disciplines:
+//!
+//! * **Closed loop** (fixed concurrency): `c` workers, each holding one
+//!   keep-alive connection, issue the next request the moment the previous
+//!   reply lands. Measures the server's capacity frontier — throughput at
+//!   a given level of concurrency, with coordinated omission by design
+//!   (the client waits, like a pool of synchronous callers would).
+//! * **Open loop** (fixed arrival rate): requests launch on a fixed
+//!   schedule whether or not earlier ones returned, each on its own
+//!   connection, and latency is measured **from the scheduled arrival
+//!   time** — so server-side queueing during overload shows up in the
+//!   tail percentiles instead of being silently absorbed (the
+//!   coordinated-omission correction).
+//!
+//! Every reply is classified as success (200), rejected (429 — the
+//! admission gate working as designed), or failed (anything else,
+//! including transport errors and timeouts). The report carries a latency
+//! histogram with p50/p95/p99 and throughput, and can be recorded into a
+//! [`Bench`] so sweeps land in `BENCH_serve.json` next to the other CI
+//! bench artifacts.
+
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use super::http::{self, HttpConn, HttpLimits};
+use crate::coordinator::Metrics;
+use crate::err;
+use crate::util::bench::{Bench, Measurement};
+use crate::util::error::{Context, Result};
+
+/// Load discipline.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LoadMode {
+    /// Fixed arrival rate (requests/second), one connection per request.
+    Open { rate_hz: f64 },
+    /// Fixed concurrency, one keep-alive connection per worker.
+    Closed { concurrency: usize },
+}
+
+/// Load generator configuration.
+#[derive(Debug, Clone)]
+pub struct LoadGenConfig {
+    /// Target `host:port` of a `serve --http` endpoint.
+    pub addr: String,
+    pub mode: LoadMode,
+    /// Total requests to issue.
+    pub requests: usize,
+    /// Explicit request body; `None` sends `{"seed":i}` per request —
+    /// tiny on the wire, deterministic work on the server.
+    pub body: Option<String>,
+    /// Per-request reply deadline.
+    pub timeout: Duration,
+}
+
+impl Default for LoadGenConfig {
+    fn default() -> Self {
+        LoadGenConfig {
+            addr: "127.0.0.1:7878".into(),
+            mode: LoadMode::Closed { concurrency: 4 },
+            requests: 64,
+            body: None,
+            timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Outcome {
+    Success,
+    Rejected,
+    Failed,
+}
+
+/// Aggregated result of one load run.
+#[derive(Debug, Clone, Default)]
+pub struct LoadReport {
+    pub sent: usize,
+    /// 200 replies (latencies below cover exactly these).
+    pub ok: usize,
+    /// 429 replies — shed by the admission gate, not errors.
+    pub rejected: usize,
+    /// Transport errors, timeouts, and non-200/429 statuses.
+    pub failed: usize,
+    pub elapsed: Duration,
+    latencies_us: Vec<u64>,
+}
+
+impl LoadReport {
+    fn record(&mut self, outcome: Outcome, latency: Duration) {
+        self.sent += 1;
+        match outcome {
+            Outcome::Success => {
+                self.ok += 1;
+                self.latencies_us.push(latency.as_micros() as u64);
+            }
+            Outcome::Rejected => self.rejected += 1,
+            Outcome::Failed => self.failed += 1,
+        }
+    }
+
+    /// Nearest-rank percentile (same definition as `/metrics`, via
+    /// [`Metrics::percentile_us`], so the two reports agree).
+    pub fn percentile(&self, p: f64) -> Option<Duration> {
+        Metrics::percentile_us(&self.latencies_us, p)
+    }
+
+    pub fn p50(&self) -> Option<Duration> {
+        self.percentile(0.50)
+    }
+
+    pub fn p95(&self) -> Option<Duration> {
+        self.percentile(0.95)
+    }
+
+    pub fn p99(&self) -> Option<Duration> {
+        self.percentile(0.99)
+    }
+
+    /// Successful replies per second over the whole run.
+    pub fn throughput(&self) -> f64 {
+        if self.elapsed.is_zero() {
+            return 0.0;
+        }
+        self.ok as f64 / self.elapsed.as_secs_f64()
+    }
+
+    pub fn success_rate(&self) -> f64 {
+        self.ok as f64 / self.sent.max(1) as f64
+    }
+
+    /// Doubling-width latency buckets `(upper_bound, count)` covering every
+    /// successful sample (first bound 256 µs).
+    pub fn histogram(&self) -> Vec<(Duration, usize)> {
+        if self.latencies_us.is_empty() {
+            return Vec::new();
+        }
+        let max = *self.latencies_us.iter().max().unwrap();
+        let mut bounds = vec![256u64];
+        while *bounds.last().unwrap() < max {
+            let next = bounds.last().unwrap() * 2;
+            bounds.push(next);
+        }
+        let mut counts = vec![0usize; bounds.len()];
+        for &us in &self.latencies_us {
+            let i = bounds.iter().position(|&b| us <= b).unwrap();
+            counts[i] += 1;
+        }
+        bounds
+            .into_iter()
+            .map(Duration::from_micros)
+            .zip(counts)
+            .collect()
+    }
+
+    /// Human-readable summary: outcome counts, percentiles, throughput,
+    /// and the histogram.
+    pub fn report(&self) -> String {
+        let mut out = format!(
+            "loadgen: {} sent in {:?} → {} ok, {} rejected (429), {} failed | {:.1} req/s\n",
+            self.sent,
+            self.elapsed,
+            self.ok,
+            self.rejected,
+            self.failed,
+            self.throughput(),
+        );
+        if let (Some(p50), Some(p95), Some(p99)) = (self.p50(), self.p95(), self.p99()) {
+            out.push_str(&format!("latency: p50={p50:?} p95={p95:?} p99={p99:?}\n"));
+        }
+        for (bound, count) in self.histogram() {
+            if count > 0 {
+                out.push_str(&format!("  ≤{bound:>9?} {count:>6}  {}\n", "#".repeat(count.min(60))));
+            }
+        }
+        out
+    }
+
+    /// Record this run into a [`Bench`] (two entries: the latency
+    /// distribution with p50 as the median, and a `<name>_p99` tail entry)
+    /// so sweeps serialize through the standard `BENCH_*.json` artifact.
+    pub fn record_into(&self, b: &mut Bench, name: &str) {
+        if self.latencies_us.is_empty() {
+            return;
+        }
+        let to_ns = |us: u64| us as f64 * 1e3;
+        let mean_us =
+            self.latencies_us.iter().sum::<u64>() as f64 / self.latencies_us.len() as f64;
+        let var = self
+            .latencies_us
+            .iter()
+            .map(|&us| (us as f64 - mean_us) * (us as f64 - mean_us))
+            .sum::<f64>()
+            / self.latencies_us.len() as f64;
+        b.push(Measurement {
+            name: name.to_string(),
+            iters: self.ok,
+            mean_ns: mean_us * 1e3,
+            stddev_ns: var.sqrt() * 1e3,
+            median_ns: to_ns(self.p50().unwrap().as_micros() as u64),
+            p10_ns: to_ns(self.percentile(0.10).unwrap().as_micros() as u64),
+            p90_ns: to_ns(self.percentile(0.90).unwrap().as_micros() as u64),
+        });
+        let p99 = to_ns(self.p99().unwrap().as_micros() as u64);
+        b.push(Measurement {
+            name: format!("{name}_p99"),
+            iters: self.ok,
+            mean_ns: p99,
+            stddev_ns: 0.0,
+            median_ns: p99,
+            p10_ns: p99,
+            p90_ns: p99,
+        });
+    }
+}
+
+/// One worker's connection state (closed loop reuses it across requests).
+type Conn = (HttpConn<TcpStream>, TcpStream);
+
+fn connect(addr: &SocketAddr, timeout: Duration) -> Result<Conn> {
+    let stream = TcpStream::connect_timeout(addr, timeout)
+        .with_context(|| format!("connecting {addr}"))?;
+    let _ = stream.set_nodelay(true);
+    let writer = stream.try_clone().context("cloning stream")?;
+    Ok((HttpConn::new(stream), writer))
+}
+
+/// Issue one request, reusing `conn` when possible. A *reused* keep-alive
+/// connection may have been closed by the server between requests (its
+/// per-connection request cap, or the idle deadline) — that is not a
+/// server failure, so a transport error on a reused connection retries
+/// exactly once on a fresh one. Timeouts never retry (the request may
+/// still be executing server-side; a retry would double the work).
+fn issue(
+    conn: &mut Option<Conn>,
+    addr: &SocketAddr,
+    host: &str,
+    body: &[u8],
+    timeout: Duration,
+) -> Outcome {
+    let reused = conn.is_some();
+    match issue_once(conn, addr, host, body, timeout) {
+        Some(outcome) => outcome,
+        None if reused => {
+            issue_once(conn, addr, host, body, timeout).unwrap_or(Outcome::Failed)
+        }
+        None => Outcome::Failed,
+    }
+}
+
+/// One attempt: `Some(outcome)` is final, `None` means the transport died
+/// and the caller may retry on a fresh connection.
+fn issue_once(
+    conn: &mut Option<Conn>,
+    addr: &SocketAddr,
+    host: &str,
+    body: &[u8],
+    timeout: Duration,
+) -> Option<Outcome> {
+    use std::io::Write;
+    if conn.is_none() {
+        match connect(addr, timeout) {
+            Ok(c) => *conn = Some(c),
+            Err(_) => return Some(Outcome::Failed),
+        }
+    }
+    let (reader, writer) = conn.as_mut().unwrap();
+    let wire = http::format_request("POST", "/infer", host, body);
+    if writer.write_all(&wire).is_err() {
+        *conn = None;
+        return None;
+    }
+    let limits = HttpLimits { read_timeout: timeout, ..HttpLimits::default() };
+    match reader.read_response(&limits) {
+        Ok((200, _)) => Some(Outcome::Success),
+        Ok((429, _)) => Some(Outcome::Rejected),
+        Ok((_, _)) => Some(Outcome::Failed),
+        Err(e) => {
+            *conn = None;
+            if e.is_timeout() {
+                Some(Outcome::Failed)
+            } else {
+                None
+            }
+        }
+    }
+}
+
+fn body_for(cfg: &LoadGenConfig, seq: usize) -> Vec<u8> {
+    match &cfg.body {
+        Some(b) => b.clone().into_bytes(),
+        None => format!("{{\"seed\":{seq}}}").into_bytes(),
+    }
+}
+
+fn resolve(addr: &str) -> Result<SocketAddr> {
+    addr.to_socket_addrs()
+        .with_context(|| format!("resolving {addr}"))?
+        .next()
+        .ok_or_else(|| err!("{addr} resolves to no address"))
+}
+
+/// Run the configured load and aggregate the report.
+pub fn run(cfg: &LoadGenConfig) -> Result<LoadReport> {
+    if cfg.requests == 0 {
+        return Err(err!("--requests must be at least 1"));
+    }
+    let addr = resolve(&cfg.addr)?;
+    match cfg.mode {
+        LoadMode::Closed { concurrency } => run_closed(cfg, addr, concurrency.max(1)),
+        LoadMode::Open { rate_hz } => run_open(cfg, addr, rate_hz),
+    }
+}
+
+fn run_closed(cfg: &LoadGenConfig, addr: SocketAddr, concurrency: usize) -> Result<LoadReport> {
+    let (tx, rx) = mpsc::channel::<(Outcome, Duration)>();
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for w in 0..concurrency {
+            let n = cfg.requests / concurrency
+                + usize::from(w < cfg.requests % concurrency);
+            let tx = tx.clone();
+            s.spawn(move || {
+                let mut conn: Option<Conn> = None;
+                for i in 0..n {
+                    let body = body_for(cfg, w * cfg.requests + i);
+                    let start = Instant::now();
+                    let outcome = issue(&mut conn, &addr, &cfg.addr, &body, cfg.timeout);
+                    let _ = tx.send((outcome, start.elapsed()));
+                }
+            });
+        }
+    });
+    drop(tx);
+    let mut report = LoadReport::default();
+    for (outcome, latency) in rx {
+        report.record(outcome, latency);
+    }
+    report.elapsed = t0.elapsed();
+    Ok(report)
+}
+
+fn run_open(cfg: &LoadGenConfig, addr: SocketAddr, rate_hz: f64) -> Result<LoadReport> {
+    if !rate_hz.is_finite() || rate_hz <= 0.0 {
+        return Err(err!("--rate must be positive, got {rate_hz}"));
+    }
+    // each request is its own thread + connection; cap the fleet
+    if cfg.requests > 4096 {
+        return Err(err!("open-loop runs are capped at 4096 requests, got {}", cfg.requests));
+    }
+    let interval = Duration::from_secs_f64(1.0 / rate_hz);
+    let (tx, rx) = mpsc::channel::<(Outcome, Duration)>();
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for i in 0..cfg.requests {
+            let scheduled = t0 + interval.mul_f64(i as f64);
+            if let Some(wait) = scheduled.checked_duration_since(Instant::now()) {
+                std::thread::sleep(wait);
+            }
+            let tx = tx.clone();
+            s.spawn(move || {
+                let mut conn: Option<Conn> = None;
+                let body = body_for(cfg, i);
+                let outcome = issue(&mut conn, &addr, &cfg.addr, &body, cfg.timeout);
+                // latency counts from the *scheduled* arrival: launch slip
+                // and server queueing both land in the tail, by design
+                let _ = tx.send((outcome, scheduled.elapsed()));
+            });
+        }
+    });
+    drop(tx);
+    let mut report = LoadReport::default();
+    for (outcome, latency) in rx {
+        report.record(outcome, latency);
+    }
+    report.elapsed = t0.elapsed();
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_percentiles_and_counts() {
+        let mut r = LoadReport::default();
+        for us in [100u64, 200, 300, 400, 1000] {
+            r.record(Outcome::Success, Duration::from_micros(us));
+        }
+        r.record(Outcome::Rejected, Duration::ZERO);
+        r.record(Outcome::Failed, Duration::ZERO);
+        r.elapsed = Duration::from_secs(1);
+        assert_eq!(r.sent, 7);
+        assert_eq!(r.ok, 5);
+        assert_eq!(r.rejected, 1);
+        assert_eq!(r.failed, 1);
+        assert_eq!(r.p50().unwrap(), Duration::from_micros(300));
+        assert!(r.p95().unwrap() <= r.p99().unwrap());
+        assert!((r.throughput() - 5.0).abs() < 1e-9);
+        assert!((r.success_rate() - 5.0 / 7.0).abs() < 1e-12);
+        let text = r.report();
+        assert!(text.contains("p50="));
+        assert!(text.contains("rejected"));
+    }
+
+    #[test]
+    fn histogram_covers_all_samples() {
+        let mut r = LoadReport::default();
+        for us in [50u64, 300, 5000, 100_000] {
+            r.record(Outcome::Success, Duration::from_micros(us));
+        }
+        let hist = r.histogram();
+        assert_eq!(hist.iter().map(|(_, c)| c).sum::<usize>(), 4);
+        // bounds double, and the last bound covers the max sample
+        assert!(hist.last().unwrap().0 >= Duration::from_micros(100_000));
+        for pair in hist.windows(2) {
+            assert_eq!(pair[1].0, pair[0].0 * 2);
+        }
+    }
+
+    #[test]
+    fn record_into_bench_emits_distribution_and_tail() {
+        let mut r = LoadReport::default();
+        for us in 1..=100u64 {
+            r.record(Outcome::Success, Duration::from_micros(us * 10));
+        }
+        r.elapsed = Duration::from_millis(10);
+        let mut b = Bench::quick();
+        r.record_into(&mut b, "serve/http_test");
+        assert_eq!(b.results().len(), 2);
+        assert_eq!(b.results()[0].name, "serve/http_test");
+        assert_eq!(b.results()[1].name, "serve/http_test_p99");
+        assert!(b.results()[0].median_ns <= b.results()[1].median_ns);
+        // empty reports record nothing rather than zeros
+        let empty = LoadReport::default();
+        empty.record_into(&mut b, "serve/none");
+        assert_eq!(b.results().len(), 2);
+    }
+
+    #[test]
+    fn unreachable_target_fails_cleanly() {
+        // a closed port: every request fails, nothing hangs or panics
+        let cfg = LoadGenConfig {
+            addr: "127.0.0.1:9".into(),
+            mode: LoadMode::Closed { concurrency: 2 },
+            requests: 4,
+            timeout: Duration::from_millis(300),
+            ..LoadGenConfig::default()
+        };
+        let r = run(&cfg).unwrap();
+        assert_eq!(r.sent, 4);
+        assert_eq!(r.ok, 0);
+        assert_eq!(r.failed, 4);
+    }
+
+    #[test]
+    fn zero_requests_and_bad_rate_are_errors() {
+        let mut cfg = LoadGenConfig { requests: 0, ..LoadGenConfig::default() };
+        assert!(run(&cfg).is_err());
+        cfg.requests = 1;
+        cfg.mode = LoadMode::Open { rate_hz: 0.0 };
+        assert!(run(&cfg).is_err());
+    }
+}

@@ -1,0 +1,48 @@
+//! Networked serving: the wire in front of the engine pool.
+//!
+//! Everything below `coordinator` serves requests that already live in the
+//! process; this layer is how they arrive from outside it, on `std::net`
+//! and `std::thread` only (the offline registry carries no async runtime
+//! or HTTP crate — same constraint as the rest of `util`):
+//!
+//! * [`http`] — minimal HTTP/1.1: strict request parsing with hard caps
+//!   (line/header/body size, deadline-based reads that defeat slow-loris
+//!   peers), keep-alive, and a response writer shared with the client
+//!   side.
+//! * [`proto`] — the JSON wire schema: `POST /infer` (tensor or
+//!   `{"seed":n}` in; logits + queue/execute latency breakdown + worker +
+//!   PE utilization out), `GET /metrics` (merged + per-worker pool
+//!   snapshot), `GET /healthz`.
+//! * [`server`] — [`server::HttpFrontend`]: acceptor + per-connection
+//!   threads wired to [`crate::coordinator::Server`] through cloned
+//!   [`crate::coordinator::Client`] handles, with admission control
+//!   (bounded in-flight budget → 429, connection cap → 503), drain mode,
+//!   and graceful shutdown that flushes the batcher.
+//! * [`loadgen`] — open-loop (fixed arrival rate, latency from scheduled
+//!   arrival) and closed-loop (fixed concurrency) drivers with percentile
+//!   + histogram reporting, writing `BENCH_serve.json` via
+//!   [`crate::util::bench`].
+//!
+//! The request path end to end:
+//!
+//! ```text
+//! socket ──► HttpConn (caps + deadline) ──► admission (inflight ≤ bound)
+//!        ──► Client ──mpsc──► dispatcher (Batcher) ──► engine pool
+//!        ◄── Response {logits, queue/execute breakdown, worker} as JSON
+//! ```
+//!
+//! HTTP inference is **bit-identical** to the in-process `Client` path:
+//! tensors cross the wire as f64-exact JSON numbers and the pool replicas
+//! are deterministic, which `rust/tests/test_net.rs` pins across α and
+//! scheduler policies. This layer is serving infrastructure around the
+//! paper's reproduction, not part of the paper itself (see
+//! `docs/PAPER_MAP.md`).
+
+pub mod http;
+pub mod loadgen;
+pub mod proto;
+pub mod server;
+
+pub use http::{HttpConn, HttpError, HttpLimits, HttpRequest};
+pub use loadgen::{LoadGenConfig, LoadMode, LoadReport};
+pub use server::{HttpFrontend, NetConfig};

@@ -1,0 +1,272 @@
+//! JSON wire schema for the serving endpoints.
+//!
+//! * `POST /infer` — body is either an explicit tensor
+//!   `{"shape":[c,h,w],"data":[…]}` or `{"seed":n}`, which asks the server
+//!   to synthesize the deterministic test image for `n` (identical to
+//!   [`crate::coordinator::InferenceEngine::synthetic_image`] — tiny
+//!   request bodies for the load generator, same bits as the in-process
+//!   path). Reply: logits plus the latency breakdown
+//!   (`latency_us = queue_us + execute_us`), the executing worker, and the
+//!   engine's Alg. 2 PE utilization.
+//! * `GET /metrics` — merged + per-worker
+//!   [`PoolMetrics`](crate::coordinator::PoolMetrics) snapshot, including
+//!   the queue/execute percentiles and the schedule-quality block.
+//! * `GET /healthz` — `{"status":"ok"}` (200) or `{"status":"draining"}`
+//!   (503).
+//!
+//! Values round-trip exactly: logits are f32, carried as f64 (exact), and
+//! the serializer prints the shortest representation that re-parses to the
+//! same f64 — so HTTP inference is *bit-identical* to the in-process
+//! `Client`, which the integration tests pin.
+//!
+//! Parsing runs under tight [`JsonLimits`] (depth [`WIRE_JSON_DEPTH`], size
+//! = the HTTP body cap): the wire is untrusted input.
+
+use std::time::Duration;
+
+use crate::coordinator::{Metrics, PoolMetrics, Response, ScheduleMetrics};
+use crate::err;
+use crate::tensor::Tensor;
+use crate::util::error::Result;
+use crate::util::json::{arr, num, obj, s, Json, JsonLimits};
+use crate::util::rng::Pcg32;
+
+/// Maximum JSON nesting accepted from the wire (the schema needs 3).
+pub const WIRE_JSON_DEPTH: usize = 32;
+
+/// Maximum tensor elements accepted in one `/infer` body (a 2048×2048 RGB
+/// image; a vgg16-224 input is 150528).
+pub const MAX_INFER_ELEMS: usize = 3 * 2048 * 2048;
+
+/// `{"error": message}` — the body of every non-200 reply.
+pub fn error_body(message: &str) -> String {
+    obj(vec![("error", s(message))]).to_string()
+}
+
+/// Parse a `POST /infer` body into the input tensor. `input_shape` is the
+/// served variant's `[C, H, W]`, used for `{"seed":n}` synthesis; explicit
+/// `shape`/`data` tensors are validated structurally here and semantically
+/// (against the variant) by the engine.
+pub fn parse_infer_request(body: &[u8], input_shape: [usize; 3]) -> Result<Tensor> {
+    let text = std::str::from_utf8(body).map_err(|_| err!("body is not utf-8"))?;
+    let limits = JsonLimits { max_bytes: body.len().max(1), max_depth: WIRE_JSON_DEPTH };
+    let j = Json::parse_with_limits(text, limits).map_err(|e| err!("bad json: {e}"))?;
+    if let Some(seed) = j.get("seed") {
+        let seed = seed
+            .as_usize()
+            .ok_or_else(|| err!("\"seed\" must be a non-negative integer"))?;
+        return Ok(Tensor::randn(&input_shape, &mut Pcg32::new(seed as u64), 1.0));
+    }
+    let shape: Vec<usize> = j
+        .get("shape")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| err!("body needs {{\"shape\":[c,h,w],\"data\":[…]}} or {{\"seed\":n}}"))?
+        .iter()
+        .map(Json::as_usize)
+        .collect::<Option<_>>()
+        .ok_or_else(|| err!("\"shape\" must be non-negative integers"))?;
+    if shape.len() != 3 {
+        return Err(err!("\"shape\" must have 3 dims [c,h,w], got {}", shape.len()));
+    }
+    // checked product: hostile dims must error, not overflow (a debug-build
+    // panic here would kill the connection thread)
+    let elems = shape
+        .iter()
+        .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+        .filter(|&e| e > 0 && e <= MAX_INFER_ELEMS)
+        .ok_or_else(|| {
+            err!("shape {shape:?} must have between 1 and {MAX_INFER_ELEMS} elements")
+        })?;
+    let data_j = j
+        .get("data")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| err!("\"data\" must be an array of numbers"))?;
+    if data_j.len() != elems {
+        return Err(err!("\"data\" has {} values, shape {shape:?} wants {elems}", data_j.len()));
+    }
+    let data: Vec<f32> = data_j
+        .iter()
+        .map(|v| v.as_f64().map(|f| f as f32))
+        .collect::<Option<_>>()
+        .ok_or_else(|| err!("\"data\" must be an array of numbers"))?;
+    Ok(Tensor::from_vec(&shape, data))
+}
+
+/// Render a tensor as an explicit `/infer` body (tests, clients).
+pub fn tensor_to_json(t: &Tensor) -> Json {
+    obj(vec![
+        ("shape", arr(t.shape().iter().map(|&d| num(d as f64)).collect())),
+        ("data", arr(t.data().iter().map(|&v| num(v as f64)).collect())),
+    ])
+}
+
+/// Render one completed inference as the `/infer` reply body.
+pub fn response_to_json(r: &Response) -> Json {
+    obj(vec![
+        ("logits", arr(r.logits.iter().map(|&v| num(v as f64)).collect())),
+        ("latency_us", num(r.latency.as_micros() as f64)),
+        ("queue_us", num(r.queue_wait.as_micros() as f64)),
+        ("execute_us", num(r.execute.as_micros() as f64)),
+        ("batch_size", num(r.batch_size as f64)),
+        ("worker", num(r.worker as f64)),
+        ("pe_utilization", r.pe_utilization.map(num).unwrap_or(Json::Null)),
+    ])
+}
+
+/// Extract the logits from a parsed `/infer` reply.
+pub fn logits_from_json(j: &Json) -> Result<Vec<f32>> {
+    j.get("logits")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| err!("reply has no \"logits\" array"))?
+        .iter()
+        .map(|v| v.as_f64().map(|f| f as f32))
+        .collect::<Option<_>>()
+        .ok_or_else(|| err!("\"logits\" must be numbers"))
+}
+
+fn duration_us(d: Option<Duration>) -> Json {
+    d.map(|d| num(d.as_micros() as f64)).unwrap_or(Json::Null)
+}
+
+fn schedule_to_json(sm: &ScheduleMetrics) -> Json {
+    obj(vec![
+        ("scheduler", s(&sm.scheduler)),
+        ("pe_utilization", num(sm.avg_pe_utilization())),
+        ("cycles", num(sm.total_cycles() as f64)),
+        ("lower_bound", num(sm.total_lower_bound() as f64)),
+        ("bank_conflicts", num(sm.total_bank_conflicts() as f64)),
+        (
+            "layers",
+            arr(sm
+                .layers
+                .iter()
+                .map(|l| {
+                    obj(vec![
+                        ("layer", s(&l.layer)),
+                        ("pe_utilization", num(l.stats.pe_utilization())),
+                        ("cycles", num(l.stats.cycles as f64)),
+                        ("lower_bound", num(l.stats.lower_bound as f64)),
+                        ("bank_conflicts", num(l.stats.bank_conflicts as f64)),
+                    ])
+                })
+                .collect()),
+        ),
+    ])
+}
+
+fn metrics_to_json(m: &Metrics) -> Json {
+    obj(vec![
+        ("count", num(m.count() as f64)),
+        ("throughput_rps", num(m.throughput())),
+        ("mean_batch", num(m.mean_batch_size())),
+        ("p50_us", duration_us(m.p50())),
+        ("p95_us", duration_us(m.p95())),
+        ("p99_us", duration_us(m.p99())),
+        ("queue_p50_us", duration_us(m.queue_percentile(0.5))),
+        ("queue_p95_us", duration_us(m.queue_percentile(0.95))),
+        ("execute_p50_us", duration_us(m.execute_percentile(0.5))),
+        ("execute_p95_us", duration_us(m.execute_percentile(0.95))),
+        ("schedule", m.schedule.as_ref().map(schedule_to_json).unwrap_or(Json::Null)),
+    ])
+}
+
+/// Render the `/metrics` reply: merged snapshot + one entry per worker.
+pub fn pool_metrics_to_json(pm: &PoolMetrics) -> Json {
+    obj(vec![
+        ("merged", metrics_to_json(&pm.merged)),
+        ("per_worker", arr(pm.per_worker.iter().map(metrics_to_json).collect())),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn explicit_tensor_roundtrips_bit_exactly() {
+        let mut rng = Pcg32::new(9);
+        let t = Tensor::randn(&[1, 4, 4], &mut rng, 1.0);
+        let wire = tensor_to_json(&t).to_string();
+        let back = parse_infer_request(wire.as_bytes(), [1, 4, 4]).unwrap();
+        assert_eq!(back.shape(), t.shape());
+        for (a, b) in back.data().iter().zip(t.data()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "f32 → json → f32 must be exact");
+        }
+    }
+
+    #[test]
+    fn seed_body_matches_synthetic_image() {
+        let shape = [1usize, 16, 16];
+        let t = parse_infer_request(b"{\"seed\": 3}", shape).unwrap();
+        let want = Tensor::randn(&shape, &mut Pcg32::new(3), 1.0);
+        assert_eq!(t, want);
+    }
+
+    #[test]
+    fn rejects_malformed_bodies() {
+        let shape = [1usize, 4, 4];
+        for bad in [
+            &b"not json"[..],
+            b"{\"shape\":[1,4",                      // truncated json
+            b"{}",                                   // neither seed nor tensor
+            b"{\"seed\": -1}",                       // negative seed
+            b"{\"shape\":[1,4,4]}",                  // missing data
+            b"{\"shape\":[1,4],\"data\":[1,2]}",     // wrong rank
+            b"{\"shape\":[0,4,4],\"data\":[]}",      // zero elements
+            b"{\"shape\":[1,2,2],\"data\":[1,2,3]}", // count mismatch
+            b"{\"shape\":[1,2,2],\"data\":[1,2,\"x\",4]}", // non-number
+        ] {
+            assert!(
+                parse_infer_request(bad, shape).is_err(),
+                "{:?}",
+                String::from_utf8_lossy(bad)
+            );
+        }
+        // oversized element count is capped independently of the body size
+        let huge = br#"{"shape":[3,9999,9999],"data":[]}"#;
+        assert!(parse_infer_request(huge, shape).is_err());
+    }
+
+    #[test]
+    fn response_json_carries_breakdown_and_worker() {
+        let r = Response {
+            logits: vec![1.5, -2.25],
+            latency: Duration::from_micros(1200),
+            queue_wait: Duration::from_micros(200),
+            execute: Duration::from_micros(1000),
+            batch_size: 4,
+            worker: 2,
+            pe_utilization: Some(0.875),
+        };
+        let j = response_to_json(&r);
+        assert_eq!(j.get("latency_us").unwrap().as_f64(), Some(1200.0));
+        assert_eq!(j.get("queue_us").unwrap().as_f64(), Some(200.0));
+        assert_eq!(j.get("execute_us").unwrap().as_f64(), Some(1000.0));
+        assert_eq!(j.get("worker").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("pe_utilization").unwrap().as_f64(), Some(0.875));
+        let back = logits_from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back, r.logits);
+        // dense serving: utilization is null, not absent
+        let dense = Response { pe_utilization: None, ..r };
+        let j = response_to_json(&dense);
+        assert_eq!(j.get("pe_utilization"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn metrics_json_shape() {
+        let mut m = Metrics::new();
+        m.record_batch(2);
+        m.record_request_split(Duration::from_micros(100), Duration::from_micros(400));
+        let pm = PoolMetrics::from_workers(vec![m]);
+        let j = pool_metrics_to_json(&pm);
+        let merged = j.get("merged").unwrap();
+        assert_eq!(merged.get("count").unwrap().as_usize(), Some(1));
+        assert_eq!(merged.get("p50_us").unwrap().as_f64(), Some(500.0));
+        assert_eq!(merged.get("queue_p50_us").unwrap().as_f64(), Some(100.0));
+        assert_eq!(merged.get("execute_p50_us").unwrap().as_f64(), Some(400.0));
+        assert_eq!(merged.get("schedule"), Some(&Json::Null));
+        assert_eq!(j.get("per_worker").unwrap().as_arr().unwrap().len(), 1);
+        // and it reparses (the /metrics body is valid json)
+        assert!(Json::parse(&j.to_string()).is_ok());
+    }
+}

@@ -1,0 +1,313 @@
+//! HTTP front-end over the engine pool: socket → admission → batcher →
+//! pool → response.
+//!
+//! [`HttpFrontend::start`] takes a running [`crate::coordinator::Server`]
+//! and binds a `std::net` listener in front of it. One acceptor thread hands
+//! each connection to its own handler thread (bounded by
+//! [`NetConfig::max_conns`] — beyond the cap a connection gets an
+//! immediate 503 and is closed, never queued invisibly). Handler threads
+//! hold only a cloned [`Client`], so the engine-pool thread-confinement
+//! rule is untouched: tensors cross the channel, engines never do.
+//!
+//! Admission control is a bounded in-flight counter in front of the
+//! dispatcher: at most [`NetConfig::max_inflight`] `/infer` requests may
+//! be queued-or-executing in the pool at once. The bound makes overload a
+//! *fast* failure — a 429 the moment the budget is exceeded — instead of
+//! an unbounded queue whose tail latency quietly explodes, which is the
+//! contract the closed-loop load generator tests: concurrency above the
+//! bound yields 429s, never a hang.
+//!
+//! Shutdown is graceful and ordered: [`HttpFrontend::shutdown`] (1) flips
+//! the drain flag so `/healthz` answers 503 and new `/infer`s are refused,
+//! (2) wakes and stops the acceptor, (3) waits (bounded by
+//! [`NetConfig::drain_grace`]) for admitted requests to finish, then
+//! (4) shuts the coordinator pool down, which flushes any open batch
+//! before the workers exit.
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::http::{self, HttpConn, HttpLimits, HttpRequest};
+use super::proto;
+use crate::coordinator::{Client, Server};
+use crate::util::error::{Context, Result};
+
+/// Front-end configuration (the serving knobs the wire adds on top of
+/// [`crate::coordinator::ServerConfig`]).
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    /// Bind address, e.g. `127.0.0.1:7878` (`:0` picks a free port —
+    /// [`HttpFrontend::local_addr`] reports the real one).
+    pub addr: String,
+    /// Concurrent connections; excess connections get 503 + close.
+    pub max_conns: usize,
+    /// Bounded in-flight `/infer` budget; excess requests get 429.
+    pub max_inflight: usize,
+    /// The served variant's input `[C, H, W]` (for `{"seed":n}` bodies).
+    pub input_shape: [usize; 3],
+    /// HTTP parse caps + per-request read deadline.
+    pub limits: HttpLimits,
+    /// How long shutdown waits for admitted requests to drain.
+    pub drain_grace: Duration,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            addr: "127.0.0.1:0".into(),
+            max_conns: 256,
+            max_inflight: 64,
+            input_shape: [1, 16, 16],
+            limits: HttpLimits::default(),
+            drain_grace: Duration::from_secs(10),
+        }
+    }
+}
+
+/// Shared request-path state (acceptor + every connection thread).
+struct Gate {
+    /// Drain mode: `/healthz` answers 503 and new `/infer`s are refused,
+    /// but connections are still accepted and answered (load-balancer
+    /// probes must see the 503, not a dead port).
+    draining: AtomicBool,
+    /// Shutdown: the acceptor exits. Implies `draining`.
+    stopping: AtomicBool,
+    inflight: AtomicUsize,
+    conns: AtomicUsize,
+}
+
+/// A running HTTP front-end. Owns the coordinator [`Server`] so the
+/// shutdown order (stop accepting → drain → flush batches) has one owner.
+pub struct HttpFrontend {
+    addr: SocketAddr,
+    gate: Arc<Gate>,
+    acceptor: Option<std::thread::JoinHandle<()>>,
+    server: Option<Server>,
+    drain_grace: Duration,
+}
+
+impl HttpFrontend {
+    /// Bind and start serving. Fails fast on an unbindable address.
+    pub fn start(server: Server, cfg: NetConfig) -> Result<HttpFrontend> {
+        let listener =
+            TcpListener::bind(&cfg.addr).with_context(|| format!("binding {}", cfg.addr))?;
+        let addr = listener.local_addr().context("resolving bound address")?;
+        let gate = Arc::new(Gate {
+            draining: AtomicBool::new(false),
+            stopping: AtomicBool::new(false),
+            inflight: AtomicUsize::new(0),
+            conns: AtomicUsize::new(0),
+        });
+        let client = server.client();
+        let agate = gate.clone();
+        let acfg = cfg.clone();
+        let acceptor = std::thread::Builder::new()
+            .name("sf-http-accept".into())
+            .spawn(move || accept_loop(listener, client, agate, acfg))
+            .expect("spawn http acceptor");
+        Ok(HttpFrontend {
+            addr,
+            gate,
+            acceptor: Some(acceptor),
+            server: Some(server),
+            drain_grace: cfg.drain_grace,
+        })
+    }
+
+    /// The actual bound address (resolves `:0`).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Enter drain mode without tearing anything down: `/healthz` flips to
+    /// 503 and new `/infer`s are refused while in-flight work completes.
+    /// (Load balancers watch exactly this to take a replica out of
+    /// rotation before it stops.)
+    pub fn begin_drain(&self) {
+        self.gate.draining.store(true, Ordering::SeqCst);
+    }
+
+    /// `/infer` requests currently admitted (queued or executing).
+    pub fn inflight(&self) -> usize {
+        self.gate.inflight.load(Ordering::SeqCst)
+    }
+
+    /// Graceful shutdown: drain, stop accepting, flush the pool's batches.
+    pub fn shutdown(mut self) -> Result<()> {
+        self.finish()
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        self.begin_drain();
+        self.gate.stopping.store(true, Ordering::SeqCst);
+        // the acceptor parks in accept(): a self-connection wakes it so it
+        // can observe the stop flag and exit
+        let _ = TcpStream::connect(self.addr);
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
+        let deadline = std::time::Instant::now() + self.drain_grace;
+        while self.gate.inflight.load(Ordering::SeqCst) > 0
+            && std::time::Instant::now() < deadline
+        {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        match self.server.take() {
+            // Server::shutdown flushes the open batch and drains every
+            // worker before joining — admitted requests get their replies
+            Some(s) => s.shutdown(),
+            None => Ok(()),
+        }
+    }
+}
+
+impl Drop for HttpFrontend {
+    fn drop(&mut self) {
+        let _ = self.finish();
+    }
+}
+
+fn accept_loop(listener: TcpListener, client: Client, gate: Arc<Gate>, cfg: NetConfig) {
+    for stream in listener.incoming() {
+        if gate.stopping.load(Ordering::SeqCst) {
+            break;
+        }
+        let mut stream = match stream {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        // connection bound: refuse loudly instead of queueing invisibly
+        if gate.conns.fetch_add(1, Ordering::SeqCst) >= cfg.max_conns {
+            gate.conns.fetch_sub(1, Ordering::SeqCst);
+            let body = proto::error_body("connection capacity reached");
+            let _ = http::write_response(&mut stream, 503, "application/json", body.as_bytes(), false);
+            continue;
+        }
+        let conn_client = client.clone();
+        let conn_gate = gate.clone();
+        let conn_cfg = cfg.clone();
+        let spawned = std::thread::Builder::new().name("sf-http-conn".into()).spawn(move || {
+            // drop guard: the slot is released even if the handler panics,
+            // so a crashing connection can never leak capacity
+            let _slot = ConnSlot(conn_gate);
+            handle_conn(stream, &conn_client, &_slot.0, &conn_cfg);
+        });
+        if spawned.is_err() {
+            gate.conns.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+}
+
+/// Releases one `Gate::conns` slot on drop (including panic unwinds).
+struct ConnSlot(Arc<Gate>);
+
+impl Drop for ConnSlot {
+    fn drop(&mut self) {
+        self.0.conns.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// One connection: keep-alive request loop until close/error/drain.
+fn handle_conn(stream: TcpStream, client: &Client, gate: &Gate, cfg: &NetConfig) {
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut conn = HttpConn::new(stream);
+    for served in 0..cfg.limits.max_requests_per_conn {
+        match conn.read_request(&cfg.limits) {
+            Ok(None) => break, // clean close / idle keep-alive expiry
+            Ok(Some(req)) => {
+                // the final permitted request must advertise the close —
+                // otherwise a keep-alive client writes request N+1 into a
+                // socket we are about to shut and sees a spurious error
+                let last = served + 1 == cfg.limits.max_requests_per_conn;
+                let keep = req.keep_alive() && !last && !gate.draining.load(Ordering::SeqCst);
+                let (status, body) = route(&req, client, gate, cfg);
+                if http::write_response(&mut writer, status, "application/json", body.as_bytes(), keep)
+                    .is_err()
+                {
+                    break;
+                }
+                if !keep {
+                    break;
+                }
+            }
+            Err(e) => {
+                // parse/deadline errors answer once (when a status exists
+                // and the peer is still there), then the connection closes —
+                // a malformed or slow peer never wedges this thread
+                if e.status != 0 {
+                    let body = proto::error_body(&e.message);
+                    let _ = http::write_response(
+                        &mut writer,
+                        e.status,
+                        "application/json",
+                        body.as_bytes(),
+                        false,
+                    );
+                }
+                break;
+            }
+        }
+    }
+}
+
+fn route(req: &HttpRequest, client: &Client, gate: &Gate, cfg: &NetConfig) -> (u16, String) {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => {
+            if gate.draining.load(Ordering::SeqCst) {
+                (503, r#"{"status":"draining"}"#.to_string())
+            } else {
+                (200, r#"{"status":"ok"}"#.to_string())
+            }
+        }
+        ("GET", "/metrics") => match client.pool_metrics() {
+            Ok(pm) => (200, proto::pool_metrics_to_json(&pm).to_string()),
+            Err(e) => (503, proto::error_body(&e.to_string())),
+        },
+        ("POST", "/infer") => infer_route(req, client, gate, cfg),
+        (_, "/healthz") | (_, "/metrics") => {
+            (405, proto::error_body("method not allowed (use GET)"))
+        }
+        (_, "/infer") => (405, proto::error_body("method not allowed (use POST)")),
+        _ => (404, proto::error_body("no such endpoint (try /infer, /metrics, /healthz)")),
+    }
+}
+
+fn infer_route(req: &HttpRequest, client: &Client, gate: &Gate, cfg: &NetConfig) -> (u16, String) {
+    if gate.draining.load(Ordering::SeqCst) {
+        return (503, proto::error_body("server is draining"));
+    }
+    // admission: bounded in-flight queue — overload is a fast 429, not a
+    // silently growing dispatcher queue
+    if gate.inflight.fetch_add(1, Ordering::SeqCst) >= cfg.max_inflight {
+        gate.inflight.fetch_sub(1, Ordering::SeqCst);
+        return (429, proto::error_body("overloaded: in-flight request limit reached"));
+    }
+    let out = admitted_infer(req, client, cfg);
+    gate.inflight.fetch_sub(1, Ordering::SeqCst);
+    out
+}
+
+fn admitted_infer(req: &HttpRequest, client: &Client, cfg: &NetConfig) -> (u16, String) {
+    let image = match proto::parse_infer_request(&req.body, cfg.input_shape) {
+        Ok(t) => t,
+        Err(e) => return (400, proto::error_body(&e.to_string())),
+    };
+    match client.infer(image) {
+        Ok(resp) => (200, proto::response_to_json(&resp).to_string()),
+        // engine rejections (wrong shape for the variant, …) are the
+        // client's fault; a stopped/dropped pool is ours
+        Err(e) => {
+            let msg = e.to_string();
+            if msg.contains("server stopped") || msg.contains("server dropped") {
+                (503, proto::error_body(&msg))
+            } else {
+                (400, proto::error_body(&msg))
+            }
+        }
+    }
+}

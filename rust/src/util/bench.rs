@@ -141,6 +141,13 @@ impl Bench {
         self.results.last().unwrap()
     }
 
+    /// Record a fully pre-computed measurement (e.g. the load generator's
+    /// latency percentiles, which are aggregated outside this harness).
+    pub fn push(&mut self, m: Measurement) {
+        println!("{}", m.report());
+        self.results.push(m);
+    }
+
     /// Record an externally measured value (e.g. a one-shot end-to-end run).
     pub fn record(&mut self, name: &str, elapsed: Duration, iters: usize) {
         let ns = elapsed.as_nanos() as f64 / iters.max(1) as f64;
@@ -180,31 +187,57 @@ impl Bench {
     /// machine-readable bench artifact CI uploads (`BENCH_*.json`).
     pub fn write_json(&self, path: &str) -> std::io::Result<()> {
         use crate::util::json::Json;
-        use std::collections::BTreeMap;
         use std::io::Write;
         ensure_parent_dir(path)?;
-        let arr = Json::Arr(
-            self.results
-                .iter()
-                .map(|m| {
-                    let mut o = BTreeMap::new();
-                    o.insert("name".to_string(), Json::Str(m.name.clone()));
-                    o.insert("iters".to_string(), Json::Num(m.iters as f64));
-                    o.insert("mean_ns".to_string(), Json::Num(m.mean_ns));
-                    o.insert("stddev_ns".to_string(), Json::Num(m.stddev_ns));
-                    o.insert("median_ns".to_string(), Json::Num(m.median_ns));
-                    o.insert("p10_ns".to_string(), Json::Num(m.p10_ns));
-                    o.insert("p90_ns".to_string(), Json::Num(m.p90_ns));
-                    Json::Obj(o)
-                })
-                .collect(),
-        );
+        let arr = Json::Arr(self.results.iter().map(measurement_to_json).collect());
         let text = arr.to_string();
         let mut f = std::fs::File::create(path)?;
         f.write_all(text.as_bytes())?;
         writeln!(f)?;
         Ok(())
     }
+}
+
+fn measurement_to_json(m: &Measurement) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    use std::collections::BTreeMap;
+    let mut o = BTreeMap::new();
+    o.insert("name".to_string(), Json::Str(m.name.clone()));
+    o.insert("iters".to_string(), Json::Num(m.iters as f64));
+    o.insert("mean_ns".to_string(), Json::Num(m.mean_ns));
+    o.insert("stddev_ns".to_string(), Json::Num(m.stddev_ns));
+    o.insert("median_ns".to_string(), Json::Num(m.median_ns));
+    o.insert("p10_ns".to_string(), Json::Num(m.p10_ns));
+    o.insert("p90_ns".to_string(), Json::Num(m.p90_ns));
+    Json::Obj(o)
+}
+
+/// Write `results` as a **measured** baseline artifact (the wrapped
+/// `{meta, results}` form with `provenance: "measured"`), which is what
+/// arms the CI bench-regression gate. `spectral-flow bench-check
+/// --update-baseline` calls this with a freshly generated artifact.
+pub fn write_measured_baseline(
+    path: &str,
+    results: &[Measurement],
+    note: &str,
+) -> std::io::Result<()> {
+    use crate::util::json::Json;
+    use std::collections::BTreeMap;
+    use std::io::Write;
+    ensure_parent_dir(path)?;
+    let mut meta = BTreeMap::new();
+    meta.insert("provenance".to_string(), Json::Str("measured".to_string()));
+    meta.insert("note".to_string(), Json::Str(note.to_string()));
+    let mut root = BTreeMap::new();
+    root.insert("meta".to_string(), Json::Obj(meta));
+    root.insert(
+        "results".to_string(),
+        Json::Arr(results.iter().map(measurement_to_json).collect()),
+    );
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(Json::Obj(root).to_string().as_bytes())?;
+    writeln!(f)?;
+    Ok(())
 }
 
 /// A parsed bench artifact: measurements plus optional metadata. Raw
@@ -593,6 +626,23 @@ mod tests {
         for p in [raw, wrapped, junk] {
             let _ = std::fs::remove_file(p);
         }
+    }
+
+    #[test]
+    fn measured_baseline_writes_armed_artifact() {
+        // --update-baseline's core contract: the written file parses as a
+        // wrapped artifact with provenance=measured, which arms the gate.
+        let path = std::env::temp_dir().join("BENCH_baseline_update_test.json");
+        let path = path.to_str().unwrap().to_string();
+        let results = vec![meas("e2e/x", 2e6), meas("e2e/y", 5e6)];
+        write_measured_baseline(&path, &results, "unit test").unwrap();
+        let a = read_json_artifact(&path).unwrap();
+        assert!(a.is_measured(), "refreshed baseline must arm the gate");
+        assert_eq!(a.provenance.as_deref(), Some("measured"));
+        assert_eq!(a.results.len(), 2);
+        assert_eq!(a.results[1].name, "e2e/y");
+        assert_eq!(a.results[1].median_ns, 5e6);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -4,6 +4,14 @@
 //! (objects, arrays, strings, numbers, bools, null; `\uXXXX` escapes) and
 //! emitting report JSON/CSV payloads. Numbers are held as `f64`, which is
 //! lossless for every integer the manifest carries (< 2^53).
+//!
+//! Since the `net` subsystem landed, this parser also consumes bytes from
+//! the wire, so it is hardened against untrusted input: every parse runs
+//! under a [`JsonLimits`] budget — a maximum input size (checked before a
+//! single byte is scanned) and a recursion-depth cap (checked at every
+//! nested value, so `[[[[…` cannot overflow the stack). [`Json::parse`]
+//! applies generous defaults sized for local artifacts; network callers
+//! pass their own tighter budget via [`Json::parse_with_limits`].
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -34,9 +42,47 @@ impl fmt::Display for JsonError {
 
 impl std::error::Error for JsonError {}
 
+/// Parse budget for untrusted input (see the module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct JsonLimits {
+    /// Maximum input length in bytes; longer inputs are rejected before
+    /// any scanning happens.
+    pub max_bytes: usize,
+    /// Maximum nesting depth of arrays/objects (the top-level value sits at
+    /// depth 1). Bounds parser recursion, so hostile `[[[[…` input errors
+    /// out instead of overflowing the stack.
+    pub max_depth: usize,
+}
+
+impl Default for JsonLimits {
+    /// Generous defaults for trusted local artifacts (manifests, bench
+    /// JSON): 256 MiB, depth 128. Network callers should pass something
+    /// far tighter (the HTTP layer uses its body cap and depth 32).
+    fn default() -> Self {
+        JsonLimits { max_bytes: 256 << 20, max_depth: 128 }
+    }
+}
+
 impl Json {
+    /// Parse with the default (local-artifact) limits.
     pub fn parse(src: &str) -> Result<Json, JsonError> {
-        let mut p = Parser { src: src.as_bytes(), pos: 0 };
+        Self::parse_with_limits(src, JsonLimits::default())
+    }
+
+    /// Parse under an explicit [`JsonLimits`] budget — the entry point for
+    /// bytes that arrived over the network.
+    pub fn parse_with_limits(src: &str, limits: JsonLimits) -> Result<Json, JsonError> {
+        if src.len() > limits.max_bytes {
+            return Err(JsonError {
+                offset: limits.max_bytes,
+                message: format!(
+                    "input too large: {} bytes (limit {})",
+                    src.len(),
+                    limits.max_bytes
+                ),
+            });
+        }
+        let mut p = Parser { src: src.as_bytes(), pos: 0, depth: 0, max_depth: limits.max_depth };
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
@@ -121,7 +167,9 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 9e15 {
+                // -0.0 must not collapse to integer "0": the net layer's
+                // bit-exact round-trip contract keeps the sign bit
+                if n.fract() == 0.0 && n.abs() < 9e15 && !(*n == 0.0 && n.is_sign_negative()) {
                     out.push_str(&format!("{}", *n as i64));
                 } else {
                     out.push_str(&format!("{n}"));
@@ -190,6 +238,8 @@ pub fn s(v: &str) -> Json {
 struct Parser<'a> {
     src: &'a [u8],
     pos: usize,
+    depth: usize,
+    max_depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -228,6 +278,19 @@ impl<'a> Parser<'a> {
     }
 
     fn value(&mut self) -> Result<Json, JsonError> {
+        // Depth accounting here (the single recursion point) covers both
+        // containers; scalars enter and leave at the same depth.
+        self.depth += 1;
+        if self.depth > self.max_depth {
+            self.depth -= 1;
+            return Err(self.err(&format!("nesting deeper than {} levels", self.max_depth)));
+        }
+        let v = self.value_inner();
+        self.depth -= 1;
+        v
+    }
+
+    fn value_inner(&mut self) -> Result<Json, JsonError> {
         match self.peek().ok_or_else(|| self.err("unexpected end"))? {
             b'{' => self.object(),
             b'[' => self.array(),
@@ -403,6 +466,19 @@ mod tests {
     }
 
     #[test]
+    fn negative_zero_keeps_its_sign() {
+        let j = Json::Num(-0.0);
+        assert_eq!(j.to_string(), "-0");
+        let back = Json::parse(&j.to_string()).unwrap();
+        match back {
+            Json::Num(n) => assert!(n == 0.0 && n.is_sign_negative()),
+            other => panic!("expected number, got {other:?}"),
+        }
+        // positive zero still serializes as the plain integer
+        assert_eq!(Json::Num(0.0).to_string(), "0");
+    }
+
+    #[test]
     fn roundtrip() {
         let src = r#"{"fft_size":8,"layers":[{"cin":3,"name":"conv1_1","pool":true}],"x":null}"#;
         let j = Json::parse(src).unwrap();
@@ -425,6 +501,36 @@ mod tests {
         assert_eq!(Json::parse("3").unwrap().as_usize(), Some(3));
         assert_eq!(Json::parse("3.5").unwrap().as_usize(), None);
         assert_eq!(Json::parse("-3").unwrap().as_usize(), None);
+    }
+
+    #[test]
+    fn depth_limit_rejects_deep_nesting_without_overflow() {
+        // 100k unclosed arrays: with unbounded recursion this would blow
+        // the stack long before hitting the "unexpected end" error; the
+        // depth cap must turn it into an ordinary parse error.
+        let deep = "[".repeat(100_000);
+        let err = Json::parse(&deep).unwrap_err();
+        assert!(err.message.contains("nesting"), "{err}");
+        // mixed array/object nesting hits the same cap
+        let mixed = "[{\"k\":".repeat(50_000);
+        assert!(Json::parse(&mixed).is_err());
+        // a document exactly at the cap still parses
+        let limits = JsonLimits { max_depth: 8, ..JsonLimits::default() };
+        let ok = "[[[[[[[1]]]]]]]"; // depth 8 (7 arrays + the number)
+        assert!(Json::parse_with_limits(ok, limits).is_ok());
+        let too_deep = "[[[[[[[[1]]]]]]]]"; // depth 9
+        assert!(Json::parse_with_limits(too_deep, limits).is_err());
+    }
+
+    #[test]
+    fn size_limit_rejects_before_scanning() {
+        let limits = JsonLimits { max_bytes: 16, ..JsonLimits::default() };
+        assert!(Json::parse_with_limits("[1,2,3]", limits).is_ok());
+        let big = format!("[{}]", "1,".repeat(100));
+        let err = Json::parse_with_limits(&big, limits).unwrap_err();
+        assert!(err.message.contains("too large"), "{err}");
+        // default limits are generous enough for any artifact this repo emits
+        assert!(Json::parse(&format!("[{}1]", "1,".repeat(1000))).is_ok());
     }
 
     #[test]

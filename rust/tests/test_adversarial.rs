@@ -1,6 +1,7 @@
 //! Adversarial and fuzz coverage: inputs chosen to break the invariants
 //! that the happy-path tests take for granted — scheduler edge patterns,
-//! FSM configuration fuzz, and parser robustness.
+//! FSM configuration fuzz, parser robustness, and hostile HTTP clients
+//! against the networked serving front-end.
 
 use spectral_flow::schedule::{Schedule, Scheduler};
 use spectral_flow::sim::controller::{Controller, LoopConfig, State};
@@ -184,6 +185,182 @@ fn json_roundtrip_fuzz() {
         let back = Json::parse(&text).unwrap_or_else(|e| panic!("{text}: {e}"));
         assert_eq!(v, back);
     });
+}
+
+// ---------------- http front-end: hostile clients ---------------------------
+
+mod hostile_http {
+    use std::io::{Read, Write};
+    use std::net::{SocketAddr, TcpStream};
+    use std::time::{Duration, Instant};
+
+    use spectral_flow::coordinator::{BatcherConfig, Server, ServerConfig, WeightMode};
+    use spectral_flow::net::{http, HttpConn, HttpFrontend, HttpLimits, NetConfig};
+    use spectral_flow::schedule::SchedulePolicy;
+
+    /// A short-deadline, small-body front-end over the demo variant: the
+    /// attack surface with the caps tight enough to test quickly.
+    fn hardened_frontend() -> HttpFrontend {
+        let server = Server::start(ServerConfig {
+            artifacts_dir: concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").into(),
+            variant: "demo".into(),
+            mode: WeightMode::Dense,
+            seed: 7,
+            batcher: BatcherConfig { max_batch: 2, max_wait: Duration::from_millis(2) },
+            scheduler: SchedulePolicy::Off,
+            ..ServerConfig::default()
+        })
+        .expect("server starts");
+        HttpFrontend::start(
+            server,
+            NetConfig {
+                addr: "127.0.0.1:0".into(),
+                input_shape: [1, 16, 16],
+                limits: HttpLimits {
+                    max_body: 64 << 10,
+                    read_timeout: Duration::from_millis(400),
+                    ..HttpLimits::default()
+                },
+                ..NetConfig::default()
+            },
+        )
+        .expect("frontend binds")
+    }
+
+    /// Send raw bytes on a fresh connection, return the parsed response.
+    fn send_raw(addr: SocketAddr, bytes: &[u8], read_timeout: Duration) -> (u16, Vec<u8>) {
+        let stream = TcpStream::connect(addr).expect("connect");
+        let mut writer = stream.try_clone().expect("clone");
+        let mut conn = HttpConn::new(stream);
+        writer.write_all(bytes).expect("send");
+        conn.read_response(&HttpLimits { read_timeout, ..HttpLimits::default() })
+            .expect("response")
+    }
+
+    /// The worker-not-wedged probe: a valid request must still succeed.
+    fn assert_still_serving(addr: SocketAddr) {
+        let (status, _) = send_raw(
+            addr,
+            &http::format_request("POST", "/infer", "t", b"{\"seed\":1}"),
+            Duration::from_secs(30),
+        );
+        assert_eq!(status, 200, "front-end wedged by the previous attack");
+    }
+
+    #[test]
+    fn malformed_request_line_gets_400() {
+        let frontend = hardened_frontend();
+        let addr = frontend.local_addr();
+        for garbage in [
+            &b"THIS IS NOT HTTP AT ALL\r\n\r\n"[..],
+            b"POST\r\n\r\n",
+            b"GET / SMTP/9.9\r\n\r\n",
+            b"\x00\x01\x02\x03\r\n\r\n",
+        ] {
+            let (status, _) = send_raw(addr, garbage, Duration::from_secs(5));
+            assert!(
+                (400..=505).contains(&status),
+                "garbage {:?} got {status}",
+                String::from_utf8_lossy(garbage)
+            );
+        }
+        assert_still_serving(addr);
+        frontend.shutdown().expect("shutdown");
+    }
+
+    #[test]
+    fn oversized_body_rejected_before_read() {
+        let frontend = hardened_frontend();
+        let addr = frontend.local_addr();
+        // Content-Length far past the 64 KiB cap: 413 must come back
+        // immediately, without the server waiting for (or reading) a body
+        let t0 = Instant::now();
+        let (status, _) = send_raw(
+            addr,
+            b"POST /infer HTTP/1.1\r\nHost: t\r\nContent-Length: 1073741824\r\n\r\n",
+            Duration::from_secs(5),
+        );
+        assert_eq!(status, 413);
+        assert!(t0.elapsed() < Duration::from_secs(2), "413 must not wait for the body");
+        assert_still_serving(addr);
+        frontend.shutdown().expect("shutdown");
+    }
+
+    #[test]
+    fn truncated_json_body_gets_400() {
+        let frontend = hardened_frontend();
+        let addr = frontend.local_addr();
+        // Content-Length matches the bytes on the wire, but the JSON
+        // inside is cut off mid-value
+        let body = b"{\"shape\":[1,16";
+        let (status, resp) =
+            send_raw(addr, &http::format_request("POST", "/infer", "t", body), Duration::from_secs(5));
+        assert_eq!(status, 400, "{:?}", String::from_utf8_lossy(&resp));
+        assert!(String::from_utf8_lossy(&resp).contains("json"));
+        assert_still_serving(addr);
+        frontend.shutdown().expect("shutdown");
+    }
+
+    #[test]
+    fn slow_loris_partial_header_times_out_without_wedging() {
+        let frontend = hardened_frontend();
+        let addr = frontend.local_addr();
+        // send a partial header and then go silent: the 400 ms request
+        // deadline must close the exchange (408 or just a close) instead
+        // of parking a connection thread forever
+        let stream = TcpStream::connect(addr).expect("connect");
+        let mut writer = stream.try_clone().expect("clone");
+        writer
+            .write_all(b"POST /infer HTTP/1.1\r\nHost: t\r\nContent-Ty")
+            .expect("partial send");
+        let t0 = Instant::now();
+        let mut reader = stream;
+        reader.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let mut buf = Vec::new();
+        let outcome = reader.read_to_end(&mut buf); // server responds and/or closes
+        let waited = t0.elapsed();
+        assert!(
+            waited < Duration::from_secs(3),
+            "slow-loris held the connection for {waited:?}"
+        );
+        if outcome.is_ok() && !buf.is_empty() {
+            let text = String::from_utf8_lossy(&buf);
+            assert!(text.starts_with("HTTP/1.1 408"), "expected 408, got {text}");
+        }
+        // …and while that connection idled, the pool kept serving others
+        assert_still_serving(addr);
+        frontend.shutdown().expect("shutdown");
+    }
+
+    #[test]
+    fn drip_fed_header_line_still_hits_the_deadline() {
+        // sharper slow-loris: keep the socket warm with one byte per
+        // 100 ms — per-read timeouts alone would never fire; the request
+        // deadline must
+        let frontend = hardened_frontend();
+        let addr = frontend.local_addr();
+        let stream = TcpStream::connect(addr).expect("connect");
+        let mut writer = stream.try_clone().expect("clone");
+        let t0 = Instant::now();
+        let drip = b"GET /healthz HTT";
+        for b in drip {
+            if writer.write_all(&[*b]).is_err() {
+                break; // server already gave up on us — exactly the point
+            }
+            std::thread::sleep(Duration::from_millis(100));
+        }
+        let mut reader = stream;
+        reader.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let mut buf = Vec::new();
+        let _ = reader.read_to_end(&mut buf);
+        assert!(
+            t0.elapsed() < Duration::from_secs(4),
+            "drip-fed header held the connection for {:?}",
+            t0.elapsed()
+        );
+        assert_still_serving(addr);
+        frontend.shutdown().expect("shutdown");
+    }
 }
 
 // ---------------- rng: stream independence under forking --------------------

@@ -1,0 +1,262 @@
+//! Integration: the networked serving subsystem — HTTP front-end over the
+//! engine pool, wire-schema round-trips, admission control, drain, and
+//! the load generator, all over real loopback sockets on the offline
+//! `interp` backend (demo variant, no artifacts needed).
+
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+use spectral_flow::coordinator::{BatcherConfig, Server, ServerConfig, WeightMode};
+use spectral_flow::net::{http, proto, HttpConn, HttpFrontend, HttpLimits, NetConfig};
+use spectral_flow::net::{loadgen, LoadGenConfig, LoadMode};
+use spectral_flow::schedule::SchedulePolicy;
+use spectral_flow::tensor::Tensor;
+use spectral_flow::util::json::Json;
+use spectral_flow::util::rng::Pcg32;
+
+const DEMO_SHAPE: [usize; 3] = [1, 16, 16];
+
+fn demo_config(alpha: usize, scheduler: SchedulePolicy) -> ServerConfig {
+    ServerConfig {
+        artifacts_dir: concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").into(),
+        variant: "demo".into(),
+        mode: WeightMode::from_alpha(alpha),
+        seed: 7,
+        batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(2) },
+        scheduler,
+        ..ServerConfig::default()
+    }
+}
+
+fn start_frontend(cfg: ServerConfig, net: NetConfig) -> HttpFrontend {
+    let server = Server::start(cfg).expect("server starts");
+    HttpFrontend::start(server, net).expect("frontend binds")
+}
+
+fn demo_net() -> NetConfig {
+    NetConfig { addr: "127.0.0.1:0".into(), input_shape: DEMO_SHAPE, ..NetConfig::default() }
+}
+
+/// One request over a fresh connection; returns (status, body).
+fn roundtrip(addr: SocketAddr, method: &str, path: &str, body: &[u8]) -> (u16, Vec<u8>) {
+    use std::io::Write;
+    let stream = TcpStream::connect(addr).expect("connect");
+    let mut writer = stream.try_clone().expect("clone");
+    let mut conn = HttpConn::new(stream);
+    writer
+        .write_all(&http::format_request(method, path, &addr.to_string(), body))
+        .expect("send");
+    conn.read_response(&HttpLimits::default()).expect("response")
+}
+
+fn parse_body(body: &[u8]) -> Json {
+    Json::parse(std::str::from_utf8(body).expect("utf8 body")).expect("json body")
+}
+
+#[test]
+fn http_inference_bit_identical_to_in_process_client() {
+    // The acceptance contract: the same image through the in-process
+    // Client and through POST /infer yields the same logits, bit for bit,
+    // across α ∈ {1, 4} and scheduler policies.
+    for (alpha, policy) in [
+        (1usize, SchedulePolicy::Off),
+        (4, SchedulePolicy::ExactCover),
+        (4, SchedulePolicy::LowestIndex),
+        (4, SchedulePolicy::Off),
+    ] {
+        let server = Server::start(demo_config(alpha, policy)).expect("server starts");
+        let client = server.client();
+        let mut rng = Pcg32::new(11);
+        let img = Tensor::randn(&DEMO_SHAPE, &mut rng, 1.0);
+        let want = client.infer(img.clone()).expect("in-process infer").logits;
+
+        let frontend = HttpFrontend::start(server, demo_net()).expect("frontend binds");
+        let body = proto::tensor_to_json(&img).to_string();
+        let (status, resp) =
+            roundtrip(frontend.local_addr(), "POST", "/infer", body.as_bytes());
+        assert_eq!(status, 200, "α={alpha} {policy:?}: {resp:?}");
+        let j = parse_body(&resp);
+        let got = proto::logits_from_json(&j).expect("logits");
+        assert_eq!(got.len(), want.len());
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(
+                g.to_bits(),
+                w.to_bits(),
+                "α={alpha} {policy:?}: logit {i} diverged over the wire ({g} vs {w})"
+            );
+        }
+        // the reply carries the latency breakdown and pool placement
+        let lat = j.get("latency_us").and_then(Json::as_f64).expect("latency_us");
+        let queue = j.get("queue_us").and_then(Json::as_f64).expect("queue_us");
+        let exec = j.get("execute_us").and_then(Json::as_f64).expect("execute_us");
+        assert!(lat + 1.0 >= queue + exec, "latency {lat} < queue {queue} + exec {exec}");
+        assert!(j.get("worker").and_then(Json::as_usize).is_some());
+        if alpha > 1 && policy != SchedulePolicy::Off {
+            let u = j.get("pe_utilization").and_then(Json::as_f64).expect("utilization");
+            assert!(u > 0.0 && u <= 1.0 + 1e-12);
+        } else {
+            assert_eq!(j.get("pe_utilization"), Some(&Json::Null));
+        }
+        frontend.shutdown().expect("graceful shutdown");
+    }
+}
+
+#[test]
+fn seed_body_matches_explicit_tensor_inference() {
+    // {"seed":n} asks the server to synthesize the image — same bits as
+    // sending the tensor explicitly (tiny loadgen bodies, same numerics).
+    let server = Server::start(demo_config(4, SchedulePolicy::ExactCover)).expect("server");
+    let client = server.client();
+    let img = Tensor::randn(&DEMO_SHAPE, &mut Pcg32::new(3), 1.0);
+    let want = client.infer(img).expect("infer").logits;
+    let frontend = HttpFrontend::start(server, demo_net()).expect("frontend");
+    let (status, resp) = roundtrip(frontend.local_addr(), "POST", "/infer", b"{\"seed\":3}");
+    assert_eq!(status, 200);
+    let got = proto::logits_from_json(&parse_body(&resp)).expect("logits");
+    assert_eq!(
+        got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        want.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+    );
+    frontend.shutdown().expect("shutdown");
+}
+
+#[test]
+fn healthz_metrics_and_drain_lifecycle() {
+    let frontend = start_frontend(demo_config(4, SchedulePolicy::ExactCover), demo_net());
+    let addr = frontend.local_addr();
+
+    let (status, body) = roundtrip(addr, "GET", "/healthz", b"");
+    assert_eq!(status, 200);
+    assert_eq!(parse_body(&body).get("status").and_then(Json::as_str), Some("ok"));
+
+    let (status, _) = roundtrip(addr, "POST", "/infer", b"{\"seed\":1}");
+    assert_eq!(status, 200);
+
+    let (status, body) = roundtrip(addr, "GET", "/metrics", b"");
+    assert_eq!(status, 200);
+    let j = parse_body(&body);
+    let merged = j.get("merged").expect("merged block");
+    assert!(merged.get("count").and_then(Json::as_usize).unwrap() >= 1);
+    assert!(merged.get("p50_us").and_then(Json::as_f64).unwrap() > 0.0);
+    // the queue/execute breakdown rides in the snapshot…
+    assert!(merged.get("queue_p50_us").and_then(Json::as_f64).is_some());
+    assert!(merged.get("execute_p50_us").and_then(Json::as_f64).is_some());
+    // …and so does the Alg. 2 schedule-quality block (pruned + scheduled)
+    let sched = merged.get("schedule").expect("schedule block");
+    assert_eq!(sched.get("scheduler").and_then(Json::as_str), Some("exact-cover"));
+    assert_eq!(sched.get("layers").and_then(Json::as_arr).map(<[Json]>::len), Some(2));
+    assert!(!j.get("per_worker").and_then(Json::as_arr).unwrap().is_empty());
+
+    // wrong methods and unknown paths answer, never hang
+    let (status, _) = roundtrip(addr, "POST", "/healthz", b"");
+    assert_eq!(status, 405);
+    let (status, _) = roundtrip(addr, "GET", "/infer", b"");
+    assert_eq!(status, 405);
+    let (status, _) = roundtrip(addr, "GET", "/nope", b"");
+    assert_eq!(status, 404);
+
+    // drain: health flips to 503 and new inference is refused while the
+    // process keeps answering (load balancers watch exactly this)
+    frontend.begin_drain();
+    let (status, body) = roundtrip(addr, "GET", "/healthz", b"");
+    assert_eq!(status, 503);
+    assert_eq!(parse_body(&body).get("status").and_then(Json::as_str), Some("draining"));
+    let (status, _) = roundtrip(addr, "POST", "/infer", b"{\"seed\":2}");
+    assert_eq!(status, 503);
+    frontend.shutdown().expect("shutdown");
+}
+
+#[test]
+fn overload_returns_429_never_hangs() {
+    // max_inflight = 0: every /infer is over budget — deterministic 429
+    let frontend = start_frontend(
+        demo_config(1, SchedulePolicy::Off),
+        NetConfig { max_inflight: 0, ..demo_net() },
+    );
+    let addr = frontend.local_addr();
+    let (status, body) = roundtrip(addr, "POST", "/infer", b"{\"seed\":1}");
+    assert_eq!(status, 429, "{:?}", String::from_utf8_lossy(&body));
+    // health and metrics stay reachable under inference overload
+    let (status, _) = roundtrip(addr, "GET", "/healthz", b"");
+    assert_eq!(status, 200);
+    frontend.shutdown().expect("shutdown");
+
+    // closed-loop storm above the bound: every request completes (ok or
+    // 429) — the admission gate sheds load instead of hanging
+    let frontend = start_frontend(
+        demo_config(1, SchedulePolicy::Off),
+        NetConfig { max_inflight: 2, ..demo_net() },
+    );
+    let report = loadgen::run(&LoadGenConfig {
+        addr: frontend.local_addr().to_string(),
+        mode: LoadMode::Closed { concurrency: 8 },
+        requests: 24,
+        body: None,
+        timeout: Duration::from_secs(30),
+    })
+    .expect("loadgen runs");
+    assert_eq!(report.sent, 24);
+    assert_eq!(report.failed, 0, "overload must surface as 429, not errors");
+    assert_eq!(report.ok + report.rejected, 24);
+    assert!(report.ok >= 1, "some requests fit the in-flight budget");
+    assert!(report.throughput() > 0.0);
+    frontend.shutdown().expect("shutdown");
+}
+
+#[test]
+fn loadgen_closed_loop_over_the_pool_succeeds_fully() {
+    // The CI smoke contract: a pooled server under its admission bound
+    // serves a closed-loop run at 100% success with sane percentiles.
+    let frontend = start_frontend(
+        ServerConfig { workers: 2, ..demo_config(4, SchedulePolicy::ExactCover) },
+        demo_net(),
+    );
+    let report = loadgen::run(&LoadGenConfig {
+        addr: frontend.local_addr().to_string(),
+        mode: LoadMode::Closed { concurrency: 3 },
+        requests: 12,
+        body: None,
+        timeout: Duration::from_secs(60),
+    })
+    .expect("loadgen runs");
+    assert_eq!(report.ok, 12, "100% success under the admission bound");
+    assert!(report.p50().unwrap() <= report.p99().unwrap());
+    assert!(report.throughput() > 0.0);
+    let text = report.report();
+    assert!(text.contains("p50=") && text.contains("p95=") && text.contains("p99="));
+    frontend.shutdown().expect("shutdown");
+}
+
+#[test]
+fn open_loop_measures_from_scheduled_arrival() {
+    let frontend = start_frontend(demo_config(1, SchedulePolicy::Off), demo_net());
+    let report = loadgen::run(&LoadGenConfig {
+        addr: frontend.local_addr().to_string(),
+        mode: LoadMode::Open { rate_hz: 50.0 },
+        requests: 10,
+        body: None,
+        timeout: Duration::from_secs(30),
+    })
+    .expect("loadgen runs");
+    assert_eq!(report.sent, 10);
+    assert_eq!(report.ok, 10);
+    // ~10 requests at 50/s arrive over ≥180ms regardless of service time
+    assert!(report.elapsed >= Duration::from_millis(150), "{:?}", report.elapsed);
+    frontend.shutdown().expect("shutdown");
+}
+
+#[test]
+fn wrong_shape_tensor_is_a_400_not_a_crash() {
+    let frontend = start_frontend(demo_config(1, SchedulePolicy::Off), demo_net());
+    let addr = frontend.local_addr();
+    // structurally valid JSON, semantically wrong shape for the variant
+    let img = Tensor::zeros(&[3, 16, 16]);
+    let body = proto::tensor_to_json(&img).to_string();
+    let (status, resp) = roundtrip(addr, "POST", "/infer", body.as_bytes());
+    assert_eq!(status, 400, "{:?}", String::from_utf8_lossy(&resp));
+    assert!(parse_body(&resp).get("error").is_some());
+    // the pool survives and keeps serving
+    let (status, _) = roundtrip(addr, "POST", "/infer", b"{\"seed\":5}");
+    assert_eq!(status, 200);
+    frontend.shutdown().expect("shutdown");
+}
