@@ -161,6 +161,41 @@ fn main() {
         );
     }
 
+    // ---- batch sweep: B as the third reuse axis --------------------------
+    // The batch-major headline: per-image latency in the sparse scheduled
+    // config should drop as B grows, because each sparse weight block
+    // streams once per batch instead of once per image (batch-aware
+    // Alg. 1). `record(…, wall, B)` stores per-image time, so the
+    // B=8 / B=1 ratio reads directly off the JSON artifact.
+    {
+        use spectral_flow::coordinator::EngineOptions;
+        for bsz in [1usize, 8, 32] {
+            let mut e = InferenceEngine::with_options(
+                "artifacts",
+                "vgg16-cifar",
+                WeightMode::Pruned { alpha: 4 },
+                7,
+                EngineOptions {
+                    scheduler: SchedulePolicy::ExactCover,
+                    plan_batch: bsz,
+                    ..EngineOptions::default()
+                },
+            )
+            .expect("cifar engine (batch sweep)");
+            let images: Vec<Tensor> = (0..bsz as u64).map(|s| e.synthetic_image(s)).collect();
+            let _ = e.forward_batch(&images).expect("warm batch forward");
+            let t0 = Instant::now();
+            let out = e.forward_batch(&images).expect("batch forward");
+            let wall = t0.elapsed();
+            assert_eq!(out.len(), bsz);
+            b.record(&format!("e2e/cifar_forward_scheduled_batch{bsz}_per_image"), wall, bsz);
+            println!(
+                "batch sweep B={bsz}: {wall:?} total, {:?} per image",
+                wall / bsz as u32
+            );
+        }
+    }
+
     // ---- threads sweep: tile-parallel interp backend ---------------------
     // The acceptance target is ≥2× forward throughput at 4 backend threads
     // vs 1 on a multi-core runner (tiles are the paper's P' dimension).

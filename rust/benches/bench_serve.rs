@@ -86,6 +86,59 @@ fn main() {
         }
     }
 
+    // ---- max-batch sweep: fused batch serving over the wire --------------
+    // One HTTP request carries a full `{"batch":[…]}` body of B seeds and
+    // the pool runs it as fused batch forwards (max_batch = B) — the
+    // wire-level analogue of bench_e2e's batch sweep. Each recorded sample
+    // is one whole-batch round-trip, so compare like-for-like across B.
+    for max_batch in [1usize, 8, 32] {
+        let server = Server::start(ServerConfig {
+            artifacts_dir: "artifacts".into(),
+            variant: "demo".into(),
+            mode: WeightMode::from_alpha(4),
+            seed: 7,
+            batcher: BatcherConfig {
+                max_batch,
+                max_wait: Duration::from_millis(2),
+            },
+            backend: BackendKind::Interp { threads: 1 },
+            workers: 1,
+            scheduler: SchedulePolicy::ExactCover,
+        })
+        .expect("server starts");
+        let frontend = HttpFrontend::start(
+            server,
+            NetConfig { addr: "127.0.0.1:0".into(), ..NetConfig::default() },
+        )
+        .expect("frontend binds");
+        let body = format!(
+            "{{\"batch\":[{}]}}",
+            (0..max_batch)
+                .map(|s| format!("{{\"seed\":{s}}}"))
+                .collect::<Vec<_>>()
+                .join(",")
+        );
+        let report = loadgen::run(&LoadGenConfig {
+            addr: frontend.local_addr().to_string(),
+            mode: LoadMode::Closed { concurrency: 1 },
+            requests: if quick { 4 } else { 8 },
+            body: Some(body),
+            timeout: Duration::from_secs(60),
+        })
+        .expect("loadgen runs");
+        assert_eq!(report.ok, report.sent, "batched serving must succeed 100%");
+        report.record_into(
+            &mut b,
+            &format!("serve/http_demo_batchbody{max_batch}_alpha4_scheduled"),
+        );
+        println!(
+            "  batch body B={max_batch}: {:.1} batches/s ({:.1} img/s)",
+            report.throughput(),
+            report.throughput() * max_batch as f64
+        );
+        frontend.shutdown().expect("graceful shutdown");
+    }
+
     let _ = b.write_csv("reports/bench_serve.csv");
     let _ = b.write_json("reports/BENCH_serve.json");
 }

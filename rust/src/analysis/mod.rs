@@ -268,12 +268,24 @@ pub fn transfers_flow(flow: Flow, l: &LayerParams, a: &ArchParams) -> Transfers 
 /// `h_in·w_in / (Ps·h'·w')` times (counted in whole tiles, ⌈P/Ps⌉ — see
 /// [`transfers_flow2`]), outputs written once.
 pub fn transfers_flex(l: &LayerParams, s: &StreamParams) -> Transfers {
+    transfers_flex_batch(l, s, 1)
+}
+
+/// Eq. 13 extended with the batch axis: a batch of `B` images makes the
+/// tile population `B·P` while the kernel store stays a single copy, so
+/// kernels are re-loaded `⌈B·P / Ps⌉` times (instead of `B·⌈P/Ps⌉` for B
+/// independent forwards) and the input/output activation traffic scales
+/// linearly with B. With `Ps ≥ B·P` every sparse kernel row streams from
+/// memory exactly **once per batch** — the batch dimension acting as the
+/// third reuse axis next to the paper's Ns/Ps choice.
+pub fn transfers_flex_batch(l: &LayerParams, s: &StreamParams, batch: usize) -> Transfers {
+    let b = batch.max(1) as u64;
     let in_reloads = ceil_div(l.n as u64, s.ns as u64);
-    let k_reloads = ceil_div(l.p as u64, s.ps as u64);
+    let k_reloads = ceil_div(b * l.p as u64, s.ps as u64);
     Transfers {
-        inputs: l.input_words() * in_reloads,
+        inputs: b * l.input_words() * in_reloads,
         kernels: l.sparse_kernel_words() * k_reloads,
-        outputs: l.output_words(),
+        outputs: b * l.output_words(),
     }
 }
 
@@ -331,6 +343,47 @@ mod tests {
         assert_eq!(t.inputs, l.input_words());
         assert_eq!(t.kernels, l.sparse_kernel_words());
         assert_eq!(t.outputs, l.output_words());
+    }
+
+    #[test]
+    fn batch_one_is_the_plain_flex_model() {
+        let l = conv5(4);
+        let s = StreamParams { ns: 256, ps: 9 };
+        assert_eq!(transfers_flex_batch(&l, &s, 1), transfers_flex(&l, &s));
+        // batch=0 is clamped to 1 (degenerate but defined)
+        assert_eq!(transfers_flex_batch(&l, &s, 0), transfers_flex(&l, &s));
+    }
+
+    #[test]
+    fn batching_amortizes_kernel_streams() {
+        // The B-axis claim: with all B·P tiles resident, a batch of B
+        // forwards streams the kernel store once, not B times — kernel
+        // traffic drops by exactly B× vs B independent forwards while the
+        // activation traffic stays linear in B.
+        let l = conv5(4);
+        let b = 8usize;
+        let resident = StreamParams { ns: l.n, ps: b * l.p };
+        let batched = transfers_flex_batch(&l, &resident, b);
+        let serial = transfers_flex(&l, &StreamParams { ns: l.n, ps: l.p });
+        assert_eq!(batched.kernels, serial.kernels, "one kernel stream per batch");
+        assert_eq!(batched.inputs, b as u64 * serial.inputs);
+        assert_eq!(batched.outputs, b as u64 * serial.outputs);
+        // and with only P tiles resident the batch re-streams kernels B×
+        let tight = transfers_flex_batch(&l, &StreamParams { ns: l.n, ps: l.p }, b);
+        assert_eq!(tight.kernels, b as u64 * serial.kernels);
+    }
+
+    #[test]
+    fn batch_transfers_monotone_in_ps() {
+        forall("batch flex monotone", 50, |rng| {
+            let l = conv5(4);
+            let b = rng.range(1, 9);
+            let ps1 = rng.range(1, b * l.p);
+            let ps2 = rng.range(ps1, b * l.p + 1);
+            let t1 = transfers_flex_batch(&l, &StreamParams { ns: l.n, ps: ps1 }, b);
+            let t2 = transfers_flex_batch(&l, &StreamParams { ns: l.n, ps: ps2 }, b);
+            assert!(t2.total() <= t1.total());
+        });
     }
 
     #[test]

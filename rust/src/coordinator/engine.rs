@@ -75,11 +75,20 @@ impl WeightMode {
 /// layer's geometry at the paper's architecture point, and hand the chosen
 /// `Ps` to the backend as its resident-tile block ([`SparseDataflow`]).
 /// This is where the planner stops being a paper artifact: the same search
-/// that produces Table 1 now picks the serving loop order. τ cancels in the
-/// per-layer argmin (bandwidth = volume/τ at fixed τ), so any positive
-/// value yields the same streaming optimum; infeasible-BRAM layers fall
-/// back to pure tile-major execution.
-fn sparse_dataflow_for(l: &LayerEntry, fft: usize, tile: usize, alpha: usize) -> SparseDataflow {
+/// that produces Table 1 now picks the serving loop order. `batch` is the
+/// B the engine will forward at (the serving batcher's `max_batch`): the
+/// planner sees the B·P tile population and may choose `Ps` spanning the
+/// whole batch, so one kernel stream covers all B images' tiles. τ cancels
+/// in the per-layer argmin (bandwidth = volume/τ at fixed τ), so any
+/// positive value yields the same streaming optimum; infeasible-BRAM
+/// layers fall back to pure tile-major execution.
+fn sparse_dataflow_for(
+    l: &LayerEntry,
+    fft: usize,
+    tile: usize,
+    alpha: usize,
+    batch: usize,
+) -> SparseDataflow {
     let params = LayerParams {
         m: l.cin,
         n: l.cout,
@@ -89,10 +98,38 @@ fn sparse_dataflow_for(l: &LayerEntry, fft: usize, tile: usize, alpha: usize) ->
         p: l.tiles,
         alpha: alpha.max(1),
     };
-    let cfg = OptimizerConfig { alpha: alpha.max(1), ..OptimizerConfig::paper() };
+    let cfg = OptimizerConfig {
+        alpha: alpha.max(1),
+        batch: batch.max(1),
+        ..OptimizerConfig::paper()
+    };
     match optimize_layer(&params, &ArchParams::paper(), &cfg, 1.0) {
         Some(plan) => SparseDataflow::from_stream(&plan.stream),
         None => SparseDataflow::default(),
+    }
+}
+
+/// Engine construction knobs beyond `(artifacts, variant, mode, seed)`.
+#[derive(Debug, Clone, Copy)]
+pub struct EngineOptions {
+    /// Backend the conv layers execute on.
+    pub backend: BackendKind,
+    /// Alg. 2 scheduling policy for the sparse layers.
+    pub scheduler: SchedulePolicy,
+    /// Batch size B the Alg. 1 streaming plan is optimized for — the
+    /// serving pool passes its batcher's `max_batch`. Forwarding any
+    /// batch size (including 1) stays correct for any `plan_batch`; the
+    /// value only moves the kernel-reuse/residency trade-off.
+    pub plan_batch: usize,
+}
+
+impl Default for EngineOptions {
+    fn default() -> Self {
+        EngineOptions {
+            backend: BackendKind::default(),
+            scheduler: SchedulePolicy::default(),
+            plan_batch: 1,
+        }
     }
 }
 
@@ -199,7 +236,8 @@ impl InferenceEngine {
     }
 
     /// Build an engine with an explicit backend *and* scheduling policy
-    /// (`--scheduler {exact-cover,lowest-index,off}` on the CLI).
+    /// (`--scheduler {exact-cover,lowest-index,off}` on the CLI), planning
+    /// streaming for single-image forwards.
     pub fn new_with_opts(
         artifacts_dir: &str,
         variant: &str,
@@ -208,6 +246,26 @@ impl InferenceEngine {
         backend: BackendKind,
         scheduler: SchedulePolicy,
     ) -> Result<Self> {
+        Self::with_options(
+            artifacts_dir,
+            variant,
+            mode,
+            seed,
+            EngineOptions { backend, scheduler, plan_batch: 1 },
+        )
+    }
+
+    /// Build an engine from explicit [`EngineOptions`] — the full
+    /// constructor the serving pool uses (it passes the batcher's
+    /// `max_batch` as `plan_batch` so Alg. 1 plans batch-major streaming).
+    pub fn with_options(
+        artifacts_dir: &str,
+        variant: &str,
+        mode: WeightMode,
+        seed: u64,
+        opts: EngineOptions,
+    ) -> Result<Self> {
+        let EngineOptions { backend, scheduler, plan_batch } = opts;
         let mut runtime = Runtime::open_with(artifacts_dir, backend)?;
         let v = runtime.manifest.variant(variant)?.clone();
         let fft = runtime.manifest.fft_size;
@@ -227,8 +285,10 @@ impl InferenceEngine {
                 // h only nudges the optimizer's transfer totals, so a clash
                 // can cost streaming efficiency, never correctness.
                 Some(sp) => {
-                    runtime
-                        .set_sparse_dataflow(&l.file, sparse_dataflow_for(l, fft, tile, sp.alpha))?;
+                    runtime.set_sparse_dataflow(
+                        &l.file,
+                        sparse_dataflow_for(l, fft, tile, sp.alpha, plan_batch),
+                    )?;
                     let wid = runtime.upload_sparse(sp)?;
                     // Alg. 2: plan every (group, channel) instance at the
                     // paper's architecture point and execute in schedule
@@ -307,52 +367,99 @@ impl InferenceEngine {
 
     /// Run one conv layer through the backend (the "FPGA" side).
     pub fn conv_layer(&mut self, idx: usize, x: &Tensor) -> Result<Tensor> {
-        let l = self.variant.layers[idx].clone();
-        if x.shape() != [l.cin, l.h, l.h] {
-            return Err(err!(
-                "layer {} expects [{}, {}, {}], got {:?}",
-                l.name,
-                l.cin,
-                l.h,
-                l.h,
-                x.shape()
-            ));
-        }
-        let geo = TileGeometry::new(l.h, self.fft, self.kernel_k);
-        let tiles = im2tiles(x, &geo);
-        let out_tiles = self.runtime.run_conv(&l.file, &tiles, self.weight_ids[idx])?;
-        let mut out = overlap_add(&out_tiles, &geo, l.cout);
-        nn::add_bias(&mut out, &self.weights.convs[idx].bias);
-        nn::relu(&mut out);
-        Ok(out)
+        let mut out = self.conv_layer_batch(idx, std::slice::from_ref(x))?;
+        Ok(out.pop().expect("one image in, one activation out"))
     }
 
-    /// Full forward pass: image `[C, H, W]` → logits.
-    pub fn forward(&mut self, image: &Tensor) -> Result<Vec<f32>> {
+    /// Run one conv layer for a whole batch of images — one
+    /// [`run_conv_batch`](crate::runtime::SpectralBackend::run_conv_batch)
+    /// call, so the backend's kernel stream covers all B images' tiles.
+    pub fn conv_layer_batch(&mut self, idx: usize, xs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let l = self.variant.layers[idx].clone();
+        for x in xs {
+            if x.shape() != [l.cin, l.h, l.h] {
+                return Err(err!(
+                    "layer {} expects [{}, {}, {}], got {:?}",
+                    l.name,
+                    l.cin,
+                    l.h,
+                    l.h,
+                    x.shape()
+                ));
+            }
+        }
+        let geo = TileGeometry::new(l.h, self.fft, self.kernel_k);
+        let tiles: Vec<Tensor> = xs.iter().map(|x| im2tiles(x, &geo)).collect();
+        let out_tiles = self.runtime.run_conv_batch(&l.file, &tiles, self.weight_ids[idx])?;
+        let mut outs = Vec::with_capacity(out_tiles.len());
+        for ot in &out_tiles {
+            let mut out = overlap_add(ot, &geo, l.cout);
+            nn::add_bias(&mut out, &self.weights.convs[idx].bias);
+            nn::relu(&mut out);
+            outs.push(out);
+        }
+        Ok(outs)
+    }
+
+    /// Validate one image against the variant's input shape without running
+    /// anything — the serving worker pre-screens a closed batch with this
+    /// so a mis-shaped request gets its own error instead of poisoning the
+    /// whole batch's fused forward.
+    pub fn check_input(&self, image: &Tensor) -> Result<()> {
         let want = [self.variant.input_c, self.variant.input_hw, self.variant.input_hw];
         if image.shape() != want {
             return Err(err!("input shape {:?} != {:?}", image.shape(), want));
         }
-        let mut x = image.clone();
-        for i in 0..self.variant.layers.len() {
-            x = self.conv_layer(i, &x)?;
-            if self.variant.layers[i].pool_after {
-                x = nn::maxpool2(&x);
-            }
+        Ok(())
+    }
+
+    /// Full forward pass: image `[C, H, W]` → logits. Same code path as
+    /// [`Self::forward_batch`] at B = 1 — there is deliberately no serial
+    /// special case.
+    pub fn forward(&mut self, image: &Tensor) -> Result<Vec<f32>> {
+        let mut out = self.forward_batch(std::slice::from_ref(image))?;
+        Ok(out.pop().expect("one image in, one logits out"))
+    }
+
+    /// Batch-major forward pass: B images `[C, H, W]` → B logit vectors.
+    ///
+    /// The loop nest is layer-major, batch-inner: each conv layer executes
+    /// **once** over all B images' tiles (via
+    /// [`run_conv_batch`](crate::runtime::SpectralBackend::run_conv_batch)),
+    /// so the backend streams each sparse weight block once per batch
+    /// instead of once per image — the B reuse axis of the batch-aware
+    /// Alg. 1. Outputs are bit-identical to B independent [`Self::forward`]
+    /// calls (pinned by tests at backend, engine, and HTTP levels).
+    pub fn forward_batch(&mut self, images: &[Tensor]) -> Result<Vec<Vec<f32>>> {
+        for image in images {
+            self.check_input(image)?;
         }
-        let mut v = x.into_vec();
-        let n_fc = self.weights.fc.len();
-        for (i, (w, b)) in self.weights.fc.iter().enumerate() {
-            v = nn::dense(w, b, &v);
-            if i + 1 < n_fc {
-                for e in &mut v {
-                    if *e < 0.0 {
-                        *e = 0.0;
-                    }
+        let mut xs: Vec<Tensor> = images.to_vec();
+        for i in 0..self.variant.layers.len() {
+            xs = self.conv_layer_batch(i, &xs)?;
+            if self.variant.layers[i].pool_after {
+                for x in &mut xs {
+                    *x = nn::maxpool2(x);
                 }
             }
         }
-        Ok(v)
+        let n_fc = self.weights.fc.len();
+        let mut all = Vec::with_capacity(xs.len());
+        for x in xs {
+            let mut v = x.into_vec();
+            for (i, (w, b)) in self.weights.fc.iter().enumerate() {
+                v = nn::dense(w, b, &v);
+                if i + 1 < n_fc {
+                    for e in &mut v {
+                        if *e < 0.0 {
+                            *e = 0.0;
+                        }
+                    }
+                }
+            }
+            all.push(v);
+        }
+        Ok(all)
     }
 
     /// Pure-Rust spatial reference for one conv layer (Dense mode only):
@@ -409,8 +516,18 @@ mod tests {
     fn deep_layer_keeps_all_tiles_resident() {
         // conv5_3-sized (512×512 channels, 9 tiles): Table 1's optimum is
         // Ps = P — the sparse MAC should load each kernel row exactly once.
-        let d = sparse_dataflow_for(&layer(512, 512, 14, 9), 8, 6, 4);
+        let d = sparse_dataflow_for(&layer(512, 512, 14, 9), 8, 6, 4, 1);
         assert_eq!(d.tile_block, 9);
+    }
+
+    #[test]
+    fn deep_layer_batched_plan_spans_the_whole_batch() {
+        // Same layer planned for B = 8: the tile population is 72, Eq. 12
+        // still fits it on chip (at Ns = 256), so the plan keeps the whole
+        // batch resident — each kernel row streams once per *batch* in the
+        // fused forward, not once per image.
+        let d = sparse_dataflow_for(&layer(512, 512, 14, 9), 8, 6, 4, 8);
+        assert_eq!(d.tile_block, 72);
     }
 
     #[test]
@@ -418,8 +535,26 @@ mod tests {
         // conv1_2-sized (64×64 channels, 1444 tiles): the optimizer streams
         // tile groups; whatever Ps it picks lies on the P'-lattice and is
         // at least one architecture group.
-        let d = sparse_dataflow_for(&layer(64, 64, 224, 1444), 8, 6, 4);
+        let d = sparse_dataflow_for(&layer(64, 64, 224, 1444), 8, 6, 4, 1);
         assert!(d.tile_block >= 9, "got block {}", d.tile_block);
         assert!(d.tile_block == 1444 || d.tile_block % 9 == 0, "got block {}", d.tile_block);
+    }
+
+    #[test]
+    fn batched_plan_never_shrinks_reuse() {
+        // Growing B can only extend the Ps axis (the B=1 lattice is a
+        // subset), so the chosen block never shrinks with batch size.
+        for (cin, cout, h, tiles) in [(512, 512, 14, 9), (64, 64, 224, 1444)] {
+            let mut prev = 0usize;
+            for batch in [1usize, 2, 8, 32] {
+                let d = sparse_dataflow_for(&layer(cin, cout, h, tiles), 8, 6, 4, batch);
+                assert!(
+                    d.tile_block >= prev,
+                    "{cin}x{cout} B={batch}: block {} < previous {prev}",
+                    d.tile_block
+                );
+                prev = d.tile_block;
+            }
+        }
     }
 }

@@ -112,10 +112,17 @@ pub struct Metrics {
     queue_us: Vec<u64>,
     /// Execute portion (the engine forward itself).
     execute_us: Vec<u64>,
+    /// Per-image-in-batch execute time: each batched request's share of
+    /// its batch's forward (`execute / batch_size`) — the number the
+    /// batch-major path improves as B grows (kernel streams amortize).
+    per_image_us: Vec<u64>,
     /// Lifetime request count (exact even after sample windowing).
     completed: u64,
     batches: u64,
     batch_sizes: u64,
+    /// Closed-batch size histogram: `batch_hist[s]` = number of batches
+    /// executed with exactly `s` requests (index 0 unused).
+    batch_hist: Vec<u64>,
     started: Option<std::time::Instant>,
     finished: Option<std::time::Instant>,
     /// Static scheduling quality of the worker's engine (None when serving
@@ -150,6 +157,16 @@ impl Metrics {
     pub fn record_batch(&mut self, size: usize) {
         self.batches += 1;
         self.batch_sizes += size as u64;
+        if self.batch_hist.len() <= size {
+            self.batch_hist.resize(size + 1, 0);
+        }
+        self.batch_hist[size] += 1;
+    }
+
+    /// Record one request's per-image share of its batch's execute time
+    /// (`execute / batch_size` for every request in the batch).
+    pub fn record_per_image(&mut self, per_image: Duration) {
+        push_bounded(&mut self.per_image_us, per_image.as_micros() as u64);
     }
 
     /// Fold another accumulator into this one (per-worker → merged
@@ -159,9 +176,16 @@ impl Metrics {
         self.latencies_us.extend_from_slice(&other.latencies_us);
         self.queue_us.extend_from_slice(&other.queue_us);
         self.execute_us.extend_from_slice(&other.execute_us);
+        self.per_image_us.extend_from_slice(&other.per_image_us);
         self.completed += other.completed;
         self.batches += other.batches;
         self.batch_sizes += other.batch_sizes;
+        if self.batch_hist.len() < other.batch_hist.len() {
+            self.batch_hist.resize(other.batch_hist.len(), 0);
+        }
+        for (dst, &src) in self.batch_hist.iter_mut().zip(&other.batch_hist) {
+            *dst += src;
+        }
         // schedule metrics are identical across pool replicas (same weights
         // + scheduler per config), so the first snapshot wins
         if self.schedule.is_none() {
@@ -187,6 +211,19 @@ impl Metrics {
         } else {
             self.batch_sizes as f64 / self.batches as f64
         }
+    }
+
+    /// Closed-batch size histogram: index = batch size, value = number of
+    /// batches executed at that size (index 0 always 0). Empty before any
+    /// batch completes.
+    pub fn batch_histogram(&self) -> &[u64] {
+        &self.batch_hist
+    }
+
+    /// Per-image-in-batch execute percentile (None before any batched
+    /// request completes).
+    pub fn per_image_percentile(&self, p: f64) -> Option<Duration> {
+        Self::percentile_us(&self.per_image_us, p)
     }
 
     /// Nearest-rank percentile over raw microsecond samples — the one
@@ -262,6 +299,9 @@ impl Metrics {
         if let (Some(q), Some(e)) = (self.queue_percentile(0.5), self.execute_percentile(0.5)) {
             line.push_str(&format!(" queue-p50={q:?} exec-p50={e:?}"));
         }
+        if let Some(pi) = self.per_image_percentile(0.5) {
+            line.push_str(&format!(" per-image-p50={pi:?}"));
+        }
         if let Some(s) = &self.schedule {
             line.push_str(&format!(" | {}", s.report()));
         }
@@ -328,6 +368,40 @@ mod tests {
         m.record_batch(4);
         m.record_batch(8);
         assert!((m.mean_batch_size() - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn batch_histogram_counts_by_size_and_merges() {
+        let mut a = Metrics::new();
+        a.record_batch(1);
+        a.record_batch(4);
+        a.record_batch(4);
+        assert_eq!(a.batch_histogram(), &[0, 1, 0, 0, 2]);
+        let mut b = Metrics::new();
+        b.record_batch(2);
+        b.record_batch(4);
+        let snap = PoolMetrics::from_workers(vec![a, b]);
+        assert_eq!(snap.merged.batch_histogram(), &[0, 1, 1, 0, 3]);
+        // empty metrics expose an empty histogram, not a panic
+        assert!(Metrics::new().batch_histogram().is_empty());
+    }
+
+    #[test]
+    fn per_image_latency_tracks_batch_share() {
+        let mut m = Metrics::new();
+        // a batch of 4 sharing a 2 ms forward: 500 µs per image
+        for _ in 0..4 {
+            m.record_per_image(Duration::from_micros(500));
+        }
+        m.record_per_image(Duration::from_micros(2000)); // a lone request
+        assert_eq!(m.per_image_percentile(0.5).unwrap(), Duration::from_micros(500));
+        assert!(m.report().contains("per-image-p50"));
+        // merge concatenates the distribution
+        let snap = PoolMetrics::from_workers(vec![m, Metrics::new()]);
+        assert_eq!(snap.merged.per_image_percentile(1.0).unwrap(), Duration::from_micros(2000));
+        // absent until a batched request completes
+        assert!(Metrics::new().per_image_percentile(0.5).is_none());
+        assert!(!Metrics::new().report().contains("per-image-p50"));
     }
 
     #[test]

@@ -24,6 +24,6 @@ pub mod metrics;
 pub mod server;
 
 pub use batcher::{Batcher, BatcherConfig};
-pub use engine::{InferenceEngine, WeightMode, Weights};
+pub use engine::{EngineOptions, InferenceEngine, WeightMode, Weights};
 pub use metrics::{LayerScheduleMetrics, Metrics, PoolMetrics, ScheduleMetrics};
 pub use server::{Client, Response, Server, ServerConfig};

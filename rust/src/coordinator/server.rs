@@ -1,6 +1,11 @@
 //! The serving loop: a pool of executor workers, each owning its own
 //! [`InferenceEngine`], fed by a dispatcher thread that batches client
 //! requests and routes each closed batch to the least-loaded worker.
+//! A closed batch is never unbundled: the worker runs it through one
+//! fused [`InferenceEngine::forward_batch`] call, so every weight block
+//! streams once per batch instead of once per image (batch-major
+//! kernel reuse), and its engine's dataflow plan is sized for the
+//! batcher's `max_batch`.
 //!
 //! Thread-confinement rule: every engine is constructed *inside* its worker
 //! thread and never crosses a thread boundary (PJRT objects hold raw FFI
@@ -22,7 +27,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use super::batcher::{Batcher, BatcherConfig};
-use super::engine::{InferenceEngine, WeightMode};
+use super::engine::{EngineOptions, InferenceEngine, WeightMode};
 use super::metrics::{Metrics, PoolMetrics};
 use crate::err;
 use crate::runtime::BackendKind;
@@ -81,8 +86,14 @@ pub struct Response {
     /// Time spent queued before the forward pass started (dispatcher +
     /// batcher + worker queue); `latency ≈ queue_wait + execute`.
     pub queue_wait: Duration,
-    /// Time the engine forward itself took.
+    /// Time the fused batch forward took (shared across every request in
+    /// the closed batch — the whole batch runs as one `forward_batch`).
     pub execute: Duration,
+    /// Amortized share of `execute` attributed to this request:
+    /// `execute / batch_size` over the requests that actually executed.
+    /// The kernel-reuse win shows up here — per-image latency shrinks as
+    /// the batch grows because each weight block streams once per batch.
+    pub per_image: Duration,
     pub batch_size: usize,
     /// Which pool worker executed the request.
     pub worker: usize,
@@ -240,13 +251,19 @@ fn worker_loop(
     ready: mpsc::Sender<Result<()>>,
     load: Arc<AtomicUsize>,
 ) -> Result<()> {
-    let mut engine = match InferenceEngine::new_with_opts(
+    let mut engine = match InferenceEngine::with_options(
         &cfg.artifacts_dir,
         &cfg.variant,
         cfg.mode,
         cfg.seed,
-        cfg.backend,
-        cfg.scheduler,
+        EngineOptions {
+            backend: cfg.backend,
+            scheduler: cfg.scheduler,
+            // Plan the sparse dataflow for the largest batch the batcher can
+            // close: Alg. 1 with B as the third reuse axis sizes Ps across
+            // B·P tiles, so each weight block streams once per batch.
+            plan_batch: cfg.batcher.max_batch.max(1),
+        },
     ) {
         Ok(e) => {
             let _ = ready.send(Ok(()));
@@ -271,25 +288,61 @@ fn worker_loop(
             WorkerMsg::Batch(batch) => {
                 let size = batch.len();
                 metrics.record_batch(size);
-                for req in batch {
-                    // queue-wait ends (and execute begins) here: everything
-                    // before this instant was dispatcher/batcher/queue time
-                    let queue_wait = req.submitted.elapsed();
-                    let exec_start = Instant::now();
-                    let result = engine.forward(&req.image).map(|logits| {
-                        let execute = exec_start.elapsed();
-                        let latency = req.submitted.elapsed();
-                        metrics.record_request_split(queue_wait, execute);
-                        Response {
-                            logits,
-                            latency,
-                            queue_wait,
-                            execute,
-                            batch_size: size,
-                            worker: id,
-                            pe_utilization: pe_util,
-                        }
-                    });
+                // queue-wait ends (and execute begins) for the whole batch
+                // here: everything before this instant was dispatcher/
+                // batcher/worker-queue time. A batch of one takes exactly
+                // this path too — there is no serial special case.
+                let queue_waits: Vec<Duration> =
+                    batch.iter().map(|r| r.submitted.elapsed()).collect();
+                // Pre-screen shapes so one malformed request can't poison
+                // the fused forward; the valid subset still rides together.
+                let verdicts: Vec<Result<()>> =
+                    batch.iter().map(|r| engine.check_input(&r.image)).collect();
+                let images: Vec<Tensor> = batch
+                    .iter()
+                    .zip(&verdicts)
+                    .filter(|(_, v)| v.is_ok())
+                    .map(|(r, _)| r.image.clone())
+                    .collect();
+                let exec_start = Instant::now();
+                let outcome = if images.is_empty() {
+                    Ok(Vec::new())
+                } else {
+                    engine.forward_batch(&images)
+                };
+                let execute = exec_start.elapsed();
+                let per_image = execute / images.len().max(1) as u32;
+                let mut results: std::vec::IntoIter<Result<Vec<f32>>> = match outcome {
+                    Ok(v) => v.into_iter().map(Ok).collect::<Vec<_>>(),
+                    // an engine-level failure fails every request that
+                    // executed; shape rejections below stay per-request
+                    Err(e) => (0..images.len()).map(|_| Err(e.clone())).collect(),
+                }
+                .into_iter();
+                for ((req, queue_wait), verdict) in
+                    batch.into_iter().zip(queue_waits).zip(verdicts)
+                {
+                    let result = match verdict {
+                        Err(e) => Err(e),
+                        Ok(()) => results
+                            .next()
+                            .expect("one result per screened request")
+                            .map(|logits| {
+                                let latency = req.submitted.elapsed();
+                                metrics.record_request_split(queue_wait, execute);
+                                metrics.record_per_image(per_image);
+                                Response {
+                                    logits,
+                                    latency,
+                                    queue_wait,
+                                    execute,
+                                    per_image,
+                                    batch_size: size,
+                                    worker: id,
+                                    pe_utilization: pe_util,
+                                }
+                            }),
+                    };
                     let _ = req.reply.send(result);
                     load.fetch_sub(1, Ordering::Relaxed);
                 }

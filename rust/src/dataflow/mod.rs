@@ -17,7 +17,7 @@
 //! published optima live on.
 
 use crate::analysis::{
-    bram_flex, transfers_flex, ArchParams, LayerParams, StreamParams, Transfers,
+    bram_flex, transfers_flex_batch, ArchParams, LayerParams, StreamParams, Transfers,
 };
 use crate::model::Network;
 
@@ -67,6 +67,13 @@ pub struct OptimizerConfig {
     pub alpha: usize,
     /// Replicas r (input-tile copies; from the scheduling analysis).
     pub replicas: usize,
+    /// Batch size B the plan is optimized for. The paper evaluates B = 1
+    /// (single-image latency); serving hands the batcher's `max_batch`
+    /// here so Alg. 1 sees the batch as a third reuse axis: the layer's
+    /// tile population becomes `B·P` and `Ps` may grow up to it, letting
+    /// each sparse kernel row stream once per *batch* (Eq. 13's `⌈B·P/Ps⌉`
+    /// reload factor) instead of once per image.
+    pub batch: usize,
 }
 
 impl OptimizerConfig {
@@ -78,17 +85,28 @@ impl OptimizerConfig {
             word_bytes: 2,
             alpha: 4,
             replicas: 10,
+            batch: 1,
         }
     }
 }
 
 /// Streaming-parameter candidates for one layer: multiples of the group
-/// sizes, plus the keep-everything extremes.
-fn stream_candidates(l: &LayerParams, a: &ArchParams) -> Vec<StreamParams> {
+/// sizes, plus the keep-everything extremes. The Ps axis extends to the
+/// batch's whole tile population `B·P` — batch-major execution can keep
+/// several images' tiles resident against one kernel stream.
+fn stream_candidates(l: &LayerParams, a: &ArchParams, batch: usize) -> Vec<StreamParams> {
+    let p_total = l.p * batch.max(1);
     let mut ns_opts: Vec<usize> = (1..).map(|i| i * a.n_par).take_while(|&v| v < l.n).collect();
     ns_opts.push(l.n);
-    let mut ps_opts: Vec<usize> = (1..).map(|i| i * a.p_par).take_while(|&v| v < l.p).collect();
-    ps_opts.push(l.p);
+    let mut ps_opts: Vec<usize> =
+        (1..).map(|i| i * a.p_par).take_while(|&v| v < p_total).collect();
+    ps_opts.push(p_total);
+    // the per-image extreme stays a candidate even when it is not a P'
+    // multiple (e.g. P = 1444, P' = 9): it is the B=1 plan's anchor point
+    if batch > 1 && !ps_opts.contains(&l.p) {
+        ps_opts.push(l.p);
+        ps_opts.sort_unstable();
+    }
     let mut out = Vec::with_capacity(ns_opts.len() * ps_opts.len());
     for &ns in &ns_opts {
         for &ps in &ps_opts {
@@ -99,7 +117,8 @@ fn stream_candidates(l: &LayerParams, a: &ArchParams) -> Vec<StreamParams> {
 }
 
 /// Alg. 1 inner loop: best streaming parameters for one layer under one
-/// architecture. Returns `None` when no candidate fits the BRAM budget.
+/// architecture, batch-aware per `cfg.batch`. Returns `None` when no
+/// candidate fits the BRAM budget.
 pub fn optimize_layer(
     l: &LayerParams,
     a: &ArchParams,
@@ -107,12 +126,12 @@ pub fn optimize_layer(
     tau: f64,
 ) -> Option<LayerPlan> {
     let mut best: Option<(f64, u64, StreamParams, Transfers)> = None;
-    for s in stream_candidates(l, a) {
+    for s in stream_candidates(l, a, cfg.batch) {
         let brams = bram_flex(l, a, &s);
         if brams > cfg.bram_budget {
             continue;
         }
-        let t = transfers_flex(l, &s);
+        let t = transfers_flex_batch(l, &s, cfg.batch);
         let bw = t.bandwidth(tau, cfg.word_bytes);
         let better = match &best {
             None => true,
@@ -302,6 +321,61 @@ mod tests {
             reduction > 0.30,
             "transfer reduction {reduction:.2} below the paper's band (42%)"
         );
+    }
+
+    #[test]
+    fn batch_axis_extends_ps_and_amortizes_kernel_streams() {
+        // Deep layer (conv5_3: 512×512, P = 9) at B = 8: the tile
+        // population is 72, and Eq. 12 still fits all of it on chip at
+        // Ns = 256 — so Alg. 1 keeps the whole batch resident and streams
+        // the kernel store exactly once per batch.
+        let net = Network::vgg16_224();
+        let l = LayerParams::from_layer(&net.convs[12], 4);
+        let arch = ArchParams::paper();
+        let cfg = OptimizerConfig { batch: 8, ..OptimizerConfig::paper() };
+        let plan = optimize_layer(&l, &arch, &cfg, 1.0).expect("batched plan feasible");
+        assert_eq!(plan.stream.ps, 8 * l.p, "all B·P tiles resident");
+        assert_eq!(plan.transfers.kernels, l.sparse_kernel_words(), "one kernel stream");
+        assert!(plan.brams <= cfg.bram_budget);
+
+        // versus B independent single-image forwards: 8× the kernel traffic
+        let serial = optimize_layer(&l, &arch, &OptimizerConfig::paper(), 1.0).unwrap();
+        assert_eq!(serial.stream.ps, l.p);
+        assert_eq!(serial.transfers.kernels, l.sparse_kernel_words());
+        assert!(
+            plan.transfers.total() < 8 * serial.transfers.total(),
+            "batched {} !< 8× serial {}",
+            plan.transfers.total(),
+            8 * serial.transfers.total()
+        );
+    }
+
+    #[test]
+    fn batch_one_plan_unchanged_by_the_batch_field() {
+        // Adding the B axis must not perturb the paper's B = 1 optima.
+        let net = Network::vgg16_224();
+        let cfg = OptimizerConfig { batch: 1, ..OptimizerConfig::paper() };
+        let a = optimize_network_at(&net, ArchParams::paper(), &OptimizerConfig::paper()).unwrap();
+        let b = optimize_network_at(&net, ArchParams::paper(), &cfg).unwrap();
+        for (x, y) in a.layers.iter().zip(&b.layers) {
+            assert_eq!(x.stream, y.stream, "{}", x.layer_name);
+            assert_eq!(x.transfers, y.transfers, "{}", x.layer_name);
+        }
+    }
+
+    #[test]
+    fn batched_plans_stay_within_budget_across_network() {
+        // Every layer's batched plan must still clear Eq. 12 — early
+        // layers (P = 1444 tiles at B = 8 ⇒ 11552) simply keep Ps at a
+        // feasible prefix instead of the whole population.
+        let net = Network::vgg16_224();
+        let cfg = OptimizerConfig { batch: 8, ..OptimizerConfig::paper() };
+        let plan = optimize_network_at(&net, ArchParams::paper(), &cfg)
+            .expect("batched network plan feasible");
+        for lp in &plan.layers {
+            assert!(lp.brams <= cfg.bram_budget, "{} over budget", lp.layer_name);
+            assert!(lp.stream.ps <= 8 * lp.params.p);
+        }
     }
 
     #[test]

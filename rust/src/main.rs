@@ -284,7 +284,15 @@ fn serve(mut args: Args) -> Result<()> {
     use spectral_flow::tensor::Tensor;
     let variant = args.opt("variant", "vgg16-cifar", "model variant");
     let requests = args.opt_usize("requests", 16, "synthetic requests to issue (no --http)");
-    let batch = args.opt_usize("batch", 4, "max batch size");
+    // `--max-batch` is the documented knob; `--batch` stays as a legacy
+    // alias (it supplies the default, so `--max-batch` wins when both are
+    // given and old scripts keep working)
+    let legacy_batch = args.opt_usize("batch", 4, "legacy alias for --max-batch");
+    let batch = args.opt_usize(
+        "max-batch",
+        legacy_batch,
+        "max batch size (the fused-forward reuse window; Ps is planned across it)",
+    );
     let wait_ms = args.opt_usize("wait-ms", 10, "batch deadline (ms)");
     let artifacts = args.opt("artifacts", "artifacts", "artifacts directory");
     let workers = args.opt_usize("workers", 1, "executor workers (one engine each)");

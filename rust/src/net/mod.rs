@@ -9,10 +9,12 @@
 //!   (line/header/body size, deadline-based reads that defeat slow-loris
 //!   peers), keep-alive, and a response writer shared with the client
 //!   side.
-//! * [`proto`] — the JSON wire schema: `POST /infer` (tensor or
-//!   `{"seed":n}` in; logits + queue/execute latency breakdown + worker +
-//!   PE utilization out), `GET /metrics` (merged + per-worker pool
-//!   snapshot), `GET /healthz`.
+//! * [`proto`] — the JSON wire schema: `POST /infer` (tensor, `{"seed":n}`,
+//!   or a `{"batch":[…]}` of them in; logits + queue/execute/per-image
+//!   latency breakdown + worker + PE utilization out — batched bodies get
+//!   `{"results":[…]}` in request order), `GET /metrics` (merged +
+//!   per-worker pool snapshot with the batch-size histogram),
+//!   `GET /healthz`.
 //! * [`server`] — [`server::HttpFrontend`]: acceptor + per-connection
 //!   threads wired to [`crate::coordinator::Server`] through cloned
 //!   [`crate::coordinator::Client`] handles, with admission control

@@ -6,8 +6,12 @@
 //!   [`crate::coordinator::InferenceEngine::synthetic_image`] — tiny
 //!   request bodies for the load generator, same bits as the in-process
 //!   path). Reply: logits plus the latency breakdown
-//!   (`latency_us = queue_us + execute_us`), the executing worker, and the
-//!   engine's Alg. 2 PE utilization.
+//!   (`latency_us = queue_us + execute_us`), the amortized per-image share
+//!   of the batch execute, the executing worker, and the engine's Alg. 2
+//!   PE utilization. A `{"batch":[…]}` body carries up to
+//!   [`MAX_BATCH_REQUESTS`] single-image bodies (each `{"seed":n}` or an
+//!   explicit tensor) and is answered with `{"results":[…]}` — one reply
+//!   object per image, in request order.
 //! * `GET /metrics` — merged + per-worker
 //!   [`PoolMetrics`](crate::coordinator::PoolMetrics) snapshot, including
 //!   the queue/execute percentiles and the schedule-quality block.
@@ -38,6 +42,18 @@ pub const WIRE_JSON_DEPTH: usize = 32;
 /// image; a vgg16-224 input is 150528).
 pub const MAX_INFER_ELEMS: usize = 3 * 2048 * 2048;
 
+/// Maximum images accepted in one `{"batch":[…]}` body — matches the
+/// default inflight cap, so one batched request can never exceed what the
+/// admission gate would grant 64 serial clients.
+pub const MAX_BATCH_REQUESTS: usize = 64;
+
+/// A parsed `POST /infer` body: one image, or an ordered batch of them.
+#[derive(Debug, Clone)]
+pub enum InferRequest {
+    Single(Tensor),
+    Batch(Vec<Tensor>),
+}
+
 /// `{"error": message}` — the body of every non-200 reply.
 pub fn error_body(message: &str) -> String {
     obj(vec![("error", s(message))]).to_string()
@@ -48,9 +64,46 @@ pub fn error_body(message: &str) -> String {
 /// `shape`/`data` tensors are validated structurally here and semantically
 /// (against the variant) by the engine.
 pub fn parse_infer_request(body: &[u8], input_shape: [usize; 3]) -> Result<Tensor> {
+    match parse_infer_body(body, input_shape)? {
+        InferRequest::Single(t) => Ok(t),
+        InferRequest::Batch(_) => Err(err!("expected a single image, got a \"batch\" body")),
+    }
+}
+
+/// Parse a `POST /infer` body, accepting both the single-image forms and
+/// the `{"batch":[…]}` form (each element is itself a single-image body).
+/// Order is preserved: `results[i]` will answer `batch[i]`.
+pub fn parse_infer_body(body: &[u8], input_shape: [usize; 3]) -> Result<InferRequest> {
     let text = std::str::from_utf8(body).map_err(|_| err!("body is not utf-8"))?;
     let limits = JsonLimits { max_bytes: body.len().max(1), max_depth: WIRE_JSON_DEPTH };
     let j = Json::parse_with_limits(text, limits).map_err(|e| err!("bad json: {e}"))?;
+    if let Some(batch) = j.get("batch") {
+        let items = batch.as_arr().ok_or_else(|| err!("\"batch\" must be an array"))?;
+        if items.is_empty() {
+            return Err(err!("\"batch\" must not be empty"));
+        }
+        if items.len() > MAX_BATCH_REQUESTS {
+            return Err(err!(
+                "\"batch\" has {} images, the limit is {MAX_BATCH_REQUESTS}",
+                items.len()
+            ));
+        }
+        let images = items
+            .iter()
+            .enumerate()
+            .map(|(i, item)| {
+                tensor_from_json(item, input_shape)
+                    .map_err(|e| err!("batch image {i}: {e}"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        return Ok(InferRequest::Batch(images));
+    }
+    Ok(InferRequest::Single(tensor_from_json(&j, input_shape)?))
+}
+
+/// One single-image body (already parsed): `{"seed":n}` or
+/// `{"shape":[c,h,w],"data":[…]}`.
+fn tensor_from_json(j: &Json, input_shape: [usize; 3]) -> Result<Tensor> {
     if let Some(seed) = j.get("seed") {
         let seed = seed
             .as_usize()
@@ -107,10 +160,17 @@ pub fn response_to_json(r: &Response) -> Json {
         ("latency_us", num(r.latency.as_micros() as f64)),
         ("queue_us", num(r.queue_wait.as_micros() as f64)),
         ("execute_us", num(r.execute.as_micros() as f64)),
+        ("per_image_us", num(r.per_image.as_micros() as f64)),
         ("batch_size", num(r.batch_size as f64)),
         ("worker", num(r.worker as f64)),
         ("pe_utilization", r.pe_utilization.map(num).unwrap_or(Json::Null)),
     ])
+}
+
+/// Render a batched inference's replies as `{"results":[…]}`, one object
+/// per image in request order.
+pub fn batch_response_to_json(rs: &[Response]) -> Json {
+    obj(vec![("results", arr(rs.iter().map(response_to_json).collect()))])
 }
 
 /// Extract the logits from a parsed `/infer` reply.
@@ -166,6 +226,23 @@ fn metrics_to_json(m: &Metrics) -> Json {
         ("queue_p95_us", duration_us(m.queue_percentile(0.95))),
         ("execute_p50_us", duration_us(m.execute_percentile(0.5))),
         ("execute_p95_us", duration_us(m.execute_percentile(0.95))),
+        ("per_image_p50_us", duration_us(m.per_image_percentile(0.5))),
+        ("per_image_p95_us", duration_us(m.per_image_percentile(0.95))),
+        (
+            "batch_hist",
+            arr(m
+                .batch_histogram()
+                .iter()
+                .enumerate()
+                .filter(|&(_, &c)| c > 0)
+                .map(|(size, &count)| {
+                    obj(vec![
+                        ("size", num(size as f64)),
+                        ("count", num(count as f64)),
+                    ])
+                })
+                .collect()),
+        ),
         ("schedule", m.schedule.as_ref().map(schedule_to_json).unwrap_or(Json::Null)),
     ])
 }
@@ -234,6 +311,7 @@ mod tests {
             latency: Duration::from_micros(1200),
             queue_wait: Duration::from_micros(200),
             execute: Duration::from_micros(1000),
+            per_image: Duration::from_micros(250),
             batch_size: 4,
             worker: 2,
             pe_utilization: Some(0.875),
@@ -242,6 +320,7 @@ mod tests {
         assert_eq!(j.get("latency_us").unwrap().as_f64(), Some(1200.0));
         assert_eq!(j.get("queue_us").unwrap().as_f64(), Some(200.0));
         assert_eq!(j.get("execute_us").unwrap().as_f64(), Some(1000.0));
+        assert_eq!(j.get("per_image_us").unwrap().as_f64(), Some(250.0));
         assert_eq!(j.get("worker").unwrap().as_usize(), Some(2));
         assert_eq!(j.get("pe_utilization").unwrap().as_f64(), Some(0.875));
         let back = logits_from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
@@ -257,6 +336,7 @@ mod tests {
         let mut m = Metrics::new();
         m.record_batch(2);
         m.record_request_split(Duration::from_micros(100), Duration::from_micros(400));
+        m.record_per_image(Duration::from_micros(200));
         let pm = PoolMetrics::from_workers(vec![m]);
         let j = pool_metrics_to_json(&pm);
         let merged = j.get("merged").unwrap();
@@ -264,9 +344,70 @@ mod tests {
         assert_eq!(merged.get("p50_us").unwrap().as_f64(), Some(500.0));
         assert_eq!(merged.get("queue_p50_us").unwrap().as_f64(), Some(100.0));
         assert_eq!(merged.get("execute_p50_us").unwrap().as_f64(), Some(400.0));
+        assert_eq!(merged.get("per_image_p50_us").unwrap().as_f64(), Some(200.0));
+        let hist = merged.get("batch_hist").unwrap().as_arr().unwrap();
+        assert_eq!(hist.len(), 1, "one batch size observed");
+        assert_eq!(hist[0].get("size").unwrap().as_usize(), Some(2));
+        assert_eq!(hist[0].get("count").unwrap().as_usize(), Some(1));
         assert_eq!(merged.get("schedule"), Some(&Json::Null));
         assert_eq!(j.get("per_worker").unwrap().as_arr().unwrap().len(), 1);
         // and it reparses (the /metrics body is valid json)
         assert!(Json::parse(&j.to_string()).is_ok());
+    }
+
+    #[test]
+    fn batch_body_parses_in_order_and_is_bounded() {
+        let shape = [1usize, 4, 4];
+        // a batch of seed bodies parses to the same tensors, in order
+        let body = br#"{"batch":[{"seed":3},{"seed":7},{"seed":3}]}"#;
+        match parse_infer_body(body, shape).unwrap() {
+            InferRequest::Batch(images) => {
+                assert_eq!(images.len(), 3);
+                for (img, seed) in images.iter().zip([3u64, 7, 3]) {
+                    assert_eq!(*img, Tensor::randn(&shape, &mut Pcg32::new(seed), 1.0));
+                }
+                assert_eq!(images[0], images[2], "same seed, same image");
+            }
+            other => panic!("expected a batch, got {other:?}"),
+        }
+        // a single-image body still parses as Single through the same entry
+        assert!(matches!(
+            parse_infer_body(b"{\"seed\": 1}", shape).unwrap(),
+            InferRequest::Single(_)
+        ));
+        // and parse_infer_request refuses a batch body outright
+        assert!(parse_infer_request(body, shape).is_err());
+        // malformed batches: not an array, empty, bad element (named by
+        // index), oversized
+        assert!(parse_infer_body(br#"{"batch": 3}"#, shape).is_err());
+        assert!(parse_infer_body(br#"{"batch": []}"#, shape).is_err());
+        let e = parse_infer_body(br#"{"batch":[{"seed":1},{}]}"#, shape).unwrap_err();
+        assert!(e.to_string().contains("batch image 1"), "{e}");
+        let huge = format!(
+            "{{\"batch\":[{}]}}",
+            vec!["{\"seed\":1}"; MAX_BATCH_REQUESTS + 1].join(",")
+        );
+        assert!(parse_infer_body(huge.as_bytes(), shape).is_err());
+    }
+
+    #[test]
+    fn batch_reply_wraps_per_image_results_in_order() {
+        let mk = |logits: Vec<f32>| Response {
+            logits,
+            latency: Duration::from_micros(900),
+            queue_wait: Duration::from_micros(100),
+            execute: Duration::from_micros(800),
+            per_image: Duration::from_micros(400),
+            batch_size: 2,
+            worker: 0,
+            pe_utilization: None,
+        };
+        let j = batch_response_to_json(&[mk(vec![1.0, 2.0]), mk(vec![-3.5])]);
+        let back = Json::parse(&j.to_string()).unwrap();
+        let results = back.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 2);
+        assert_eq!(logits_from_json(&results[0]).unwrap(), vec![1.0, 2.0]);
+        assert_eq!(logits_from_json(&results[1]).unwrap(), vec![-3.5]);
+        assert_eq!(results[0].get("per_image_us").unwrap().as_f64(), Some(400.0));
     }
 }

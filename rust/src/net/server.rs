@@ -281,33 +281,67 @@ fn infer_route(req: &HttpRequest, client: &Client, gate: &Gate, cfg: &NetConfig)
     if gate.draining.load(Ordering::SeqCst) {
         return (503, proto::error_body("server is draining"));
     }
+    // parse before admission: a batch body claims one in-flight slot per
+    // image, so a batched client draws from the same budget as the
+    // equivalent serial clients would
+    let parsed = match proto::parse_infer_body(&req.body, cfg.input_shape) {
+        Ok(p) => p,
+        Err(e) => return (400, proto::error_body(&e.to_string())),
+    };
+    let slots = match &parsed {
+        proto::InferRequest::Single(_) => 1,
+        proto::InferRequest::Batch(images) => images.len(),
+    };
     // admission: bounded in-flight queue — overload is a fast 429, not a
     // silently growing dispatcher queue
-    if gate.inflight.fetch_add(1, Ordering::SeqCst) >= cfg.max_inflight {
-        gate.inflight.fetch_sub(1, Ordering::SeqCst);
+    if gate.inflight.fetch_add(slots, Ordering::SeqCst) + slots > cfg.max_inflight {
+        gate.inflight.fetch_sub(slots, Ordering::SeqCst);
         return (429, proto::error_body("overloaded: in-flight request limit reached"));
     }
-    let out = admitted_infer(req, client, cfg);
-    gate.inflight.fetch_sub(1, Ordering::SeqCst);
+    let out = admitted_infer(parsed, client);
+    gate.inflight.fetch_sub(slots, Ordering::SeqCst);
     out
 }
 
-fn admitted_infer(req: &HttpRequest, client: &Client, cfg: &NetConfig) -> (u16, String) {
-    let image = match proto::parse_infer_request(&req.body, cfg.input_shape) {
-        Ok(t) => t,
-        Err(e) => return (400, proto::error_body(&e.to_string())),
-    };
-    match client.infer(image) {
-        Ok(resp) => (200, proto::response_to_json(&resp).to_string()),
-        // engine rejections (wrong shape for the variant, …) are the
-        // client's fault; a stopped/dropped pool is ours
-        Err(e) => {
-            let msg = e.to_string();
-            if msg.contains("server stopped") || msg.contains("server dropped") {
-                (503, proto::error_body(&msg))
-            } else {
-                (400, proto::error_body(&msg))
+fn admitted_infer(parsed: proto::InferRequest, client: &Client) -> (u16, String) {
+    match parsed {
+        proto::InferRequest::Single(image) => match client.infer(image) {
+            Ok(resp) => (200, proto::response_to_json(&resp).to_string()),
+            Err(e) => infer_error(&e.to_string()),
+        },
+        proto::InferRequest::Batch(images) => {
+            // submit every image before waiting on any reply: they land in
+            // the dispatcher's window together, so the batcher can close
+            // them into fused batch forwards instead of singletons
+            let mut rxs = Vec::with_capacity(images.len());
+            for image in images {
+                match client.infer_async(image) {
+                    Ok(rx) => rxs.push(rx),
+                    Err(e) => return infer_error(&e.to_string()),
+                }
             }
+            let mut resps = Vec::with_capacity(rxs.len());
+            for rx in rxs {
+                // any failed image fails the whole batched request — the
+                // wire reply is all results or one error, never a mix
+                match rx.recv() {
+                    Ok(Ok(resp)) => resps.push(resp),
+                    Ok(Err(e)) => return infer_error(&e.to_string()),
+                    Err(_) => return infer_error("server dropped request"),
+                }
+            }
+            (200, proto::batch_response_to_json(&resps).to_string())
         }
+    }
+}
+
+/// Map an inference failure to a status: engine rejections (wrong shape
+/// for the variant, …) are the client's fault; a stopped/dropped pool is
+/// ours.
+fn infer_error(msg: &str) -> (u16, String) {
+    if msg.contains("server stopped") || msg.contains("server dropped") {
+        (503, proto::error_body(msg))
+    } else {
+        (400, proto::error_body(msg))
     }
 }

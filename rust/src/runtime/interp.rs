@@ -28,6 +28,17 @@
 //! block so kernel data streams `⌈P/Ps⌉` times instead of `P` times — the
 //! software analogue of the flexible dataflow's reuse choice.
 //!
+//! Execution is **batch-major**: [`SpectralBackend::run_conv_batch`]
+//! concatenates the B images' tiles into one `[B·T]` tile population and
+//! runs it through the same block frame, so the tile blocks (and hence the
+//! kernel-stream reuse) span images — with `tile_block ≥ B·T` every CSR
+//! row / `BankedWeights` cycle-set is read once per *batch* instead of
+//! once per image, which is exactly the batch axis the B-aware Alg. 1
+//! plans for. Because the MAC walk is outer-loop-over-weight-blocks,
+//! inner-loop-over-resident-tiles, and per-tile arithmetic never depends
+//! on how tiles are grouped into blocks or chunks, the batched path is
+//! bit-identical to B independent [`SpectralBackend::run_conv`] calls.
+//!
 //! When the engine additionally attaches an Alg. 2 access plan
 //! ([`SpectralBackend::set_schedule`]), the sparse MAC runs
 //! **schedule-driven**: the layer's weights are compiled into a banked
@@ -216,6 +227,84 @@ impl InterpBackend {
             scheduled: HashMap::new(),
             threads: threads.max(1),
         }
+    }
+
+    /// Shared executor behind [`SpectralBackend::run_conv`] and
+    /// [`SpectralBackend::run_conv_batch`]: run the spectral conv over a
+    /// tile population of `t` tiles (`td` = `[t, M, K, K]` flattened, `od`
+    /// = `[t, N, K, K]` flattened). For the batched entry point `t` is
+    /// `B·T` — the weight walk (dense rows, CSR rows, or scheduled
+    /// cycle-sets) is outermost per resident block, so blocks spanning
+    /// image boundaries reuse each weight read across images.
+    fn conv_tiles(
+        &self,
+        file: &str,
+        s: Shape,
+        t: usize,
+        td: &[f32],
+        od: &mut [f32],
+        wid: WeightId,
+    ) -> Result<()> {
+        let (m, n, k) = (s.cin, s.cout, s.fft);
+        let f = k * k;
+        let store = self
+            .weights
+            .get(wid)
+            .ok_or_else(|| err!("weight handle {wid} unknown"))?;
+        if store.dims() != [f, m, n] {
+            return Err(err!(
+                "weight dims {:?} != executable dims {:?}",
+                store.dims(),
+                [f, m, n]
+            ));
+        }
+        // fan tiles out over scoped threads (serial when threads == 1):
+        // each chunk is a contiguous tile range with its own scratch,
+        // writing a disjoint output slice — no locks, no result reordering.
+        let threads = self.threads.min(t).max(1);
+        match store {
+            WeightStore::Dense(w) => {
+                for_tile_chunks(od, n * f, t, threads, |first, out_chunk| {
+                    // scratch reused across the chunk's tiles — no per-tile
+                    // allocations on the request path: FFTs run in place
+                    let mut xs = vec![Complex::ZERO; m * f];
+                    let mut acc = vec![Complex::ZERO; n * f];
+                    for (j, out_tile) in out_chunk.chunks_mut(n * f).enumerate() {
+                        let ti = first + j;
+                        conv_tile(
+                            &td[ti * m * f..(ti + 1) * m * f],
+                            out_tile,
+                            w,
+                            s,
+                            &mut xs,
+                            &mut acc,
+                        );
+                    }
+                });
+            }
+            WeightStore::Sparse(w) => {
+                // resident-tile block = the planner's Ps, clamped by the
+                // scratch cache budget (the Eq. 12 analogue)
+                let hinted = self.flows.get(file).map_or(1, |d| d.tile_block);
+                let cap = (SPARSE_RESIDENT_SLOTS / ((m + n) * f).max(1)).max(1);
+                let block = hinted.clamp(1, cap);
+                match self.scheduled.get(&wid) {
+                    // schedule-driven walk (Alg. 2 order, banked weights)
+                    Some(bw) => {
+                        for_tile_chunks(od, n * f, t, threads, |first, out_chunk| {
+                            conv_tiles_scheduled(td, out_chunk, first, bw, s, block);
+                        });
+                    }
+                    // unscheduled CSR storage-order walk (PR 3 path)
+                    None => {
+                        for_tile_chunks(od, n * f, t, threads, |first, out_chunk| {
+                            conv_tiles_sparse(td, out_chunk, first, w, s, block);
+                        });
+                    }
+                }
+            }
+        }
+        Ok(())
     }
 }
 
@@ -528,9 +617,8 @@ impl SpectralBackend for InterpBackend {
             .shapes
             .get(file)
             .ok_or_else(|| err!("{file} not prepared (warm the variant first)"))?;
-        let (t, m, n, k) = (s.tiles, s.cin, s.cout, s.fft);
-        let f = k * k;
-        let want_in = [t, m, k, k];
+        let (t, n, k) = (s.tiles, s.cout, s.fft);
+        let want_in = [t, s.cin, k, k];
         if tiles.shape() != want_in {
             return Err(err!(
                 "input tiles shape {:?} != executable shape {:?}",
@@ -538,68 +626,52 @@ impl SpectralBackend for InterpBackend {
                 want_in
             ));
         }
-        let store = self
-            .weights
-            .get(wid)
-            .ok_or_else(|| err!("weight handle {wid} unknown"))?;
-        if store.dims() != [f, m, n] {
-            return Err(err!(
-                "weight dims {:?} != executable dims {:?}",
-                store.dims(),
-                [f, m, n]
-            ));
-        }
-
-        let td = tiles.data();
         let mut out = Tensor::zeros(&[t, n, k, k]);
-        let od = out.data_mut();
-        // fan tiles out over scoped threads (serial when threads == 1):
-        // each chunk is a contiguous tile range with its own scratch,
-        // writing a disjoint output slice — no locks, no result reordering.
-        let threads = self.threads.min(t).max(1);
-        match store {
-            WeightStore::Dense(w) => {
-                for_tile_chunks(od, n * f, t, threads, |first, out_chunk| {
-                    // scratch reused across the chunk's tiles — no per-tile
-                    // allocations on the request path: FFTs run in place
-                    let mut xs = vec![Complex::ZERO; m * f];
-                    let mut acc = vec![Complex::ZERO; n * f];
-                    for (j, out_tile) in out_chunk.chunks_mut(n * f).enumerate() {
-                        let ti = first + j;
-                        conv_tile(
-                            &td[ti * m * f..(ti + 1) * m * f],
-                            out_tile,
-                            w,
-                            s,
-                            &mut xs,
-                            &mut acc,
-                        );
-                    }
-                });
-            }
-            WeightStore::Sparse(w) => {
-                // resident-tile block = the planner's Ps, clamped by the
-                // scratch cache budget (the Eq. 12 analogue)
-                let hinted = self.flows.get(file).map_or(1, |d| d.tile_block);
-                let cap = (SPARSE_RESIDENT_SLOTS / ((m + n) * f).max(1)).max(1);
-                let block = hinted.clamp(1, cap);
-                match self.scheduled.get(&wid) {
-                    // schedule-driven walk (Alg. 2 order, banked weights)
-                    Some(bw) => {
-                        for_tile_chunks(od, n * f, t, threads, |first, out_chunk| {
-                            conv_tiles_scheduled(td, out_chunk, first, bw, s, block);
-                        });
-                    }
-                    // unscheduled CSR storage-order walk (PR 3 path)
-                    None => {
-                        for_tile_chunks(od, n * f, t, threads, |first, out_chunk| {
-                            conv_tiles_sparse(td, out_chunk, first, w, s, block);
-                        });
-                    }
-                }
+        self.conv_tiles(file, s, t, tiles.data(), out.data_mut(), wid)?;
+        Ok(out)
+    }
+
+    fn run_conv_batch(
+        &mut self,
+        file: &str,
+        tiles: &[Tensor],
+        wid: WeightId,
+    ) -> Result<Vec<Tensor>> {
+        if tiles.is_empty() {
+            return Ok(Vec::new());
+        }
+        let s = *self
+            .shapes
+            .get(file)
+            .ok_or_else(|| err!("{file} not prepared (warm the variant first)"))?;
+        let (t, m, n, k) = (s.tiles, s.cin, s.cout, s.fft);
+        let f = k * k;
+        let want_in = [t, m, k, k];
+        for (bi, img) in tiles.iter().enumerate() {
+            if img.shape() != want_in {
+                return Err(err!(
+                    "batch image {bi}: input tiles shape {:?} != executable shape {:?}",
+                    img.shape(),
+                    want_in
+                ));
             }
         }
-        Ok(out)
+        // batch-major: concatenate the B images' tiles into one [B·T]
+        // population so the resident blocks — and with them each kernel
+        // row / cycle-set read — span images. Per-tile arithmetic is
+        // independent of the blocking, so this is bit-identical to B
+        // per-image run_conv calls.
+        let b = tiles.len();
+        let mut td = Vec::with_capacity(b * t * m * f);
+        for img in tiles {
+            td.extend_from_slice(img.data());
+        }
+        let mut od = vec![0.0f32; b * t * n * f];
+        self.conv_tiles(file, s, b * t, &td, &mut od, wid)?;
+        Ok(od
+            .chunks(t * n * f)
+            .map(|c| Tensor::from_vec(&[t, n, k, k], c.to_vec()))
+            .collect())
     }
 
     fn prepared(&self) -> usize {
@@ -826,6 +898,77 @@ mod tests {
                 }
             }
         });
+    }
+
+    #[test]
+    fn batched_conv_bit_identical_to_per_image() {
+        // The batch-major tentpole gate at the backend level: fusing B
+        // images into one tile population must reproduce B independent
+        // run_conv calls bit for bit — dense, sparse, and scheduled, for
+        // every thread count and tile_block (including blocks that span
+        // image boundaries and blocks larger than the whole batch).
+        use crate::schedule::SchedulePolicy;
+        use crate::sparse::prune_magnitude;
+        let mut rng = Pcg32::new(33);
+        let (t, m, n, fft) = (5, 3, 4, 8);
+        let e = entry(t, m, n, fft);
+        let batch: Vec<Tensor> =
+            (0..4).map(|_| Tensor::randn(&[t, m, fft, fft], &mut rng, 1.0)).collect();
+        let layer = prune_magnitude(n, m, fft, 4, &mut rng);
+        let planes = SparseWeightPlanes::from_layer(&layer);
+        let (re, im) = freq_major_planes(&layer.to_dense_planes());
+
+        #[derive(Clone, Copy)]
+        enum Mode {
+            Dense,
+            Sparse,
+            Scheduled(SchedulePolicy),
+        }
+        let build = |mode: Mode, threads: usize, block: usize| {
+            let mut b = InterpBackend::with_threads(threads);
+            b.prepare("x", &e, Path::new(".")).unwrap();
+            b.set_sparse_dataflow("x", SparseDataflow { tile_block: block }).unwrap();
+            let wid = match mode {
+                Mode::Dense => b.upload_weights(&re, &im, [fft * fft, m, n]).unwrap(),
+                Mode::Sparse => b.upload_sparse(&layer).unwrap(),
+                Mode::Scheduled(p) => {
+                    let wid = b.upload_sparse(&layer).unwrap();
+                    let plan = LayerSchedule::build(&planes, 4, 3, 8, p).unwrap();
+                    b.set_schedule(wid, &plan).unwrap();
+                    wid
+                }
+            };
+            (b, wid)
+        };
+        for mode in [
+            Mode::Dense,
+            Mode::Sparse,
+            Mode::Scheduled(SchedulePolicy::ExactCover),
+            Mode::Scheduled(SchedulePolicy::LowestIndex),
+        ] {
+            for (threads, block) in [(1usize, 1usize), (2, 3), (3, 7), (1, 20), (16, 100)] {
+                let (mut be, wid) = build(mode, threads, block);
+                let want: Vec<Tensor> =
+                    batch.iter().map(|img| be.run_conv("x", img, wid).unwrap()).collect();
+                let got = be.run_conv_batch("x", &batch, wid).unwrap();
+                assert_eq!(got.len(), want.len());
+                for (bi, (g, w)) in got.iter().zip(&want).enumerate() {
+                    assert_eq!(g.shape(), w.shape());
+                    assert_eq!(
+                        g.data(),
+                        w.data(),
+                        "image {bi} diverged (threads={threads} block={block})"
+                    );
+                }
+            }
+        }
+        // empty batch is defined and empty
+        let (mut be, wid) = build(Mode::Sparse, 1, 1);
+        assert!(be.run_conv_batch("x", &[], wid).unwrap().is_empty());
+        // a mis-shaped image anywhere in the batch rejects the whole call
+        let bad = Tensor::zeros(&[t + 1, m, fft, fft]);
+        let mixed = vec![batch[0].clone(), bad];
+        assert!(be.run_conv_batch("x", &mixed, wid).is_err());
     }
 
     #[test]

@@ -103,6 +103,24 @@ pub trait SpectralBackend {
     /// spatial output tiles `[T, Cout, K, K]`, against weights `wid`.
     fn run_conv(&mut self, file: &str, tiles: &Tensor, wid: WeightId) -> Result<Tensor>;
 
+    /// Execute one spectral conv for a whole **batch** of images at once:
+    /// `B` tile tensors (each `[T, Cin, K, K]`) → `B` output tile tensors,
+    /// all against the same weights. This is the batched entry point of
+    /// the batch-major forward path: backends with a streaming weight walk
+    /// (interp) fuse the batch so every kernel block / `BankedWeights`
+    /// cycle-set is read once per *batch* instead of once per image — and
+    /// must return results bit-identical to calling [`Self::run_conv`] per
+    /// image. The default implementation is exactly that per-image loop
+    /// (correct for PJRT, whose compiled executables are fixed-shape).
+    fn run_conv_batch(
+        &mut self,
+        file: &str,
+        tiles: &[Tensor],
+        wid: WeightId,
+    ) -> Result<Vec<Tensor>> {
+        tiles.iter().map(|t| self.run_conv(file, t, wid)).collect()
+    }
+
     /// Number of distinct prepared executables (cache size).
     fn prepared(&self) -> usize;
 }
@@ -277,6 +295,17 @@ impl Runtime {
     /// Execute one spectral conv through the backend.
     pub fn run_conv(&mut self, file: &str, tiles: &Tensor, wid: WeightId) -> Result<Tensor> {
         self.backend.run_conv(file, tiles, wid)
+    }
+
+    /// Execute one spectral conv for a batch of images (see
+    /// [`SpectralBackend::run_conv_batch`]).
+    pub fn run_conv_batch(
+        &mut self,
+        file: &str,
+        tiles: &[Tensor],
+        wid: WeightId,
+    ) -> Result<Vec<Tensor>> {
+        self.backend.run_conv_batch(file, tiles, wid)
     }
 
     /// Distinct prepared executables (cache size).

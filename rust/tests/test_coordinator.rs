@@ -160,6 +160,84 @@ fn pool_survives_bad_inputs_and_keeps_counting() {
 }
 
 #[test]
+fn deadline_closed_singleton_batch_takes_the_batched_path() {
+    // A batch closed by deadline with one request rides the same fused
+    // `forward_batch` path as a full batch — there is no serial fallback.
+    // Its logits must match a directly-constructed engine (planned for the
+    // pool's max_batch, like the worker's), and its per-image share is the
+    // whole execute.
+    use spectral_flow::coordinator::{EngineOptions, InferenceEngine};
+    let server = demo_server(4);
+    let client = server.client();
+    let mut rng = Pcg32::new(31);
+    let img = Tensor::randn(&[1, 16, 16], &mut rng, 1.0);
+    // the sole outstanding request: the batcher can only close it by
+    // deadline, at size 1
+    let resp = client.infer(img.clone()).unwrap();
+    assert_eq!(resp.batch_size, 1);
+    assert_eq!(
+        resp.per_image, resp.execute,
+        "a singleton batch's per-image share is the whole execute"
+    );
+    let cfg = demo_config(4);
+    let mut engine = InferenceEngine::with_options(
+        &cfg.artifacts_dir,
+        &cfg.variant,
+        cfg.mode,
+        cfg.seed,
+        EngineOptions { plan_batch: 4, ..EngineOptions::default() },
+    )
+    .unwrap();
+    assert_eq!(resp.logits, engine.forward(&img).unwrap(), "singleton diverged from ground truth");
+    let m = server.metrics().unwrap();
+    assert_eq!(m.batch_histogram().get(1), Some(&1), "one batch of size 1 recorded");
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn batched_pool_matches_singleton_pool_bit_for_bit() {
+    // Tentpole gate at pool level: logits are independent of how the
+    // dispatcher fuses requests into batch forwards.
+    let mut rng = Pcg32::new(77);
+    let images: Vec<Tensor> =
+        (0..8).map(|_| Tensor::randn(&[1, 16, 16], &mut rng, 1.0)).collect();
+
+    // ground truth: max_batch 1 — every request is its own fused batch
+    let solo = demo_server(1);
+    let sc = solo.client();
+    let want: Vec<Vec<f32>> =
+        images.iter().map(|img| sc.infer(img.clone()).unwrap().logits).collect();
+    solo.shutdown().unwrap();
+
+    // batched pool with a generous deadline: all 8 submitted before any
+    // reply, so the batcher closes full batches of 4
+    let batched = Server::start(ServerConfig {
+        batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(250) },
+        ..demo_config(4)
+    })
+    .expect("batched server");
+    let bc = batched.client();
+    let rxs: Vec<_> =
+        images.iter().map(|img| bc.infer_async(img.clone()).unwrap()).collect();
+    let mut fused = false;
+    for (rx, want) in rxs.into_iter().zip(&want) {
+        let resp = rx.recv().unwrap().unwrap();
+        fused |= resp.batch_size > 1;
+        assert!(resp.per_image <= resp.execute);
+        assert_eq!(&resp.logits, want, "batched pool diverged from singleton pool");
+    }
+    assert!(fused, "dispatcher never closed a multi-image batch");
+    let m = batched.metrics().unwrap();
+    assert!(
+        m.batch_histogram().iter().skip(2).any(|&c| c > 0),
+        "histogram records no batch of size ≥ 2: {:?}",
+        m.batch_histogram()
+    );
+    assert!(m.per_image_percentile(0.5).is_some(), "per-image latency recorded");
+    batched.shutdown().unwrap();
+}
+
+#[test]
 fn pool_surfaces_schedule_metrics() {
     // Pruned serving under the default exact-cover policy: every response
     // reports the engine's PE utilization, and the merged snapshot carries

@@ -121,6 +121,53 @@ fn seed_body_matches_explicit_tensor_inference() {
 }
 
 #[test]
+fn http_batched_request_bit_identical_to_in_process_client() {
+    // A {"batch":[…]} body answers {"results":[…]} in request order, each
+    // image bit-identical to the in-process Client path.
+    let server = Server::start(demo_config(4, SchedulePolicy::ExactCover)).expect("server");
+    let client = server.client();
+    let want: Vec<Vec<f32>> = [3u64, 9, 3]
+        .iter()
+        .map(|&s| {
+            client.infer(Tensor::randn(&DEMO_SHAPE, &mut Pcg32::new(s), 1.0)).unwrap().logits
+        })
+        .collect();
+    let frontend = HttpFrontend::start(server, demo_net()).expect("frontend");
+    let addr = frontend.local_addr();
+    let (status, resp) =
+        roundtrip(addr, "POST", "/infer", br#"{"batch":[{"seed":3},{"seed":9},{"seed":3}]}"#);
+    assert_eq!(status, 200, "{:?}", String::from_utf8_lossy(&resp));
+    let j = parse_body(&resp);
+    let results = j.get("results").and_then(Json::as_arr).expect("results array");
+    assert_eq!(results.len(), 3);
+    for (i, (r, want)) in results.iter().zip(&want).enumerate() {
+        let got = proto::logits_from_json(r).expect("logits");
+        assert_eq!(
+            got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "batch image {i} diverged over the wire"
+        );
+        assert!(r.get("per_image_us").and_then(Json::as_f64).is_some());
+        assert!(r.get("batch_size").and_then(Json::as_usize).unwrap() >= 1);
+    }
+
+    // one bad element fails the whole batched request, naming the index
+    let (status, resp) =
+        roundtrip(addr, "POST", "/infer", br#"{"batch":[{"seed":1},{}]}"#);
+    assert_eq!(status, 400);
+    assert!(String::from_utf8_lossy(&resp).contains("batch image 1"));
+
+    // /metrics surfaces the batch-size histogram and per-image percentiles
+    let (status, resp) = roundtrip(addr, "GET", "/metrics", b"");
+    assert_eq!(status, 200);
+    let merged = parse_body(&resp).get("merged").cloned().expect("merged block");
+    let hist = merged.get("batch_hist").and_then(Json::as_arr).expect("batch_hist");
+    assert!(!hist.is_empty(), "histogram empty after served batches");
+    assert!(merged.get("per_image_p50_us").and_then(Json::as_f64).is_some());
+    frontend.shutdown().expect("shutdown");
+}
+
+#[test]
 fn healthz_metrics_and_drain_lifecycle() {
     let frontend = start_frontend(demo_config(4, SchedulePolicy::ExactCover), demo_net());
     let addr = frontend.local_addr();
@@ -176,6 +223,9 @@ fn overload_returns_429_never_hangs() {
     let addr = frontend.local_addr();
     let (status, body) = roundtrip(addr, "POST", "/infer", b"{\"seed\":1}");
     assert_eq!(status, 429, "{:?}", String::from_utf8_lossy(&body));
+    // a batch draws one in-flight slot per image — over budget is 429 too
+    let (status, _) = roundtrip(addr, "POST", "/infer", br#"{"batch":[{"seed":1},{"seed":2}]}"#);
+    assert_eq!(status, 429);
     // health and metrics stay reachable under inference overload
     let (status, _) = roundtrip(addr, "GET", "/healthz", b"");
     assert_eq!(status, 200);

@@ -221,6 +221,64 @@ fn engine_schedule_metrics_shape() {
 }
 
 #[test]
+fn forward_batch_bit_identical_to_serial_forwards() {
+    // Batch-major acceptance gate at engine level: `forward_batch` must
+    // equal B independent `forward` calls bit for bit, across α ∈ {1, 4} ×
+    // scheduler policies × backend thread counts — and across `plan_batch`
+    // values, which change the dataflow blocking but never the arithmetic.
+    use spectral_flow::coordinator::EngineOptions;
+    use spectral_flow::runtime::BackendKind;
+    use spectral_flow::schedule::SchedulePolicy;
+    let dir = artifacts_dir();
+    for (alpha, policy) in [
+        (1usize, SchedulePolicy::Off),
+        (4, SchedulePolicy::ExactCover),
+        (4, SchedulePolicy::LowestIndex),
+        (4, SchedulePolicy::Off),
+    ] {
+        for threads in [1usize, 3] {
+            for plan_batch in [1usize, 4] {
+                let mut e = InferenceEngine::with_options(
+                    &dir,
+                    "demo",
+                    WeightMode::from_alpha(alpha),
+                    7,
+                    EngineOptions {
+                        backend: BackendKind::Interp { threads },
+                        scheduler: policy,
+                        plan_batch,
+                    },
+                )
+                .unwrap();
+                let images: Vec<_> = (1u64..=4).map(|s| e.synthetic_image(s)).collect();
+                let want: Vec<Vec<f32>> =
+                    images.iter().map(|img| e.forward(img).unwrap()).collect();
+                let got = e.forward_batch(&images).unwrap();
+                assert_eq!(
+                    got, want,
+                    "α={alpha} {policy:?} threads={threads} plan_batch={plan_batch}: \
+                     batched forward diverged from serial"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn forward_batch_rejects_any_bad_image() {
+    // one mis-shaped image anywhere rejects the whole fused call (the
+    // serving worker pre-screens with `check_input` for per-request errors)
+    let mut e = InferenceEngine::new(&artifacts_dir(), "demo", WeightMode::Dense, 7).unwrap();
+    let good = e.synthetic_image(1);
+    let bad = spectral_flow::tensor::Tensor::zeros(&[1, 8, 8]);
+    assert!(e.forward_batch(&[good.clone(), bad.clone()]).is_err());
+    assert!(e.check_input(&bad).is_err());
+    assert!(e.check_input(&good).is_ok());
+    // empty batch is a no-op, not an error
+    assert_eq!(e.forward_batch(&[]).unwrap(), Vec::<Vec<f32>>::new());
+}
+
+#[test]
 fn forward_rejects_bad_shapes() {
     let mut engine = InferenceEngine::new(&artifacts_dir(), "demo", WeightMode::Dense, 7).unwrap();
     let bad = spectral_flow::tensor::Tensor::zeros(&[1, 8, 8]);
