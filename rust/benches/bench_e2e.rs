@@ -12,33 +12,79 @@
 use std::time::{Duration, Instant};
 
 use spectral_flow::coordinator::{
-    BatcherConfig, InferenceEngine, Server, ServerConfig, WeightMode,
+    BatcherConfig, EngineOptions, InferenceEngine, Server, ServerConfig, WeightMode,
 };
-use spectral_flow::runtime::BackendKind;
+use spectral_flow::runtime::{BackendKind, Dtype, Plane};
 use spectral_flow::schedule::SchedulePolicy;
 use spectral_flow::tensor::Tensor;
 use spectral_flow::util::bench::{quick_requested, Bench};
 use spectral_flow::util::rng::Pcg32;
 
+/// Numeric mode for the engine-level sections, from the environment: CI's
+/// dtype × plane matrix sets `SF_DTYPE`/`SF_PLANE` and every engine entry
+/// gets a `_f64`/`_half` name suffix so per-config artifacts stay distinct.
+/// Unset = f32/full, the historical names the bench-regression baseline
+/// gates on.
+fn env_numerics() -> (Option<Dtype>, Plane, String) {
+    let dtype = std::env::var("SF_DTYPE")
+        .ok()
+        .filter(|s| !s.is_empty())
+        .map(|s| Dtype::parse(&s).expect("SF_DTYPE must be f32|f64"));
+    let plane = std::env::var("SF_PLANE")
+        .ok()
+        .filter(|s| !s.is_empty())
+        .map(|s| Plane::parse(&s).expect("SF_PLANE must be full|half"))
+        .unwrap_or_default();
+    let mut sfx = String::new();
+    if dtype == Some(Dtype::F64) {
+        sfx.push_str("_f64");
+    }
+    if plane == Plane::Half {
+        sfx.push_str("_half");
+    }
+    (dtype, plane, sfx)
+}
+
 fn main() {
     let quick = quick_requested();
     let mut b = if quick { Bench::quick() } else { Bench::new() };
+    let (env_dtype, env_plane, sfx) = env_numerics();
+    let opts = |scheduler: SchedulePolicy, plan_batch: usize| EngineOptions {
+        scheduler,
+        plan_batch,
+        dtype: env_dtype,
+        plane: env_plane,
+        ..EngineOptions::default()
+    };
 
     // ---- per-layer backend latency (demo + cifar shapes) -----------------
-    let mut engine = InferenceEngine::new("artifacts", "demo", WeightMode::Dense, 42)
-        .expect("demo engine");
-    println!("backend: {}", engine.backend_name());
+    let mut engine = InferenceEngine::with_options(
+        "artifacts",
+        "demo",
+        WeightMode::Dense,
+        42,
+        opts(SchedulePolicy::default(), 1),
+    )
+    .expect("demo engine");
+    println!("backend: {} (dtype {}, plane {})", engine.backend_name(),
+        engine.dtype().label(), engine.plane().label());
     let img = engine.synthetic_image(1);
-    b.run("e2e/demo_conv_layer0", || engine.conv_layer(0, &img).unwrap().len());
-    b.run("e2e/demo_forward", || engine.forward(&img).unwrap().len());
+    b.run(&format!("e2e/demo_conv_layer0{sfx}"), || engine.conv_layer(0, &img).unwrap().len());
+    b.run(&format!("e2e/demo_forward{sfx}"), || engine.forward(&img).unwrap().len());
 
     let t0 = Instant::now();
-    let mut cifar = InferenceEngine::new("artifacts", "vgg16-cifar", WeightMode::Pruned { alpha: 4 }, 7)
-        .expect("cifar engine");
-    b.record("e2e/cifar_engine_startup", t0.elapsed(), 1);
+    let mut cifar = InferenceEngine::with_options(
+        "artifacts",
+        "vgg16-cifar",
+        WeightMode::Pruned { alpha: 4 },
+        7,
+        opts(SchedulePolicy::default(), 1),
+    )
+    .expect("cifar engine");
+    b.record(&format!("e2e/cifar_engine_startup{sfx}"), t0.elapsed(), 1);
     let cimg = cifar.synthetic_image(2);
-    b.run("e2e/cifar_conv1_1", || cifar.conv_layer(0, &cimg).unwrap().len());
-    b.run("e2e/cifar_vgg16_forward", || cifar.forward(&cimg).unwrap().len());
+    b.run(&format!("e2e/cifar_conv1_1{sfx}"), || cifar.conv_layer(0, &cimg).unwrap().len());
+    b.run(&format!("e2e/cifar_vgg16_forward{sfx}"), || cifar.forward(&cimg).unwrap().len());
 
     // ---- α sweep: dense vs unscheduled-sparse vs scheduled-sparse --------
     // The compression→latency story of Table 3, now with the Alg. 2 axis:
@@ -55,21 +101,51 @@ fn main() {
             &[(SchedulePolicy::Off, ""), (SchedulePolicy::ExactCover, "_scheduled")]
         };
         for &(policy, suffix) in policies {
-            let mut e = InferenceEngine::new_with_opts(
+            let mut e = InferenceEngine::with_options(
                 "artifacts",
                 "vgg16-cifar",
                 WeightMode::from_alpha(alpha),
                 7,
-                BackendKind::default(),
-                policy,
+                opts(policy, 1),
             )
             .expect("cifar engine (alpha sweep)");
-            b.run(&format!("e2e/cifar_forward_alpha{alpha}{suffix}"), || {
+            b.run(&format!("e2e/cifar_forward_alpha{alpha}{suffix}{sfx}"), || {
                 e.forward(&cimg).unwrap().len()
             });
             if let Some(sm) = e.schedule_metrics() {
                 println!("  {}", sm.report());
             }
+        }
+    }
+
+    // ---- numerics sweep: half-plane / f64 forwards -----------------------
+    // Always-coded entries (regardless of SF_DTYPE/SF_PLANE defaults) so the
+    // default-config artifact carries the half-plane and f64-reference
+    // forwards next to `cifar_forward_alpha4_scheduled`. Skipped when the
+    // env already selects a non-default mode — the suffixed α-sweep names
+    // above would collide with these.
+    if sfx.is_empty() {
+        for (dtype, plane, tag) in [
+            (None, Plane::Half, "_half"),
+            (Some(Dtype::F64), Plane::Full, "_f64"),
+            (Some(Dtype::F64), Plane::Half, "_f64_half"),
+        ] {
+            let mut e = InferenceEngine::with_options(
+                "artifacts",
+                "vgg16-cifar",
+                WeightMode::Pruned { alpha: 4 },
+                7,
+                EngineOptions {
+                    scheduler: SchedulePolicy::ExactCover,
+                    dtype,
+                    plane,
+                    ..EngineOptions::default()
+                },
+            )
+            .expect("cifar engine (numerics sweep)");
+            b.run(&format!("e2e/cifar_forward_alpha4_scheduled{tag}"), || {
+                e.forward(&cimg).unwrap().len()
+            });
         }
     }
 
@@ -128,6 +204,29 @@ fn main() {
         .expect("plan");
         sched.set_schedule(cw, &plan).unwrap();
 
+        // half-plane contenders: the same CSR upload folded onto the rfft2
+        // half-plane (inside `upload_sparse`), unscheduled and in Alg. 2
+        // order over the folded planes — the tentpole's halved hot loop
+        let mut sparse_h = InterpBackend::with_config(1, Dtype::F32, Plane::Half);
+        sparse_h.prepare("x", &e, dir).expect("prepare sparse half");
+        sparse_h.set_sparse_dataflow("x", SparseDataflow { tile_block: t }).unwrap();
+        let swh = sparse_h.upload_sparse(&layer).expect("upload sparse half");
+
+        let mut sched_h = InterpBackend::with_config(1, Dtype::F32, Plane::Half);
+        sched_h.prepare("x", &e, dir).expect("prepare scheduled half");
+        sched_h.set_sparse_dataflow("x", SparseDataflow { tile_block: t }).unwrap();
+        let cwh = sched_h.upload_sparse(&layer).expect("upload scheduled half");
+        let planes_h = planes.fold_half_plane(fft);
+        let plan_h = LayerSchedule::build(
+            &planes_h,
+            64,
+            10,
+            DEFAULT_WEIGHT_BANKS,
+            SchedulePolicy::ExactCover,
+        )
+        .expect("half plan");
+        sched_h.set_schedule(cwh, &plan_h).unwrap();
+
         let want = dense.run_conv("x", &tiles, dw).unwrap();
         let got = sparse.run_conv("x", &tiles, sw).unwrap();
         let diff = got.max_abs_diff(&want);
@@ -138,6 +237,28 @@ fn main() {
             got.data(),
             "scheduled MAC must be bit-identical to the unscheduled sparse MAC"
         );
+        let got_h = sparse_h.run_conv("x", &tiles, swh).unwrap();
+        let diff_h = got_h.max_abs_diff(&want);
+        assert!(diff_h < 1e-4, "half-plane MAC diverged from dense full-plane: {diff_h}");
+        let got_sched_h = sched_h.run_conv("x", &tiles, cwh).unwrap();
+        assert_eq!(
+            got_sched_h.data(),
+            got_h.data(),
+            "scheduled half-plane MAC must be bit-identical to the unscheduled one"
+        );
+
+        // the halved weight stream, as data: non-zeros the MAC reads per
+        // conv, full plane vs folded half-plane (recorded as pseudo-latency
+        // entries — 1 ns per non-zero — so the artifact carries the ratio)
+        let (nnz_full, nnz_half) = (planes.nnz(), planes_h.nnz());
+        let fold_ratio = nnz_half as f64 / nnz_full as f64;
+        assert!(
+            (0.4..=0.75).contains(&fold_ratio),
+            "conjugate fold should roughly halve the weight stream: \
+             {nnz_half}/{nnz_full} = {fold_ratio:.3}"
+        );
+        b.record("e2e/mac_weight_nnz_full", Duration::from_nanos(nnz_full as u64), 1);
+        b.record("e2e/mac_weight_nnz_half", Duration::from_nanos(nnz_half as u64), 1);
 
         let md = b
             .run("e2e/mac_dense_t16_c128", || dense.run_conv("x", &tiles, dw).unwrap().len())
@@ -152,11 +273,25 @@ fn main() {
                 sched.run_conv("x", &tiles, cw).unwrap().len()
             })
             .mean_ns;
+        let msh = b
+            .run(&format!("e2e/mac_sparse_alpha{alpha}_t16_c128_half"), || {
+                sparse_h.run_conv("x", &tiles, swh).unwrap().len()
+            })
+            .mean_ns;
+        let mch = b
+            .run(&format!("e2e/mac_scheduled_alpha{alpha}_t16_c128_half"), || {
+                sched_h.run_conv("x", &tiles, cwh).unwrap().len()
+            })
+            .mean_ns;
         println!(
-            "mac sparse α={alpha} vs dense: {:.2}× faster (scheduled {:.2}×), \
-             max |err| = {diff:.2e}, plan util {}",
+            "mac sparse α={alpha} vs dense: {:.2}× faster (scheduled {:.2}×, \
+             half-plane {:.2}×/{:.2}×), max |err| = {diff:.2e} (half {diff_h:.2e}), \
+             weight stream {nnz_half}/{nnz_full} nnz ({:.0}%), plan util {}",
             md / ms,
             md / mc,
+            md / msh,
+            md / mch,
+            fold_ratio * 100.0,
             spectral_flow::report::fmt_pct(plan.stats.pe_utilization()),
         );
     }
@@ -168,18 +303,13 @@ fn main() {
     // Alg. 1). `record(…, wall, B)` stores per-image time, so the
     // B=8 / B=1 ratio reads directly off the JSON artifact.
     {
-        use spectral_flow::coordinator::EngineOptions;
         for bsz in [1usize, 8, 32] {
             let mut e = InferenceEngine::with_options(
                 "artifacts",
                 "vgg16-cifar",
                 WeightMode::Pruned { alpha: 4 },
                 7,
-                EngineOptions {
-                    scheduler: SchedulePolicy::ExactCover,
-                    plan_batch: bsz,
-                    ..EngineOptions::default()
-                },
+                opts(SchedulePolicy::ExactCover, bsz),
             )
             .expect("cifar engine (batch sweep)");
             let images: Vec<Tensor> = (0..bsz as u64).map(|s| e.synthetic_image(s)).collect();
@@ -188,7 +318,7 @@ fn main() {
             let out = e.forward_batch(&images).expect("batch forward");
             let wall = t0.elapsed();
             assert_eq!(out.len(), bsz);
-            b.record(&format!("e2e/cifar_forward_scheduled_batch{bsz}_per_image"), wall, bsz);
+            b.record(&format!("e2e/cifar_forward_scheduled_batch{bsz}_per_image{sfx}"), wall, bsz);
             println!(
                 "batch sweep B={bsz}: {wall:?} total, {:?} per image",
                 wall / bsz as u32
@@ -200,15 +330,18 @@ fn main() {
     // The acceptance target is ≥2× forward throughput at 4 backend threads
     // vs 1 on a multi-core runner (tiles are the paper's P' dimension).
     for threads in [1usize, 2, 4] {
-        let mut e = InferenceEngine::new_with(
+        let mut e = InferenceEngine::with_options(
             "artifacts",
             "vgg16-cifar",
             WeightMode::Pruned { alpha: 4 },
             7,
-            BackendKind::Interp { threads },
+            EngineOptions {
+                backend: BackendKind::Interp { threads },
+                ..opts(SchedulePolicy::default(), 1)
+            },
         )
         .expect("cifar engine (threads sweep)");
-        b.run(&format!("e2e/cifar_forward_threads{threads}"), || {
+        b.run(&format!("e2e/cifar_forward_threads{threads}{sfx}"), || {
             e.forward(&cimg).unwrap().len()
         });
     }
@@ -224,6 +357,8 @@ fn main() {
             seed: 7,
             batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(5) },
             workers,
+            dtype: env_dtype,
+            plane: env_plane,
             ..ServerConfig::default()
         })
         .expect("server");
@@ -238,7 +373,7 @@ fn main() {
             rx.recv().unwrap().unwrap();
         }
         let wall = t0.elapsed();
-        b.record(&format!("e2e/serve_cifar_batched_per_request_workers{workers}"), wall, n);
+        b.record(&format!("e2e/serve_cifar_batched_per_request_workers{workers}{sfx}"), wall, n);
         let m = server.metrics().expect("metrics");
         println!(
             "serving[{workers}w]: {n} requests in {wall:?} → {:.2} img/s, \

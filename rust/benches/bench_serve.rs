@@ -14,7 +14,7 @@ use std::time::Duration;
 
 use spectral_flow::coordinator::{BatcherConfig, Server, ServerConfig, WeightMode};
 use spectral_flow::net::{loadgen, HttpFrontend, LoadGenConfig, LoadMode, NetConfig};
-use spectral_flow::runtime::BackendKind;
+use spectral_flow::runtime::{BackendKind, Dtype, Plane};
 use spectral_flow::schedule::SchedulePolicy;
 use spectral_flow::util::bench::{quick_requested, Bench};
 
@@ -54,6 +54,7 @@ fn main() {
                 backend: BackendKind::Interp { threads },
                 workers,
                 scheduler: policy,
+                ..ServerConfig::default()
             })
             .expect("server starts");
             let frontend = HttpFrontend::start(
@@ -86,6 +87,58 @@ fn main() {
         }
     }
 
+    // ---- numerics sweep: half-plane / f64 serving over the wire ----------
+    // Two extra grid points at the serving default shape (w=1 t=1 α=4
+    // scheduled): the rfft2 half-plane at f32 (the production fast path —
+    // compare against `_alpha4_scheduled` above for the wire-level win),
+    // and the f64 half-plane reference the equivalence tests pin against.
+    for &(dtype, plane, suffix) in &[
+        (None, Plane::Half, "_half"),
+        (Some(Dtype::F64), Plane::Half, "_f64_half"),
+    ] {
+        let server = Server::start(ServerConfig {
+            artifacts_dir: "artifacts".into(),
+            variant: "demo".into(),
+            mode: WeightMode::from_alpha(4),
+            seed: 7,
+            batcher: BatcherConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(2),
+            },
+            backend: BackendKind::Interp { threads: 1 },
+            workers: 1,
+            scheduler: SchedulePolicy::ExactCover,
+            dtype,
+            plane,
+        })
+        .expect("server starts");
+        let frontend = HttpFrontend::start(
+            server,
+            NetConfig { addr: "127.0.0.1:0".into(), ..NetConfig::default() },
+        )
+        .expect("frontend binds");
+        let report = loadgen::run(&LoadGenConfig {
+            addr: frontend.local_addr().to_string(),
+            mode: LoadMode::Closed { concurrency },
+            requests,
+            body: None,
+            timeout: Duration::from_secs(60),
+        })
+        .expect("loadgen runs");
+        assert_eq!(report.ok, report.sent, "numerics sweep must succeed 100%");
+        report.record_into(
+            &mut b,
+            &format!("serve/http_demo_c{concurrency}_w1_t1_alpha4_scheduled{suffix}"),
+        );
+        println!(
+            "  dtype={} plane={}: {:.1} req/s",
+            dtype.unwrap_or_default().label(),
+            plane.label(),
+            report.throughput()
+        );
+        frontend.shutdown().expect("graceful shutdown");
+    }
+
     // ---- max-batch sweep: fused batch serving over the wire --------------
     // One HTTP request carries a full `{"batch":[…]}` body of B seeds and
     // the pool runs it as fused batch forwards (max_batch = B) — the
@@ -104,6 +157,7 @@ fn main() {
             backend: BackendKind::Interp { threads: 1 },
             workers: 1,
             scheduler: SchedulePolicy::ExactCover,
+            ..ServerConfig::default()
         })
         .expect("server starts");
         let frontend = HttpFrontend::start(

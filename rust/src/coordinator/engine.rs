@@ -28,8 +28,8 @@ use crate::err;
 use crate::fft::{im2tiles, overlap_add, spectral_kernels, TileGeometry};
 use crate::nn;
 use crate::runtime::{
-    freq_major_planes, BackendKind, LayerEntry, Runtime, SparseDataflow, SparseWeightPlanes,
-    VariantEntry, WeightId,
+    freq_major_planes, BackendKind, Dtype, LayerEntry, Plane, Runtime, SparseDataflow,
+    SparseWeightPlanes, VariantEntry, WeightId,
 };
 use crate::schedule::{LayerSchedule, SchedulePolicy, DEFAULT_WEIGHT_BANKS};
 use crate::sparse::{prune_magnitude, SparseLayer};
@@ -88,13 +88,17 @@ fn sparse_dataflow_for(
     tile: usize,
     alpha: usize,
     batch: usize,
+    plane: Plane,
 ) -> SparseDataflow {
+    // Half-plane storage shrinks every per-frequency budget in the Eq. 12/13
+    // feasibility/volume model: the planner sees K·(K/2+1) frequency slots
+    // instead of K², so more tiles fit resident at the same BRAM point.
     let params = LayerParams {
         m: l.cin,
         n: l.cout,
         h_in: l.h,
         tile,
-        k2: fft * fft,
+        k2: plane.spectrum_len(fft),
         p: l.tiles,
         alpha: alpha.max(1),
     };
@@ -121,6 +125,12 @@ pub struct EngineOptions {
     /// batch size (including 1) stays correct for any `plan_batch`; the
     /// value only moves the kernel-reuse/residency trade-off.
     pub plan_batch: usize,
+    /// Accumulation dtype for the spectral hot loop. `None` defers to the
+    /// manifest's recorded default (f32 unless it says otherwise) — the
+    /// same sentinel semantics as `--alpha 0`.
+    pub dtype: Option<Dtype>,
+    /// Spectral storage plane (full K×K vs the rfft2 half-plane).
+    pub plane: Plane,
 }
 
 impl Default for EngineOptions {
@@ -129,6 +139,8 @@ impl Default for EngineOptions {
             backend: BackendKind::default(),
             scheduler: SchedulePolicy::default(),
             plan_batch: 1,
+            dtype: None,
+            plane: Plane::Full,
         }
     }
 }
@@ -207,6 +219,10 @@ pub struct InferenceEngine {
     fft: usize,
     /// Scheduling policy the sparse layers execute under.
     scheduler: SchedulePolicy,
+    /// Accumulation dtype the spectral hot loop runs at (manifest-resolved).
+    dtype: Dtype,
+    /// Spectral storage plane the backend executes on.
+    plane: Plane,
     /// Static per-layer scheduling quality (None when dense or `Off`).
     schedule_metrics: Option<ScheduleMetrics>,
 }
@@ -251,7 +267,7 @@ impl InferenceEngine {
             variant,
             mode,
             seed,
-            EngineOptions { backend, scheduler, plan_batch: 1 },
+            EngineOptions { backend, scheduler, ..EngineOptions::default() },
         )
     }
 
@@ -265,8 +281,13 @@ impl InferenceEngine {
         seed: u64,
         opts: EngineOptions,
     ) -> Result<Self> {
-        let EngineOptions { backend, scheduler, plan_batch } = opts;
+        let EngineOptions { backend, scheduler, plan_batch, dtype, plane } = opts;
         let mut runtime = Runtime::open_with(artifacts_dir, backend)?;
+        let dtype = runtime.manifest.resolve_dtype(dtype);
+        // Numeric mode must be pinned before any weight upload: the backend
+        // folds half-plane weights at upload time, so flipping the plane
+        // afterwards would desynchronize store and schedule.
+        runtime.configure_numerics(dtype, plane)?;
         let v = runtime.manifest.variant(variant)?.clone();
         let fft = runtime.manifest.fft_size;
         let k = runtime.manifest.kernel_k;
@@ -287,7 +308,7 @@ impl InferenceEngine {
                 Some(sp) => {
                     runtime.set_sparse_dataflow(
                         &l.file,
-                        sparse_dataflow_for(l, fft, tile, sp.alpha, plan_batch),
+                        sparse_dataflow_for(l, fft, tile, sp.alpha, plan_batch, plane),
                     )?;
                     let wid = runtime.upload_sparse(sp)?;
                     // Alg. 2: plan every (group, channel) instance at the
@@ -295,7 +316,16 @@ impl InferenceEngine {
                     // order. Keyed by the weight handle — schedules belong
                     // to a non-zero pattern, not to the shape-deduped
                     // executable (two layers may share `l.file`).
+                    //
+                    // Half-plane mode schedules the *folded* planes — the
+                    // fold is deterministic, so this is exactly the CSR the
+                    // backend built from the same upload, and the cycle-sets
+                    // cover the halved weight stream.
                     let planes = SparseWeightPlanes::from_layer(sp);
+                    let planes = match plane {
+                        Plane::Full => planes,
+                        Plane::Half => planes.fold_half_plane(sp.fft),
+                    };
                     if let Some(plan) = LayerSchedule::build(
                         &planes,
                         arch.n_par,
@@ -340,6 +370,8 @@ impl InferenceEngine {
             kernel_k: k,
             fft,
             scheduler,
+            dtype,
+            plane,
             schedule_metrics,
         })
     }
@@ -356,6 +388,16 @@ impl InferenceEngine {
     /// The scheduling policy the sparse layers execute under.
     pub fn scheduler(&self) -> SchedulePolicy {
         self.scheduler
+    }
+
+    /// The accumulation dtype the spectral hot loop runs at.
+    pub fn dtype(&self) -> Dtype {
+        self.dtype
+    }
+
+    /// The spectral storage plane the backend executes on.
+    pub fn plane(&self) -> Plane {
+        self.plane
     }
 
     /// Per-layer Alg. 2 scheduling quality (PE utilization, cycles vs lower
@@ -516,7 +558,7 @@ mod tests {
     fn deep_layer_keeps_all_tiles_resident() {
         // conv5_3-sized (512×512 channels, 9 tiles): Table 1's optimum is
         // Ps = P — the sparse MAC should load each kernel row exactly once.
-        let d = sparse_dataflow_for(&layer(512, 512, 14, 9), 8, 6, 4, 1);
+        let d = sparse_dataflow_for(&layer(512, 512, 14, 9), 8, 6, 4, 1, Plane::Full);
         assert_eq!(d.tile_block, 9);
     }
 
@@ -526,8 +568,29 @@ mod tests {
         // still fits it on chip (at Ns = 256), so the plan keeps the whole
         // batch resident — each kernel row streams once per *batch* in the
         // fused forward, not once per image.
-        let d = sparse_dataflow_for(&layer(512, 512, 14, 9), 8, 6, 4, 8);
+        let d = sparse_dataflow_for(&layer(512, 512, 14, 9), 8, 6, 4, 8, Plane::Full);
         assert_eq!(d.tile_block, 72);
+    }
+
+    #[test]
+    fn half_plane_budget_never_shrinks_residency() {
+        // Eq. 12's BRAM feasibility scales with the per-tile spectrum
+        // length; the half-plane stores 40 slots instead of 64, so any
+        // geometry's chosen resident block can only stay or grow.
+        for (cin, cout, h, tiles) in [(512, 512, 14, 9), (64, 64, 224, 1444)] {
+            for batch in [1usize, 8] {
+                let full =
+                    sparse_dataflow_for(&layer(cin, cout, h, tiles), 8, 6, 4, batch, Plane::Full);
+                let half =
+                    sparse_dataflow_for(&layer(cin, cout, h, tiles), 8, 6, 4, batch, Plane::Half);
+                assert!(
+                    half.tile_block >= full.tile_block,
+                    "{cin}x{cout} B={batch}: half block {} < full block {}",
+                    half.tile_block,
+                    full.tile_block
+                );
+            }
+        }
     }
 
     #[test]
@@ -535,7 +598,7 @@ mod tests {
         // conv1_2-sized (64×64 channels, 1444 tiles): the optimizer streams
         // tile groups; whatever Ps it picks lies on the P'-lattice and is
         // at least one architecture group.
-        let d = sparse_dataflow_for(&layer(64, 64, 224, 1444), 8, 6, 4, 1);
+        let d = sparse_dataflow_for(&layer(64, 64, 224, 1444), 8, 6, 4, 1, Plane::Full);
         assert!(d.tile_block >= 9, "got block {}", d.tile_block);
         assert!(d.tile_block == 1444 || d.tile_block % 9 == 0, "got block {}", d.tile_block);
     }
@@ -547,7 +610,7 @@ mod tests {
         for (cin, cout, h, tiles) in [(512, 512, 14, 9), (64, 64, 224, 1444)] {
             let mut prev = 0usize;
             for batch in [1usize, 2, 8, 32] {
-                let d = sparse_dataflow_for(&layer(cin, cout, h, tiles), 8, 6, 4, batch);
+                let d = sparse_dataflow_for(&layer(cin, cout, h, tiles), 8, 6, 4, batch, Plane::Full);
                 assert!(
                     d.tile_block >= prev,
                     "{cin}x{cout} B={batch}: block {} < previous {prev}",

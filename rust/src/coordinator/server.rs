@@ -30,7 +30,7 @@ use super::batcher::{Batcher, BatcherConfig};
 use super::engine::{EngineOptions, InferenceEngine, WeightMode};
 use super::metrics::{Metrics, PoolMetrics};
 use crate::err;
-use crate::runtime::BackendKind;
+use crate::runtime::{BackendKind, Dtype, Plane};
 use crate::schedule::SchedulePolicy;
 use crate::tensor::Tensor;
 use crate::util::error::Result;
@@ -55,6 +55,11 @@ pub struct ServerConfig {
     /// Alg. 2 access-scheduling policy for the sparse layers (exact cover
     /// by default; `Off` reproduces the unscheduled PR 3 walk bit for bit).
     pub scheduler: SchedulePolicy,
+    /// Accumulation dtype every worker engine runs at (`None` defers to the
+    /// manifest's recorded default, like `--alpha 0`).
+    pub dtype: Option<Dtype>,
+    /// Spectral storage plane (full K×K, or the rfft2 half-plane).
+    pub plane: Plane,
 }
 
 impl Default for ServerConfig {
@@ -68,6 +73,8 @@ impl Default for ServerConfig {
             backend: BackendKind::default(),
             workers: 1,
             scheduler: SchedulePolicy::default(),
+            dtype: None,
+            plane: Plane::Full,
         }
     }
 }
@@ -100,6 +107,10 @@ pub struct Response {
     /// Network PE utilization of the engine's Alg. 2 schedules (static per
     /// engine; `None` when serving dense weights or `--scheduler off`).
     pub pe_utilization: Option<f64>,
+    /// Accumulation dtype the serving engine ran this request at.
+    pub dtype: Dtype,
+    /// Spectral storage plane the serving engine executed on.
+    pub plane: Plane,
 }
 
 enum Msg {
@@ -263,6 +274,8 @@ fn worker_loop(
             // close: Alg. 1 with B as the third reuse axis sizes Ps across
             // B·P tiles, so each weight block streams once per batch.
             plan_batch: cfg.batcher.max_batch.max(1),
+            dtype: cfg.dtype,
+            plane: cfg.plane,
         },
     ) {
         Ok(e) => {
@@ -283,6 +296,8 @@ fn worker_loop(
     // every metrics merge and response
     metrics.schedule = engine.schedule_metrics().cloned();
     let pe_util = metrics.schedule.as_ref().map(|s| s.avg_pe_utilization());
+    // manifest-resolved numeric mode, identical across the pool
+    let (dtype, plane) = (engine.dtype(), engine.plane());
     while let Ok(msg) = rx.recv() {
         match msg {
             WorkerMsg::Batch(batch) => {
@@ -340,6 +355,8 @@ fn worker_loop(
                                     batch_size: size,
                                     worker: id,
                                     pe_utilization: pe_util,
+                                    dtype,
+                                    plane,
                                 }
                             }),
                     };

@@ -1,49 +1,142 @@
-//! Radix-2 iterative FFT (Cooley–Tukey, decimation in time).
+//! Radix-2 iterative FFT (Cooley–Tukey, decimation in time), generic over
+//! the scalar precision.
 //!
 //! Only power-of-two sizes are needed (the paper uses K ∈ {8, 16}); sizes
 //! are asserted. `ifft` applies the 1/N normalization (matching
-//! `jnp.fft.ifft`). Twiddle factors are computed per call — the transforms
-//! here run on 8/16-point tiles at build/verify time, never on the serving
-//! hot path (that work is inside the AOT'd XLA executables).
+//! `jnp.fft.ifft`). Twiddle factors are computed per call in f64 and
+//! rounded to the working precision — for `T = f32` this reproduces the
+//! historical all-f32 transforms bit for bit.
+//!
+//! Real-input transforms ([`rfft2d`]/[`irfft2d`]) store only the
+//! K × (K/2 + 1) half-plane: a real tile's spectrum is Hermitian
+//! (`X[-f] = conj(X[f])`), so the reflected half of every plane is
+//! redundant. The forward pass packs two real rows into one complex FFT
+//! (halving the row pass) and runs column FFTs only over the kept columns;
+//! the inverse reconstructs each row's reflected half explicitly before a
+//! full-length row IFFT, which keeps it exact for *any* complex half-plane
+//! input — including non-Hermitian-consistent accumulators produced by
+//! asymmetric pruned kernels (see `SparseWeightPlanes::fold_half_plane`).
 
-/// Minimal complex number (avoids pulling in `num-complex`).
-#[derive(Debug, Clone, Copy, PartialEq, Default)]
-pub struct Complex {
-    pub re: f32,
-    pub im: f32,
+/// Scalar precision the spectral pipeline is generic over (`f32`/`f64`).
+///
+/// The trait is deliberately tiny: arithmetic comes from the std ops
+/// bounds, conversions round-trip through the literal types, and the
+/// associated consts let generic code build exact 0/1 values.
+pub trait Float:
+    Copy
+    + Default
+    + PartialEq
+    + PartialOrd
+    + Send
+    + Sync
+    + std::fmt::Debug
+    + std::ops::Add<Output = Self>
+    + std::ops::Sub<Output = Self>
+    + std::ops::Mul<Output = Self>
+    + std::ops::Neg<Output = Self>
+    + std::ops::AddAssign
+    + 'static
+{
+    const ZERO: Self;
+    const ONE: Self;
+    fn from_f32(x: f32) -> Self;
+    fn to_f32(self) -> f32;
+    /// Exact for integers and dyadic rationals in range — the only values
+    /// the transforms build this way (twiddles, 1/2, 1/N for pow-2 N).
+    fn from_f64(x: f64) -> Self;
+    fn sqrt(self) -> Self;
 }
 
-impl Complex {
-    pub const ZERO: Complex = Complex { re: 0.0, im: 0.0 };
+impl Float for f32 {
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+    #[inline]
+    fn from_f32(x: f32) -> Self {
+        x
+    }
+    #[inline]
+    fn to_f32(self) -> f32 {
+        self
+    }
+    #[inline]
+    fn from_f64(x: f64) -> Self {
+        x as f32
+    }
+    #[inline]
+    fn sqrt(self) -> Self {
+        f32::sqrt(self)
+    }
+}
 
-    pub fn new(re: f32, im: f32) -> Self {
-        Complex { re, im }
+impl Float for f64 {
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+    #[inline]
+    fn from_f32(x: f32) -> Self {
+        x as f64
+    }
+    #[inline]
+    fn to_f32(self) -> f32 {
+        self as f32
+    }
+    #[inline]
+    fn from_f64(x: f64) -> Self {
+        x
+    }
+    #[inline]
+    fn sqrt(self) -> Self {
+        f64::sqrt(self)
+    }
+}
+
+/// Minimal complex number (avoids pulling in `num-complex`), generic over
+/// the scalar precision.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Cx<T> {
+    pub re: T,
+    pub im: T,
+}
+
+/// The historical working type: single-precision complex. Every pre-dtype
+/// call site keeps compiling (and computing) unchanged through this alias.
+pub type Complex = Cx<f32>;
+
+impl<T: Float> Cx<T> {
+    pub const ZERO: Cx<T> = Cx { re: T::ZERO, im: T::ZERO };
+
+    pub fn new(re: T, im: T) -> Self {
+        Cx { re, im }
     }
 
     #[inline]
-    pub fn add(self, o: Complex) -> Complex {
-        Complex::new(self.re + o.re, self.im + o.im)
+    pub fn add(self, o: Cx<T>) -> Cx<T> {
+        Cx::new(self.re + o.re, self.im + o.im)
     }
 
     #[inline]
-    pub fn sub(self, o: Complex) -> Complex {
-        Complex::new(self.re - o.re, self.im - o.im)
+    pub fn sub(self, o: Cx<T>) -> Cx<T> {
+        Cx::new(self.re - o.re, self.im - o.im)
     }
 
     #[inline]
-    pub fn mul(self, o: Complex) -> Complex {
-        Complex::new(
+    pub fn mul(self, o: Cx<T>) -> Cx<T> {
+        Cx::new(
             self.re * o.re - self.im * o.im,
             self.re * o.im + self.im * o.re,
         )
     }
 
     #[inline]
-    pub fn conj(self) -> Complex {
-        Complex::new(self.re, -self.im)
+    pub fn conj(self) -> Cx<T> {
+        Cx::new(self.re, -self.im)
     }
 
-    pub fn abs(self) -> f32 {
+    #[inline]
+    pub fn scale(self, s: T) -> Cx<T> {
+        Cx::new(self.re * s, self.im * s)
+    }
+
+    pub fn abs(self) -> T {
         (self.re * self.re + self.im * self.im).sqrt()
     }
 }
@@ -54,7 +147,7 @@ fn assert_pow2(n: usize) {
 
 /// In-place iterative radix-2 FFT. `inverse` flips the twiddle sign;
 /// normalization is the caller's concern (see [`ifft1d`]).
-fn fft_inplace(buf: &mut [Complex], inverse: bool) {
+fn fft_inplace<T: Float>(buf: &mut [Cx<T>], inverse: bool) {
     let n = buf.len();
     assert_pow2(n);
     if n <= 1 {
@@ -73,9 +166,9 @@ fn fft_inplace(buf: &mut [Complex], inverse: bool) {
     let mut len = 2;
     while len <= n {
         let ang = sign * 2.0 * std::f64::consts::PI / len as f64;
-        let wlen = Complex::new(ang.cos() as f32, ang.sin() as f32);
+        let wlen = Cx::new(T::from_f64(ang.cos()), T::from_f64(ang.sin()));
         for chunk in buf.chunks_mut(len) {
-            let mut w = Complex::new(1.0, 0.0);
+            let mut w = Cx::new(T::ONE, T::ZERO);
             let half = len / 2;
             for i in 0..half {
                 let u = chunk[i];
@@ -90,33 +183,32 @@ fn fft_inplace(buf: &mut [Complex], inverse: bool) {
 }
 
 /// Forward 1D FFT (no normalization, like `jnp.fft.fft`).
-pub fn fft1d(x: &[Complex]) -> Vec<Complex> {
+pub fn fft1d<T: Float>(x: &[Cx<T>]) -> Vec<Cx<T>> {
     let mut buf = x.to_vec();
     fft_inplace(&mut buf, false);
     buf
 }
 
 /// Inverse 1D FFT with 1/N normalization (like `jnp.fft.ifft`).
-pub fn ifft1d(x: &[Complex]) -> Vec<Complex> {
+pub fn ifft1d<T: Float>(x: &[Cx<T>]) -> Vec<Cx<T>> {
     let mut buf = x.to_vec();
     fft_inplace(&mut buf, true);
-    let inv = 1.0 / buf.len() as f32;
+    let inv = T::from_f64(1.0 / buf.len() as f64);
     for v in &mut buf {
-        v.re *= inv;
-        v.im *= inv;
+        *v = v.scale(inv);
     }
     buf
 }
 
 /// Forward 2D FFT on a row-major `n x n` plane.
-pub fn fft2d(x: &[Complex], n: usize) -> Vec<Complex> {
+pub fn fft2d<T: Float>(x: &[Cx<T>], n: usize) -> Vec<Cx<T>> {
     let mut out = x.to_vec();
     fft2d_inplace(&mut out, n);
     out
 }
 
 /// Inverse 2D FFT with 1/N² normalization.
-pub fn ifft2d(x: &[Complex], n: usize) -> Vec<Complex> {
+pub fn ifft2d<T: Float>(x: &[Cx<T>], n: usize) -> Vec<Cx<T>> {
     let mut out = x.to_vec();
     ifft2d_inplace(&mut out, n);
     out
@@ -125,28 +217,27 @@ pub fn ifft2d(x: &[Complex], n: usize) -> Vec<Complex> {
 /// In-place forward 2D FFT (allocation-free except an `n`-element column
 /// scratch) — the interp backend's hot path uses this on its scratch
 /// buffers directly.
-pub fn fft2d_inplace(buf: &mut [Complex], n: usize) {
+pub fn fft2d_inplace<T: Float>(buf: &mut [Cx<T>], n: usize) {
     fft2d_impl(buf, n, false);
 }
 
 /// In-place inverse 2D FFT with 1/N² normalization.
-pub fn ifft2d_inplace(buf: &mut [Complex], n: usize) {
+pub fn ifft2d_inplace<T: Float>(buf: &mut [Cx<T>], n: usize) {
     fft2d_impl(buf, n, true);
-    let inv = 1.0 / (n * n) as f32;
+    let inv = T::from_f64(1.0 / (n * n) as f64);
     for v in buf {
-        v.re *= inv;
-        v.im *= inv;
+        *v = v.scale(inv);
     }
 }
 
-fn fft2d_impl(out: &mut [Complex], n: usize, inverse: bool) {
+fn fft2d_impl<T: Float>(out: &mut [Cx<T>], n: usize, inverse: bool) {
     assert_eq!(out.len(), n * n, "plane must be n x n");
     // rows
     for r in 0..n {
         fft_inplace(&mut out[r * n..(r + 1) * n], inverse);
     }
     // columns (gather/scatter through a scratch row)
-    let mut col = vec![Complex::ZERO; n];
+    let mut col = vec![Cx::ZERO; n];
     for c in 0..n {
         for r in 0..n {
             col[r] = out[r * n + c];
@@ -154,6 +245,122 @@ fn fft2d_impl(out: &mut [Complex], n: usize, inverse: bool) {
         fft_inplace(&mut col, inverse);
         for r in 0..n {
             out[r * n + c] = col[r];
+        }
+    }
+}
+
+/// Number of spectral coefficients a real `n x n` tile actually needs:
+/// `n * (n/2 + 1)` — the rfft2 half-plane (full rows, columns `0..=n/2`).
+pub fn half_plane_len(n: usize) -> usize {
+    n * (n / 2 + 1)
+}
+
+/// Forward real-input 2D FFT storing only the `n x (n/2 + 1)` half-plane
+/// (numpy `rfft2` layout: row `r`, column `c ≤ n/2` at `r * (n/2+1) + c`).
+///
+/// Matches `fft2d` on the kept columns (the dropped ones are the exact
+/// conjugate mirrors). The row pass packs two real rows per complex FFT —
+/// exact for real input — so a forward transform costs n/2 row FFTs plus
+/// n/2+1 column FFTs instead of 2n.
+pub fn rfft2d<T: Float>(x: &[T], n: usize) -> Vec<Cx<T>> {
+    let mut out = vec![Cx::ZERO; half_plane_len(n)];
+    rfft2d_into(x, n, &mut out);
+    out
+}
+
+/// [`rfft2d`] into a caller-owned `n·(n/2+1)` buffer — the backend's hot
+/// loop reuses one spectrum buffer across tiles instead of allocating.
+pub fn rfft2d_into<T: Float>(x: &[T], n: usize, out: &mut [Cx<T>]) {
+    assert_eq!(x.len(), n * n, "plane must be n x n");
+    assert_eq!(out.len(), half_plane_len(n), "spectrum must be n x (n/2 + 1)");
+    assert_pow2(n);
+    let hc = n / 2 + 1;
+    if n == 1 {
+        out[0] = Cx::new(x[0], T::ZERO);
+        return;
+    }
+    let half = T::from_f64(0.5);
+    // row pass: rows 2j and 2j+1 ride one complex FFT as z = a + i·b;
+    // A[k] = (Z[k] + conj(Z[-k]))/2, B[k] = -i(Z[k] - conj(Z[-k]))/2
+    let mut z = vec![Cx::ZERO; n];
+    for pair in 0..n / 2 {
+        let (ra, rb) = (2 * pair, 2 * pair + 1);
+        for c in 0..n {
+            z[c] = Cx::new(x[ra * n + c], x[rb * n + c]);
+        }
+        fft_inplace(&mut z, false);
+        for c in 0..hc {
+            let zc = z[c];
+            let zm = z[(n - c) % n].conj();
+            out[ra * hc + c] = zc.add(zm).scale(half);
+            let d = zc.sub(zm); // = 2i·B[c]
+            out[rb * hc + c] = Cx::new(d.im * half, -(d.re * half));
+        }
+    }
+    // column pass: only the kept columns
+    let mut col = vec![Cx::ZERO; n];
+    for c in 0..hc {
+        for r in 0..n {
+            col[r] = out[r * hc + c];
+        }
+        fft_inplace(&mut col, false);
+        for r in 0..n {
+            out[r * hc + c] = col[r];
+        }
+    }
+}
+
+/// Inverse of [`rfft2d`]: half-plane spectrum → real `n x n` tile (with the
+/// 1/N² normalization, like `irfft2`).
+///
+/// Semantics: Hermitian-extend the half-plane across its reflected columns
+/// (`Ã[r, c] = conj(A[(n-r)%n, n-c])` for `c > n/2`), run a full inverse
+/// 2D FFT, keep the real part. Columns 0 and n/2 are used exactly as
+/// stored (they carry their own conjugate pairs), so the transform is
+/// linear and exact for arbitrary — even non-Hermitian-consistent —
+/// half-plane input; the spectral MAC relies on this when pruned kernels
+/// are asymmetric.
+pub fn irfft2d<T: Float>(spec: &[Cx<T>], n: usize) -> Vec<T> {
+    let mut out = vec![T::ZERO; n * n];
+    irfft2d_into(spec, n, &mut out);
+    out
+}
+
+/// [`irfft2d`] into a caller-owned `n·n` real buffer (hot-loop variant).
+pub fn irfft2d_into<T: Float>(spec: &[Cx<T>], n: usize, out: &mut [T]) {
+    let hc = n / 2 + 1;
+    assert_eq!(spec.len(), n * hc, "spectrum must be n x (n/2 + 1)");
+    assert_eq!(out.len(), n * n, "plane must be n x n");
+    assert_pow2(n);
+    if n == 1 {
+        out[0] = spec[0].re;
+        return;
+    }
+    // column pass: unnormalized inverse FFT down each kept column
+    let mut work = spec.to_vec();
+    let mut col = vec![Cx::ZERO; n];
+    for c in 0..hc {
+        for r in 0..n {
+            col[r] = work[r * hc + c];
+        }
+        fft_inplace(&mut col, true);
+        for r in 0..n {
+            work[r * hc + c] = col[r];
+        }
+    }
+    // row pass: after the column transforms the 2D Hermitian extension
+    // collapses to a per-row one (G̃[p, c] = conj(G[p, n-c])); rebuild the
+    // reflected half, full-length inverse FFT, keep the real part
+    let inv = T::from_f64(1.0 / (n * n) as f64);
+    let mut row = vec![Cx::ZERO; n];
+    for r in 0..n {
+        row[..hc].copy_from_slice(&work[r * hc..(r + 1) * hc]);
+        for c in hc..n {
+            row[c] = work[r * hc + (n - c)].conj();
+        }
+        fft_inplace(&mut row, true);
+        for q in 0..n {
+            out[r * n + q] = row[q].re * inv;
         }
     }
 }
@@ -270,5 +477,101 @@ mod tests {
     #[should_panic(expected = "power of two")]
     fn non_pow2_rejected() {
         fft1d(&[Complex::ZERO; 6]);
+    }
+
+    #[test]
+    fn f64_transforms_match_f32_shapes() {
+        // the generic core at f64: same API, tighter round-trip
+        let mut rng = Pcg32::new(9);
+        let n = 16;
+        let x: Vec<Cx<f64>> =
+            (0..n).map(|_| Cx::new(rng.normal() as f64, rng.normal() as f64)).collect();
+        let y = ifft1d(&fft1d(&x));
+        for (a, b) in x.iter().zip(&y) {
+            assert!((a.re - b.re).abs() < 1e-12 && (a.im - b.im).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn rfft2d_matches_full_fft_half_plane() {
+        forall("rfft2d == fft2d half-plane", 24, |rng| {
+            for n in [2usize, 4, 8, 16] {
+                let x: Vec<f32> = (0..n * n).map(|_| rng.normal()).collect();
+                let got = rfft2d(&x, n);
+                let full =
+                    fft2d(&x.iter().map(|&v| Complex::new(v, 0.0)).collect::<Vec<_>>(), n);
+                let hc = n / 2 + 1;
+                for r in 0..n {
+                    for c in 0..hc {
+                        let g = got[r * hc + c];
+                        let w = full[r * n + c];
+                        assert!(
+                            (g.re - w.re).abs() < 1e-3 && (g.im - w.im).abs() < 1e-3,
+                            "n={n} ({r},{c}): {g:?} vs {w:?}"
+                        );
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn irfft2d_roundtrips_real_input() {
+        forall("irfft2d ∘ rfft2d == id", 24, |rng| {
+            for n in [2usize, 4, 8, 16] {
+                let x: Vec<f32> = (0..n * n).map(|_| rng.normal()).collect();
+                let y = irfft2d(&rfft2d(&x, n), n);
+                for (a, b) in x.iter().zip(&y) {
+                    assert!((a - b).abs() < 1e-5, "n={n}: {a} vs {b}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn rfft2d_f64_roundtrip_tight() {
+        let mut rng = Pcg32::new(31);
+        for n in [8usize, 16] {
+            let x: Vec<f64> = (0..n * n).map(|_| rng.normal() as f64).collect();
+            let y = irfft2d(&rfft2d(&x, n), n);
+            for (a, b) in x.iter().zip(&y) {
+                assert!((a - b).abs() < 1e-12, "n={n}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn irfft2d_is_hermitian_real_part_for_arbitrary_input() {
+        // the exactness contract the conjugate-folded sparse MAC leans on:
+        // for ANY complex half-plane A, irfft2d(A) equals the real part of
+        // the full inverse FFT of A's mirror extension (columns 0 and n/2
+        // used as stored, interior columns reflected conjugated)
+        let mut rng = Pcg32::new(5);
+        for n in [4usize, 8] {
+            let hc = n / 2 + 1;
+            let a: Vec<Complex> =
+                (0..n * hc).map(|_| Complex::new(rng.normal(), rng.normal())).collect();
+            let got = irfft2d(&a, n);
+            let mut ext = vec![Complex::ZERO; n * n];
+            for r in 0..n {
+                for c in 0..n {
+                    ext[r * n + c] = if c < hc {
+                        a[r * hc + c]
+                    } else {
+                        a[((n - r) % n) * hc + (n - c)].conj()
+                    };
+                }
+            }
+            let want = ifft2d(&ext, n);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w.re).abs() < 1e-5, "{g} vs {}", w.re);
+            }
+        }
+    }
+
+    #[test]
+    fn half_plane_len_counts() {
+        assert_eq!(half_plane_len(8), 40);
+        assert_eq!(half_plane_len(16), 144);
     }
 }

@@ -7,5 +7,8 @@
 mod core;
 mod tiling;
 
-pub use core::{fft1d, fft2d, fft2d_inplace, ifft1d, ifft2d, ifft2d_inplace, Complex};
+pub use self::core::{
+    fft1d, fft2d, fft2d_inplace, half_plane_len, ifft1d, ifft2d, ifft2d_inplace, irfft2d,
+    irfft2d_into, rfft2d, rfft2d_into, Complex, Cx, Float,
+};
 pub use tiling::{im2tiles, overlap_add, spectral_kernels, tiles_per_side, TileGeometry};

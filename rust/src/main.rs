@@ -7,12 +7,12 @@
 use spectral_flow::analysis::{
     transfers_flow, ArchParams, Flow, LayerParams,
 };
-use spectral_flow::coordinator::{InferenceEngine, WeightMode};
+use spectral_flow::coordinator::{EngineOptions, InferenceEngine, WeightMode};
 use spectral_flow::dataflow::{optimize_network_at, OptimizerConfig};
 use spectral_flow::err;
 use spectral_flow::model::Network;
 use spectral_flow::report::{fmt_bytes, fmt_gbps, fmt_ms, fmt_pct, Table};
-use spectral_flow::runtime::BackendKind;
+use spectral_flow::runtime::{BackendKind, Dtype, Plane};
 use spectral_flow::schedule::{sampled_layer_utilization, SchedulePolicy, Scheduler};
 use spectral_flow::util::bench::{compare_benches, read_json_artifact};
 use spectral_flow::sim::baselines::{run_baseline, sparse_spatial_17_latency, BaselineConfig};
@@ -36,6 +36,17 @@ fn parse_backend(name: &str, threads: usize) -> Result<BackendKind> {
              rebuild with `cargo build --features pjrt` (see README.md)"
         )),
         other => Err(err!("unknown backend {other:?} (expected interp|pjrt)")),
+    }
+}
+
+/// Parse `--dtype` with the manifest-default sentinel: the empty string
+/// (the flag's default) means "use the manifest's recorded dtype", the
+/// same contract as `--alpha 0`.
+fn parse_dtype(name: &str) -> Result<Option<Dtype>> {
+    if name.is_empty() {
+        Ok(None)
+    } else {
+        Dtype::parse(name).map(Some)
     }
 }
 
@@ -304,12 +315,16 @@ fn serve(mut args: Args) -> Result<()> {
         "exact-cover",
         "sparse access scheduler (exact-cover|lowest-index|off)",
     );
+    let dtype_name = args.opt("dtype", "", "accumulation dtype (f32|f64; empty = manifest default)");
+    let plane_name = args.opt("plane", "full", "spectral storage plane (full|half)");
     let http_addr = args.opt("http", "", "serve over HTTP on this addr (e.g. 127.0.0.1:7878)");
     let max_inflight = args.opt_usize("max-inflight", 64, "HTTP admission bound (excess → 429)");
     let duration_secs =
         args.opt_usize("duration-secs", 0, "HTTP mode: stop after this many seconds (0 = forever)");
     let backend = parse_backend(&backend_name, threads)?;
     let scheduler = SchedulePolicy::parse(&scheduler_name)?;
+    let dtype = parse_dtype(&dtype_name)?;
+    let plane = Plane::parse(&plane_name)?;
     args.maybe_help(
         "serve: run the batching server pool (synthetic traffic, or HTTP with --http)",
     );
@@ -319,10 +334,13 @@ fn serve(mut args: Args) -> Result<()> {
     let m = spectral_flow::runtime::Runtime::open(&artifacts)?;
     let vdesc = m.manifest.variant(&variant)?.clone();
     let mode = WeightMode::from_alpha(m.manifest.resolve_alpha(alpha));
+    let resolved_dtype = m.manifest.resolve_dtype(dtype);
     println!(
-        "serving {variant} at α={} ({mode:?}), scheduler {}",
+        "serving {variant} at α={} ({mode:?}), scheduler {}, dtype {}, plane {}",
         mode.alpha(),
-        scheduler.label()
+        scheduler.label(),
+        resolved_dtype.label(),
+        plane.label()
     );
     let server = Server::start(ServerConfig {
         artifacts_dir: artifacts.clone(),
@@ -336,6 +354,8 @@ fn serve(mut args: Args) -> Result<()> {
         backend,
         workers,
         scheduler,
+        dtype,
+        plane,
     })?;
     if !http_addr.is_empty() {
         // networked mode: hand the pool to the HTTP front-end and serve
@@ -346,6 +366,8 @@ fn serve(mut args: Args) -> Result<()> {
                 addr: http_addr,
                 max_inflight,
                 input_shape: [vdesc.input_c, vdesc.input_hw, vdesc.input_hw],
+                dtype: resolved_dtype,
+                plane,
                 ..NetConfig::default()
             },
         )?;
@@ -400,7 +422,22 @@ fn loadgen(mut args: Args) -> Result<()> {
         "rust/reports/BENCH_serve.json",
         "bench artifact to write (\"none\" to skip)",
     );
-    let name = args.opt("name", "serve/loadgen", "bench entry name for the artifact");
+    // the load generator never touches the engine's numerics (the server
+    // owns those) — the flags only suffix the default artifact entry name
+    // so sweeps over dtype/plane configs land in distinct bench rows
+    let dtype_name = args.opt("dtype", "", "tag the bench name with a dtype suffix (f32|f64)");
+    let plane_name = args.opt("plane", "full", "tag the bench name with a plane suffix (full|half)");
+    let dtype_tag = parse_dtype(&dtype_name)?;
+    let plane_tag = Plane::parse(&plane_name)?;
+    let mut default_name = "serve/loadgen".to_string();
+    if let Some(d) = dtype_tag {
+        default_name.push('_');
+        default_name.push_str(d.label());
+    }
+    if plane_tag == Plane::Half {
+        default_name.push_str("_half");
+    }
+    let name = args.opt("name", &default_name, "bench entry name for the artifact");
     let strict = args.opt_bool("strict", "exit with an error unless every request succeeded");
     args.maybe_help("loadgen: open/closed-loop HTTP load against a serve --http endpoint");
     let mode = match mode_name.as_str() {
@@ -449,8 +486,12 @@ fn infer(mut args: Args) -> Result<()> {
         "exact-cover",
         "sparse access scheduler (exact-cover|lowest-index|off)",
     );
+    let dtype_name = args.opt("dtype", "", "accumulation dtype (f32|f64; empty = manifest default)");
+    let plane_name = args.opt("plane", "full", "spectral storage plane (full|half)");
     let backend = parse_backend(&backend_name, threads)?;
     let scheduler = SchedulePolicy::parse(&scheduler_name)?;
+    let dtype = parse_dtype(&dtype_name)?;
+    let plane = Plane::parse(&plane_name)?;
     args.maybe_help("infer: single-image forward pass through the spectral backend");
     // one extra (cheap) manifest read: the engine re-opens internally, but
     // the mode must be known before the engine can be constructed
@@ -458,15 +499,22 @@ fn infer(mut args: Args) -> Result<()> {
         spectral_flow::runtime::Runtime::open(&artifacts)?.manifest.resolve_alpha(alpha),
     );
     let t0 = std::time::Instant::now();
-    let mut engine =
-        InferenceEngine::new_with_opts(&artifacts, &variant, mode, 7, backend, scheduler)?;
+    let mut engine = InferenceEngine::with_options(
+        &artifacts,
+        &variant,
+        mode,
+        7,
+        EngineOptions { backend, scheduler, dtype, plane, ..EngineOptions::default() },
+    )?;
     println!(
-        "engine up in {:?} ({} layers, backend {}, α={}, scheduler {})",
+        "engine up in {:?} ({} layers, backend {}, α={}, scheduler {}, dtype {}, plane {})",
         t0.elapsed(),
         engine.variant.layers.len(),
         engine.backend_name(),
         mode.alpha(),
         engine.scheduler().label(),
+        engine.dtype().label(),
+        engine.plane().label(),
     );
     if let Some(sm) = engine.schedule_metrics() {
         // Alg. 2 plan quality: per-layer PE utilization, cycles vs the

@@ -30,6 +30,7 @@ use std::time::Duration;
 
 use crate::coordinator::{Metrics, PoolMetrics, Response, ScheduleMetrics};
 use crate::err;
+use crate::runtime::{Dtype, Plane};
 use crate::tensor::Tensor;
 use crate::util::error::Result;
 use crate::util::json::{arr, num, obj, s, Json, JsonLimits};
@@ -164,6 +165,8 @@ pub fn response_to_json(r: &Response) -> Json {
         ("batch_size", num(r.batch_size as f64)),
         ("worker", num(r.worker as f64)),
         ("pe_utilization", r.pe_utilization.map(num).unwrap_or(Json::Null)),
+        ("dtype", s(r.dtype.label())),
+        ("plane", s(r.plane.label())),
     ])
 }
 
@@ -247,9 +250,13 @@ fn metrics_to_json(m: &Metrics) -> Json {
     ])
 }
 
-/// Render the `/metrics` reply: merged snapshot + one entry per worker.
-pub fn pool_metrics_to_json(pm: &PoolMetrics) -> Json {
+/// Render the `/metrics` reply: merged snapshot + one entry per worker,
+/// tagged with the pool-wide numeric mode (every worker engine replicates
+/// the same dtype/plane, so they sit at the top level, not per worker).
+pub fn pool_metrics_to_json(pm: &PoolMetrics, dtype: Dtype, plane: Plane) -> Json {
     obj(vec![
+        ("dtype", s(dtype.label())),
+        ("plane", s(plane.label())),
         ("merged", metrics_to_json(&pm.merged)),
         ("per_worker", arr(pm.per_worker.iter().map(metrics_to_json).collect())),
     ])
@@ -315,6 +322,8 @@ mod tests {
             batch_size: 4,
             worker: 2,
             pe_utilization: Some(0.875),
+            dtype: Dtype::F32,
+            plane: Plane::Half,
         };
         let j = response_to_json(&r);
         assert_eq!(j.get("latency_us").unwrap().as_f64(), Some(1200.0));
@@ -323,6 +332,8 @@ mod tests {
         assert_eq!(j.get("per_image_us").unwrap().as_f64(), Some(250.0));
         assert_eq!(j.get("worker").unwrap().as_usize(), Some(2));
         assert_eq!(j.get("pe_utilization").unwrap().as_f64(), Some(0.875));
+        assert_eq!(j.get("dtype").unwrap().as_str(), Some("f32"));
+        assert_eq!(j.get("plane").unwrap().as_str(), Some("half"));
         let back = logits_from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
         assert_eq!(back, r.logits);
         // dense serving: utilization is null, not absent
@@ -338,7 +349,9 @@ mod tests {
         m.record_request_split(Duration::from_micros(100), Duration::from_micros(400));
         m.record_per_image(Duration::from_micros(200));
         let pm = PoolMetrics::from_workers(vec![m]);
-        let j = pool_metrics_to_json(&pm);
+        let j = pool_metrics_to_json(&pm, Dtype::F64, Plane::Full);
+        assert_eq!(j.get("dtype").unwrap().as_str(), Some("f64"));
+        assert_eq!(j.get("plane").unwrap().as_str(), Some("full"));
         let merged = j.get("merged").unwrap();
         assert_eq!(merged.get("count").unwrap().as_usize(), Some(1));
         assert_eq!(merged.get("p50_us").unwrap().as_f64(), Some(500.0));
@@ -401,6 +414,8 @@ mod tests {
             batch_size: 2,
             worker: 0,
             pe_utilization: None,
+            dtype: Dtype::F32,
+            plane: Plane::Full,
         };
         let j = batch_response_to_json(&[mk(vec![1.0, 2.0]), mk(vec![-3.5])]);
         let back = Json::parse(&j.to_string()).unwrap();

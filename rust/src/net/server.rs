@@ -32,6 +32,7 @@ use std::time::Duration;
 use super::http::{self, HttpConn, HttpLimits, HttpRequest};
 use super::proto;
 use crate::coordinator::{Client, Server};
+use crate::runtime::{Dtype, Plane};
 use crate::util::error::{Context, Result};
 
 /// Front-end configuration (the serving knobs the wire adds on top of
@@ -51,6 +52,10 @@ pub struct NetConfig {
     pub limits: HttpLimits,
     /// How long shutdown waits for admitted requests to drain.
     pub drain_grace: Duration,
+    /// Resolved accumulation dtype the pool serves at (tags `/metrics`).
+    pub dtype: Dtype,
+    /// Spectral storage plane the pool serves on (tags `/metrics`).
+    pub plane: Plane,
 }
 
 impl Default for NetConfig {
@@ -62,6 +67,8 @@ impl Default for NetConfig {
             input_shape: [1, 16, 16],
             limits: HttpLimits::default(),
             drain_grace: Duration::from_secs(10),
+            dtype: Dtype::F32,
+            plane: Plane::Full,
         }
     }
 }
@@ -265,7 +272,9 @@ fn route(req: &HttpRequest, client: &Client, gate: &Gate, cfg: &NetConfig) -> (u
             }
         }
         ("GET", "/metrics") => match client.pool_metrics() {
-            Ok(pm) => (200, proto::pool_metrics_to_json(&pm).to_string()),
+            Ok(pm) => {
+                (200, proto::pool_metrics_to_json(&pm, cfg.dtype, cfg.plane).to_string())
+            }
             Err(e) => (503, proto::error_body(&e.to_string())),
         },
         ("POST", "/infer") => infer_route(req, client, gate, cfg),

@@ -46,18 +46,40 @@
 //! conflict-free cycle-sets instead of CSR storage order — bit-identical to
 //! the unscheduled walk (see `conv_tiles_scheduled`), so scheduling is a
 //! pure loop-order/metrics change, never a numerics change.
+//!
+//! **Numeric modes** ([`SpectralBackend::configure_numerics`]): the whole
+//! pipeline is generic over [`Float`] (`f32` default, `f64` reference) and
+//! over the spectral storage [`Plane`]. In [`Plane::Half`] mode the
+//! Hermitian symmetry of real tiles is exploited end to end: tile spectra
+//! come from [`crate::fft::rfft2d`] (half the FFT work), uploaded weights
+//! are conjugate-folded onto the `K·(K/2+1)` half-plane (dense planes via
+//! [`fold_freq_major_half`], CSR rows via
+//! [`SparseWeightPlanes::fold_half_plane`] — so `BankedWeights` banks,
+//! cycle-sets, and every scheduled MAC read halve too), and outputs come
+//! back through [`crate::fft::irfft2d`]. Weights stay f32 at rest in every
+//! mode and widen at MAC read time; `(f32, Full)` reproduces the
+//! historical path bit for bit.
+//!
+//! The sparse MAC scratch is stored **SoA with the batch axis innermost**
+//! (`xs_re[(m·F + f)·b + bi]`): the inner per-resident-tile loop is then a
+//! unit-stride multiply-accumulate against a scalar weight, which the
+//! autovectorizer turns into SIMD — without changing per-slot accumulation
+//! order, so outputs stay bit-identical to the historical AoS walk.
 
 use std::collections::HashMap;
 use std::path::Path;
 
 use crate::err;
-use crate::fft::{fft2d_inplace, ifft2d_inplace, Complex};
+use crate::fft::{fft2d_inplace, ifft2d_inplace, irfft2d_into, rfft2d_into, Cx, Float};
 use crate::schedule::LayerSchedule;
 use crate::sparse::SparseLayer;
 use crate::tensor::Tensor;
 use crate::util::error::Result;
 
-use super::{ExecutableEntry, SparseDataflow, SparseWeightPlanes, SpectralBackend, WeightId};
+use super::{
+    fold_freq_major_half, Dtype, ExecutableEntry, Plane, SparseDataflow, SparseWeightPlanes,
+    SpectralBackend, WeightId,
+};
 
 /// Cache budget for the sparse path's resident spectra, in complex slots
 /// across the per-thread `xs`+`acc` scratch (4 Mi slots ≈ 32 MB at 8 B
@@ -128,6 +150,16 @@ struct BankedWeights {
     bank_im: Vec<Vec<f32>>,
     /// `streams[g · cin + m]`.
     streams: Vec<ScheduledStream>,
+}
+
+/// Recover K from a full-plane `dims[0] = K²` (K is a power of two, so K²
+/// is a power of four).
+fn fft_from_k2(k2: usize) -> Result<usize> {
+    if k2.is_power_of_two() && k2.trailing_zeros() % 2 == 0 {
+        Ok(1 << (k2.trailing_zeros() / 2))
+    } else {
+        Err(err!("weight dims[0] = {k2} is not the square of a power-of-two FFT size"))
+    }
 }
 
 /// Compile a layer plan + CSR rows into the banked form, validating that
@@ -204,6 +236,11 @@ pub struct InterpBackend {
     scheduled: HashMap<WeightId, BankedWeights>,
     /// Worker threads for the per-tile loop (1 = serial).
     threads: usize,
+    /// Scalar precision of the FFT → MAC → IFFT core.
+    dtype: Dtype,
+    /// Spectral storage plane (weights fold at upload time, so this must
+    /// be configured before uploads — `configure_numerics` enforces it).
+    plane: Plane,
 }
 
 impl Default for InterpBackend {
@@ -220,12 +257,21 @@ impl InterpBackend {
     /// Backend with a tile-parallel hot loop over `threads` scoped worker
     /// threads (`0` and `1` both mean serial).
     pub fn with_threads(threads: usize) -> Self {
+        Self::with_config(threads, Dtype::default(), Plane::default())
+    }
+
+    /// Backend with an explicit numeric mode (threads as
+    /// [`Self::with_threads`]) — the constructor-shaped twin of
+    /// [`SpectralBackend::configure_numerics`].
+    pub fn with_config(threads: usize, dtype: Dtype, plane: Plane) -> Self {
         InterpBackend {
             shapes: HashMap::new(),
             weights: Vec::new(),
             flows: HashMap::new(),
             scheduled: HashMap::new(),
             threads: threads.max(1),
+            dtype,
+            plane,
         }
     }
 
@@ -246,65 +292,96 @@ impl InterpBackend {
         wid: WeightId,
     ) -> Result<()> {
         let (m, n, k) = (s.cin, s.cout, s.fft);
-        let f = k * k;
+        let fs = self.plane.spectrum_len(k);
         let store = self
             .weights
             .get(wid)
             .ok_or_else(|| err!("weight handle {wid} unknown"))?;
-        if store.dims() != [f, m, n] {
+        if store.dims() != [fs, m, n] {
             return Err(err!(
                 "weight dims {:?} != executable dims {:?}",
                 store.dims(),
-                [f, m, n]
+                [fs, m, n]
             ));
         }
         // fan tiles out over scoped threads (serial when threads == 1):
         // each chunk is a contiguous tile range with its own scratch,
         // writing a disjoint output slice — no locks, no result reordering.
         let threads = self.threads.min(t).max(1);
-        match store {
-            WeightStore::Dense(w) => {
-                for_tile_chunks(od, n * f, t, threads, |first, out_chunk| {
-                    // scratch reused across the chunk's tiles — no per-tile
-                    // allocations on the request path: FFTs run in place
-                    let mut xs = vec![Complex::ZERO; m * f];
-                    let mut acc = vec![Complex::ZERO; n * f];
-                    for (j, out_tile) in out_chunk.chunks_mut(n * f).enumerate() {
-                        let ti = first + j;
-                        conv_tile(
-                            &td[ti * m * f..(ti + 1) * m * f],
-                            out_tile,
-                            w,
-                            s,
-                            &mut xs,
-                            &mut acc,
-                        );
-                    }
-                });
+        // resident-tile block = the planner's Ps, clamped by the scratch
+        // cache budget (the Eq. 12 analogue — half-plane spectra cost half
+        // the slots, so the same budget holds twice the resident tiles)
+        let hinted = self.flows.get(file).map_or(1, |d| d.tile_block);
+        let cap = (SPARSE_RESIDENT_SLOTS / ((m + n) * fs).max(1)).max(1);
+        let block = hinted.clamp(1, cap);
+        let sched = self.scheduled.get(&wid);
+        match self.dtype {
+            Dtype::F32 => {
+                run_conv_typed::<f32>(store, sched, s, self.plane, t, td, od, threads, block)
             }
-            WeightStore::Sparse(w) => {
-                // resident-tile block = the planner's Ps, clamped by the
-                // scratch cache budget (the Eq. 12 analogue)
-                let hinted = self.flows.get(file).map_or(1, |d| d.tile_block);
-                let cap = (SPARSE_RESIDENT_SLOTS / ((m + n) * f).max(1)).max(1);
-                let block = hinted.clamp(1, cap);
-                match self.scheduled.get(&wid) {
-                    // schedule-driven walk (Alg. 2 order, banked weights)
-                    Some(bw) => {
-                        for_tile_chunks(od, n * f, t, threads, |first, out_chunk| {
-                            conv_tiles_scheduled(td, out_chunk, first, bw, s, block);
-                        });
-                    }
-                    // unscheduled CSR storage-order walk (PR 3 path)
-                    None => {
-                        for_tile_chunks(od, n * f, t, threads, |first, out_chunk| {
-                            conv_tiles_sparse(td, out_chunk, first, w, s, block);
-                        });
-                    }
-                }
+            Dtype::F64 => {
+                run_conv_typed::<f64>(store, sched, s, self.plane, t, td, od, threads, block)
             }
         }
         Ok(())
+    }
+}
+
+/// Dispatch one tile population through the mode-specific hot loop: the
+/// dtype match above monomorphizes everything below it, so the f32 path
+/// carries no f64 code and vice versa.
+#[allow(clippy::too_many_arguments)]
+fn run_conv_typed<T: Float>(
+    store: &WeightStore,
+    sched: Option<&BankedWeights>,
+    s: Shape,
+    plane: Plane,
+    t: usize,
+    td: &[f32],
+    od: &mut [f32],
+    threads: usize,
+    block: usize,
+) {
+    let (m, n, k) = (s.cin, s.cout, s.fft);
+    let f = k * k;
+    let fs = plane.spectrum_len(k);
+    match store {
+        WeightStore::Dense(w) => {
+            for_tile_chunks(od, n * f, t, threads, |first, out_chunk| {
+                // scratch reused across the chunk's tiles — no per-tile
+                // allocations on the request path: FFTs run in place
+                let mut xs = vec![Cx::<T>::ZERO; m * fs];
+                let mut acc = vec![Cx::<T>::ZERO; n * fs];
+                let mut real = vec![T::ZERO; f];
+                for (j, out_tile) in out_chunk.chunks_mut(n * f).enumerate() {
+                    let ti = first + j;
+                    conv_tile(
+                        &td[ti * m * f..(ti + 1) * m * f],
+                        out_tile,
+                        w,
+                        s,
+                        plane,
+                        &mut xs,
+                        &mut acc,
+                        &mut real,
+                    );
+                }
+            });
+        }
+        WeightStore::Sparse(w) => match sched {
+            // schedule-driven walk (Alg. 2 order, banked weights)
+            Some(bw) => {
+                for_tile_chunks(od, n * f, t, threads, |first, out_chunk| {
+                    conv_tiles_scheduled::<T>(td, out_chunk, first, bw, s, plane, block);
+                });
+            }
+            // unscheduled CSR storage-order walk (PR 3 path)
+            None => {
+                for_tile_chunks(od, n * f, t, threads, |first, out_chunk| {
+                    conv_tiles_sparse::<T>(td, out_chunk, first, w, s, plane, block);
+                });
+            }
+        },
     }
 }
 
@@ -338,48 +415,76 @@ where
 }
 
 /// One tile of the spectral conv: FFT every input channel of `in_tile`
-/// (`[M, K²]` spatial), frequency-major MAC against the kernel planes,
-/// IFFT each output channel into `out_tile` (`[N, K²]` spatial, real part).
-/// `xs`/`acc` are caller-owned scratch (`[M, K²]` / `[N, K²]` complex) so
-/// the request path does no per-tile allocation.
-fn conv_tile(
+/// (`[M, K²]` spatial; rFFT in half-plane mode), frequency-major MAC
+/// against the (possibly folded) kernel planes, inverse-FFT each output
+/// channel into `out_tile` (`[N, K²]` spatial, real part). `xs`/`acc` are
+/// caller-owned scratch (`[M, F']` / `[N, F']` complex, `F'` the plane's
+/// spectrum length) and `real` a `K²` real staging buffer for the rFFT
+/// ends, so the request path does no per-tile allocation.
+#[allow(clippy::too_many_arguments)]
+fn conv_tile<T: Float>(
     in_tile: &[f32],
     out_tile: &mut [f32],
     w: &WeightPlanes,
     s: Shape,
-    xs: &mut [Complex],
-    acc: &mut [Complex],
+    plane: Plane,
+    xs: &mut [Cx<T>],
+    acc: &mut [Cx<T>],
+    real: &mut [T],
 ) {
     let (m, n, k) = (s.cin, s.cout, s.fft);
     let f = k * k;
+    let fs = plane.spectrum_len(k);
     for mi in 0..m {
-        let chan = &mut xs[mi * f..(mi + 1) * f];
-        for (p, &v) in chan.iter_mut().zip(&in_tile[mi * f..(mi + 1) * f]) {
-            *p = Complex::new(v, 0.0);
+        let chan = &mut xs[mi * fs..(mi + 1) * fs];
+        let src = &in_tile[mi * f..(mi + 1) * f];
+        match plane {
+            Plane::Full => {
+                for (p, &v) in chan.iter_mut().zip(src) {
+                    *p = Cx::new(T::from_f32(v), T::ZERO);
+                }
+                fft2d_inplace(chan, k);
+            }
+            Plane::Half => {
+                for (p, &v) in real.iter_mut().zip(src) {
+                    *p = T::from_f32(v);
+                }
+                rfft2d_into(real, k, chan);
+            }
         }
-        fft2d_inplace(chan, k);
     }
     for a in acc.iter_mut() {
-        *a = Complex::ZERO;
+        *a = Cx::ZERO;
     }
     // frequency-major MAC: for each (freq, cin), stream the [N] row
-    for fi in 0..f {
+    for fi in 0..fs {
         for mi in 0..m {
-            let x = xs[mi * f + fi];
+            let x = xs[mi * fs + fi];
             let row = (fi * m + mi) * n;
             for ni in 0..n {
-                let (wr, wi) = (w.re[row + ni], w.im[row + ni]);
-                let a = &mut acc[ni * f + fi];
+                let (wr, wi) = (T::from_f32(w.re[row + ni]), T::from_f32(w.im[row + ni]));
+                let a = &mut acc[ni * fs + fi];
                 a.re += x.re * wr - x.im * wi;
                 a.im += x.re * wi + x.im * wr;
             }
         }
     }
     for ni in 0..n {
-        let plane = &mut acc[ni * f..(ni + 1) * f];
-        ifft2d_inplace(plane, k);
-        for (o, c) in out_tile[ni * f..(ni + 1) * f].iter_mut().zip(plane.iter()) {
-            *o = c.re;
+        let spec = &mut acc[ni * fs..(ni + 1) * fs];
+        let dst = &mut out_tile[ni * f..(ni + 1) * f];
+        match plane {
+            Plane::Full => {
+                ifft2d_inplace(spec, k);
+                for (o, c) in dst.iter_mut().zip(spec.iter()) {
+                    *o = c.re.to_f32();
+                }
+            }
+            Plane::Half => {
+                irfft2d_into(spec, k, real);
+                for (o, &v) in dst.iter_mut().zip(real.iter()) {
+                    *o = v.to_f32();
+                }
+            }
         }
     }
 }
@@ -396,28 +501,35 @@ fn conv_tile(
 /// so results match the dense path on identical values to fp round-off of
 /// the elided zero terms, and are bit-identical across `block` sizes and
 /// thread counts.
-fn conv_tiles_sparse(
+fn conv_tiles_sparse<T: Float>(
     in_tiles: &[f32],
     out_chunk: &mut [f32],
     first: usize,
     w: &SparseWeightPlanes,
     s: Shape,
+    plane: Plane,
     block: usize,
 ) {
     let (m, n) = (s.cin, s.cout);
-    let f = s.fft * s.fft;
-    for_sparse_blocks(in_tiles, out_chunk, first, s, block, |xs, acc, b| {
-        // the sparse MAC: only the K²/α stored non-zeros are touched
+    let fs = plane.spectrum_len(s.fft);
+    for_sparse_blocks::<T, _>(in_tiles, out_chunk, first, s, plane, block, |xs, acc, b| {
+        // the sparse MAC: only the stored non-zeros are touched (K²/α of
+        // them, ~half that again in half-plane mode). The weight sits in
+        // registers while the inner loop streams the b resident tiles
+        // unit-stride — a flat FMA chain the autovectorizer can widen.
         for ni in 0..n {
             for mi in 0..m {
                 let (idx, wre, wim) = w.row(ni, mi);
-                for ((&fi, &wr), &wi) in idx.iter().zip(wre).zip(wim) {
+                for ((&fi, &wr32), &wi32) in idx.iter().zip(wre).zip(wim) {
                     let fi = fi as usize;
+                    let (wr, wi) = (T::from_f32(wr32), T::from_f32(wi32));
+                    let x = (mi * fs + fi) * b;
+                    let (xr, xi) = (&xs.re[x..x + b], &xs.im[x..x + b]);
+                    let a = (ni * fs + fi) * b;
+                    let (ar, ai) = (&mut acc.re[a..a + b], &mut acc.im[a..a + b]);
                     for bi in 0..b {
-                        let x = xs[(bi * m + mi) * f + fi];
-                        let a = &mut acc[(bi * n + ni) * f + fi];
-                        a.re += x.re * wr - x.im * wi;
-                        a.im += x.re * wi + x.im * wr;
+                        ar[bi] += xr[bi] * wr - xi[bi] * wi;
+                        ai[bi] += xr[bi] * wi + xi[bi] * wr;
                     }
                 }
             }
@@ -439,17 +551,17 @@ fn conv_tiles_sparse(
 /// Identical f32 products summed in an identical per-slot order, inside the
 /// identical FFT/IFFT block frame ⇒ outputs equal the unscheduled path bit
 /// for bit, for every scheduler, block size, and thread count.
-fn conv_tiles_scheduled(
+fn conv_tiles_scheduled<T: Float>(
     in_tiles: &[f32],
     out_chunk: &mut [f32],
     first: usize,
     bw: &BankedWeights,
     s: Shape,
+    plane: Plane,
     block: usize,
 ) {
-    let (m, n) = (s.cin, s.cout);
-    let f = s.fft * s.fft;
-    for_sparse_blocks(in_tiles, out_chunk, first, s, block, |xs, acc, b| {
+    let fs = plane.spectrum_len(s.fft);
+    for_sparse_blocks::<T, _>(in_tiles, out_chunk, first, s, plane, block, |xs, acc, b| {
         for mi in 0..bw.cin {
             for g in 0..bw.num_groups {
                 let st = &bw.streams[g * bw.cin + mi];
@@ -458,12 +570,15 @@ fn conv_tiles_scheduled(
                         let ni = st.chan[e] as usize;
                         let fi = st.fi[e] as usize;
                         let (bk, sl) = (st.bank[e] as usize, st.slot[e] as usize);
-                        let (wr, wi) = (bw.bank_re[bk][sl], bw.bank_im[bk][sl]);
+                        let (wr, wi) =
+                            (T::from_f32(bw.bank_re[bk][sl]), T::from_f32(bw.bank_im[bk][sl]));
+                        let x = (mi * fs + fi) * b;
+                        let (xr, xi) = (&xs.re[x..x + b], &xs.im[x..x + b]);
+                        let a = (ni * fs + fi) * b;
+                        let (ar, ai) = (&mut acc.re[a..a + b], &mut acc.im[a..a + b]);
                         for bi in 0..b {
-                            let x = xs[(bi * m + mi) * f + fi];
-                            let a = &mut acc[(bi * n + ni) * f + fi];
-                            a.re += x.re * wr - x.im * wi;
-                            a.im += x.re * wi + x.im * wr;
+                            ar[bi] += xr[bi] * wr - xi[bi] * wi;
+                            ai[bi] += xr[bi] * wi + xi[bi] * wr;
                         }
                     }
                 }
@@ -472,29 +587,46 @@ fn conv_tiles_scheduled(
     });
 }
 
+/// Split-complex (SoA) spectra for one resident block, batch axis
+/// innermost: element `(chan, fi)` of resident tile `bi` lives at
+/// `(chan·F' + fi)·b + bi`. Keeping re/im in separate flat arrays makes
+/// the MAC inner loop a pair of unit-stride real FMA streams.
+struct SoaSpectra<T> {
+    re: Vec<T>,
+    im: Vec<T>,
+}
+
 /// Shared block frame of the sparse paths: process the chunk's tiles in
-/// blocks of up to `block` resident spectra — FFT the block's input
-/// channels into `xs`, run `mac(xs, acc, b)` to fill the block's output
-/// spectra, then IFFT into the chunk. Keeping the frame in one place
-/// guarantees the scheduled and unscheduled MACs see byte-identical inputs
-/// and write through identical drains, so the only thing that can differ
-/// between them is the MAC walk itself.
-fn for_sparse_blocks<F>(
+/// blocks of up to `block` resident spectra — (r)FFT the block's input
+/// channels and transpose them into the batch-innermost SoA scratch, run
+/// `mac(xs, acc, b)` to fill the block's output spectra, then inverse-FFT
+/// into the chunk. Keeping the frame in one place guarantees the scheduled
+/// and unscheduled MACs see byte-identical inputs and write through
+/// identical drains, so the only thing that can differ between them is the
+/// MAC walk itself. The SoA transposes copy values bit-for-bit, and the
+/// per-slot contribution order of both MACs is unchanged from the
+/// historical AoS walk — so the (f32, full-plane) outputs are too.
+fn for_sparse_blocks<T: Float, F>(
     in_tiles: &[f32],
     out_chunk: &mut [f32],
     first: usize,
     s: Shape,
+    plane: Plane,
     block: usize,
     mut mac: F,
 ) where
-    F: FnMut(&[Complex], &mut [Complex], usize),
+    F: FnMut(&SoaSpectra<T>, &mut SoaSpectra<T>, usize),
 {
     let (m, n, k) = (s.cin, s.cout, s.fft);
     let f = k * k;
+    let fs = plane.spectrum_len(k);
     let len = out_chunk.len() / (n * f);
     let block = block.clamp(1, len.max(1));
-    let mut xs = vec![Complex::ZERO; block * m * f];
-    let mut acc = vec![Complex::ZERO; block * n * f];
+    let mut xs = SoaSpectra { re: vec![T::ZERO; block * m * fs], im: vec![T::ZERO; block * m * fs] };
+    let mut acc =
+        SoaSpectra { re: vec![T::ZERO; block * n * fs], im: vec![T::ZERO; block * n * fs] };
+    let mut spec = vec![Cx::<T>::ZERO; fs];
+    let mut real = vec![T::ZERO; f];
     let mut start = 0usize;
     while start < len {
         let b = block.min(len - start);
@@ -502,25 +634,54 @@ fn for_sparse_blocks<F>(
             let ti = first + start + bi;
             let src = &in_tiles[ti * m * f..(ti + 1) * m * f];
             for mi in 0..m {
-                let chan = &mut xs[(bi * m + mi) * f..(bi * m + mi + 1) * f];
-                for (p, &v) in chan.iter_mut().zip(&src[mi * f..(mi + 1) * f]) {
-                    *p = Complex::new(v, 0.0);
+                let chan = &src[mi * f..(mi + 1) * f];
+                match plane {
+                    Plane::Full => {
+                        for (p, &v) in spec.iter_mut().zip(chan) {
+                            *p = Cx::new(T::from_f32(v), T::ZERO);
+                        }
+                        fft2d_inplace(&mut spec, k);
+                    }
+                    Plane::Half => {
+                        for (p, &v) in real.iter_mut().zip(chan) {
+                            *p = T::from_f32(v);
+                        }
+                        rfft2d_into(&real, k, &mut spec);
+                    }
                 }
-                fft2d_inplace(chan, k);
+                for (fi, c) in spec.iter().enumerate() {
+                    xs.re[(mi * fs + fi) * b + bi] = c.re;
+                    xs.im[(mi * fs + fi) * b + bi] = c.im;
+                }
             }
         }
-        for a in acc[..b * n * f].iter_mut() {
-            *a = Complex::ZERO;
+        for v in acc.re[..b * n * fs].iter_mut() {
+            *v = T::ZERO;
+        }
+        for v in acc.im[..b * n * fs].iter_mut() {
+            *v = T::ZERO;
         }
         mac(&xs, &mut acc, b);
         for bi in 0..b {
             let ti = start + bi;
             for ni in 0..n {
-                let plane = &mut acc[(bi * n + ni) * f..(bi * n + ni + 1) * f];
-                ifft2d_inplace(plane, k);
+                for (fi, c) in spec.iter_mut().enumerate() {
+                    *c = Cx::new(acc.re[(ni * fs + fi) * b + bi], acc.im[(ni * fs + fi) * b + bi]);
+                }
                 let dst = &mut out_chunk[(ti * n + ni) * f..(ti * n + ni + 1) * f];
-                for (o, c) in dst.iter_mut().zip(plane.iter()) {
-                    *o = c.re;
+                match plane {
+                    Plane::Full => {
+                        ifft2d_inplace(&mut spec, k);
+                        for (o, c) in dst.iter_mut().zip(spec.iter()) {
+                            *o = c.re.to_f32();
+                        }
+                    }
+                    Plane::Half => {
+                        irfft2d_into(&spec, k, &mut real);
+                        for (o, &v) in dst.iter_mut().zip(real.iter()) {
+                            *o = v.to_f32();
+                        }
+                    }
                 }
             }
         }
@@ -545,6 +706,17 @@ impl SpectralBackend for InterpBackend {
         Ok(())
     }
 
+    fn configure_numerics(&mut self, dtype: Dtype, plane: Plane) -> Result<bool> {
+        // weights fold at upload time against the configured plane, so a
+        // mode flip after uploads would silently mix layouts
+        if !self.weights.is_empty() {
+            return Err(err!("configure_numerics must precede weight uploads"));
+        }
+        self.dtype = dtype;
+        self.plane = plane;
+        Ok(true)
+    }
+
     fn upload_weights(&mut self, re: &[f32], im: &[f32], dims: [usize; 3]) -> Result<WeightId> {
         let want = dims[0] * dims[1] * dims[2];
         if re.len() != want || im.len() != want {
@@ -554,8 +726,22 @@ impl SpectralBackend for InterpBackend {
                 im.len()
             ));
         }
-        self.weights
-            .push(WeightStore::Dense(WeightPlanes { re: re.to_vec(), im: im.to_vec(), dims }));
+        // the upload interface always speaks full-plane [K², M, N]; in
+        // half-plane mode the backend conjugate-folds at upload so the MAC
+        // streams only K·(K/2+1) coefficients per (m, n) pair
+        let store = match self.plane {
+            Plane::Full => WeightPlanes { re: re.to_vec(), im: im.to_vec(), dims },
+            Plane::Half => {
+                let fft = fft_from_k2(dims[0])?;
+                let (fre, fim) = fold_freq_major_half(re, im, fft, dims[1], dims[2]);
+                WeightPlanes {
+                    re: fre,
+                    im: fim,
+                    dims: [Plane::Half.spectrum_len(fft), dims[1], dims[2]],
+                }
+            }
+        };
+        self.weights.push(WeightStore::Dense(store));
         Ok(self.weights.len() - 1)
     }
 
@@ -585,7 +771,14 @@ impl SpectralBackend for InterpBackend {
                 }
             }
         }
-        self.weights.push(WeightStore::Sparse(SparseWeightPlanes::from_layer(layer)));
+        let planes = SparseWeightPlanes::from_layer(layer);
+        let planes = match self.plane {
+            Plane::Full => planes,
+            // same fold the engine applies when it builds the layer's
+            // Alg. 2 plan, so plan validation and the MAC agree row for row
+            Plane::Half => planes.fold_half_plane(layer.fft),
+        };
+        self.weights.push(WeightStore::Sparse(planes));
         Ok(self.weights.len() - 1)
     }
 
@@ -682,7 +875,7 @@ impl SpectralBackend for InterpBackend {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::fft::{fft2d, ifft2d, spectral_kernels};
+    use crate::fft::{fft2d, ifft2d, spectral_kernels, Complex};
     use crate::runtime::freq_major_planes;
     use crate::util::check::{assert_allclose, forall};
     use crate::util::rng::Pcg32;
@@ -995,6 +1188,98 @@ mod tests {
         assert!(b.set_schedule(dense, &plan).is_err());
         // and the good plan attaches cleanly, reporting native execution
         assert!(b.set_schedule(wid, &plan).unwrap());
+    }
+
+    #[test]
+    fn half_plane_matches_full_plane_all_paths() {
+        // The half-plane equivalence gate at the backend level, for every
+        // execution path (dense / sparse / both schedulers), a symmetric
+        // and an asymmetric pruning, and both dtypes:
+        //   * f32-half vs f32-full within FFT round-off,
+        //   * f64-half vs f64-full ≤ 1e-12 (the ISSUE pin: at f64 the two
+        //     plane paths differ by ~1e-15 relative before the f32 layer
+        //     boundary, so they round to the same f32 with overwhelming
+        //     probability — this asserts they did),
+        //   * f32 vs the f64 reference to single-precision accuracy.
+        use crate::schedule::SchedulePolicy;
+        use crate::sparse::{prune_magnitude, prune_random};
+        let mut rng = Pcg32::new(51);
+        let (t, m, n, fft) = (5, 3, 4, 8);
+        let e = entry(t, m, n, fft);
+        let tiles = Tensor::randn(&[t, m, fft, fft], &mut rng, 1.0);
+        let layers =
+            [prune_magnitude(n, m, fft, 4, &mut rng), prune_random(n, m, fft, 4, &mut rng)];
+        #[derive(Clone, Copy)]
+        enum Mode {
+            Dense,
+            Sparse,
+            Sched(SchedulePolicy),
+        }
+        for layer in &layers {
+            let (re, im) = freq_major_planes(&layer.to_dense_planes());
+            let planes_full = SparseWeightPlanes::from_layer(layer);
+            let planes_half = planes_full.fold_half_plane(fft);
+            let run = |mode: Mode, dtype: Dtype, plane: Plane, threads: usize| {
+                let mut b = InterpBackend::with_config(threads, dtype, plane);
+                b.prepare("x", &e, Path::new(".")).unwrap();
+                b.set_sparse_dataflow("x", SparseDataflow { tile_block: 3 }).unwrap();
+                let wid = match mode {
+                    Mode::Dense => b.upload_weights(&re, &im, [fft * fft, m, n]).unwrap(),
+                    Mode::Sparse => b.upload_sparse(layer).unwrap(),
+                    Mode::Sched(p) => {
+                        let wid = b.upload_sparse(layer).unwrap();
+                        let src =
+                            if plane == Plane::Half { &planes_half } else { &planes_full };
+                        let plan = LayerSchedule::build(src, 4, 3, 8, p).unwrap();
+                        b.set_schedule(wid, &plan).unwrap();
+                        wid
+                    }
+                };
+                b.run_conv("x", &tiles, wid).unwrap()
+            };
+            for mode in [
+                Mode::Dense,
+                Mode::Sparse,
+                Mode::Sched(SchedulePolicy::ExactCover),
+                Mode::Sched(SchedulePolicy::LowestIndex),
+            ] {
+                let full = run(mode, Dtype::F32, Plane::Full, 1);
+                let half = run(mode, Dtype::F32, Plane::Half, 2);
+                assert_allclose(half.data(), full.data(), 1e-4, 1e-4);
+                let full64 = run(mode, Dtype::F64, Plane::Full, 1);
+                let half64 = run(mode, Dtype::F64, Plane::Half, 2);
+                for (a, b) in full64.data().iter().zip(half64.data()) {
+                    assert!((a - b).abs() <= 1e-12, "f64 half diverged: {a} vs {b}");
+                }
+                assert_allclose(full.data(), full64.data(), 1e-3, 1e-3);
+            }
+            // in half-plane mode the scheduled walk must still be
+            // bit-identical to the unscheduled CSR walk
+            let sp = run(Mode::Sparse, Dtype::F32, Plane::Half, 1);
+            for policy in [SchedulePolicy::ExactCover, SchedulePolicy::LowestIndex] {
+                let sc = run(Mode::Sched(policy), Dtype::F32, Plane::Half, 3);
+                assert_eq!(sp.data(), sc.data(), "{policy:?} diverged on the half-plane");
+            }
+        }
+    }
+
+    #[test]
+    fn numerics_config_guards() {
+        let mut b = InterpBackend::new();
+        b.prepare("x", &entry(1, 1, 1, 8), Path::new(".")).unwrap();
+        assert!(b.configure_numerics(Dtype::F64, Plane::Half).unwrap());
+        let wid = b.upload_weights(&[0.0; 64], &[0.0; 64], [64, 1, 1]).unwrap();
+        // mode is locked once weights exist (they folded at upload)
+        assert!(b.configure_numerics(Dtype::F32, Plane::Full).is_err());
+        // the folded zero planes still execute (to zero output)
+        let mut rng = Pcg32::new(2);
+        let tiles = Tensor::randn(&[1, 1, 8, 8], &mut rng, 1.0);
+        let out = b.run_conv("x", &tiles, wid).unwrap();
+        assert!(out.data().iter().all(|&v| v == 0.0));
+        assert_eq!(fft_from_k2(64).unwrap(), 8);
+        assert_eq!(fft_from_k2(256).unwrap(), 16);
+        assert!(fft_from_k2(32).is_err());
+        assert!(fft_from_k2(63).is_err());
     }
 
     #[test]

@@ -4,6 +4,7 @@
 
 use std::collections::BTreeMap;
 
+use super::Dtype;
 use crate::err;
 use crate::model::Network;
 use crate::util::error::Result;
@@ -53,6 +54,11 @@ pub struct Manifest {
     /// K×K kernel keeps K²/α non-zeros). `1` = dense — also the default
     /// when the field is absent, so pre-α manifests keep parsing.
     pub alpha: usize,
+    /// Accumulation dtype the artifacts default to (`f32` unless the
+    /// manifest says otherwise). Like `alpha`, this only records a
+    /// default — the CLI `--dtype` knob wins when given (see
+    /// [`Manifest::resolve_dtype`]); absent in pre-dtype manifests.
+    pub dtype: Dtype,
     pub variants: BTreeMap<String, VariantEntry>,
     pub executables: BTreeMap<String, ExecutableEntry>,
 }
@@ -145,6 +151,14 @@ impl Manifest {
                 .as_usize()
                 .ok_or_else(|| err!("manifest: invalid 'alpha'"))?,
         };
+        // dtype is optional the same way: absent means f32 (what every
+        // artifact before the precision knob was built as).
+        let dtype = match j.get("dtype") {
+            None => Dtype::F32,
+            Some(v) => Dtype::parse(
+                v.as_str().ok_or_else(|| err!("manifest: invalid 'dtype'"))?,
+            )?,
+        };
         let m = Manifest {
             fft_size: req_usize(&j, "fft_size")?,
             kernel_k: req_usize(&j, "kernel_k")?,
@@ -152,6 +166,7 @@ impl Manifest {
             word_bytes: req_usize(&j, "word_bytes")?,
             hadamard_mode: req_str(&j, "hadamard_mode")?,
             alpha,
+            dtype,
             variants,
             executables,
         };
@@ -218,6 +233,7 @@ impl Manifest {
             ("word_bytes", num(self.word_bytes as f64)),
             ("hadamard_mode", s(&self.hadamard_mode)),
             ("alpha", num(self.alpha as f64)),
+            ("dtype", s(self.dtype.label())),
             ("variants", variants),
             ("executables", executables),
         ])
@@ -276,6 +292,13 @@ impl Manifest {
         } else {
             cli_alpha
         }
+    }
+
+    /// Resolve a CLI-style dtype knob against this manifest: `None` means
+    /// "use the manifest's recorded default", `Some` wins as given — the
+    /// same sentinel semantics as [`Manifest::resolve_alpha`].
+    pub fn resolve_dtype(&self, cli_dtype: Option<Dtype>) -> Dtype {
+        cli_dtype.unwrap_or(self.dtype)
     }
 
     pub fn variant(&self, name: &str) -> Result<&VariantEntry> {
@@ -347,6 +370,7 @@ impl Manifest {
             // dense by default — the α knob is per engine (WeightMode), the
             // manifest field only records what artifacts were built for
             alpha: 1,
+            dtype: Dtype::F32,
             variants,
             executables,
         };
@@ -427,12 +451,36 @@ mod tests {
     }
 
     #[test]
+    fn dtype_absent_defaults_to_f32_and_parses() {
+        // pre-dtype manifests (like `sample()`) keep parsing as f32
+        let m = Manifest::parse(&sample()).unwrap();
+        assert_eq!(m.dtype, Dtype::F32);
+        let with =
+            sample().replace("\"word_bytes\": 2,", "\"word_bytes\": 2, \"dtype\": \"f64\",");
+        assert_eq!(Manifest::parse(&with).unwrap().dtype, Dtype::F64);
+        let junk =
+            sample().replace("\"word_bytes\": 2,", "\"word_bytes\": 2, \"dtype\": \"f16\",");
+        assert!(Manifest::parse(&junk).is_err());
+    }
+
+    #[test]
+    fn dtype_resolution_sentinel() {
+        let mut m = Manifest::parse(&sample()).unwrap();
+        assert_eq!(m.resolve_dtype(None), Dtype::F32);
+        assert_eq!(m.resolve_dtype(Some(Dtype::F64)), Dtype::F64);
+        m.dtype = Dtype::F64;
+        assert_eq!(m.resolve_dtype(None), Dtype::F64);
+        assert_eq!(m.resolve_dtype(Some(Dtype::F32)), Dtype::F32);
+    }
+
+    #[test]
     fn json_roundtrip_is_exact() {
         // parse(to_json(m)) == m for both a hand-written manifest with α
         // and the synthesized builtin (α = 1, three variants, dedup'd
         // executables) — pins the full schema, not just the new field.
         let mut hand = Manifest::parse(&sample()).unwrap();
         hand.alpha = 8;
+        hand.dtype = Dtype::F64;
         assert_eq!(Manifest::parse(&hand.to_json()).unwrap(), hand);
         let builtin = Manifest::builtin();
         assert_eq!(Manifest::parse(&builtin.to_json()).unwrap(), builtin);

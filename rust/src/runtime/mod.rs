@@ -51,6 +51,78 @@ use crate::util::error::{Context, Result};
 /// Handle to one layer's uploaded weight planes (backend-owned storage).
 pub type WeightId = usize;
 
+/// Scalar precision the backend's spectral pipeline computes in.
+///
+/// Weights and layer boundaries (tile tensors, bias, ReLU) are f32 at rest
+/// in every mode; the dtype selects the arithmetic of the FFT → MAC → IFFT
+/// core. `F32` is the historical default (bit-identical to pre-dtype
+/// builds); `F64` is the high-precision reference the equivalence pins
+/// compare against.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Dtype {
+    #[default]
+    F32,
+    F64,
+}
+
+impl Dtype {
+    /// CLI/wire label (`"f32"` / `"f64"`).
+    pub fn label(self) -> &'static str {
+        match self {
+            Dtype::F32 => "f32",
+            Dtype::F64 => "f64",
+        }
+    }
+
+    /// Parse a CLI/manifest label.
+    pub fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "f64" => Ok(Dtype::F64),
+            _ => Err(err!("unknown dtype {s:?} (expected \"f32\" or \"f64\")")),
+        }
+    }
+}
+
+/// Spectral storage plane: the full K×K frequency plane, or the rfft2
+/// half-plane `K×(K/2+1)` that exploits the Hermitian symmetry of real
+/// tiles (see [`crate::fft::rfft2d`] and
+/// [`SparseWeightPlanes::fold_half_plane`]). `Half` halves FFT work, the
+/// weight store, and the scheduled MAC's bank reads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Plane {
+    #[default]
+    Full,
+    Half,
+}
+
+impl Plane {
+    /// CLI/wire label (`"full"` / `"half"`).
+    pub fn label(self) -> &'static str {
+        match self {
+            Plane::Full => "full",
+            Plane::Half => "half",
+        }
+    }
+
+    /// Parse a CLI label.
+    pub fn parse(s: &str) -> Result<Plane> {
+        match s {
+            "full" => Ok(Plane::Full),
+            "half" => Ok(Plane::Half),
+            _ => Err(err!("unknown plane {s:?} (expected \"full\" or \"half\")")),
+        }
+    }
+
+    /// Spectral coefficients per `fft×fft` tile in this plane.
+    pub fn spectrum_len(self, fft: usize) -> usize {
+        match self {
+            Plane::Full => fft * fft,
+            Plane::Half => crate::fft::half_plane_len(fft),
+        }
+    }
+}
+
 /// The spectral-conv execution contract.
 ///
 /// An implementation owns per-shape executable state (keyed by manifest
@@ -84,6 +156,18 @@ pub trait SpectralBackend {
     /// densify have no kernel stream to block.
     fn set_sparse_dataflow(&mut self, _file: &str, _flow: SparseDataflow) -> Result<()> {
         Ok(())
+    }
+
+    /// Select the numeric mode for every subsequent upload/execution:
+    /// scalar precision ([`Dtype`]) and spectral storage plane
+    /// ([`Plane`]). Must be called before weights are uploaded. Returns
+    /// whether the backend honours the request; the default accepts only
+    /// the historical mode (f32 arithmetic over the full plane), so
+    /// backends without a dtype axis (PJRT's AOT-compiled executables)
+    /// decline non-default modes instead of silently computing something
+    /// else.
+    fn configure_numerics(&mut self, dtype: Dtype, plane: Plane) -> Result<bool> {
+        Ok(dtype == Dtype::F32 && plane == Plane::Full)
     }
 
     /// Attach an Alg. 2 conflict-free access plan to a sparse weight
@@ -201,6 +285,47 @@ pub fn planes_from_freq_major(re: &[f32], im: &[f32], n: usize, m: usize, fft: u
     out
 }
 
+/// Fold dense frequency-major planes `[K², M, N]` onto the rfft2
+/// half-plane `[K·(K/2+1), M, N]` — the dense-path analogue of
+/// [`SparseWeightPlanes::fold_half_plane`], applying the same rules slot
+/// for slot (interior columns carry 1/2 and absorb their conjugated
+/// mirror; columns 0 and K/2 copy through unchanged), so the dense and
+/// sparse half-plane paths see numerically identical weights.
+pub fn fold_freq_major_half(
+    re: &[f32],
+    im: &[f32],
+    fft: usize,
+    m: usize,
+    n: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let f = fft * fft;
+    assert_eq!(re.len(), f * m * n, "freq-major length mismatch");
+    assert_eq!(im.len(), f * m * n, "freq-major length mismatch");
+    assert!(fft.is_power_of_two(), "FFT size {fft} must be a power of two");
+    let hc = fft / 2 + 1;
+    let mut ore = vec![0.0f32; fft * hc * m * n];
+    let mut oim = vec![0.0f32; fft * hc * m * n];
+    let mn = m * n;
+    for r in 0..fft {
+        for c in 0..fft {
+            let src = (r * fft + c) * mn;
+            let (dst, scale, conj) = if c == 0 || c == fft / 2 {
+                ((r * hc + c) * mn, 1.0f32, false)
+            } else if c < fft / 2 {
+                ((r * hc + c) * mn, 0.5, false)
+            } else {
+                ((((fft - r) % fft) * hc + (fft - c)) * mn, 0.5, true)
+            };
+            for j in 0..mn {
+                ore[dst + j] += scale * re[src + j];
+                let v = scale * im[src + j];
+                oim[dst + j] += if conj { -v } else { v };
+            }
+        }
+    }
+    (ore, oim)
+}
+
 /// The runtime: a backend + the manifest describing the model variants.
 ///
 /// When `artifacts/manifest.json` exists it is parsed and validated;
@@ -285,6 +410,21 @@ impl Runtime {
         self.backend.set_sparse_dataflow(file, flow)
     }
 
+    /// Select the backend's numeric mode (must precede weight uploads);
+    /// errors if the backend declines a non-default mode rather than
+    /// silently falling back.
+    pub fn configure_numerics(&mut self, dtype: Dtype, plane: Plane) -> Result<()> {
+        if self.backend.configure_numerics(dtype, plane)? {
+            return Ok(());
+        }
+        Err(err!(
+            "backend {} does not support dtype={} plane={}",
+            self.backend.name(),
+            dtype.label(),
+            plane.label()
+        ))
+    }
+
     /// Attach an Alg. 2 access plan to a sparse upload. Returns whether the
     /// backend will actually execute it (see
     /// [`SpectralBackend::set_schedule`]).
@@ -361,6 +501,71 @@ mod tests {
             let back = planes_from_freq_major(&re, &im, n, m, fft);
             assert_eq!(planes, back);
         });
+    }
+
+    #[test]
+    fn dtype_plane_labels_roundtrip() {
+        for d in [Dtype::F32, Dtype::F64] {
+            assert_eq!(Dtype::parse(d.label()).unwrap(), d);
+        }
+        for p in [Plane::Full, Plane::Half] {
+            assert_eq!(Plane::parse(p.label()).unwrap(), p);
+        }
+        assert!(Dtype::parse("f16").is_err());
+        assert!(Plane::parse("quarter").is_err());
+        assert_eq!(Dtype::default(), Dtype::F32);
+        assert_eq!(Plane::default(), Plane::Full);
+        assert_eq!(Plane::Full.spectrum_len(8), 64);
+        assert_eq!(Plane::Half.spectrum_len(8), 40);
+    }
+
+    #[test]
+    fn configure_numerics_defaults_accept_only_f32_full() {
+        let mut rt = Runtime::open("definitely-not-a-dir").unwrap();
+        // interp honours every mode
+        for d in [Dtype::F32, Dtype::F64] {
+            for p in [Plane::Full, Plane::Half] {
+                rt.configure_numerics(d, p).unwrap();
+            }
+        }
+        // a backend on the trait defaults declines non-default modes
+        struct Densify;
+        impl SpectralBackend for Densify {
+            fn name(&self) -> String {
+                "densify".into()
+            }
+            fn prepare(&mut self, _: &str, _: &ExecutableEntry, _: &Path) -> Result<()> {
+                Ok(())
+            }
+            fn upload_weights(&mut self, _: &[f32], _: &[f32], _: [usize; 3]) -> Result<WeightId> {
+                Ok(0)
+            }
+            fn run_conv(&mut self, _: &str, _: &Tensor, _: WeightId) -> Result<Tensor> {
+                Err(err!("unused"))
+            }
+            fn prepared(&self) -> usize {
+                0
+            }
+        }
+        let mut b = Densify;
+        assert!(b.configure_numerics(Dtype::F32, Plane::Full).unwrap());
+        assert!(!b.configure_numerics(Dtype::F64, Plane::Full).unwrap());
+        assert!(!b.configure_numerics(Dtype::F32, Plane::Half).unwrap());
+    }
+
+    #[test]
+    fn dense_fold_matches_sparse_fold() {
+        // the dense upload path and the CSR fold must agree value for
+        // value — the α=1 legs of the half-plane equivalence matrix ride
+        // on this
+        let mut rng = Pcg32::new(7);
+        let l = crate::sparse::prune_magnitude(5, 3, 8, 4, &mut rng);
+        let w = SparseWeightPlanes::from_layer(&l);
+        let (re, im) = freq_major_planes(&l.to_dense_planes());
+        let (fre, fim) = fold_freq_major_half(&re, &im, 8, 3, 5);
+        let (sre, sim) = w.fold_half_plane(8).to_freq_major();
+        assert_eq!(fre, sre);
+        assert_eq!(fim, sim);
     }
 
     #[test]

@@ -103,6 +103,69 @@ impl SparseWeightPlanes {
             .collect()
     }
 
+    /// Fold the full-plane CSR onto the rfft2 half-plane: `[K², M, N]` →
+    /// `[K·(K/2+1), M, N]`, indexed `r·(K/2+1) + c` for `c ≤ K/2`.
+    ///
+    /// For Hermitian input spectra `X` (any real tile's), the half-plane
+    /// MAC `irfft2d(Σ_m X_half·V)` reproduces `Re(ifft2d(Σ_m X_full·W))`
+    /// exactly — even for non-Hermitian `W` (e.g. `prune_random`'s
+    /// asymmetric index sets) — when `W` folds to `V` as:
+    ///
+    /// * interior columns `1 ≤ c ≤ K/2-1`: `V[r,c] += W[r,c]/2` and the
+    ///   mirror `V[r,c] += conj(W[(K-r)%K, K-c])/2` (each side carries the
+    ///   1/2, so a symmetric pair merges back to full weight and a lone
+    ///   entry contributes its half from both spectral copies of `X`);
+    /// * columns `c ∈ {0, K/2}`: copied unchanged — their mirrors live at
+    ///   other *rows inside* the half-plane, so nothing folds.
+    ///
+    /// Entries whose mirror is also stored merge (sum) into one slot —
+    /// that merge is where the weight stream halves. Deterministic: output
+    /// rows are sorted by folded index, ties merged in index order.
+    pub fn fold_half_plane(&self, fft: usize) -> SparseWeightPlanes {
+        let [f, m, n] = self.dims;
+        assert_eq!(f, fft * fft, "dims[0] = {f} must be fft² = {}", fft * fft);
+        assert!(fft.is_power_of_two(), "FFT size {fft} must be a power of two");
+        let hc = fft / 2 + 1;
+        let mut row_ptr = Vec::with_capacity(n * m + 1);
+        row_ptr.push(0usize);
+        let mut idx = Vec::with_capacity(self.nnz());
+        let mut re = Vec::with_capacity(self.nnz());
+        let mut im = Vec::with_capacity(self.nnz());
+        let mut scratch: Vec<(u32, f32, f32)> = Vec::new();
+        for ni in 0..n {
+            for mi in 0..m {
+                let (fidx, fre, fim) = self.row(ni, mi);
+                scratch.clear();
+                for ((&fi, &vr), &vi) in fidx.iter().zip(fre).zip(fim) {
+                    let (r, c) = (fi as usize / fft, fi as usize % fft);
+                    if c == 0 || c == fft / 2 {
+                        scratch.push(((r * hc + c) as u32, vr, vi));
+                    } else if c < fft / 2 {
+                        scratch.push(((r * hc + c) as u32, 0.5 * vr, 0.5 * vi));
+                    } else {
+                        let (rr, cc) = ((fft - r) % fft, fft - c);
+                        scratch.push(((rr * hc + cc) as u32, 0.5 * vr, -(0.5 * vi)));
+                    }
+                }
+                scratch.sort_by_key(|e| e.0);
+                let row_start = idx.len();
+                for &(fi, vr, vi) in &scratch {
+                    if idx.len() > row_start && *idx.last().unwrap() == fi {
+                        let j = re.len() - 1;
+                        re[j] += vr;
+                        im[j] += vi;
+                    } else {
+                        idx.push(fi);
+                        re.push(vr);
+                        im.push(vi);
+                    }
+                }
+                row_ptr.push(idx.len());
+            }
+        }
+        SparseWeightPlanes { dims: [fft * hc, m, n], alpha: self.alpha, row_ptr, idx, re, im }
+    }
+
     /// Densify back to the frequency-major `[F, M, N]` (re, im) layout —
     /// the verification bridge to the dense path (pruned slots are explicit
     /// zeros, exactly what [`SparseLayer::to_dense_planes`] +
@@ -217,6 +280,119 @@ mod tests {
         }
         // ragged last group: 20 rows over n_par=8 ⇒ sizes 8, 8, 4
         assert_eq!(w.group_indices(2, 8, 0).len(), 4);
+    }
+
+    #[test]
+    fn fold_rules_on_handmade_kernel() {
+        use crate::sparse::{SparseKernel, SparseLayer};
+        // one 8×8 kernel with entries covering every fold rule:
+        //   (0,0) DC — copied unchanged
+        //   (3,4) Nyquist column — copied unchanged
+        //   (1,2) + mirror (7,6) — a symmetric pair, merges to full weight
+        //   (2,3) lone interior entry — survives at half weight
+        //   (5,7) lone interior mirror-side entry — folds to (3,1), conj/2
+        let fft = 8usize;
+        let at = |r: usize, c: usize| (r * fft + c) as u16;
+        let k = SparseKernel {
+            indices: vec![at(0, 0), at(1, 2), at(2, 3), at(3, 4), at(5, 7), at(7, 6)],
+            values: vec![
+                (1.0, 0.5),
+                (2.0, -1.0),
+                (4.0, 0.25),
+                (3.0, 1.5),
+                (6.0, -2.0),
+                (2.0, 1.0),
+            ],
+        };
+        let l = SparseLayer { cout: 1, cin: 1, fft, kernels: vec![k], alpha: 4 };
+        let v = SparseWeightPlanes::from_layer(&l).fold_half_plane(fft);
+        assert_eq!(v.dims, [40, 1, 1]);
+        let (idx, re, im) = v.row(0, 0);
+        let hc = fft / 2 + 1;
+        let hat = |r: usize, c: usize| (r * hc + c) as u32;
+        // folded slots, sorted: (0,0), (1,2), (2,3), (3,1)←(5,7), (3,4)
+        assert_eq!(idx, &[hat(0, 0), hat(1, 2), hat(2, 3), hat(3, 1), hat(3, 4)]);
+        assert_eq!((re[0], im[0]), (1.0, 0.5)); // DC unchanged
+        // (1,2): own half 1.0−0.5i plus mirror conj((2.0,1.0))/2 = 1.0−0.5i
+        assert_eq!((re[1], im[1]), (2.0, -1.0));
+        assert_eq!((re[2], im[2]), (2.0, 0.125)); // lone interior: /2
+        assert_eq!((re[3], im[3]), (3.0, 1.0)); // conj((6,-2))/2
+        assert_eq!((re[4], im[4]), (3.0, 1.5)); // Nyquist column unchanged
+    }
+
+    #[test]
+    fn fold_halves_the_weight_stream() {
+        let mut rng = Pcg32::new(17);
+        let l = prune_magnitude(8, 4, 8, 4, &mut rng);
+        let w = SparseWeightPlanes::from_layer(&l);
+        let v = w.fold_half_plane(8);
+        // merging can at best halve, and the edge columns never merge
+        assert!(v.nnz() >= w.nnz() / 2, "{} vs {}", v.nnz(), w.nnz());
+        assert!(v.nnz() < w.nnz(), "{} vs {}", v.nnz(), w.nnz());
+        assert_eq!(v.alpha, w.alpha);
+        // schedule adapters keep working on the folded layout
+        assert_eq!(v.num_groups(4), 2);
+        for g in 0..2 {
+            for m in 0..4 {
+                for row in v.group_indices(g, 4, m) {
+                    for fi in row {
+                        assert!((fi as usize) < 40);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn folded_half_plane_reproduces_full_plane_conv() {
+        // The identity the half-plane MAC stands on, for both a
+        // Hermitian-symmetric pruning (magnitude) and an asymmetric one
+        // (random): Re(ifft2d(Σ_m X·W)) == irfft2d(Σ_m X_half·V).
+        use crate::fft::{fft2d, ifft2d, irfft2d, rfft2d, Complex};
+        let mut rng = Pcg32::new(21);
+        let layers =
+            [prune_magnitude(4, 3, 8, 4, &mut rng), prune_random(4, 3, 8, 4, &mut rng)];
+        for l in &layers {
+            let fft = 8usize;
+            let hc = fft / 2 + 1;
+            let w = SparseWeightPlanes::from_layer(l);
+            let v = w.fold_half_plane(fft);
+            let tiles: Vec<Vec<f32>> = (0..3)
+                .map(|_| (0..fft * fft).map(|_| rng.normal()).collect())
+                .collect();
+            let full: Vec<Vec<Complex>> = tiles
+                .iter()
+                .map(|t| {
+                    let c: Vec<Complex> =
+                        t.iter().map(|&x| Complex::new(x, 0.0)).collect();
+                    fft2d(&c, fft)
+                })
+                .collect();
+            let half: Vec<Vec<Complex>> = tiles.iter().map(|t| rfft2d(t, fft)).collect();
+            for ni in 0..4 {
+                let mut acc_full = vec![Complex::ZERO; fft * fft];
+                let mut acc_half = vec![Complex::ZERO; fft * hc];
+                for mi in 0..3 {
+                    let (idx, re, im) = w.row(ni, mi);
+                    for j in 0..idx.len() {
+                        let f = idx[j] as usize;
+                        let p = full[mi][f].mul(Complex::new(re[j], im[j]));
+                        acc_full[f] = acc_full[f].add(p);
+                    }
+                    let (idx, re, im) = v.row(ni, mi);
+                    for j in 0..idx.len() {
+                        let f = idx[j] as usize;
+                        let p = half[mi][f].mul(Complex::new(re[j], im[j]));
+                        acc_half[f] = acc_half[f].add(p);
+                    }
+                }
+                let out_full = ifft2d(&acc_full, fft);
+                let out_half = irfft2d(&acc_half, fft);
+                for (a, &b) in out_full.iter().zip(&out_half) {
+                    assert!((a.re - b).abs() < 1e-4, "{} vs {}", a.re, b);
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,128 @@
+//! Integration: half-plane (rfft2) spectral storage and the `--dtype`
+//! precision modes at engine level — the PR's acceptance matrix. The
+//! f64 half-plane forward must match the f64 full-plane forward to
+//! ≤1e-12 (the conjugate fold is algebraically exact; any residual is
+//! final-rounding noise), and the f32 fast path must stay within the
+//! documented 2e-3 of the f64 reference, across α × scheduler × batch.
+
+use spectral_flow::coordinator::{EngineOptions, InferenceEngine, WeightMode};
+use spectral_flow::runtime::{Dtype, Plane};
+use spectral_flow::schedule::SchedulePolicy;
+
+fn artifacts_dir() -> String {
+    concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").into()
+}
+
+/// Forward `batch` synthetic images through the demo variant at the given
+/// numerics mode; returns one logits vector per image.
+fn forward_with(
+    dtype: Option<Dtype>,
+    plane: Plane,
+    alpha: usize,
+    policy: SchedulePolicy,
+    batch: usize,
+) -> Vec<Vec<f32>> {
+    let mut e = InferenceEngine::with_options(
+        &artifacts_dir(),
+        "demo",
+        WeightMode::from_alpha(alpha),
+        7,
+        EngineOptions { scheduler: policy, dtype, plane, ..EngineOptions::default() },
+    )
+    .expect("engine builds");
+    let imgs: Vec<_> = (0..batch).map(|s| e.synthetic_image(s as u64 + 1)).collect();
+    e.forward_batch(&imgs).expect("forward")
+}
+
+#[test]
+fn f64_half_plane_matches_f64_full_plane_to_1e12() {
+    // The tentpole equivalence gate: folding conjugate-symmetric non-zeros
+    // into the K·(K/2+1) half-plane changes the storage and the cycle-sets
+    // but not the arithmetic result, across every execution mode.
+    for alpha in [1usize, 4] {
+        let policies: &[SchedulePolicy] = if alpha == 1 {
+            &[SchedulePolicy::Off]
+        } else {
+            &[SchedulePolicy::Off, SchedulePolicy::ExactCover, SchedulePolicy::LowestIndex]
+        };
+        for &policy in policies {
+            for batch in [1usize, 8] {
+                let full = forward_with(Some(Dtype::F64), Plane::Full, alpha, policy, batch);
+                let half = forward_with(Some(Dtype::F64), Plane::Half, alpha, policy, batch);
+                assert_eq!(full.len(), half.len());
+                for (bi, (f, h)) in full.iter().zip(&half).enumerate() {
+                    for (i, (a, b)) in f.iter().zip(h).enumerate() {
+                        assert!(
+                            (a - b).abs() <= 1e-12,
+                            "α={alpha} {policy:?} batch={batch}: image {bi} logit {i} \
+                             half-plane diverged ({a} vs {b})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn f32_modes_match_f64_reference_within_tolerance() {
+    // The precision gate: f32 accumulation (full or half plane) stays
+    // within 2e-3 of the f64 full-plane reference, and the two f32 planes
+    // agree with each other to 1e-4 — same numbers the backend-level
+    // tests pin, revalidated through the whole engine stack.
+    for batch in [1usize, 8] {
+        let policy = SchedulePolicy::ExactCover;
+        let want = forward_with(Some(Dtype::F64), Plane::Full, 4, policy, batch);
+        let f32_full = forward_with(Some(Dtype::F32), Plane::Full, 4, policy, batch);
+        let f32_half = forward_with(None, Plane::Half, 4, policy, batch);
+        for (bi, ((w, gf), gh)) in want.iter().zip(&f32_full).zip(&f32_half).enumerate() {
+            for i in 0..w.len() {
+                assert!(
+                    (gf[i] - w[i]).abs() < 2e-3,
+                    "batch={batch} image {bi} logit {i}: f32-full {} vs f64 {}",
+                    gf[i],
+                    w[i]
+                );
+                assert!(
+                    (gh[i] - w[i]).abs() < 2e-3,
+                    "batch={batch} image {bi} logit {i}: f32-half {} vs f64 {}",
+                    gh[i],
+                    w[i]
+                );
+                assert!(
+                    (gh[i] - gf[i]).abs() < 1e-4,
+                    "batch={batch} image {bi} logit {i}: f32 half vs full ({} vs {})",
+                    gh[i],
+                    gf[i]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn dtype_defaults_resolve_from_manifest() {
+    // `dtype: None` is the `--dtype` unset sentinel: the engine defers to
+    // the manifest's recorded default (f32 for the shipped artifacts),
+    // mirroring how `--alpha 0` defers to the manifest's alpha.
+    let e = InferenceEngine::with_options(
+        &artifacts_dir(),
+        "demo",
+        WeightMode::from_alpha(4),
+        7,
+        EngineOptions::default(),
+    )
+    .expect("engine builds");
+    assert_eq!(e.dtype(), Dtype::F32);
+    assert_eq!(e.plane(), Plane::Full);
+    let e = InferenceEngine::with_options(
+        &artifacts_dir(),
+        "demo",
+        WeightMode::from_alpha(4),
+        7,
+        EngineOptions { dtype: Some(Dtype::F64), plane: Plane::Half, ..EngineOptions::default() },
+    )
+    .expect("engine builds");
+    assert_eq!(e.dtype(), Dtype::F64);
+    assert_eq!(e.plane(), Plane::Half);
+}

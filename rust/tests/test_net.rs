@@ -9,6 +9,7 @@ use std::time::Duration;
 use spectral_flow::coordinator::{BatcherConfig, Server, ServerConfig, WeightMode};
 use spectral_flow::net::{http, proto, HttpConn, HttpFrontend, HttpLimits, NetConfig};
 use spectral_flow::net::{loadgen, LoadGenConfig, LoadMode};
+use spectral_flow::runtime::{Dtype, Plane};
 use spectral_flow::schedule::SchedulePolicy;
 use spectral_flow::tensor::Tensor;
 use spectral_flow::util::json::Json;
@@ -292,6 +293,56 @@ fn open_loop_measures_from_scheduled_arrival() {
     assert_eq!(report.ok, 10);
     // ~10 requests at 50/s arrive over ≥180ms regardless of service time
     assert!(report.elapsed >= Duration::from_millis(150), "{:?}", report.elapsed);
+    frontend.shutdown().expect("shutdown");
+}
+
+#[test]
+fn numerics_modes_agree_over_the_wire() {
+    // Reference leg: f64 full-plane. The reply and the metrics snapshot
+    // both name the numerics mode the pool runs at.
+    let server = Server::start(ServerConfig {
+        dtype: Some(Dtype::F64),
+        ..demo_config(4, SchedulePolicy::ExactCover)
+    })
+    .expect("server starts");
+    let frontend = HttpFrontend::start(server, NetConfig { dtype: Dtype::F64, ..demo_net() })
+        .expect("frontend binds");
+    let addr = frontend.local_addr();
+    let (status, resp) = roundtrip(addr, "POST", "/infer", b"{\"seed\":3}");
+    assert_eq!(status, 200, "{:?}", String::from_utf8_lossy(&resp));
+    let j = parse_body(&resp);
+    assert_eq!(j.get("dtype").and_then(Json::as_str), Some("f64"));
+    assert_eq!(j.get("plane").and_then(Json::as_str), Some("full"));
+    let want = proto::logits_from_json(&j).expect("logits");
+    let (status, resp) = roundtrip(addr, "GET", "/metrics", b"");
+    assert_eq!(status, 200);
+    let m = parse_body(&resp);
+    assert_eq!(m.get("dtype").and_then(Json::as_str), Some("f64"));
+    assert_eq!(m.get("plane").and_then(Json::as_str), Some("full"));
+    frontend.shutdown().expect("shutdown");
+
+    // Fast-path leg: f32 on the rfft2 half-plane — the production mode —
+    // stays within the documented 2e-3 of the f64 reference over the wire.
+    let server = Server::start(ServerConfig {
+        plane: Plane::Half,
+        ..demo_config(4, SchedulePolicy::ExactCover)
+    })
+    .expect("server starts");
+    let frontend = HttpFrontend::start(server, NetConfig { plane: Plane::Half, ..demo_net() })
+        .expect("frontend binds");
+    let (status, resp) = roundtrip(frontend.local_addr(), "POST", "/infer", b"{\"seed\":3}");
+    assert_eq!(status, 200, "{:?}", String::from_utf8_lossy(&resp));
+    let j = parse_body(&resp);
+    assert_eq!(j.get("dtype").and_then(Json::as_str), Some("f32"));
+    assert_eq!(j.get("plane").and_then(Json::as_str), Some("half"));
+    let got = proto::logits_from_json(&j).expect("logits");
+    assert_eq!(got.len(), want.len());
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert!(
+            (g - w).abs() < 2e-3,
+            "logit {i}: f32-half {g} vs f64-full {w} diverged over the wire"
+        );
+    }
     frontend.shutdown().expect("shutdown");
 }
 

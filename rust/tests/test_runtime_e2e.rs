@@ -247,6 +247,7 @@ fn forward_batch_bit_identical_to_serial_forwards() {
                         backend: BackendKind::Interp { threads },
                         scheduler: policy,
                         plan_batch,
+                        ..EngineOptions::default()
                     },
                 )
                 .unwrap();
