@@ -1,0 +1,78 @@
+//! ResNet-18 residual graphs through the activation arena.
+//!
+//! The paper's dataflow assumes a straight-line VGG forward — one live
+//! activation between layers. This example runs the `resnet18` preset
+//! (CIFAR-scale widths, 8 shortcut adds) end to end and shows what the
+//! lifetime-based arena buys: shortcut tensors stay resident in their own
+//! slot across the block (never copied), everything else ping-pongs
+//! through reused slots, and peak activation memory lands far below the
+//! one-buffer-per-tensor sum.
+//!
+//! Runs fully offline on the default `interp` backend:
+//!
+//! ```bash
+//! cargo run --release --example resnet18_arena
+//! ```
+
+use spectral_flow::coordinator::{EngineOptions, InferenceEngine, WeightMode};
+use spectral_flow::util::error::Result;
+
+fn main() -> Result<()> {
+    println!("spectral-flow resnet18 arena");
+    println!("============================\n");
+
+    // 1. Build the residual engine. The arena plan is computed once here —
+    //    last-use analysis over the graph, then a linear scan into slots.
+    let t0 = std::time::Instant::now();
+    let mut engine =
+        InferenceEngine::new("artifacts", "resnet18", WeightMode::Pruned { alpha: 4 }, 42)?;
+    let plan = engine.arena().clone();
+    println!(
+        "engine up ({} convs, {} graph nodes, backend {}) in {:?}",
+        engine.variant.layers.len(),
+        plan.steps.len(),
+        engine.backend_name(),
+        t0.elapsed()
+    );
+
+    // 2. The arena plan: 29 tensors share 3 slots — one for the current
+    //    input, one for the current output, one pinning the live shortcut.
+    let am = engine.arena_metrics().clone();
+    println!("{}", am.report());
+    assert!(am.peak_activation_bytes < am.no_reuse_bytes, "reuse must beat flat allocation");
+    println!(
+        "slot reuse cuts peak activation memory {:.1}x vs one-buffer-per-tensor ✓",
+        am.no_reuse_bytes as f64 / am.peak_activation_bytes as f64
+    );
+
+    // 3. Forward a single image and a batch through the graph executor.
+    let img = engine.synthetic_image(1);
+    let t1 = std::time::Instant::now();
+    let logits = engine.forward(&img)?;
+    println!("\nforward(resnet18 32x32) in {:?} → {} logits", t1.elapsed(), logits.len());
+    let batch: Vec<_> = (1u64..=4).map(|s| engine.synthetic_image(s)).collect();
+    let out = engine.forward_batch(&batch)?;
+    assert_eq!(out[0], logits, "batch lane 0 must match the single forward");
+    println!("forward_batch(B=4) lane 0 == single forward, bit-for-bit ✓");
+
+    // 4. Safety check the property tests pin: slot reuse must be purely an
+    //    allocation concern. Disable it (every tensor gets its own slot)
+    //    and the logits must not move by a single bit.
+    let mut flat = InferenceEngine::with_options(
+        "artifacts",
+        "resnet18",
+        WeightMode::Pruned { alpha: 4 },
+        42,
+        EngineOptions { arena_reuse: false, ..EngineOptions::default() },
+    )?;
+    let logits_flat = flat.forward(&img)?;
+    assert_eq!(logits, logits_flat, "arena reuse changed the numbers");
+    println!(
+        "arena reuse ({} slots) == no-reuse ({} slots), bit-for-bit ✓",
+        am.slots,
+        flat.arena_metrics().slots
+    );
+
+    println!("\nresnet18 arena OK");
+    Ok(())
+}

@@ -80,6 +80,8 @@ def build(out_dir: str, mode: str, only=None, verbose: bool = True) -> dict:
             "fc": list(var.fc),
             "layers": [],
         }
+        if var.graph:  # omitted for chain variants: pre-graph schema
+            vman["graph"] = [g.to_json() for g in var.graph]
         for lyr in var.layers:
             key = lyr.shape_key()
             fname = shape_file(*key, M.FFT_SIZE)

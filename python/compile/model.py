@@ -164,12 +164,37 @@ class ConvLayer:
 
 
 @dataclasses.dataclass(frozen=True)
+class GraphOp:
+    """One activation-DAG node (mirrors Rust ``model::GraphOp``).
+
+    Tensor ids index the value stream: id 0 is the network input, node ``i``
+    produces tensor ``i + 1``. ``op`` is one of ``conv`` (fields ``conv``,
+    ``input``), ``add`` or ``concat`` (fields ``a``, ``b``).
+    """
+    op: str
+    conv: int = 0
+    input: int = 0
+    a: int = 0
+    b: int = 0
+
+    def to_json(self) -> Dict[str, object]:
+        if self.op == "conv":
+            return {"op": "conv", "conv": self.conv, "input": self.input}
+        if self.op in ("add", "concat"):
+            return {"op": self.op, "a": self.a, "b": self.b}
+        raise ValueError(f"unknown graph op {self.op!r}")
+
+
+@dataclasses.dataclass(frozen=True)
 class Variant:
     name: str
     input_hw: int
     input_c: int
     layers: Tuple[ConvLayer, ...]
     fc: Tuple[int, ...]   # FC widths after flatten (Rust-side)
+    # activation DAG over `layers`; empty means the straight chain, and the
+    # manifest then omits the field (pre-graph schema, exact round-trip)
+    graph: Tuple[GraphOp, ...] = ()
 
     def unique_shapes(self) -> List[Tuple[int, int, int]]:
         seen, out = set(), []
@@ -200,6 +225,42 @@ def _vgg16_convs(h0: int) -> Tuple[ConvLayer, ...]:
     return tuple(layers)
 
 
+def _resnet18() -> Variant:
+    """ResNet-18-shaped residual variant at CIFAR scale (mirrors Rust
+    ``Network::resnet18``): widths /4, 32x32 input, pooled transition convs
+    between stages (the spectral layers have no stride), 2 basic blocks
+    (conv, conv, add) per stage."""
+    widths = [16, 32, 64, 128]
+    layers: List[ConvLayer] = []
+    graph: List[GraphOp] = []
+    h, cin, cur = 32, 3, 0
+
+    def push_conv(name: str, cin: int, cout: int, h: int, pool: bool) -> None:
+        nonlocal cur
+        layers.append(ConvLayer(name, cin, cout, h, pool_after=pool))
+        graph.append(GraphOp("conv", conv=len(layers) - 1, input=cur))
+        cur = len(graph)
+
+    push_conv("conv1", cin, widths[0], h, pool=False)
+    cin = widths[0]
+    for si, w in enumerate(widths):
+        stage = si + 1
+        if si > 0:
+            push_conv(f"down{stage}", cin, w, h, pool=True)
+            cin = w
+            h //= 2
+        for blk in (1, 2):
+            shortcut = cur
+            push_conv(f"conv{stage}_{blk}a", w, w, h, pool=False)
+            push_conv(f"conv{stage}_{blk}b", w, w, h, pool=False)
+            graph.append(GraphOp("add", a=shortcut, b=cur))
+            cur = len(graph)
+    return Variant(
+        name="resnet18", input_hw=32, input_c=3,
+        layers=tuple(layers), fc=(64, 10), graph=tuple(graph),
+    )
+
+
 def variants() -> Dict[str, Variant]:
     """All AOT model variants (see DESIGN.md 'Artifact variants')."""
     return {
@@ -211,6 +272,27 @@ def variants() -> Dict[str, Variant]:
             ),
             fc=(32, 10),
         ),
+        "demo-residual": Variant(
+            name="demo-residual", input_hw=16, input_c=1,
+            layers=(
+                ConvLayer("conv1", 1, 8, 16, pool_after=False),
+                ConvLayer("conv2", 8, 8, 16, pool_after=False),
+                ConvLayer("conv3", 8, 8, 16, pool_after=False),
+                ConvLayer("conv4", 16, 8, 16, pool_after=True),
+            ),
+            fc=(32, 10),
+            # t1 conv1 → t2 conv2 → t3 add(t1,t2) → t4 conv3
+            #   → t5 concat(t3,t4) → t6 conv4+pool
+            graph=(
+                GraphOp("conv", conv=0, input=0),
+                GraphOp("conv", conv=1, input=1),
+                GraphOp("add", a=1, b=2),
+                GraphOp("conv", conv=2, input=3),
+                GraphOp("concat", a=3, b=4),
+                GraphOp("conv", conv=3, input=5),
+            ),
+        ),
+        "resnet18": _resnet18(),
         "vgg16-cifar": Variant(
             name="vgg16-cifar", input_hw=32, input_c=3,
             layers=_vgg16_convs(32),

@@ -100,6 +100,25 @@ def test_cifar_variant_structure():
     assert (1, 512, 512) in v.unique_shapes()
 
 
+def test_residual_variant_graphs():
+    """Graph presets mirror rust/src/model/mod.rs exactly."""
+    vs = M.variants()
+    r = vs["resnet18"]
+    assert len(r.layers) == 20
+    assert len(r.graph) == 28  # 20 convs + 8 residual adds
+    assert sum(1 for g in r.graph if g.op == "add") == 8
+    assert [l.h for l in r.layers][:6] == [32, 32, 32, 32, 32, 32]
+    d = vs["demo-residual"]
+    assert any(g.op == "concat" for g in d.graph)
+    assert d.layers[-1].cin == 16  # consumes the concat
+    # chain variants stay graph-less so their manifests keep the old schema
+    assert vs["demo"].graph == () and vs["vgg16-224"].graph == ()
+    # every node's json form round-trips through the schema's field names
+    for g in r.graph + d.graph:
+        j = g.to_json()
+        assert j["op"] in ("conv", "add", "concat")
+
+
 def test_flatten_dims_consistent():
     """Post-pool flatten width feeds the Rust FC layers."""
     for name, v in M.variants().items():

@@ -118,6 +118,36 @@ fn main() {
         }
     }
 
+    // ---- resnet18: the residual graph through the activation arena -------
+    // The shortcut adds are what the arena earns its keep on: 29 tensors
+    // share 3 slots. `peak_activation_bytes` is recorded as a pseudo-latency
+    // entry (1 ns per byte, same convention as mac_weight_nnz_*): it is a
+    // deterministic COUNT the bench-regression gate pins, not a timing — it
+    // only moves if the arena planner regresses.
+    for alpha in [1usize, 4] {
+        let mut e = InferenceEngine::with_options(
+            "artifacts",
+            "resnet18",
+            WeightMode::from_alpha(alpha),
+            7,
+            opts(SchedulePolicy::ExactCover, 1),
+        )
+        .expect("resnet18 engine");
+        let rimg = e.synthetic_image(4);
+        b.run(&format!("e2e/resnet18_alpha{alpha}_scheduled{sfx}"), || {
+            e.forward(&rimg).unwrap().len()
+        });
+        if alpha == 1 {
+            let am = e.arena_metrics();
+            b.record(
+                "e2e/resnet18_peak_activation_bytes",
+                Duration::from_nanos(am.peak_activation_bytes),
+                1,
+            );
+            println!("  {}", am.report());
+        }
+    }
+
     // ---- numerics sweep: half-plane / f64 forwards -----------------------
     // Always-coded entries (regardless of SF_DTYPE/SF_PLANE defaults) so the
     // default-config artifact carries the half-plane and f64-reference

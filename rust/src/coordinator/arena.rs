@@ -1,0 +1,210 @@
+//! Lifetime-based activation arena for the graph executor.
+//!
+//! The paper's straight-line VGG forward needs exactly one live activation
+//! between layers, so the engine historically allocated a fresh buffer per
+//! layer and dropped the previous one implicitly. Residual graphs break
+//! that: a shortcut tensor stays live across its whole block span, and a
+//! naive per-layer allocator either copies it along (wasted bandwidth) or
+//! keeps every tensor alive (peak = Σ all tensors). This module does what
+//! reuse-aware accelerator allocators (ShortcutFusion, PAPERS.md
+//! arXiv 2106.08167) do offline: compute each tensor's last use from the
+//! DAG, then linear-scan tensors into slots so a tensor only occupies
+//! memory across its actual lifetime. The plan is static — a property of
+//! the graph, computed once at engine startup — and the executor just
+//! indexes slots, so the request path pays nothing for the analysis.
+//!
+//! Accounting ([`ArenaMetrics`]) is per single image at f32: the batched
+//! forward scales every slot by B uniformly, so the reuse ratio is
+//! batch-invariant.
+
+use crate::coordinator::metrics::ArenaMetrics;
+use crate::model::{check_graph, ConvShape, GraphOp};
+use crate::runtime::VariantEntry;
+use crate::util::error::Result;
+
+/// A static slot assignment for one variant's activation graph.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArenaPlan {
+    /// Execution order (the declared DAG, or the implicit chain).
+    pub steps: Vec<GraphOp>,
+    /// `slot_of[t]` = arena slot holding tensor `t` (0 = network input).
+    pub slot_of: Vec<usize>,
+    /// `free_after[i]` = slots whose occupant dies after step `i` runs.
+    pub free_after: Vec<Vec<usize>>,
+    /// `(channels, spatial side)` per tensor id, from [`check_graph`].
+    pub shapes: Vec<(usize, usize)>,
+    /// Number of distinct slots (the arena's concurrent-live tensor count).
+    pub n_slots: usize,
+    /// Static accounting published to `Metrics`/`/metrics`.
+    pub metrics: ArenaMetrics,
+}
+
+fn tensor_bytes(shape: (usize, usize)) -> u64 {
+    let (c, s) = shape;
+    (c * s * s) as u64 * std::mem::size_of::<f32>() as u64
+}
+
+impl ArenaPlan {
+    /// Plan a manifest variant. `reuse = false` gives every tensor its own
+    /// slot — the no-reuse reference the property tests compare against.
+    pub fn for_variant(v: &VariantEntry, reuse: bool) -> Result<ArenaPlan> {
+        Self::build(v.graph_ops(), &v.conv_shapes(), v.input_c, v.input_hw, reuse)
+    }
+
+    /// Plan an arbitrary validated graph.
+    pub fn build(
+        steps: Vec<GraphOp>,
+        layers: &[ConvShape],
+        input_c: usize,
+        input_hw: usize,
+        reuse: bool,
+    ) -> Result<ArenaPlan> {
+        let shapes = check_graph(&steps, layers, input_c, input_hw)?;
+        let n_tensors = shapes.len();
+        // last_use[t] = index of the last step reading t. The final tensor
+        // is read by no step — it escapes to the FC head — so it never
+        // frees inside the plan.
+        let mut last_use = vec![usize::MAX; n_tensors];
+        for (i, op) in steps.iter().enumerate() {
+            for t in op.reads() {
+                last_use[t] = i;
+            }
+        }
+        // Linear scan in execution order: each produced tensor takes the
+        // lowest-numbered free slot; a tensor's slot frees right after its
+        // last reading step. check_graph guarantees topological order, so
+        // one forward pass is the whole analysis.
+        let mut slot_of = vec![usize::MAX; n_tensors];
+        let mut slot_cap: Vec<u64> = Vec::new(); // max occupant bytes per slot
+        let mut free: Vec<bool> = Vec::new();
+        let mut free_after: Vec<Vec<usize>> = vec![Vec::new(); steps.len()];
+        let mut claim = |t: usize, slot_cap: &mut Vec<u64>, free: &mut Vec<bool>| {
+            let bytes = tensor_bytes(shapes[t]);
+            let slot = if reuse {
+                free.iter().position(|&f| f).unwrap_or(free.len())
+            } else {
+                free.len()
+            };
+            if slot == free.len() {
+                free.push(false);
+                slot_cap.push(bytes);
+            } else {
+                free[slot] = false;
+                slot_cap[slot] = slot_cap[slot].max(bytes);
+            }
+            slot_of[t] = slot;
+        };
+        claim(0, &mut slot_cap, &mut free);
+        for i in 0..steps.len() {
+            claim(i + 1, &mut slot_cap, &mut free);
+            // free inputs whose last use is this step (dedup: Add{a,b} with
+            // a == b would list the slot twice)
+            for t in steps[i].reads() {
+                let slot = slot_of[t];
+                if last_use[t] == i && !free_after[i].contains(&slot) {
+                    free_after[i].push(slot);
+                    free[slot] = true;
+                }
+            }
+        }
+        let n_slots = slot_cap.len();
+        let metrics = ArenaMetrics {
+            tensors: n_tensors,
+            slots: n_slots,
+            reused: n_tensors - n_slots,
+            peak_activation_bytes: slot_cap.iter().sum(),
+            no_reuse_bytes: shapes.iter().map(|&s| tensor_bytes(s)).sum(),
+        };
+        Ok(ArenaPlan { steps, slot_of, free_after, shapes, n_slots, metrics })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+
+    fn shape(cin: usize, cout: usize, h: usize, pool: bool) -> ConvShape {
+        ConvShape { cin, cout, h, pool_after: pool }
+    }
+
+    #[test]
+    fn chain_ping_pongs_two_slots() {
+        // equal-size chain: x → conv → conv → conv needs exactly 2 slots
+        let layers = vec![shape(8, 8, 16, false); 3];
+        let p = ArenaPlan::build(GraphOp::chain(3), &layers, 8, 16, true).unwrap();
+        assert_eq!(p.n_slots, 2);
+        assert_eq!(p.slot_of, vec![0, 1, 0, 1]);
+        assert_eq!(p.metrics.peak_activation_bytes, 2 * 8 * 16 * 16 * 4);
+        assert_eq!(p.metrics.no_reuse_bytes, 4 * 8 * 16 * 16 * 4);
+        assert_eq!(p.metrics.reused, 2);
+    }
+
+    #[test]
+    fn diamond_needs_three_slots() {
+        // t1 fans out to two branches joined by an add: optimum is 3 slots
+        // (t1 stays live while both branch outputs exist)
+        let layers = vec![
+            shape(1, 8, 16, false), // t1 = conv(t0)
+            shape(8, 8, 16, false), // t2 = conv(t1)
+            shape(8, 8, 16, false), // t3 = conv(t1)
+        ];
+        let steps = vec![
+            GraphOp::Conv { conv: 0, input: 0 },
+            GraphOp::Conv { conv: 1, input: 1 },
+            GraphOp::Conv { conv: 2, input: 1 },
+            GraphOp::Add { a: 2, b: 3 },
+        ];
+        let p = ArenaPlan::build(steps, &layers, 1, 16, true).unwrap();
+        assert_eq!(p.n_slots, 3);
+        // t0 (slot 0) dies at step 0; t1 holds its slot across both branches
+        assert_eq!(p.free_after[0], vec![0]);
+        assert_eq!(p.slot_of[1], 1);
+        assert!(p.metrics.peak_activation_bytes < p.metrics.no_reuse_bytes);
+    }
+
+    #[test]
+    fn no_reuse_mode_gives_every_tensor_a_slot() {
+        let layers = vec![shape(8, 8, 16, false); 3];
+        let p = ArenaPlan::build(GraphOp::chain(3), &layers, 8, 16, false).unwrap();
+        assert_eq!(p.n_slots, 4);
+        assert_eq!(p.metrics.reused, 0);
+        assert_eq!(p.metrics.peak_activation_bytes, p.metrics.no_reuse_bytes);
+    }
+
+    #[test]
+    fn builtin_residual_presets_reuse() {
+        let m = Manifest::builtin();
+        // demo-residual: 7 tensors in 3 slots, peak 32 KiB vs 51 KiB flat
+        let p = ArenaPlan::for_variant(m.variant("demo-residual").unwrap(), true).unwrap();
+        assert_eq!((p.metrics.tensors, p.n_slots), (7, 3));
+        assert_eq!(p.metrics.peak_activation_bytes, 32768);
+        assert_eq!(p.metrics.no_reuse_bytes, 52224);
+        // resnet18: shortcuts never force a fourth slot
+        let p = ArenaPlan::for_variant(m.variant("resnet18").unwrap(), true).unwrap();
+        assert_eq!((p.metrics.tensors, p.n_slots), (29, 3));
+        assert_eq!(p.metrics.peak_activation_bytes, 196608);
+        assert_eq!(p.metrics.no_reuse_bytes, 872448);
+        assert!(p.metrics.peak_activation_bytes < p.metrics.no_reuse_bytes);
+        // chain presets keep the historical two-buffer footprint
+        let p = ArenaPlan::for_variant(m.variant("demo").unwrap(), true).unwrap();
+        assert_eq!(p.n_slots, 2);
+        assert_eq!(p.metrics.peak_activation_bytes, 3072);
+    }
+
+    #[test]
+    fn free_lists_cover_every_dead_tensor_once() {
+        let m = Manifest::builtin();
+        for name in ["demo", "demo-residual", "resnet18", "vgg16-cifar"] {
+            let p = ArenaPlan::for_variant(m.variant(name).unwrap(), true).unwrap();
+            let freed: usize = p.free_after.iter().map(Vec::len).sum();
+            // the final tensor never frees, so at most tensors - 1 frees
+            assert!(freed <= p.metrics.tensors - 1, "{name}");
+            for slots in &p.free_after {
+                for &s in slots {
+                    assert!(s < p.n_slots, "{name}");
+                }
+            }
+        }
+    }
+}

@@ -21,11 +21,13 @@
 //! those never outlive the call. Weight generation is a pure function of
 //! `(variant, mode, seed)`, so pool replicas are bit-identical.
 
-use super::metrics::{LayerScheduleMetrics, ScheduleMetrics};
+use super::arena::ArenaPlan;
+use super::metrics::{ArenaMetrics, LayerScheduleMetrics, ScheduleMetrics};
 use crate::analysis::{ArchParams, LayerParams};
 use crate::dataflow::{optimize_layer, OptimizerConfig};
 use crate::err;
 use crate::fft::{im2tiles, overlap_add, spectral_kernels, TileGeometry};
+use crate::model::GraphOp;
 use crate::nn;
 use crate::runtime::{
     freq_major_planes, BackendKind, Dtype, LayerEntry, Plane, Runtime, SparseDataflow,
@@ -81,13 +83,18 @@ impl WeightMode {
 /// whole batch, so one kernel stream covers all B images' tiles. τ cancels
 /// in the per-layer argmin (bandwidth = volume/τ at fixed τ), so any
 /// positive value yields the same streaming optimum; infeasible-BRAM
-/// layers fall back to pure tile-major execution.
+/// layers fall back to pure tile-major execution. `resident` is the
+/// activation arena's concurrent-live tensor count ([`ArenaPlan::n_slots`]):
+/// residual graphs keep shortcut tensors on chip across their span, and the
+/// Eq. 12 feasibility gate must budget for them (chain variants pass the
+/// paper's implicit 1 and change nothing).
 fn sparse_dataflow_for(
     l: &LayerEntry,
     fft: usize,
     tile: usize,
     alpha: usize,
     batch: usize,
+    resident: usize,
     plane: Plane,
 ) -> SparseDataflow {
     // Half-plane storage shrinks every per-frequency budget in the Eq. 12/13
@@ -105,6 +112,7 @@ fn sparse_dataflow_for(
     let cfg = OptimizerConfig {
         alpha: alpha.max(1),
         batch: batch.max(1),
+        resident_tensors: resident.max(1),
         ..OptimizerConfig::paper()
     };
     match optimize_layer(&params, &ArchParams::paper(), &cfg, 1.0) {
@@ -131,6 +139,10 @@ pub struct EngineOptions {
     pub dtype: Option<Dtype>,
     /// Spectral storage plane (full K×K vs the rfft2 half-plane).
     pub plane: Plane,
+    /// Reuse dead activation-arena slots for later tensors (the default).
+    /// `false` gives every tensor its own slot — the no-reuse reference
+    /// mode the arena property tests compare bit-for-bit against.
+    pub arena_reuse: bool,
 }
 
 impl Default for EngineOptions {
@@ -141,6 +153,7 @@ impl Default for EngineOptions {
             plan_batch: 1,
             dtype: None,
             plane: Plane::Full,
+            arena_reuse: true,
         }
     }
 }
@@ -185,14 +198,10 @@ impl Weights {
                 }
             }
         }
-        // FC head: flatten width from the last conv + pool chain.
-        let mut side = variant.input_hw;
-        for l in &variant.layers {
-            if l.pool_after {
-                side /= 2;
-            }
-        }
-        let mut in_w = variant.layers.last().map(|l| l.cout).unwrap_or(variant.input_c) * side * side;
+        // FC head: flatten width from the activation graph's final tensor
+        // (for chains this is the last conv + pool walk it always was).
+        let (out_c, side) = variant.output_shape().expect("variant graph validates");
+        let mut in_w = out_c * side * side;
         let mut fc = Vec::new();
         for &out_w in &variant.fc {
             let scale = (2.0 / in_w as f32).sqrt();
@@ -225,6 +234,9 @@ pub struct InferenceEngine {
     plane: Plane,
     /// Static per-layer scheduling quality (None when dense or `Off`).
     schedule_metrics: Option<ScheduleMetrics>,
+    /// Static slot plan for the variant's activation graph (computed once
+    /// at startup; the forward just indexes slots).
+    arena: ArenaPlan,
 }
 
 impl InferenceEngine {
@@ -281,7 +293,7 @@ impl InferenceEngine {
         seed: u64,
         opts: EngineOptions,
     ) -> Result<Self> {
-        let EngineOptions { backend, scheduler, plan_batch, dtype, plane } = opts;
+        let EngineOptions { backend, scheduler, plan_batch, dtype, plane, arena_reuse } = opts;
         let mut runtime = Runtime::open_with(artifacts_dir, backend)?;
         let dtype = runtime.manifest.resolve_dtype(dtype);
         // Numeric mode must be pinned before any weight upload: the backend
@@ -289,6 +301,9 @@ impl InferenceEngine {
         // afterwards would desynchronize store and schedule.
         runtime.configure_numerics(dtype, plane)?;
         let v = runtime.manifest.variant(variant)?.clone();
+        // Plan the activation arena up front: the slot count is the
+        // concurrent-residency the dataflow optimizer must budget for.
+        let arena = ArenaPlan::for_variant(&v, arena_reuse)?;
         let fft = runtime.manifest.fft_size;
         let k = runtime.manifest.kernel_k;
         runtime.warm_variant(variant)?;
@@ -308,7 +323,7 @@ impl InferenceEngine {
                 Some(sp) => {
                     runtime.set_sparse_dataflow(
                         &l.file,
-                        sparse_dataflow_for(l, fft, tile, sp.alpha, plan_batch, plane),
+                        sparse_dataflow_for(l, fft, tile, sp.alpha, plan_batch, arena.n_slots, plane),
                     )?;
                     let wid = runtime.upload_sparse(sp)?;
                     // Alg. 2: plan every (group, channel) instance at the
@@ -373,6 +388,7 @@ impl InferenceEngine {
             dtype,
             plane,
             schedule_metrics,
+            arena,
         })
     }
 
@@ -405,6 +421,17 @@ impl InferenceEngine {
     /// dense weights or was built with [`SchedulePolicy::Off`].
     pub fn schedule_metrics(&self) -> Option<&ScheduleMetrics> {
         self.schedule_metrics.as_ref()
+    }
+
+    /// The activation arena's slot plan for this variant.
+    pub fn arena(&self) -> &ArenaPlan {
+        &self.arena
+    }
+
+    /// Static activation-arena accounting (peak residency, slot reuse) —
+    /// published to `Metrics`/`/metrics` by the serving workers.
+    pub fn arena_metrics(&self) -> &ArenaMetrics {
+        &self.arena.metrics
     }
 
     /// Run one conv layer through the backend (the "FPGA" side).
@@ -465,26 +492,113 @@ impl InferenceEngine {
 
     /// Batch-major forward pass: B images `[C, H, W]` → B logit vectors.
     ///
-    /// The loop nest is layer-major, batch-inner: each conv layer executes
+    /// Executes the variant's activation graph over the arena's slot plan:
+    /// each node reads its input slots, runs (conv via the backend, or an
+    /// engine-level add/concat), writes its output slot, and frees the
+    /// slots of tensors past their last use — so a residual shortcut stays
+    /// in place across its whole span, never copied per layer, and peak
+    /// residency is [`ArenaMetrics::peak_activation_bytes`] per image. For
+    /// chain variants this degenerates to the historical layer loop (two
+    /// slots ping-ponging).
+    ///
+    /// The loop nest is node-major, batch-inner: each conv layer executes
     /// **once** over all B images' tiles (via
     /// [`run_conv_batch`](crate::runtime::SpectralBackend::run_conv_batch)),
     /// so the backend streams each sparse weight block once per batch
     /// instead of once per image — the B reuse axis of the batch-aware
     /// Alg. 1. Outputs are bit-identical to B independent [`Self::forward`]
-    /// calls (pinned by tests at backend, engine, and HTTP levels).
+    /// calls (pinned by tests at backend, engine, and HTTP levels), and to
+    /// the no-reuse arena mode (pinned by the arena property tests).
     pub fn forward_batch(&mut self, images: &[Tensor]) -> Result<Vec<Vec<f32>>> {
         for image in images {
             self.check_input(image)?;
         }
-        let mut xs: Vec<Tensor> = images.to_vec();
-        for i in 0..self.variant.layers.len() {
-            xs = self.conv_layer_batch(i, &xs)?;
-            if self.variant.layers[i].pool_after {
-                for x in &mut xs {
-                    *x = nn::maxpool2(x);
+        let plan = self.arena.clone(); // small: ~n_nodes usizes
+        let mut slots: Vec<Option<Vec<Tensor>>> = vec![None; plan.n_slots];
+        // generation check: which tensor id currently owns each slot
+        let mut owner = vec![usize::MAX; plan.n_slots];
+        slots[plan.slot_of[0]] = Some(images.to_vec());
+        owner[plan.slot_of[0]] = 0;
+        for (i, step) in plan.steps.iter().enumerate() {
+            let out: Vec<Tensor> = match *step {
+                GraphOp::Conv { conv, input } => {
+                    debug_assert_eq!(
+                        owner[plan.slot_of[input]], input,
+                        "tensor {input} read after its arena slot was reused"
+                    );
+                    let mut ys = {
+                        let xs =
+                            slots[plan.slot_of[input]].as_ref().expect("arena: conv input freed");
+                        self.conv_layer_batch(conv, xs)?
+                    };
+                    if self.variant.layers[conv].pool_after {
+                        for y in &mut ys {
+                            *y = nn::maxpool2(y);
+                        }
+                    }
+                    ys
                 }
+                GraphOp::Add { a, b } => {
+                    debug_assert_eq!(
+                        owner[plan.slot_of[a]], a,
+                        "tensor {a} read after its arena slot was reused"
+                    );
+                    debug_assert_eq!(
+                        owner[plan.slot_of[b]], b,
+                        "tensor {b} read after its arena slot was reused"
+                    );
+                    let xa = slots[plan.slot_of[a]].as_ref().expect("arena: add input freed");
+                    let xb = slots[plan.slot_of[b]].as_ref().expect("arena: add input freed");
+                    xa.iter().zip(xb).map(|(x, y)| x.add(y)).collect()
+                }
+                GraphOp::Concat { a, b } => {
+                    debug_assert_eq!(
+                        owner[plan.slot_of[a]], a,
+                        "tensor {a} read after its arena slot was reused"
+                    );
+                    debug_assert_eq!(
+                        owner[plan.slot_of[b]], b,
+                        "tensor {b} read after its arena slot was reused"
+                    );
+                    let xa = slots[plan.slot_of[a]].as_ref().expect("arena: concat input freed");
+                    let xb = slots[plan.slot_of[b]].as_ref().expect("arena: concat input freed");
+                    let (c_out, side) = plan.shapes[i + 1];
+                    xa.iter()
+                        .zip(xb)
+                        .map(|(x, y)| {
+                            let mut data = Vec::with_capacity(c_out * side * side);
+                            data.extend_from_slice(x.data());
+                            data.extend_from_slice(y.data());
+                            Tensor::from_vec(&[c_out, side, side], data)
+                        })
+                        .collect()
+                }
+            };
+            // free tensors past their last use — the plan claimed the
+            // output slot from slots already free before this step, so it
+            // never collides with a dying input's slot
+            for &s in &plan.free_after[i] {
+                if cfg!(debug_assertions) {
+                    // poison-on-free: a buggy stale read turns into NaN
+                    // that the property tests' finiteness check catches
+                    if let Some(bufs) = &mut slots[s] {
+                        for buf in bufs {
+                            for v in buf.data_mut() {
+                                *v = f32::NAN;
+                            }
+                        }
+                    }
+                }
+                slots[s] = None;
+                owner[s] = usize::MAX;
             }
+            let t = i + 1;
+            slots[plan.slot_of[t]] = Some(out);
+            owner[plan.slot_of[t]] = t;
         }
+        let final_t = plan.steps.len();
+        debug_assert_eq!(owner[plan.slot_of[final_t]], final_t);
+        let xs = slots[plan.slot_of[final_t]].take().expect("arena: final tensor freed");
         let n_fc = self.weights.fc.len();
         let mut all = Vec::with_capacity(xs.len());
         for x in xs {
@@ -558,7 +672,7 @@ mod tests {
     fn deep_layer_keeps_all_tiles_resident() {
         // conv5_3-sized (512×512 channels, 9 tiles): Table 1's optimum is
         // Ps = P — the sparse MAC should load each kernel row exactly once.
-        let d = sparse_dataflow_for(&layer(512, 512, 14, 9), 8, 6, 4, 1, Plane::Full);
+        let d = sparse_dataflow_for(&layer(512, 512, 14, 9), 8, 6, 4, 1, 1, Plane::Full);
         assert_eq!(d.tile_block, 9);
     }
 
@@ -568,7 +682,7 @@ mod tests {
         // still fits it on chip (at Ns = 256), so the plan keeps the whole
         // batch resident — each kernel row streams once per *batch* in the
         // fused forward, not once per image.
-        let d = sparse_dataflow_for(&layer(512, 512, 14, 9), 8, 6, 4, 8, Plane::Full);
+        let d = sparse_dataflow_for(&layer(512, 512, 14, 9), 8, 6, 4, 8, 1, Plane::Full);
         assert_eq!(d.tile_block, 72);
     }
 
@@ -580,9 +694,9 @@ mod tests {
         for (cin, cout, h, tiles) in [(512, 512, 14, 9), (64, 64, 224, 1444)] {
             for batch in [1usize, 8] {
                 let full =
-                    sparse_dataflow_for(&layer(cin, cout, h, tiles), 8, 6, 4, batch, Plane::Full);
+                    sparse_dataflow_for(&layer(cin, cout, h, tiles), 8, 6, 4, batch, 1, Plane::Full);
                 let half =
-                    sparse_dataflow_for(&layer(cin, cout, h, tiles), 8, 6, 4, batch, Plane::Half);
+                    sparse_dataflow_for(&layer(cin, cout, h, tiles), 8, 6, 4, batch, 1, Plane::Half);
                 assert!(
                     half.tile_block >= full.tile_block,
                     "{cin}x{cout} B={batch}: half block {} < full block {}",
@@ -598,7 +712,7 @@ mod tests {
         // conv1_2-sized (64×64 channels, 1444 tiles): the optimizer streams
         // tile groups; whatever Ps it picks lies on the P'-lattice and is
         // at least one architecture group.
-        let d = sparse_dataflow_for(&layer(64, 64, 224, 1444), 8, 6, 4, 1, Plane::Full);
+        let d = sparse_dataflow_for(&layer(64, 64, 224, 1444), 8, 6, 4, 1, 1, Plane::Full);
         assert!(d.tile_block >= 9, "got block {}", d.tile_block);
         assert!(d.tile_block == 1444 || d.tile_block % 9 == 0, "got block {}", d.tile_block);
     }
@@ -610,7 +724,7 @@ mod tests {
         for (cin, cout, h, tiles) in [(512, 512, 14, 9), (64, 64, 224, 1444)] {
             let mut prev = 0usize;
             for batch in [1usize, 2, 8, 32] {
-                let d = sparse_dataflow_for(&layer(cin, cout, h, tiles), 8, 6, 4, batch, Plane::Full);
+                let d = sparse_dataflow_for(&layer(cin, cout, h, tiles), 8, 6, 4, batch, 1, Plane::Full);
                 assert!(
                     d.tile_block >= prev,
                     "{cin}x{cout} B={batch}: block {} < previous {prev}",

@@ -86,6 +86,39 @@ impl ScheduleMetrics {
     }
 }
 
+/// Static activation-arena accounting for one engine: how the graph
+/// executor's slot allocator packed the variant's tensor lifetimes
+/// (computed once at startup by [`crate::coordinator::ArenaPlan`] — a
+/// property of the graph, not of traffic). All byte figures are per single
+/// image at f32; the batched forward scales every slot by B identically.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct ArenaMetrics {
+    /// Tensors in the variant's activation graph (input + one per node).
+    pub tensors: usize,
+    /// Arena slots actually allocated.
+    pub slots: usize,
+    /// Tensors placed into a previously-freed slot (`tensors - slots`).
+    pub reused: usize,
+    /// Peak resident activation bytes: Σ per-slot max occupant size.
+    pub peak_activation_bytes: u64,
+    /// What per-layer fresh buffers would hold: Σ all tensor sizes.
+    pub no_reuse_bytes: u64,
+}
+
+impl ArenaMetrics {
+    /// One summary line (appended to the latency report).
+    pub fn report(&self) -> String {
+        format!(
+            "arena: peak {} B (no-reuse {} B, {}) slots {}/{} tensors",
+            self.peak_activation_bytes,
+            self.no_reuse_bytes,
+            fmt_pct(self.peak_activation_bytes as f64 / self.no_reuse_bytes.max(1) as f64),
+            self.slots,
+            self.tensors,
+        )
+    }
+}
+
 /// Cap on retained latency samples per distribution. `serve --http` runs
 /// indefinitely, so sample storage must be bounded: past the cap the
 /// oldest half is dropped, keeping percentiles a sliding window over the
@@ -128,6 +161,9 @@ pub struct Metrics {
     /// Static scheduling quality of the worker's engine (None when serving
     /// dense weights or `--scheduler off`).
     pub schedule: Option<ScheduleMetrics>,
+    /// Static activation-arena accounting of the worker's engine (None
+    /// until an engine publishes its plan).
+    pub arena: Option<ArenaMetrics>,
 }
 
 impl Metrics {
@@ -186,10 +222,13 @@ impl Metrics {
         for (dst, &src) in self.batch_hist.iter_mut().zip(&other.batch_hist) {
             *dst += src;
         }
-        // schedule metrics are identical across pool replicas (same weights
-        // + scheduler per config), so the first snapshot wins
+        // schedule/arena metrics are identical across pool replicas (same
+        // weights + scheduler + graph per config), so the first snapshot wins
         if self.schedule.is_none() {
             self.schedule = other.schedule.clone();
+        }
+        if self.arena.is_none() {
+            self.arena = other.arena.clone();
         }
         self.started = match (self.started, other.started) {
             (Some(a), Some(b)) => Some(a.min(b)),
@@ -304,6 +343,9 @@ impl Metrics {
         }
         if let Some(s) = &self.schedule {
             line.push_str(&format!(" | {}", s.report()));
+        }
+        if let Some(a) = &self.arena {
+            line.push_str(&format!(" | {}", a.report()));
         }
         line
     }
@@ -464,6 +506,32 @@ mod tests {
         let snap = PoolMetrics::from_workers(vec![b, a]);
         assert_eq!(snap.merged.schedule.as_ref().unwrap(), &sched);
         assert!(snap.report().contains("sched[exact-cover]"));
+    }
+
+    #[test]
+    fn arena_metrics_report_and_merge() {
+        let arena = ArenaMetrics {
+            tensors: 7,
+            slots: 3,
+            reused: 4,
+            peak_activation_bytes: 32768,
+            no_reuse_bytes: 52224,
+        };
+        let line = arena.report();
+        assert!(line.contains("peak 32768 B"), "{line}");
+        assert!(line.contains("3/7 tensors"), "{line}");
+
+        // merge: first Some wins, and the merged report carries it
+        let mut a = Metrics::new();
+        a.arena = Some(arena.clone());
+        a.record_request(Duration::from_micros(10));
+        let mut b = Metrics::new();
+        b.record_request(Duration::from_micros(20));
+        let snap = PoolMetrics::from_workers(vec![b, a]);
+        assert_eq!(snap.merged.arena.as_ref().unwrap(), &arena);
+        assert!(snap.report().contains("arena: peak"));
+        // degenerate all-zero metrics report without dividing by zero
+        assert!(ArenaMetrics::default().report().contains("peak 0 B"));
     }
 
     #[test]

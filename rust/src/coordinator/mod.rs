@@ -17,13 +17,17 @@
 //!   in-thread and never moved across threads (the PJRT FFI constraint).
 //! * [`metrics`] — latency percentiles and throughput counters, per worker
 //!   and merged.
+//! * [`arena`] — lifetime-based activation arena for the graph executor
+//!   (slot reuse across dead tensors, peak-residency accounting).
 
+pub mod arena;
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
 pub mod server;
 
+pub use arena::ArenaPlan;
 pub use batcher::{Batcher, BatcherConfig};
 pub use engine::{EngineOptions, InferenceEngine, WeightMode, Weights};
-pub use metrics::{LayerScheduleMetrics, Metrics, PoolMetrics, ScheduleMetrics};
+pub use metrics::{ArenaMetrics, LayerScheduleMetrics, Metrics, PoolMetrics, ScheduleMetrics};
 pub use server::{Client, Response, Server, ServerConfig};

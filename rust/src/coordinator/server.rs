@@ -276,6 +276,7 @@ fn worker_loop(
             plan_batch: cfg.batcher.max_batch.max(1),
             dtype: cfg.dtype,
             plane: cfg.plane,
+            arena_reuse: true,
         },
     ) {
         Ok(e) => {
@@ -295,6 +296,7 @@ fn worker_loop(
     // static per-engine scheduling quality: snapshot once, ride along in
     // every metrics merge and response
     metrics.schedule = engine.schedule_metrics().cloned();
+    metrics.arena = Some(engine.arena_metrics().clone());
     let pe_util = metrics.schedule.as_ref().map(|s| s.avg_pe_utilization());
     // manifest-resolved numeric mode, identical across the pool
     let (dtype, plane) = (engine.dtype(), engine.plane());

@@ -74,6 +74,13 @@ pub struct OptimizerConfig {
     /// each sparse kernel row stream once per *batch* (Eq. 13's `⌈B·P/Ps⌉`
     /// reload factor) instead of once per image.
     pub batch: usize,
+    /// Concurrently live activation tensors the on-chip input store must
+    /// hold (the activation arena's slot count). The paper's straight-line
+    /// VGG keeps exactly one (the current layer's input), which Eq. 12
+    /// already charges; residual graphs pin shortcut tensors alongside it,
+    /// and each extra resident tensor costs roughly one more tile store at
+    /// the layer's footprint.
+    pub resident_tensors: usize,
 }
 
 impl OptimizerConfig {
@@ -86,8 +93,20 @@ impl OptimizerConfig {
             alpha: 4,
             replicas: 10,
             batch: 1,
+            resident_tensors: 1,
         }
     }
+}
+
+/// Extra BRAM18s pinned by arena residents beyond the one live input
+/// Eq. 12 already accounts for. Each extra resident holds the layer's
+/// per-image tile population (`P` tiles × K² words) in 18 Kib blocks;
+/// `resident_tensors = 1` (every chain network) charges nothing, so all
+/// pre-graph optima are preserved.
+fn activation_residency_brams(l: &LayerParams, cfg: &OptimizerConfig) -> u64 {
+    let extra = cfg.resident_tensors.saturating_sub(1) as u64;
+    let bits_per_tensor = (l.p * l.k2) as u64 * cfg.word_bytes * 8;
+    extra * bits_per_tensor.div_ceil(18 * 1024)
 }
 
 /// Streaming-parameter candidates for one layer: multiples of the group
@@ -128,7 +147,7 @@ pub fn optimize_layer(
     let mut best: Option<(f64, u64, StreamParams, Transfers)> = None;
     for s in stream_candidates(l, a, cfg.batch) {
         let brams = bram_flex(l, a, &s);
-        if brams > cfg.bram_budget {
+        if brams + activation_residency_brams(l, cfg) > cfg.bram_budget {
             continue;
         }
         let t = transfers_flex_batch(l, &s, cfg.batch);
@@ -395,6 +414,40 @@ mod tests {
         let mut cfg = OptimizerConfig::paper();
         cfg.bram_budget = 10; // absurd
         assert!(optimize_network_at(&net, ArchParams::paper(), &cfg).is_none());
+    }
+
+    #[test]
+    fn residency_overhead_is_zero_for_chains_and_gates_feasibility() {
+        // resident_tensors = 1 (the paper's straight-line case) must leave
+        // every plan untouched — the overhead function returns 0.
+        let net = Network::vgg16_224();
+        let base = optimize_network_at(&net, ArchParams::paper(), &OptimizerConfig::paper())
+            .unwrap();
+        let one = optimize_network_at(
+            &net,
+            ArchParams::paper(),
+            &OptimizerConfig { resident_tensors: 1, ..OptimizerConfig::paper() },
+        )
+        .unwrap();
+        for (x, y) in base.layers.iter().zip(&one.layers) {
+            assert_eq!(x.stream, y.stream, "{}", x.layer_name);
+            assert_eq!(x.brams, y.brams, "{}", x.layer_name);
+        }
+        // a few pinned residents shrink the streaming budget but stay
+        // feasible; an absurd count starves every candidate
+        let few = OptimizerConfig { resident_tensors: 3, ..OptimizerConfig::paper() };
+        let plan = optimize_network_at(&net, ArchParams::paper(), &few)
+            .expect("3 residents still fit the U200 budget");
+        for lp in &plan.layers {
+            assert!(
+                lp.brams + activation_residency_brams(&lp.params, &few) <= few.bram_budget,
+                "{} over budget with residency",
+                lp.layer_name
+            );
+        }
+        let absurd = OptimizerConfig { resident_tensors: 10_000, ..OptimizerConfig::paper() };
+        let l = LayerParams::from_layer(&net.convs[1], 4);
+        assert!(optimize_layer(&l, &ArchParams::paper(), &absurd, 1.0).is_none());
     }
 
     #[test]

@@ -293,7 +293,15 @@ fn serve(mut args: Args) -> Result<()> {
     use spectral_flow::coordinator::{BatcherConfig, Server, ServerConfig};
     use spectral_flow::net::{HttpFrontend, NetConfig};
     use spectral_flow::tensor::Tensor;
-    let variant = args.opt("variant", "vgg16-cifar", "model variant");
+    // `--model` is the documented knob since the graph presets landed;
+    // `--variant` stays as the original alias (same mechanism as --batch:
+    // the alias supplies the default, so `--model` wins when both appear)
+    let legacy_variant = args.opt("variant", "vgg16-cifar", "legacy alias for --model");
+    let variant = args.opt(
+        "model",
+        &legacy_variant,
+        "model preset (demo|demo-residual|vgg16-cifar|vgg16-224|resnet18)",
+    );
     let requests = args.opt_usize("requests", 16, "synthetic requests to issue (no --http)");
     // `--max-batch` is the documented knob; `--batch` stays as a legacy
     // alias (it supplies the default, so `--max-batch` wins when both are
@@ -476,7 +484,12 @@ fn loadgen(mut args: Args) -> Result<()> {
 
 /// Run one forward pass through the AOT'd executables.
 fn infer(mut args: Args) -> Result<()> {
-    let variant = args.opt("variant", "demo", "model variant (demo|vgg16-cifar|vgg16-224)");
+    let legacy_variant = args.opt("variant", "demo", "legacy alias for --model");
+    let variant = args.opt(
+        "model",
+        &legacy_variant,
+        "model preset (demo|demo-residual|vgg16-cifar|vgg16-224|resnet18)",
+    );
     let artifacts = args.opt("artifacts", "artifacts", "artifacts directory");
     let alpha = args.opt_usize("alpha", 0, "compression ratio α (0 = manifest default, 1 = dense)");
     let threads = args.opt_usize("backend-threads", 1, "interp per-tile threads");
@@ -535,6 +548,9 @@ fn infer(mut args: Args) -> Result<()> {
         println!("{}", t.render());
         println!("{}", sm.report());
     }
+    // static activation-arena plan: how much memory the graph's residuals
+    // pin, and how far slot reuse cuts it vs one-buffer-per-tensor
+    println!("{}", engine.arena_metrics().report());
     let img = engine.synthetic_image(1);
     let t1 = std::time::Instant::now();
     let logits = engine.forward(&img)?;

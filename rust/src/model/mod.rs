@@ -1,8 +1,11 @@
-//! Model descriptions: spectral conv layer specs and the VGG16 presets the
-//! paper evaluates (§6). Mirrors `python/compile/model.py`; the runtime
-//! cross-checks this table against `artifacts/manifest.json`.
+//! Model descriptions: spectral conv layer specs, the VGG16 presets the
+//! paper evaluates (§6), and the activation DAG (residual adds / concats)
+//! the graph presets execute. Mirrors `python/compile/model.py`; the
+//! runtime cross-checks this table against `artifacts/manifest.json`.
 
+use crate::err;
 use crate::fft::TileGeometry;
+use crate::util::error::Result;
 
 /// One spectral convolutional layer (paper notation in parens).
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -57,6 +60,152 @@ impl ConvLayer {
     }
 }
 
+/// One node of a variant's activation DAG.
+///
+/// Tensor ids index the value stream: id 0 is the network input, node `i`
+/// produces tensor `i + 1`. Nodes may only reference already-produced
+/// tensors, so any well-formed node list is in topological order — a
+/// "cycle" can only appear as a self/forward reference, which
+/// [`check_graph`] rejects.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GraphOp {
+    /// Run conv layer `conv` (index into the layer list, including its
+    /// bias/ReLU and trailing pool when `pool_after`) on tensor `input`.
+    Conv { conv: usize, input: usize },
+    /// Elementwise residual add of two same-shape tensors.
+    Add { a: usize, b: usize },
+    /// Channel-axis concat of two tensors with equal spatial side.
+    Concat { a: usize, b: usize },
+}
+
+impl GraphOp {
+    /// The straight-line graph every pre-DAG variant executes: layer `i`
+    /// reads tensor `i` (the previous layer's output).
+    pub fn chain(n_convs: usize) -> Vec<GraphOp> {
+        (0..n_convs).map(|i| GraphOp::Conv { conv: i, input: i }).collect()
+    }
+
+    /// Tensor ids this node reads.
+    pub fn reads(&self) -> Vec<usize> {
+        match *self {
+            GraphOp::Conv { input, .. } => vec![input],
+            GraphOp::Add { a, b } | GraphOp::Concat { a, b } => vec![a, b],
+        }
+    }
+}
+
+/// The graph checker's view of one conv layer — [`ConvLayer`] and the
+/// manifest's `LayerEntry` both project onto this.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvShape {
+    pub cin: usize,
+    pub cout: usize,
+    pub h: usize,
+    pub pool_after: bool,
+}
+
+/// Validate an activation DAG against its conv layers and input shape,
+/// returning every tensor's `(channels, spatial side)` — index = tensor id,
+/// `[0]` the network input, last entry the flatten input.
+///
+/// Rejects (with an error, never a panic): empty graphs, self/forward
+/// tensor references (cycles), dangling tensor or conv-layer ids, conv
+/// layers used twice or never, shape-mismatched adds, concats with unequal
+/// spatial sides, pools on odd sides, and tensors (other than the final
+/// output) that no node consumes.
+pub fn check_graph(
+    graph: &[GraphOp],
+    layers: &[ConvShape],
+    input_c: usize,
+    input_hw: usize,
+) -> Result<Vec<(usize, usize)>> {
+    if graph.is_empty() {
+        return Err(err!("graph: empty node list"));
+    }
+    let n_tensors = graph.len() + 1;
+    let mut shapes: Vec<(usize, usize)> = Vec::with_capacity(n_tensors);
+    shapes.push((input_c, input_hw));
+    let mut used = vec![false; layers.len()];
+    let mut read = vec![false; n_tensors];
+    for (i, op) in graph.iter().enumerate() {
+        for t in op.reads() {
+            if t >= n_tensors {
+                return Err(err!(
+                    "graph node {i}: dangling tensor id {t} (graph has {n_tensors} tensors)"
+                ));
+            }
+            if t > i {
+                return Err(err!(
+                    "graph node {i}: reads tensor {t} which is not yet produced \
+                     (self/forward reference — the graph has a cycle)"
+                ));
+            }
+            read[t] = true;
+        }
+        let out = match *op {
+            GraphOp::Conv { conv, input } => {
+                let l = layers.get(conv).ok_or_else(|| {
+                    err!("graph node {i}: dangling conv index {conv} ({} layers)", layers.len())
+                })?;
+                if used[conv] {
+                    return Err(err!("graph node {i}: conv layer {conv} used twice"));
+                }
+                used[conv] = true;
+                let (c, s) = shapes[input];
+                if (c, s) != (l.cin, l.h) {
+                    return Err(err!(
+                        "graph node {i}: conv layer {conv} expects [{}, {}, {}], \
+                         input tensor {input} is [{c}, {s}, {s}]",
+                        l.cin,
+                        l.h,
+                        l.h
+                    ));
+                }
+                if l.pool_after {
+                    if l.h % 2 != 0 {
+                        return Err(err!(
+                            "graph node {i}: pool after conv layer {conv} needs an even side, got {}",
+                            l.h
+                        ));
+                    }
+                    (l.cout, l.h / 2)
+                } else {
+                    (l.cout, l.h)
+                }
+            }
+            GraphOp::Add { a, b } => {
+                if shapes[a] != shapes[b] {
+                    return Err(err!(
+                        "graph node {i}: add shape mismatch — tensor {a} is {:?}, tensor {b} is {:?}",
+                        shapes[a],
+                        shapes[b]
+                    ));
+                }
+                shapes[a]
+            }
+            GraphOp::Concat { a, b } => {
+                let ((ca, sa), (cb, sb)) = (shapes[a], shapes[b]);
+                if sa != sb {
+                    return Err(err!(
+                        "graph node {i}: concat spatial mismatch — tensor {a} side {sa}, tensor {b} side {sb}"
+                    ));
+                }
+                (ca + cb, sa)
+            }
+        };
+        shapes.push(out);
+    }
+    if let Some(unused) = used.iter().position(|&u| !u) {
+        return Err(err!("graph: conv layer {unused} never used"));
+    }
+    // every intermediate must feed something; only the last tensor may
+    // (and must) escape to the FC head
+    if let Some(dead) = read.iter().take(n_tensors - 1).position(|&r| !r) {
+        return Err(err!("graph: tensor {dead} is never consumed"));
+    }
+    Ok(shapes)
+}
+
 /// A full network variant (conv stack + FC head).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Network {
@@ -66,6 +215,9 @@ pub struct Network {
     pub convs: Vec<ConvLayer>,
     /// FC widths after flatten; the flatten width is derived.
     pub fc: Vec<usize>,
+    /// Activation DAG; `None` is the historical straight chain over
+    /// `convs` ([`GraphOp::chain`]).
+    pub graph: Option<Vec<GraphOp>>,
 }
 
 impl Network {
@@ -91,7 +243,7 @@ impl Network {
             }
             h /= 2;
         }
-        Network { name: name.to_string(), input_hw, input_c: 3, convs, fc }
+        Network { name: name.to_string(), input_hw, input_c: 3, convs, fc, graph: None }
     }
 
     /// The paper's evaluation target: VGG16, 224x224, K=8.
@@ -136,10 +288,145 @@ impl Network {
                 },
             ],
             fc: vec![32, 10],
+            graph: None,
         }
     }
 
-    /// Spatial side after the full conv stack (input to flatten).
+    /// Tiny residual/concat demo: the cheapest variant that exercises every
+    /// [`GraphOp`] kind on the same 16x16 input as `demo`. The final conv
+    /// maps the 16-channel concat back to 8 channels and pools to side 8,
+    /// so the flatten width is 8·8·8 = 512.
+    pub fn demo_residual() -> Self {
+        let conv = |name: &str, cin: usize, cout: usize, h: usize, pool: bool| ConvLayer {
+            name: name.into(),
+            cin,
+            cout,
+            h,
+            k: 3,
+            fft: 8,
+            pool_after: pool,
+        };
+        let convs = vec![
+            conv("conv1", 1, 8, 16, false),
+            conv("conv2", 8, 8, 16, false),
+            conv("conv3", 8, 8, 16, false),
+            conv("conv4", 16, 8, 16, true),
+        ];
+        // t0 input → t1 conv1 → t2 conv2 → t3 add(t1,t2) → t4 conv3
+        //   → t5 concat(t3,t4) → t6 conv4+pool (8ch, side 8)
+        let graph = vec![
+            GraphOp::Conv { conv: 0, input: 0 },
+            GraphOp::Conv { conv: 1, input: 1 },
+            GraphOp::Add { a: 1, b: 2 },
+            GraphOp::Conv { conv: 2, input: 3 },
+            GraphOp::Concat { a: 3, b: 4 },
+            GraphOp::Conv { conv: 3, input: 5 },
+        ];
+        Network {
+            name: "demo-residual".to_string(),
+            input_hw: 16,
+            input_c: 1,
+            convs,
+            fc: vec![32, 10],
+            graph: Some(graph),
+        }
+    }
+
+    /// ResNet-18-shaped residual preset at CIFAR scale (widths /4 of the
+    /// ImageNet model, 32x32 input). All downsampling happens on pooled
+    /// *transition* convs between stages — the spectral layers have no
+    /// stride, and a pool inside a block would break the shortcut shapes —
+    /// so each stage is two basic blocks (conv, conv, add) at a fixed side:
+    ///
+    /// ```text
+    /// conv1 3→16 @32 · [stage widths 16, 32, 64, 128; down-transition
+    /// before stages 2-4 pools 32→16→8→4] · 2 blocks/stage · fc 64→10
+    /// ```
+    pub fn resnet18() -> Self {
+        let widths = [16usize, 32, 64, 128];
+        let mut convs: Vec<ConvLayer> = Vec::new();
+        let mut graph: Vec<GraphOp> = Vec::new();
+        let mut h = 32usize;
+        let mut cin = 3usize;
+        let mut cur = 0usize; // tensor id of the running activation
+        let push_conv = |convs: &mut Vec<ConvLayer>,
+                             graph: &mut Vec<GraphOp>,
+                             cur: &mut usize,
+                             name: String,
+                             cin: usize,
+                             cout: usize,
+                             h: usize,
+                             pool: bool| {
+            convs.push(ConvLayer { name, cin, cout, h, k: 3, fft: 8, pool_after: pool });
+            graph.push(GraphOp::Conv { conv: convs.len() - 1, input: *cur });
+            *cur = graph.len();
+        };
+        push_conv(&mut convs, &mut graph, &mut cur, "conv1".into(), cin, widths[0], h, false);
+        cin = widths[0];
+        for (si, &w) in widths.iter().enumerate() {
+            let stage = si + 1;
+            if si > 0 {
+                // pooled transition into the stage: cin→w, side halves
+                push_conv(
+                    &mut convs,
+                    &mut graph,
+                    &mut cur,
+                    format!("down{stage}"),
+                    cin,
+                    w,
+                    h,
+                    true,
+                );
+                cin = w;
+                h /= 2;
+            }
+            for b in 1..=2 {
+                let shortcut = cur;
+                push_conv(
+                    &mut convs,
+                    &mut graph,
+                    &mut cur,
+                    format!("conv{stage}_{b}a"),
+                    w,
+                    w,
+                    h,
+                    false,
+                );
+                push_conv(
+                    &mut convs,
+                    &mut graph,
+                    &mut cur,
+                    format!("conv{stage}_{b}b"),
+                    w,
+                    w,
+                    h,
+                    false,
+                );
+                graph.push(GraphOp::Add { a: shortcut, b: cur });
+                cur = graph.len();
+            }
+        }
+        Network {
+            name: "resnet18".to_string(),
+            input_hw: 32,
+            input_c: 3,
+            convs,
+            fc: vec![64, 10],
+            graph: Some(graph),
+        }
+    }
+
+    /// The conv layers projected onto the graph checker's shape view.
+    pub fn conv_shapes(&self) -> Vec<ConvShape> {
+        self.convs
+            .iter()
+            .map(|c| ConvShape { cin: c.cin, cout: c.cout, h: c.h, pool_after: c.pool_after })
+            .collect()
+    }
+
+    /// Spatial side after the full conv stack (input to flatten). Chain
+    /// variants only — graph variants may end at a different channel count
+    /// than the last layer's cout; use [`Network::output_shape`].
     pub fn final_side(&self) -> usize {
         let mut h = self.input_hw;
         for c in &self.convs {
@@ -151,10 +438,25 @@ impl Network {
         h
     }
 
+    /// `(channels, spatial side)` of the tensor feeding the flatten — the
+    /// graph's final output, or the last layer's for chain variants.
+    pub fn output_shape(&self) -> (usize, usize) {
+        match &self.graph {
+            Some(g) => *check_graph(g, &self.conv_shapes(), self.input_c, self.input_hw)
+                .expect("preset graphs validate")
+                .last()
+                .expect("non-empty graph"),
+            None => {
+                let c = self.convs.last().map(|c| c.cout).unwrap_or(self.input_c);
+                (c, self.final_side())
+            }
+        }
+    }
+
     /// Flattened width feeding the first FC layer.
     pub fn flatten_width(&self) -> usize {
-        let s = self.final_side();
-        self.convs.last().map(|c| c.cout).unwrap_or(self.input_c) * s * s
+        let (c, s) = self.output_shape();
+        c * s * s
     }
 
     pub fn total_spectral_macs(&self) -> u64 {
@@ -265,5 +567,105 @@ mod tests {
         let n = Network::vgg16_224_k16();
         // K=16, k=3 → h'=14; 224/14 = 16 → 256 tiles in conv1.
         assert_eq!(n.convs[0].num_tiles(), 256);
+    }
+
+    #[test]
+    fn resnet18_structure() {
+        let n = Network::resnet18();
+        // conv1 + stage1 (4) + three down-transitions + 4 convs each
+        assert_eq!(n.convs.len(), 20);
+        let g = n.graph.as_ref().unwrap();
+        assert_eq!(g.len(), 28); // 20 convs + 8 residual adds
+        let adds = g.iter().filter(|op| matches!(op, GraphOp::Add { .. })).count();
+        assert_eq!(adds, 8);
+        assert!(!g.iter().any(|op| matches!(op, GraphOp::Concat { .. })));
+        let shapes = check_graph(g, &n.conv_shapes(), n.input_c, n.input_hw).unwrap();
+        assert_eq!(*shapes.last().unwrap(), (128, 4));
+        assert_eq!(n.output_shape(), (128, 4));
+        assert_eq!(n.flatten_width(), 2048);
+        // every add joins two same-shape tensors — already enforced by
+        // check_graph, but pin the shortcut spans: each add's `a` is
+        // produced 2 nodes before its `b`.
+        for op in g {
+            if let GraphOp::Add { a, b } = op {
+                assert_eq!(b - a, 2, "basic block spans two convs");
+            }
+        }
+    }
+
+    #[test]
+    fn demo_residual_structure() {
+        let n = Network::demo_residual();
+        assert_eq!(n.convs.len(), 4);
+        let g = n.graph.as_ref().unwrap();
+        assert!(g.iter().any(|op| matches!(op, GraphOp::Add { .. })));
+        assert!(g.iter().any(|op| matches!(op, GraphOp::Concat { .. })));
+        assert_eq!(n.output_shape(), (8, 8));
+        assert_eq!(n.flatten_width(), 512);
+    }
+
+    #[test]
+    fn chain_matches_implicit_graph() {
+        // A chain-graph demo must agree with the graph-less demo everywhere.
+        let d = Network::demo();
+        let mut chained = d.clone();
+        chained.graph = Some(GraphOp::chain(d.convs.len()));
+        assert_eq!(chained.output_shape(), d.output_shape());
+        assert_eq!(chained.flatten_width(), d.flatten_width());
+    }
+
+    #[test]
+    fn check_graph_rejects_malformed() {
+        let layers = vec![
+            ConvShape { cin: 1, cout: 8, h: 16, pool_after: false },
+            ConvShape { cin: 8, cout: 8, h: 16, pool_after: false },
+        ];
+        let ok = vec![GraphOp::Conv { conv: 0, input: 0 }, GraphOp::Conv { conv: 1, input: 1 }];
+        assert!(check_graph(&ok, &layers, 1, 16).is_ok());
+
+        // empty
+        assert!(check_graph(&[], &layers, 1, 16).is_err());
+        // self/forward reference (cycle)
+        let cyc = vec![GraphOp::Conv { conv: 0, input: 1 }, GraphOp::Conv { conv: 1, input: 2 }];
+        let e = check_graph(&cyc, &layers, 1, 16).unwrap_err();
+        assert!(format!("{e}").contains("cycle"), "{e}");
+        // dangling tensor id
+        let dangle = vec![GraphOp::Conv { conv: 0, input: 0 }, GraphOp::Conv { conv: 1, input: 9 }];
+        assert!(check_graph(&dangle, &layers, 1, 16).is_err());
+        // dangling conv index
+        let badconv = vec![GraphOp::Conv { conv: 7, input: 0 }];
+        assert!(check_graph(&badconv, &layers, 1, 16).is_err());
+        // conv used twice / never
+        let twice = vec![GraphOp::Conv { conv: 0, input: 0 }, GraphOp::Conv { conv: 0, input: 1 }];
+        assert!(check_graph(&twice, &layers, 1, 16).is_err());
+        // add shape mismatch (t0 is 1ch, t1 is 8ch)
+        let badadd = vec![
+            GraphOp::Conv { conv: 0, input: 0 },
+            GraphOp::Conv { conv: 1, input: 1 },
+            GraphOp::Add { a: 0, b: 2 },
+        ];
+        let e = check_graph(&badadd, &layers, 1, 16).unwrap_err();
+        assert!(format!("{e}").contains("mismatch"), "{e}");
+        // dead intermediate: t1 feeds nothing once t0 goes to both convs
+        let layers2 = vec![
+            ConvShape { cin: 1, cout: 8, h: 16, pool_after: false },
+            ConvShape { cin: 1, cout: 8, h: 16, pool_after: false },
+        ];
+        let dead = vec![GraphOp::Conv { conv: 0, input: 0 }, GraphOp::Conv { conv: 1, input: 0 }];
+        let e = check_graph(&dead, &layers2, 1, 16).unwrap_err();
+        assert!(format!("{e}").contains("never consumed"), "{e}");
+    }
+
+    #[test]
+    fn check_graph_rejects_concat_and_pool_errors() {
+        // concat spatial mismatch: pooled branch vs unpooled input
+        let layers = vec![ConvShape { cin: 1, cout: 8, h: 16, pool_after: true }];
+        let bad = vec![GraphOp::Conv { conv: 0, input: 0 }, GraphOp::Concat { a: 0, b: 1 }];
+        let e = check_graph(&bad, &layers, 1, 16).unwrap_err();
+        assert!(format!("{e}").contains("concat spatial mismatch"), "{e}");
+        // pool on an odd side
+        let odd = vec![ConvShape { cin: 1, cout: 8, h: 15, pool_after: true }];
+        let g = vec![GraphOp::Conv { conv: 0, input: 0 }];
+        assert!(check_graph(&g, &odd, 1, 15).is_err());
     }
 }

@@ -28,7 +28,7 @@
 
 use std::time::Duration;
 
-use crate::coordinator::{Metrics, PoolMetrics, Response, ScheduleMetrics};
+use crate::coordinator::{ArenaMetrics, Metrics, PoolMetrics, Response, ScheduleMetrics};
 use crate::err;
 use crate::runtime::{Dtype, Plane};
 use crate::tensor::Tensor;
@@ -217,6 +217,16 @@ fn schedule_to_json(sm: &ScheduleMetrics) -> Json {
     ])
 }
 
+fn arena_to_json(am: &ArenaMetrics) -> Json {
+    obj(vec![
+        ("tensors", num(am.tensors as f64)),
+        ("slots", num(am.slots as f64)),
+        ("reused", num(am.reused as f64)),
+        ("peak_activation_bytes", num(am.peak_activation_bytes as f64)),
+        ("no_reuse_bytes", num(am.no_reuse_bytes as f64)),
+    ])
+}
+
 fn metrics_to_json(m: &Metrics) -> Json {
     obj(vec![
         ("count", num(m.count() as f64)),
@@ -247,6 +257,7 @@ fn metrics_to_json(m: &Metrics) -> Json {
                 .collect()),
         ),
         ("schedule", m.schedule.as_ref().map(schedule_to_json).unwrap_or(Json::Null)),
+        ("arena", m.arena.as_ref().map(arena_to_json).unwrap_or(Json::Null)),
     ])
 }
 
@@ -363,9 +374,30 @@ mod tests {
         assert_eq!(hist[0].get("size").unwrap().as_usize(), Some(2));
         assert_eq!(hist[0].get("count").unwrap().as_usize(), Some(1));
         assert_eq!(merged.get("schedule"), Some(&Json::Null));
+        assert_eq!(merged.get("arena"), Some(&Json::Null));
         assert_eq!(j.get("per_worker").unwrap().as_arr().unwrap().len(), 1);
         // and it reparses (the /metrics body is valid json)
         assert!(Json::parse(&j.to_string()).is_ok());
+    }
+
+    #[test]
+    fn arena_metrics_serialize_when_present() {
+        let mut m = Metrics::new();
+        m.arena = Some(ArenaMetrics {
+            tensors: 7,
+            slots: 3,
+            reused: 4,
+            peak_activation_bytes: 32768,
+            no_reuse_bytes: 52224,
+        });
+        let pm = PoolMetrics::from_workers(vec![m]);
+        let j = pool_metrics_to_json(&pm, Dtype::F32, Plane::Half);
+        let a = j.get("merged").unwrap().get("arena").unwrap();
+        assert_eq!(a.get("peak_activation_bytes").unwrap().as_usize(), Some(32768));
+        assert_eq!(a.get("no_reuse_bytes").unwrap().as_usize(), Some(52224));
+        assert_eq!(a.get("slots").unwrap().as_usize(), Some(3));
+        assert_eq!(a.get("tensors").unwrap().as_usize(), Some(7));
+        assert_eq!(a.get("reused").unwrap().as_usize(), Some(4));
     }
 
     #[test]

@@ -6,7 +6,7 @@ use std::collections::BTreeMap;
 
 use super::Dtype;
 use crate::err;
-use crate::model::Network;
+use crate::model::{check_graph, ConvShape, GraphOp, Network};
 use crate::util::error::Result;
 use crate::util::json::Json;
 
@@ -40,6 +40,33 @@ pub struct VariantEntry {
     pub input_c: usize,
     pub fc: Vec<usize>,
     pub layers: Vec<LayerEntry>,
+    /// Activation DAG over `layers`; absent (`None`) means the historical
+    /// straight chain, so pre-graph manifests keep parsing unchanged —
+    /// the same optional-field pattern as `alpha`/`dtype`.
+    pub graph: Option<Vec<GraphOp>>,
+}
+
+impl VariantEntry {
+    /// The layers projected onto the graph checker's shape view.
+    pub fn conv_shapes(&self) -> Vec<ConvShape> {
+        self.layers
+            .iter()
+            .map(|l| ConvShape { cin: l.cin, cout: l.cout, h: l.h, pool_after: l.pool_after })
+            .collect()
+    }
+
+    /// The effective execution graph: the declared DAG, or the implicit
+    /// chain over `layers` for graph-less variants.
+    pub fn graph_ops(&self) -> Vec<GraphOp> {
+        self.graph.clone().unwrap_or_else(|| GraphOp::chain(self.layers.len()))
+    }
+
+    /// `(channels, spatial side)` of the tensor feeding the flatten.
+    pub fn output_shape(&self) -> Result<(usize, usize)> {
+        let shapes =
+            check_graph(&self.graph_ops(), &self.conv_shapes(), self.input_c, self.input_hw)?;
+        Ok(*shapes.last().expect("non-empty graph"))
+    }
 }
 
 /// The whole manifest.
@@ -115,6 +142,41 @@ impl Manifest {
                 .iter()
                 .map(|x| x.as_usize().ok_or_else(|| err!("bad fc width")))
                 .collect::<Result<Vec<_>>>()?;
+            // 'graph' is optional like the top-level alpha/dtype: absent
+            // means the straight chain every pre-graph manifest describes.
+            let graph = match v.get("graph") {
+                None => None,
+                Some(g) => {
+                    let nodes = g
+                        .as_arr()
+                        .ok_or_else(|| err!("variant {name}: 'graph' is not an array"))?;
+                    let mut ops = Vec::with_capacity(nodes.len());
+                    for (i, n) in nodes.iter().enumerate() {
+                        let op = n
+                            .get("op")
+                            .and_then(Json::as_str)
+                            .ok_or_else(|| err!("variant {name} graph[{i}]: missing 'op'"))?;
+                        ops.push(match op {
+                            "conv" => GraphOp::Conv {
+                                conv: req_usize(n, "conv")?,
+                                input: req_usize(n, "input")?,
+                            },
+                            "add" => {
+                                GraphOp::Add { a: req_usize(n, "a")?, b: req_usize(n, "b")? }
+                            }
+                            "concat" => {
+                                GraphOp::Concat { a: req_usize(n, "a")?, b: req_usize(n, "b")? }
+                            }
+                            other => {
+                                return Err(err!(
+                                    "variant {name} graph[{i}]: unknown op {other:?}"
+                                ))
+                            }
+                        });
+                    }
+                    Some(ops)
+                }
+            };
             variants.insert(
                 name.clone(),
                 VariantEntry {
@@ -122,6 +184,7 @@ impl Manifest {
                     input_c: req_usize(v, "input_c")?,
                     fc,
                     layers,
+                    graph,
                 },
             );
         }
@@ -199,12 +262,38 @@ impl Manifest {
                             ])
                         })
                         .collect());
-                    let body = obj(vec![
+                    let mut fields = vec![
                         ("input_hw", num(v.input_hw as f64)),
                         ("input_c", num(v.input_c as f64)),
                         ("fc", arr(v.fc.iter().map(|&x| num(x as f64)).collect())),
                         ("layers", layers),
-                    ]);
+                    ];
+                    // emitted only when declared, so graph-less manifests
+                    // round-trip to the pre-graph schema byte for byte
+                    if let Some(g) = &v.graph {
+                        let nodes = g
+                            .iter()
+                            .map(|op| match *op {
+                                GraphOp::Conv { conv, input } => obj(vec![
+                                    ("op", s("conv")),
+                                    ("conv", num(conv as f64)),
+                                    ("input", num(input as f64)),
+                                ]),
+                                GraphOp::Add { a, b } => obj(vec![
+                                    ("op", s("add")),
+                                    ("a", num(a as f64)),
+                                    ("b", num(b as f64)),
+                                ]),
+                                GraphOp::Concat { a, b } => obj(vec![
+                                    ("op", s("concat")),
+                                    ("a", num(a as f64)),
+                                    ("b", num(b as f64)),
+                                ]),
+                            })
+                            .collect();
+                        fields.push(("graph", arr(nodes)));
+                    }
+                    let body = obj(fields);
                     (name.clone(), body)
                 })
                 .collect(),
@@ -278,6 +367,10 @@ impl Manifest {
                     ));
                 }
             }
+            if let Some(g) = &v.graph {
+                check_graph(g, &v.conv_shapes(), v.input_c, v.input_hw)
+                    .map_err(|e| err!("variant {name}: {e}"))?;
+            }
         }
         Ok(())
     }
@@ -321,13 +414,20 @@ impl Manifest {
     /// executes shapes directly, so no HLO files are needed — only the
     /// variant/executable geometry that `aot.py` would have written. The
     /// synthesized manifest carries the same variants (`demo`,
-    /// `vgg16-cifar`, `vgg16-224`) at the paper's K=8/k=3/h'=6 point.
+    /// `demo-residual`, `vgg16-cifar`, `vgg16-224`, `resnet18`) at the
+    /// paper's K=8/k=3/h'=6 point.
     pub fn builtin() -> Manifest {
         let (fft, k) = (8usize, 3usize);
         let tile = fft - k + 1;
         let mut variants = BTreeMap::new();
         let mut executables = BTreeMap::new();
-        for net in [Network::demo(), Network::vgg16_cifar(), Network::vgg16_224()] {
+        for net in [
+            Network::demo(),
+            Network::demo_residual(),
+            Network::vgg16_cifar(),
+            Network::vgg16_224(),
+            Network::resnet18(),
+        ] {
             let mut layers = Vec::new();
             for conv in &net.convs {
                 debug_assert_eq!(conv.fft, fft, "builtin manifest is K=8 only");
@@ -358,6 +458,7 @@ impl Manifest {
                     input_c: net.input_c,
                     fc: net.fc.clone(),
                     layers,
+                    graph: net.graph.clone(),
                 },
             );
         }
@@ -493,11 +594,16 @@ mod tests {
         assert_eq!(m.fft_size, 8);
         assert_eq!(m.kernel_k, 3);
         assert_eq!(m.tile, 6);
-        for v in ["demo", "vgg16-cifar", "vgg16-224"] {
+        for v in ["demo", "demo-residual", "vgg16-cifar", "vgg16-224", "resnet18"] {
             assert!(m.variants.contains_key(v), "missing variant {v}");
         }
         assert_eq!(m.variant("demo").unwrap().layers.len(), 2);
         assert_eq!(m.variant("vgg16-224").unwrap().layers.len(), 13);
+        // graph presets carry their DAG; chain presets stay graph-less
+        assert!(m.variant("vgg16-cifar").unwrap().graph.is_none());
+        assert_eq!(m.variant("resnet18").unwrap().graph.as_ref().unwrap().len(), 28);
+        assert_eq!(m.variant("resnet18").unwrap().output_shape().unwrap(), (128, 4));
+        assert_eq!(m.variant("demo-residual").unwrap().output_shape().unwrap(), (8, 8));
         // demo has exactly two distinct executable shapes
         let demo_files: std::collections::BTreeSet<_> = m
             .variant("demo")
@@ -507,6 +613,46 @@ mod tests {
             .map(|l| l.file.clone())
             .collect();
         assert_eq!(demo_files.len(), 2);
+    }
+
+    #[test]
+    fn graph_absent_means_chain() {
+        // pre-graph manifests (like `sample()`) parse to graph: None and
+        // execute as the implicit chain
+        let m = Manifest::parse(&sample()).unwrap();
+        let v = m.variant("demo").unwrap();
+        assert!(v.graph.is_none());
+        assert_eq!(v.graph_ops(), GraphOp::chain(1));
+        assert_eq!(v.output_shape().unwrap(), (8, 8));
+    }
+
+    #[test]
+    fn graph_parses_and_roundtrips() {
+        let with = sample().replace(
+            "\"input_hw\": 16,",
+            "\"graph\": [{\"op\": \"conv\", \"conv\": 0, \"input\": 0}], \"input_hw\": 16,",
+        );
+        let m = Manifest::parse(&with).unwrap();
+        let v = m.variant("demo").unwrap();
+        assert_eq!(v.graph.as_deref(), Some(&[GraphOp::Conv { conv: 0, input: 0 }][..]));
+        assert_eq!(Manifest::parse(&m.to_json()).unwrap(), m);
+    }
+
+    #[test]
+    fn graph_rejects_unknown_op_and_bad_refs() {
+        let unknown = sample().replace(
+            "\"input_hw\": 16,",
+            "\"graph\": [{\"op\": \"stride\", \"conv\": 0, \"input\": 0}], \"input_hw\": 16,",
+        );
+        let e = Manifest::parse(&unknown).unwrap_err();
+        assert!(format!("{e}").contains("unknown op"), "{e}");
+        // dangling conv index fails validate (wrapped with the variant name)
+        let dangling = sample().replace(
+            "\"input_hw\": 16,",
+            "\"graph\": [{\"op\": \"conv\", \"conv\": 3, \"input\": 0}], \"input_hw\": 16,",
+        );
+        let e = Manifest::parse(&dangling).unwrap_err();
+        assert!(format!("{e}").contains("variant demo"), "{e}");
     }
 
     #[test]

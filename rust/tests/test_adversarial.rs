@@ -363,6 +363,121 @@ mod hostile_http {
     }
 }
 
+// ---------------- manifest graphs: hostile activation DAGs -------------------
+
+mod hostile_graphs {
+    use spectral_flow::runtime::Manifest;
+
+    /// A two-conv manifest with a `{graph}` placeholder: each test splices
+    /// in an adversarial node list. conv0: 8ch 16×16 → conv1: 8ch pooled.
+    fn with_graph(graph: &str) -> String {
+        format!(
+            r#"{{
+              "format": "hlo-text-v1",
+              "fft_size": 8, "kernel_k": 3, "tile": 6,
+              "word_bytes": 2, "hadamard_mode": "mxu4",
+              "variants": {{
+                "demo": {{
+                  "input_hw": 16, "input_c": 8, "fc": [10],
+                  "graph": [{graph}],
+                  "layers": [
+                    {{"name": "conv0", "cin": 8, "cout": 8, "h": 16,
+                      "tiles": 9, "pool_after": false, "file": "a.hlo.txt"}},
+                    {{"name": "conv1", "cin": 8, "cout": 8, "h": 16,
+                      "tiles": 9, "pool_after": true, "file": "a.hlo.txt"}}
+                  ]
+                }}
+              }},
+              "executables": {{
+                "a.hlo.txt": {{"tiles": 9, "cin": 8, "cout": 8,
+                               "fft_size": 8, "sha256": "00", "bytes": 10}}
+              }}
+            }}"#
+        )
+    }
+
+    const CONV0: &str = r#"{"op":"conv","conv":0,"input":0}"#;
+    const CONV1: &str = r#"{"op":"conv","conv":1,"input":1}"#;
+
+    /// Every hostile graph must come back as a clean `Err` whose message
+    /// names the problem — never a panic, never a silently-accepted plan.
+    #[test]
+    fn malformed_graphs_error_with_clear_messages() {
+        let cases: Vec<(&str, String, &str)> = vec![
+            // a node reading its own output (the only way a node list can
+            // express a cycle) and a forward reference
+            ("self-cycle", r#"{"op":"conv","conv":0,"input":1}"#.into(), "cycle"),
+            (
+                "forward-ref",
+                format!(r#"{{"op":"conv","conv":0,"input":2}}, {CONV1}"#),
+                "cycle",
+            ),
+            // dangling references
+            (
+                "dangling-tensor",
+                format!(r#"{CONV0}, {{"op":"add","a":1,"b":9}}, {CONV1}"#),
+                "dangling tensor",
+            ),
+            ("dangling-conv", r#"{"op":"conv","conv":7,"input":0}"#.into(), "dangling conv"),
+            // conv1 pools to 8×8, conv0 stays 16×16 — the add can't line up
+            (
+                "add-shape-mismatch",
+                format!(r#"{CONV0}, {CONV1}, {{"op":"add","a":1,"b":2}}"#),
+                "mismatch",
+            ),
+            (
+                "concat-axis-mismatch",
+                format!(r#"{CONV0}, {CONV1}, {{"op":"concat","a":1,"b":2}}"#),
+                "concat spatial mismatch",
+            ),
+            // structural abuse
+            ("empty-graph", String::new(), "empty"),
+            (
+                "conv-used-twice",
+                format!(r#"{CONV0}, {{"op":"conv","conv":0,"input":1}}"#),
+                "used twice",
+            ),
+            (
+                "dead-intermediate",
+                format!(r#"{CONV0}, {{"op":"conv","conv":1,"input":0}}"#),
+                "never consumed",
+            ),
+            ("unknown-op", r#"{"op":"warp","a":0,"b":0}"#.into(), "unknown op"),
+        ];
+        for (tag, graph, needle) in &cases {
+            let err = Manifest::parse(&with_graph(graph))
+                .err()
+                .unwrap_or_else(|| panic!("{tag}: hostile graph was accepted"));
+            let msg = err.to_string();
+            assert!(
+                msg.contains(needle),
+                "{tag}: error {msg:?} does not mention {needle:?}"
+            );
+        }
+        // non-array graph field
+        let bad = with_graph("").replace(r#""graph": []"#, r#""graph": "loop""#);
+        let msg = Manifest::parse(&bad).err().expect("non-array graph accepted").to_string();
+        assert!(msg.contains("not an array"), "{msg:?}");
+    }
+
+    /// Pre-graph manifests (no `graph` key) still parse, mean chain
+    /// execution, and round-trip through to_json without growing a graph.
+    #[test]
+    fn legacy_layer_list_manifests_round_trip() {
+        let legacy = with_graph("").replace(&format!(r#""graph": [],{}"#, "\n"), "");
+        assert!(!legacy.contains("graph"), "fixture must have no graph key");
+        let m = Manifest::parse(&legacy).expect("legacy manifest parses");
+        let v = m.variant("demo").unwrap();
+        assert!(v.graph.is_none(), "absent graph must stay None");
+        assert_eq!(v.graph_ops().len(), v.layers.len(), "chain semantics");
+        let text = m.to_json().to_string();
+        assert!(!text.contains("\"graph\""), "to_json invented a graph key");
+        let back = Manifest::parse(&text).expect("round-trip parses");
+        assert!(back.variant("demo").unwrap().graph.is_none());
+        assert_eq!(back.variant("demo").unwrap().layers.len(), 2);
+    }
+}
+
 // ---------------- rng: stream independence under forking --------------------
 
 #[test]

@@ -1,0 +1,289 @@
+//! Activation-arena property tests over randomized residual DAGs.
+//!
+//! A seeded generator grows random valid activation graphs (convs with
+//! optional pooling, residual adds, concats), wraps each in an on-disk
+//! manifest, and runs the real engine over it twice — arena slot reuse on
+//! and off. Pinned properties:
+//!
+//! * **No read-after-reuse**: debug builds poison freed slots with NaN and
+//!   generation-check every read, so a stale read either trips a
+//!   debug_assert or surfaces as a non-finite logit. Every random forward
+//!   must come out finite.
+//! * **Peak bounds**: reuse peak ≤ the no-reuse sum of all tensors, slot
+//!   count ≤ tensor count, and the plan hits the known optimum on the
+//!   handmade chain (2 slots) and diamond (3 slots).
+//! * **Reuse is invisible to the numbers**: arena forward bit-identical to
+//!   the no-reuse forward on every random graph.
+
+use std::fmt::Write as _;
+
+use spectral_flow::coordinator::{ArenaPlan, EngineOptions, InferenceEngine, WeightMode};
+use spectral_flow::model::{ConvShape, GraphOp};
+use spectral_flow::util::rng::Pcg32;
+
+const FFT: usize = 8;
+const K: usize = 3;
+const TILE: usize = FFT - K + 1;
+
+/// One randomly grown, valid-by-construction activation graph.
+struct RandomGraph {
+    layers: Vec<ConvShape>,
+    steps: Vec<GraphOp>,
+    input_c: usize,
+    input_hw: usize,
+}
+
+/// Grow a random DAG: convs consume any produced tensor (fan-out allowed),
+/// adds/concats join shape-compatible pairs, then a cleanup pass folds
+/// every still-unconsumed tensor into the tail so `check_graph`'s
+/// every-tensor-consumed rule holds by construction. Spatial sides stay
+/// powers of two, so any two loose ends can always be pooled into
+/// agreement and concatenated.
+fn random_graph(rng: &mut Pcg32) -> RandomGraph {
+    let input_c = [1usize, 2, 4][rng.range(0, 3)];
+    let input_hw = [8usize, 16][rng.range(0, 2)];
+    let mut layers: Vec<ConvShape> = Vec::new();
+    let mut steps: Vec<GraphOp> = Vec::new();
+    // shape + consumed flag per tensor id (0 = the network input)
+    let mut shapes = vec![(input_c, input_hw)];
+    let mut consumed = vec![false];
+
+    let push_conv = |layers: &mut Vec<ConvShape>,
+                         steps: &mut Vec<GraphOp>,
+                         shapes: &mut Vec<(usize, usize)>,
+                         consumed: &mut Vec<bool>,
+                         input: usize,
+                         cout: usize,
+                         pool: bool| {
+        let (cin, h) = shapes[input];
+        steps.push(GraphOp::Conv { conv: layers.len(), input });
+        layers.push(ConvShape { cin, cout, h, pool_after: pool });
+        consumed[input] = true;
+        shapes.push((cout, if pool { h / 2 } else { h }));
+        consumed.push(false);
+    };
+
+    for _ in 0..rng.range(3, 10) {
+        let roll = rng.range(0, 10);
+        if roll < 6 {
+            // conv off any produced tensor — reading an already-consumed
+            // tensor creates the fan-out the arena must keep live
+            let input = rng.range(0, shapes.len());
+            let cout = [1usize, 2, 4][rng.range(0, 3)];
+            let pool = shapes[input].1 % 2 == 0 && shapes[input].1 > 2 && rng.range(0, 3) == 0;
+            push_conv(&mut layers, &mut steps, &mut shapes, &mut consumed, input, cout, pool);
+        } else if roll < 8 {
+            // residual add: any two tensors with identical shapes
+            let a = rng.range(0, shapes.len());
+            if let Some(b) = (0..shapes.len()).find(|&b| b != a && shapes[b] == shapes[a]) {
+                steps.push(GraphOp::Add { a, b });
+                consumed[a] = true;
+                consumed[b] = true;
+                shapes.push(shapes[a]);
+                consumed.push(false);
+            }
+        } else {
+            // concat: any two tensors sharing a spatial side
+            let a = rng.range(0, shapes.len());
+            if let Some(b) = (0..shapes.len()).find(|&b| b != a && shapes[b].1 == shapes[a].1) {
+                steps.push(GraphOp::Concat { a, b });
+                consumed[a] = true;
+                consumed[b] = true;
+                shapes.push((shapes[a].0 + shapes[b].0, shapes[a].1));
+                consumed.push(false);
+            }
+        }
+    }
+    // the random walk can degenerate to zero nodes (every roll picked a
+    // join with no compatible pair); give check_graph something to chew on
+    if steps.is_empty() {
+        push_conv(&mut layers, &mut steps, &mut shapes, &mut consumed, 0, 4, false);
+    }
+    // cleanup: join every unconsumed tensor into the current tail. Pool
+    // whichever side is larger down to the smaller (sides are powers of
+    // two, so halving always lands on an even side), then concat. A pooled
+    // copy becomes the new tail and the displaced tail becomes a loose end
+    // itself, so the loop re-scans until only the final tensor is open.
+    loop {
+        let last = shapes.len() - 1;
+        let Some(t) = (0..last).find(|&t| !consumed[t]) else { break };
+        if shapes[t].1 == shapes[last].1 {
+            steps.push(GraphOp::Concat { a: t, b: last });
+            consumed[t] = true;
+            consumed[last] = true;
+            shapes.push((shapes[t].0 + shapes[last].0, shapes[t].1));
+            consumed.push(false);
+        } else if shapes[t].1 < shapes[last].1 {
+            // shrink the tail toward the loose end
+            let cout = shapes[last].0;
+            push_conv(&mut layers, &mut steps, &mut shapes, &mut consumed, last, cout, true);
+        } else {
+            // shrink the loose end (one pooled conv per pass)
+            let cout = shapes[t].0;
+            push_conv(&mut layers, &mut steps, &mut shapes, &mut consumed, t, cout, true);
+        }
+    }
+    RandomGraph { layers, steps, input_c, input_hw }
+}
+
+/// Serialize a random graph as a manifest.json the runtime can open. The
+/// interp backend never reads executable files, so registering shapes is
+/// enough.
+fn manifest_json(g: &RandomGraph) -> String {
+    let mut layers = String::new();
+    let mut execs = String::new();
+    for (i, l) in g.layers.iter().enumerate() {
+        let side = l.h.div_ceil(TILE);
+        let tiles = side * side;
+        if i > 0 {
+            layers.push(',');
+            execs.push(',');
+        }
+        write!(
+            layers,
+            r#"{{"name":"conv{i}","cin":{},"cout":{},"h":{},"tiles":{tiles},"pool_after":{},"file":"l{i}.hlo.txt"}}"#,
+            l.cin, l.cout, l.h, l.pool_after
+        )
+        .unwrap();
+        write!(
+            execs,
+            r#""l{i}.hlo.txt":{{"tiles":{tiles},"cin":{},"cout":{},"fft_size":{FFT},"sha256":"synthetic","bytes":0}}"#,
+            l.cin, l.cout
+        )
+        .unwrap();
+    }
+    let mut graph = String::new();
+    for (i, op) in g.steps.iter().enumerate() {
+        if i > 0 {
+            graph.push(',');
+        }
+        match *op {
+            GraphOp::Conv { conv, input } => {
+                write!(graph, r#"{{"op":"conv","conv":{conv},"input":{input}}}"#).unwrap()
+            }
+            GraphOp::Add { a, b } => {
+                write!(graph, r#"{{"op":"add","a":{a},"b":{b}}}"#).unwrap()
+            }
+            GraphOp::Concat { a, b } => {
+                write!(graph, r#"{{"op":"concat","a":{a},"b":{b}}}"#).unwrap()
+            }
+        }
+    }
+    format!(
+        r#"{{"format":"hlo-text-v1","fft_size":{FFT},"kernel_k":{K},"tile":{TILE},
+"word_bytes":2,"hadamard_mode":"mxu4","alpha":1,
+"variants":{{"random":{{"input_hw":{},"input_c":{},"fc":[4],
+"layers":[{layers}],"graph":[{graph}]}}}},
+"executables":{{{execs}}}}}"#,
+        g.input_hw, g.input_c
+    )
+}
+
+/// Write the manifest under a unique temp dir and hand back the dir.
+fn write_manifest(g: &RandomGraph, tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "spectral-flow-arena-{tag}-{}",
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&dir).expect("temp dir");
+    std::fs::write(dir.join("manifest.json"), manifest_json(g)).expect("manifest write");
+    dir
+}
+
+fn engine_on(dir: &std::path::Path, reuse: bool, alpha: usize) -> InferenceEngine {
+    InferenceEngine::with_options(
+        dir.to_str().unwrap(),
+        "random",
+        WeightMode::from_alpha(alpha),
+        9,
+        EngineOptions { arena_reuse: reuse, ..EngineOptions::default() },
+    )
+    .expect("random-graph engine")
+}
+
+#[test]
+fn random_graphs_forward_finite_and_reuse_is_bit_invisible() {
+    for case in 0..12u64 {
+        let mut rng = Pcg32::new(1000 + case);
+        let g = random_graph(&mut rng);
+        let dir = write_manifest(&g, &format!("fwd{case}"));
+        let alpha = if case % 2 == 0 { 1 } else { 4 };
+        let mut reuse = engine_on(&dir, true, alpha);
+        let mut flat = engine_on(&dir, false, alpha);
+        let am = reuse.arena_metrics().clone();
+        assert!(am.slots <= am.tensors, "case {case}: more slots than tensors");
+        assert!(
+            am.peak_activation_bytes <= am.no_reuse_bytes,
+            "case {case}: reuse peak above the flat sum"
+        );
+        assert_eq!(flat.arena_metrics().slots, flat.arena_metrics().tensors, "case {case}");
+        let imgs: Vec<_> = (1u64..=3).map(|s| reuse.synthetic_image(s)).collect();
+        let a = reuse.forward_batch(&imgs).expect("reuse forward");
+        let b = flat.forward_batch(&imgs).expect("flat forward");
+        for (lane, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert!(
+                x.iter().all(|v| v.is_finite()),
+                "case {case} lane {lane}: poison reached the logits"
+            );
+            assert_eq!(x, y, "case {case} lane {lane}: arena reuse changed the numbers");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn random_plans_never_leak_or_double_free_slots() {
+    for case in 0..20u64 {
+        let mut rng = Pcg32::new(7000 + case);
+        let g = random_graph(&mut rng);
+        let plan = ArenaPlan::build(g.steps.clone(), &g.layers, g.input_c, g.input_hw, true)
+            .expect("random graph is valid by construction");
+        // replay the plan: claims and frees must balance exactly, and the
+        // output slot must never appear in its own step's free list — the
+        // executor frees dying inputs *before* placing the output, which
+        // is only safe because the planner claims first
+        let mut live = vec![false; plan.n_slots];
+        live[plan.slot_of[0]] = true;
+        for (i, _) in plan.steps.iter().enumerate() {
+            let s = plan.slot_of[i + 1];
+            assert!(!live[s], "case {case} step {i}: output claimed a live slot");
+            assert!(
+                !plan.free_after[i].contains(&s),
+                "case {case} step {i}: output slot freed by its own step"
+            );
+            for &f in &plan.free_after[i] {
+                assert!(live[f], "case {case}: freeing a slot that is not live");
+                live[f] = false;
+            }
+            live[s] = true;
+        }
+        let final_slot = plan.slot_of[plan.steps.len()];
+        assert!(live[final_slot], "case {case}: final tensor's slot not live");
+    }
+}
+
+#[test]
+fn handmade_chain_and_diamond_hit_known_optima() {
+    let layers = vec![ConvShape { cin: 4, cout: 4, h: 8, pool_after: false }; 3];
+    let chain = ArenaPlan::build(GraphOp::chain(3), &layers, 4, 8, true).unwrap();
+    assert_eq!(chain.n_slots, 2, "an equal-size chain ping-pongs two slots");
+
+    // diamond: t1 fans out, both branches join in an add — 3 is optimal
+    // (t1 must coexist with each branch output)
+    let dlayers = vec![
+        ConvShape { cin: 1, cout: 4, h: 8, pool_after: false },
+        ConvShape { cin: 4, cout: 4, h: 8, pool_after: false },
+        ConvShape { cin: 4, cout: 4, h: 8, pool_after: false },
+    ];
+    let steps = vec![
+        GraphOp::Conv { conv: 0, input: 0 },
+        GraphOp::Conv { conv: 1, input: 1 },
+        GraphOp::Conv { conv: 2, input: 1 },
+        GraphOp::Add { a: 2, b: 3 },
+    ];
+    let diamond = ArenaPlan::build(steps.clone(), &dlayers, 1, 8, true).unwrap();
+    assert_eq!(diamond.n_slots, 3, "a diamond needs exactly three slots");
+    let flat = ArenaPlan::build(steps, &dlayers, 1, 8, false).unwrap();
+    assert_eq!(flat.n_slots, 5, "no-reuse keeps all five tensors resident");
+    assert!(diamond.metrics.peak_activation_bytes < flat.metrics.peak_activation_bytes);
+}

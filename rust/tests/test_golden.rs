@@ -1,0 +1,303 @@
+//! Spatial golden model: a naive direct-convolution forward (no FFT
+//! anywhere) that pins the spectral engine's numerics across presets,
+//! compression ratios, scheduler policies and batch sizes.
+//!
+//! The golden path shares only the *structural* helpers with the engine —
+//! `im2tiles`, `overlap_add`, bias/ReLU/pool/FC — so the two pipelines
+//! differ exactly where the paper's accelerator lives: the per-tile conv
+//! core. The engine runs tile-FFT → sparse Hadamard MAC → IFFT; the golden
+//! model runs the equivalent circular convolution as a direct double sum
+//! in f64:
+//!
+//! * Dense (α = 1): the spectral planes are the FFT of the flipped spatial
+//!   3×3 kernel, so the circular-conv taps are just those 9 spatial values
+//!   — a direct 9-tap convolution per tile.
+//! * Pruned (α > 1): the kernels exist only in the frequency domain, so
+//!   the golden taps are the inverse *DFT by definition* (a literal double
+//!   sum over the K²/α stored non-zeros — no butterflies) of each sparse
+//!   plane. Since activations are real, only the real part of the
+//!   time-domain kernel can reach the output, which is exactly what the
+//!   engine's `Re(IFFT(Σ X∘W))` keeps.
+//!
+//! Both paths round each conv's tile outputs to f32 at the same point (the
+//! backend emits f32 tiles), so at `dtype f64` the remaining divergence is
+//! FFT round-off — pinned here to ≤1e-5 end to end at the logits.
+
+use spectral_flow::coordinator::{EngineOptions, InferenceEngine, WeightMode};
+use spectral_flow::fft::{im2tiles, overlap_add, TileGeometry};
+use spectral_flow::model::GraphOp;
+use spectral_flow::nn;
+use spectral_flow::runtime::Dtype;
+use spectral_flow::schedule::SchedulePolicy;
+use spectral_flow::tensor::Tensor;
+use spectral_flow::util::check::assert_allclose;
+
+fn artifacts_dir() -> String {
+    std::env::var("SPECTRAL_FLOW_ARTIFACTS").unwrap_or_else(|_| "artifacts".into())
+}
+
+fn f64_engine(variant: &str, mode: WeightMode, policy: SchedulePolicy) -> InferenceEngine {
+    InferenceEngine::with_options(
+        &artifacts_dir(),
+        variant,
+        mode,
+        7,
+        EngineOptions {
+            scheduler: policy,
+            dtype: Some(Dtype::F64),
+            ..EngineOptions::default()
+        },
+    )
+    .expect("engine construction")
+}
+
+/// Circular-convolution taps for one conv layer, laid out
+/// `[cout][cin][side][side]` with `y[u,v] += tap[a,b] · x[(u−a)%K,(v−b)%K]`.
+/// `side = k` for dense layers (9 spatial taps), `side = K` for pruned
+/// layers (dense time-domain kernel from the naive inverse DFT).
+struct GoldenTaps {
+    taps: Vec<f64>,
+    side: usize,
+}
+
+fn golden_taps(e: &InferenceEngine, idx: usize, fft: usize, k: usize) -> GoldenTaps {
+    let lw = &e.weights.convs[idx];
+    if let Some(sp) = &lw.spatial {
+        // dense: the engine FFTs the flipped kernel, so the circular-conv
+        // tap at offset (a, b) is spatial[k-1-a, k-1-b]
+        let sh = sp.shape();
+        let (n, m) = (sh[0], sh[1]);
+        let d = sp.data();
+        let mut taps = vec![0f64; n * m * k * k];
+        for o in 0..n {
+            for i in 0..m {
+                for a in 0..k {
+                    for b in 0..k {
+                        taps[((o * m + i) * k + a) * k + b] =
+                            d[((o * m + i) * k + (k - 1 - a)) * k + (k - 1 - b)] as f64;
+                    }
+                }
+            }
+        }
+        GoldenTaps { taps, side: k }
+    } else {
+        // pruned: inverse DFT by definition of each sparse plane. The
+        // angle e^{+2πi(up+vq)/K} only depends on (up+vq) mod K, so the
+        // whole basis is a K-entry root table — no FFT, no trig in the
+        // inner loop. Activations are real, so only Re(w_time) matters.
+        let sl = lw.sparse.as_ref().expect("pruned weights carry sparse planes");
+        let (n, m) = (sl.cout, sl.cin);
+        let k2 = fft * fft;
+        let roots: Vec<(f64, f64)> = (0..fft)
+            .map(|r| {
+                let ang = std::f64::consts::TAU * r as f64 / fft as f64;
+                (ang.cos(), ang.sin())
+            })
+            .collect();
+        let mut taps = vec![0f64; n * m * k2];
+        for o in 0..n {
+            for i in 0..m {
+                let kern = sl.kernel(o, i);
+                let base = (o * m + i) * k2;
+                for (&fidx, &(re, im)) in kern.indices.iter().zip(&kern.values) {
+                    let (u, v) = (fidx as usize / fft, fidx as usize % fft);
+                    let (wr, wi) = (re as f64, im as f64);
+                    for p in 0..fft {
+                        for q in 0..fft {
+                            let (c, s) = roots[(u * p + v * q) % fft];
+                            taps[base + p * fft + q] += wr * c - wi * s;
+                        }
+                    }
+                }
+            }
+        }
+        for t in &mut taps {
+            *t /= k2 as f64;
+        }
+        GoldenTaps { taps, side: fft }
+    }
+}
+
+/// One conv layer of the golden forward: im2tiles → direct circular conv
+/// in f64 (rounded to f32 tiles, the backend's emission point) →
+/// overlap-add → bias → ReLU.
+fn golden_conv(e: &InferenceEngine, idx: usize, x: &Tensor, fft: usize, k: usize) -> Tensor {
+    let l = &e.variant.layers[idx];
+    let geo = TileGeometry::new(l.h, fft, k);
+    let tiles = im2tiles(x, &geo);
+    let t_cnt = geo.num_tiles();
+    let (cin, cout) = (l.cin, l.cout);
+    let k2 = fft * fft;
+    let gt = golden_taps(e, idx, fft, k);
+    let side = gt.side;
+    let td = tiles.data();
+    let mut out = Tensor::zeros(&[t_cnt, cout, fft, fft]);
+    let od = out.data_mut();
+    let mut acc = vec![0f64; k2];
+    for t in 0..t_cnt {
+        for n in 0..cout {
+            acc.iter_mut().for_each(|a| *a = 0.0);
+            for m in 0..cin {
+                let xoff = (t * cin + m) * k2;
+                let woff = (n * cin + m) * side * side;
+                for a in 0..side {
+                    for b in 0..side {
+                        let wv = gt.taps[woff + a * side + b];
+                        if wv == 0.0 {
+                            continue;
+                        }
+                        for u in 0..fft {
+                            let xr = xoff + ((u + fft - a) % fft) * fft;
+                            let yr = u * fft;
+                            for v in 0..fft {
+                                acc[yr + v] += wv * td[xr + (v + fft - b) % fft] as f64;
+                            }
+                        }
+                    }
+                }
+            }
+            let dst = (t * cout + n) * k2;
+            for (o, &a) in od[dst..dst + k2].iter_mut().zip(&acc) {
+                *o = a as f32;
+            }
+        }
+    }
+    let mut y = overlap_add(&out, &geo, cout);
+    nn::add_bias(&mut y, &e.weights.convs[idx].bias);
+    nn::relu(&mut y);
+    y
+}
+
+/// Full golden forward: walk the variant's activation graph with direct
+/// convs, residual adds and concats, then the shared FC head.
+fn golden_forward(e: &InferenceEngine, fft: usize, k: usize, img: &Tensor) -> Vec<f32> {
+    let steps = e.variant.graph_ops();
+    let mut vals: Vec<Option<Tensor>> = vec![None; steps.len() + 1];
+    vals[0] = Some(img.clone());
+    for (i, op) in steps.iter().enumerate() {
+        let out = match *op {
+            GraphOp::Conv { conv, input } => {
+                let x = vals[input].as_ref().expect("golden: input produced");
+                let mut y = golden_conv(e, conv, x, fft, k);
+                if e.variant.layers[conv].pool_after {
+                    y = nn::maxpool2(&y);
+                }
+                y
+            }
+            GraphOp::Add { a, b } => {
+                vals[a].as_ref().unwrap().add(vals[b].as_ref().unwrap())
+            }
+            GraphOp::Concat { a, b } => {
+                let xa = vals[a].as_ref().unwrap();
+                let xb = vals[b].as_ref().unwrap();
+                let (ca, s) = (xa.shape()[0], xa.shape()[1]);
+                let cb = xb.shape()[0];
+                let mut data = Vec::with_capacity((ca + cb) * s * s);
+                data.extend_from_slice(xa.data());
+                data.extend_from_slice(xb.data());
+                Tensor::from_vec(&[ca + cb, s, s], data)
+            }
+        };
+        vals[i + 1] = Some(out);
+    }
+    let x = vals.pop().unwrap().expect("golden: final tensor produced");
+    let n_fc = e.weights.fc.len();
+    let mut v = x.into_vec();
+    for (i, (w, b)) in e.weights.fc.iter().enumerate() {
+        v = nn::dense(w, b, &v);
+        if i + 1 < n_fc {
+            for val in &mut v {
+                if *val < 0.0 {
+                    *val = 0.0;
+                }
+            }
+        }
+    }
+    v
+}
+
+/// Pin one (variant, mode) config: golden logits per distinct seed, then
+/// every (policy, batch) engine run must land within 1e-5.
+fn pin_config(variant: &str, mode: WeightMode, policies: &[SchedulePolicy], seeds: &[u64]) {
+    let rt = spectral_flow::runtime::Runtime::open(&artifacts_dir()).expect("runtime");
+    let (fft, k) = (rt.manifest.fft_size, rt.manifest.kernel_k);
+    let mut first = f64_engine(variant, mode, policies[0]);
+    let images: Vec<Tensor> = seeds.iter().map(|&s| first.synthetic_image(s)).collect();
+    let golden: Vec<Vec<f32>> =
+        images.iter().map(|img| golden_forward(&first, fft, k, img)).collect();
+    for g in &golden {
+        assert!(g.iter().all(|v| v.is_finite()), "{variant}: golden produced non-finite");
+    }
+    for (pi, &policy) in policies.iter().enumerate() {
+        // the first policy reuses the engine the golden weights came from
+        let mut other = None;
+        let e = if pi == 0 { &mut first } else { other.insert(f64_engine(variant, mode, policy)) };
+        // batch = 1
+        let logits = e.forward(&images[0]).expect("forward");
+        assert_allclose(&logits, &golden[0], 1e-5, 1e-5);
+        // batch = 8, cycling the distinct seeds across the lanes
+        let batch: Vec<Tensor> = (0..8).map(|i| images[i % images.len()].clone()).collect();
+        let out = e.forward_batch(&batch).expect("forward_batch");
+        for (i, lane) in out.iter().enumerate() {
+            assert_allclose(lane, &golden[i % golden.len()], 1e-5, 1e-5);
+        }
+    }
+}
+
+const ALL_POLICIES: [SchedulePolicy; 3] =
+    [SchedulePolicy::Off, SchedulePolicy::LowestIndex, SchedulePolicy::ExactCover];
+
+#[test]
+fn demo_dense_matches_spatial_golden() {
+    pin_config("demo", WeightMode::Dense, &ALL_POLICIES, &[1, 2, 3]);
+}
+
+#[test]
+fn demo_pruned_alpha4_matches_spatial_golden() {
+    pin_config("demo", WeightMode::Pruned { alpha: 4 }, &ALL_POLICIES, &[1, 2, 3]);
+}
+
+#[test]
+fn demo_residual_dense_matches_spatial_golden() {
+    pin_config("demo-residual", WeightMode::Dense, &ALL_POLICIES, &[1, 2, 3]);
+}
+
+#[test]
+fn demo_residual_pruned_alpha4_matches_spatial_golden() {
+    pin_config("demo-residual", WeightMode::Pruned { alpha: 4 }, &ALL_POLICIES, &[1, 2, 3]);
+}
+
+#[test]
+fn resnet18_dense_matches_spatial_golden() {
+    // dense golden taps are 9-wide, so two distinct images stay cheap
+    let policies = [SchedulePolicy::Off, SchedulePolicy::ExactCover];
+    pin_config("resnet18", WeightMode::Dense, &policies, &[1, 2]);
+}
+
+#[test]
+fn resnet18_pruned_alpha4_matches_spatial_golden() {
+    // pruned golden taps are K²-wide (the naive inverse DFT), so one
+    // distinct image bounds the direct-conv cost; the batch-8 leg still
+    // exercises the fused graph executor on every lane
+    let policies = [SchedulePolicy::Off, SchedulePolicy::ExactCover];
+    pin_config("resnet18", WeightMode::Pruned { alpha: 4 }, &policies, &[1]);
+}
+
+#[test]
+fn vgg16_cifar_dense_matches_spatial_golden() {
+    // chain preset: the golden graph walk degenerates to the layer loop
+    let rt = spectral_flow::runtime::Runtime::open(&artifacts_dir()).expect("runtime");
+    let (fft, k) = (rt.manifest.fft_size, rt.manifest.kernel_k);
+    let mut e = f64_engine("vgg16-cifar", WeightMode::Dense, SchedulePolicy::ExactCover);
+    let img = e.synthetic_image(1);
+    let golden = golden_forward(&e, fft, k, &img);
+    let logits = e.forward(&img).expect("forward");
+    assert_allclose(&logits, &golden, 1e-5, 1e-5);
+}
+
+#[test]
+#[ignore = "minutes of naive K²-tap direct conv; run with --ignored"]
+fn vgg16_cifar_pruned_alpha4_matches_spatial_golden() {
+    let policies = [SchedulePolicy::ExactCover];
+    pin_config("vgg16-cifar", WeightMode::Pruned { alpha: 4 }, &policies, &[1]);
+}
