@@ -15,7 +15,7 @@
 use std::time::Instant;
 
 use spectral_flow::coordinator::{
-    BatcherConfig, InferenceEngine, Server, ServerConfig, WeightMode,
+    BatcherConfig, EngineOptions, InferenceEngine, Server, ServerConfig, WeightMode,
 };
 use spectral_flow::runtime::BackendKind;
 use spectral_flow::schedule::SchedulePolicy;
@@ -62,9 +62,11 @@ fn main() -> Result<()> {
             max_batch: batch,
             max_wait: std::time::Duration::from_millis(10),
         },
-        backend: BackendKind::Interp { threads },
         workers,
-        scheduler,
+        engine: EngineOptions::builder()
+            .backend(BackendKind::Interp { threads })
+            .scheduler(scheduler)
+            .build(),
     };
     let t0 = Instant::now();
     let server = Server::start(cfg)?;

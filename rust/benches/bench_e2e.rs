@@ -387,8 +387,7 @@ fn main() {
             seed: 7,
             batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(5) },
             workers,
-            dtype: env_dtype,
-            plane: env_plane,
+            engine: opts(SchedulePolicy::default(), 1),
             ..ServerConfig::default()
         })
         .expect("server");

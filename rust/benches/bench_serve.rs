@@ -1,22 +1,36 @@
 //! Bench — serving latency **over the wire**: closed-loop HTTP load
 //! against the engine pool across the workers × backend-threads × α ×
 //! scheduler grid. Where `bench_e2e` times the engine in-process, this
-//! bench times the full request path (socket → admission → batcher → pool
-//! → JSON response) and records p50 (median) and p99 per grid point into
-//! `reports/BENCH_serve.json` — the artifact CI's bench-smoke job uploads
-//! and the serve-loadgen-smoke job reproduces from the CLI.
+//! bench times the full request path (socket → event worker → admission →
+//! batcher → pool → JSON response) and records p50 (median) and p99 per
+//! grid point into `reports/BENCH_serve.json` — the artifact CI's
+//! bench-smoke job uploads and the serve-loadgen-smoke job reproduces
+//! from the CLI.
 //!
 //! ```bash
 //! cargo bench --bench bench_serve [-- --quick]
 //! ```
 
+use std::sync::Arc;
 use std::time::Duration;
 
-use spectral_flow::coordinator::{BatcherConfig, Server, ServerConfig, WeightMode};
+use spectral_flow::coordinator::{BatcherConfig, EngineOptions, ModelRegistry, ModelSpec};
 use spectral_flow::net::{loadgen, HttpFrontend, LoadGenConfig, LoadMode, NetConfig};
 use spectral_flow::runtime::{BackendKind, Dtype, Plane};
 use spectral_flow::schedule::SchedulePolicy;
 use spectral_flow::util::bench::{quick_requested, Bench};
+
+/// Boot a single-model registry serving the demo variant behind the
+/// event-driven front-end on an ephemeral port.
+fn start_frontend(spec: ModelSpec) -> HttpFrontend {
+    let registry = Arc::new(ModelRegistry::new("artifacts", "demo"));
+    registry.load_blocking("demo", spec).expect("demo model loads");
+    HttpFrontend::start(
+        registry,
+        NetConfig { addr: "127.0.0.1:0".into(), ..NetConfig::default() },
+    )
+    .expect("frontend binds")
+}
 
 fn main() {
     let quick = quick_requested();
@@ -42,32 +56,26 @@ fn main() {
             if quick && alpha == 4 && policy == SchedulePolicy::Off {
                 continue; // quick mode: dense + scheduled only
             }
-            let server = Server::start(ServerConfig {
-                artifacts_dir: "artifacts".into(),
-                variant: "demo".into(),
-                mode: WeightMode::from_alpha(alpha),
-                seed: 7,
+            let frontend = start_frontend(ModelSpec {
+                preset: "demo".into(),
+                alpha,
                 batcher: BatcherConfig {
                     max_batch: 4,
                     max_wait: Duration::from_millis(2),
                 },
-                backend: BackendKind::Interp { threads },
                 workers,
-                scheduler: policy,
-                ..ServerConfig::default()
-            })
-            .expect("server starts");
-            let frontend = HttpFrontend::start(
-                server,
-                NetConfig { addr: "127.0.0.1:0".into(), ..NetConfig::default() },
-            )
-            .expect("frontend binds");
+                engine: EngineOptions::builder()
+                    .backend(BackendKind::Interp { threads })
+                    .scheduler(policy)
+                    .build(),
+                ..ModelSpec::default()
+            });
             let report = loadgen::run(&LoadGenConfig {
                 addr: frontend.local_addr().to_string(),
                 mode: LoadMode::Closed { concurrency },
                 requests,
-                body: None,
                 timeout: Duration::from_secs(60),
+                ..LoadGenConfig::default()
             })
             .expect("loadgen runs");
             assert_eq!(
@@ -96,33 +104,22 @@ fn main() {
         (None, Plane::Half, "_half"),
         (Some(Dtype::F64), Plane::Half, "_f64_half"),
     ] {
-        let server = Server::start(ServerConfig {
-            artifacts_dir: "artifacts".into(),
-            variant: "demo".into(),
-            mode: WeightMode::from_alpha(4),
-            seed: 7,
+        let frontend = start_frontend(ModelSpec {
+            preset: "demo".into(),
+            alpha: 4,
             batcher: BatcherConfig {
                 max_batch: 4,
                 max_wait: Duration::from_millis(2),
             },
-            backend: BackendKind::Interp { threads: 1 },
-            workers: 1,
-            scheduler: SchedulePolicy::ExactCover,
-            dtype,
-            plane,
-        })
-        .expect("server starts");
-        let frontend = HttpFrontend::start(
-            server,
-            NetConfig { addr: "127.0.0.1:0".into(), ..NetConfig::default() },
-        )
-        .expect("frontend binds");
+            engine: EngineOptions::builder().dtype(dtype).plane(plane).build(),
+            ..ModelSpec::default()
+        });
         let report = loadgen::run(&LoadGenConfig {
             addr: frontend.local_addr().to_string(),
             mode: LoadMode::Closed { concurrency },
             requests,
-            body: None,
             timeout: Duration::from_secs(60),
+            ..LoadGenConfig::default()
         })
         .expect("loadgen runs");
         assert_eq!(report.ok, report.sent, "numerics sweep must succeed 100%");
@@ -145,26 +142,15 @@ fn main() {
     // wire-level analogue of bench_e2e's batch sweep. Each recorded sample
     // is one whole-batch round-trip, so compare like-for-like across B.
     for max_batch in [1usize, 8, 32] {
-        let server = Server::start(ServerConfig {
-            artifacts_dir: "artifacts".into(),
-            variant: "demo".into(),
-            mode: WeightMode::from_alpha(4),
-            seed: 7,
+        let frontend = start_frontend(ModelSpec {
+            preset: "demo".into(),
+            alpha: 4,
             batcher: BatcherConfig {
                 max_batch,
                 max_wait: Duration::from_millis(2),
             },
-            backend: BackendKind::Interp { threads: 1 },
-            workers: 1,
-            scheduler: SchedulePolicy::ExactCover,
-            ..ServerConfig::default()
-        })
-        .expect("server starts");
-        let frontend = HttpFrontend::start(
-            server,
-            NetConfig { addr: "127.0.0.1:0".into(), ..NetConfig::default() },
-        )
-        .expect("frontend binds");
+            ..ModelSpec::default()
+        });
         let body = format!(
             "{{\"batch\":[{}]}}",
             (0..max_batch)
@@ -178,6 +164,7 @@ fn main() {
             requests: if quick { 4 } else { 8 },
             body: Some(body),
             timeout: Duration::from_secs(60),
+            ..LoadGenConfig::default()
         })
         .expect("loadgen runs");
         assert_eq!(report.ok, report.sent, "batched serving must succeed 100%");

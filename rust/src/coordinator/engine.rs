@@ -158,6 +158,69 @@ impl Default for EngineOptions {
     }
 }
 
+impl EngineOptions {
+    /// Start a builder from validated defaults. Prefer this over struct
+    /// literals when options come from user input (CLI flags, `/admin`
+    /// bodies): [`EngineOptionsBuilder::build`] normalizes every knob.
+    pub fn builder() -> EngineOptionsBuilder {
+        EngineOptionsBuilder { opts: EngineOptions::default() }
+    }
+}
+
+/// Fluent constructor for [`EngineOptions`] — one setter per knob, so call
+/// sites name exactly what they override and inherit validated defaults for
+/// the rest (the API-redesign replacement for positional struct sprawl).
+#[derive(Debug, Clone)]
+pub struct EngineOptionsBuilder {
+    opts: EngineOptions,
+}
+
+impl EngineOptionsBuilder {
+    /// Backend the conv layers execute on.
+    pub fn backend(mut self, backend: BackendKind) -> Self {
+        self.opts.backend = backend;
+        self
+    }
+
+    /// Alg. 2 scheduling policy for the sparse layers.
+    pub fn scheduler(mut self, scheduler: SchedulePolicy) -> Self {
+        self.opts.scheduler = scheduler;
+        self
+    }
+
+    /// Batch size B the Alg. 1 streaming plan is optimized for. Values are
+    /// clamped to ≥ 1 at [`EngineOptionsBuilder::build`].
+    pub fn plan_batch(mut self, plan_batch: usize) -> Self {
+        self.opts.plan_batch = plan_batch;
+        self
+    }
+
+    /// Accumulation dtype (`None` = manifest default, same sentinel as
+    /// `--alpha 0`).
+    pub fn dtype(mut self, dtype: Option<Dtype>) -> Self {
+        self.opts.dtype = dtype;
+        self
+    }
+
+    /// Spectral storage plane (full K×K vs the rfft2 half-plane).
+    pub fn plane(mut self, plane: Plane) -> Self {
+        self.opts.plane = plane;
+        self
+    }
+
+    /// Whether dead activation-arena slots are reused (default `true`).
+    pub fn arena_reuse(mut self, arena_reuse: bool) -> Self {
+        self.opts.arena_reuse = arena_reuse;
+        self
+    }
+
+    /// Finalize, normalizing out-of-range knobs (`plan_batch` ≥ 1).
+    pub fn build(mut self) -> EngineOptions {
+        self.opts.plan_batch = self.opts.plan_batch.max(1);
+        self.opts
+    }
+}
+
 /// One conv layer's parameters on the engine side.
 pub struct LayerWeights {
     /// Spectral kernel planes `[cout, cin, K, K]`.

@@ -119,6 +119,35 @@ impl ArenaMetrics {
     }
 }
 
+/// Per-model admission accounting for one registry pool: the quota state
+/// and lifetime counters the event-driven front-end updates on every
+/// request, plus the weight-swap generation (bumped by each successful
+/// `POST /admin/models/<name>` build). Surfaced on
+/// `GET /v1/models/<name>/metrics` next to the pool's [`PoolMetrics`].
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct AdmissionMetrics {
+    /// Requests currently inside the model's engine pool.
+    pub inflight: usize,
+    /// Admission quota: requests past this fast-fail with 429.
+    pub max_inflight: usize,
+    /// Lifetime requests admitted past the quota gate.
+    pub admitted: u64,
+    /// Lifetime requests rejected at the quota gate (the 429s).
+    pub rejected: u64,
+    /// Weight-swap generation: 1 for the boot build, +1 per live swap.
+    pub generation: u64,
+}
+
+impl AdmissionMetrics {
+    /// One summary line for logs and reports.
+    pub fn report(&self) -> String {
+        format!(
+            "admission: inflight {}/{} admitted {} rejected {} gen {}",
+            self.inflight, self.max_inflight, self.admitted, self.rejected, self.generation,
+        )
+    }
+}
+
 /// Cap on retained latency samples per distribution. `serve --http` runs
 /// indefinitely, so sample storage must be bounded: past the cap the
 /// oldest half is dropped, keeping percentiles a sliding window over the
@@ -580,6 +609,22 @@ mod tests {
         // the window covers recent traffic: p50 sits in the upper half of
         // the full series, not the (dropped) beginning
         assert!(m.queue_percentile(0.5).unwrap() > Duration::from_micros(n as u64 / 2));
+    }
+
+    #[test]
+    fn admission_metrics_report() {
+        let a = AdmissionMetrics {
+            inflight: 3,
+            max_inflight: 64,
+            admitted: 120,
+            rejected: 7,
+            generation: 2,
+        };
+        let line = a.report();
+        assert!(line.contains("inflight 3/64"), "{line}");
+        assert!(line.contains("rejected 7"), "{line}");
+        assert!(line.contains("gen 2"), "{line}");
+        assert_eq!(AdmissionMetrics::default().generation, 0);
     }
 
     #[test]

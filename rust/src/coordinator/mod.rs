@@ -19,15 +19,25 @@
 //!   and merged.
 //! * [`arena`] — lifetime-based activation arena for the graph executor
 //!   (slot reuse across dead tensors, peak-residency accounting).
+//! * [`registry`] — [`registry::ModelRegistry`]: several named engine pools
+//!   in one process (multi-tenant serving), each with its own admission
+//!   quota, plus the zero-downtime weight-swap protocol behind
+//!   `POST /admin/models/<name>`.
 
 pub mod arena;
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
+pub mod registry;
 pub mod server;
 
 pub use arena::ArenaPlan;
 pub use batcher::{Batcher, BatcherConfig};
-pub use engine::{EngineOptions, InferenceEngine, WeightMode, Weights};
-pub use metrics::{ArenaMetrics, LayerScheduleMetrics, Metrics, PoolMetrics, ScheduleMetrics};
+pub use engine::{EngineOptions, EngineOptionsBuilder, InferenceEngine, WeightMode, Weights};
+pub use metrics::{
+    AdmissionMetrics, ArenaMetrics, LayerScheduleMetrics, Metrics, PoolMetrics, ScheduleMetrics,
+};
+pub use registry::{
+    AdminError, AdmitGuard, ModelFetch, ModelPool, ModelRegistry, ModelSpec, ModelStatus,
+};
 pub use server::{Client, Response, Server, ServerConfig};

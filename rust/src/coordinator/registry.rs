@@ -1,0 +1,623 @@
+//! Multi-tenant model registry: several named engine pools in one process,
+//! with zero-downtime weight swap.
+//!
+//! One [`ModelRegistry`] owns every model the process serves. Each model is
+//! a [`ModelEntry`] whose state machine is
+//! `loading → serving → (serving, swapped N times) → draining → gone`;
+//! while **serving** it holds an `Arc<ModelPool>` — a [`Server`] engine
+//! pool plus the per-model admission quota and resolved numerics the HTTP
+//! front-end needs to route a request without touching the manifest.
+//!
+//! The swap protocol (`POST /admin/models/<name>` → [`ModelRegistry::begin_load`]):
+//!
+//! 1. Validate the spec against the manifest synchronously (cheap read, so
+//!    bad requests fail with 4xx before any thread spawns); refuse
+//!    concurrent builds of the same model (409).
+//! 2. Build the new pool on a background thread — engines, Alg. 1 plans,
+//!    Alg. 2 banked schedules; the old pool keeps serving the whole time.
+//! 3. Atomically replace the entry's `Arc<ModelPool>` and bump the
+//!    generation counter. New requests land on the new pool immediately.
+//! 4. The build thread keeps the old `Arc` and waits for in-flight
+//!    requests (admission guards hold clones) to finish before dropping it
+//!    — so the blocking engine-pool join never runs on an event-loop
+//!    worker, and no request is dropped.
+//!
+//! Unload (`DELETE /admin/models/<name>` → [`ModelRegistry::begin_remove`])
+//! uses the same drain: the entry is marked draining (new requests get
+//! 503), and a background thread retires the pool once it is idle.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::{Duration, Instant};
+
+use super::batcher::BatcherConfig;
+use super::engine::{EngineOptions, WeightMode};
+use super::metrics::{AdmissionMetrics, PoolMetrics};
+use super::server::{Client, Server, ServerConfig};
+use crate::err;
+use crate::runtime::{Dtype, Plane, Runtime};
+use crate::util::error::Result;
+
+/// Everything needed to build one model's engine pool — the parsed form of
+/// a `POST /admin/models/<name>` body (and of the CLI's boot flags).
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    /// Manifest variant the pool serves (e.g. `vgg16-cifar`, `resnet18`).
+    pub preset: String,
+    /// Compression ratio α (0 = manifest default, 1 = dense).
+    pub alpha: usize,
+    /// Weight-generation seed (fixed default keeps replicas bit-identical).
+    pub seed: u64,
+    /// Batch-closing policy for the pool's dispatcher.
+    pub batcher: BatcherConfig,
+    /// Executor workers in the pool (0 acts as 1).
+    pub workers: usize,
+    /// Engine knobs; build with [`EngineOptions::builder`].
+    pub engine: EngineOptions,
+    /// Per-model admission quota: in-flight requests past this get 429.
+    pub max_inflight: usize,
+}
+
+impl Default for ModelSpec {
+    fn default() -> Self {
+        ModelSpec {
+            preset: "vgg16-cifar".into(),
+            alpha: 0,
+            seed: 7,
+            batcher: BatcherConfig::default(),
+            workers: 1,
+            engine: EngineOptions::default(),
+            max_inflight: 64,
+        }
+    }
+}
+
+/// One serving pool: the engine [`Server`] plus everything the front-end
+/// needs per-request without locks — resolved numerics, input shape, and
+/// the admission quota counters.
+pub struct ModelPool {
+    pub name: String,
+    /// Weight-swap generation (1 = boot build; +1 per live swap).
+    pub generation: u64,
+    pub spec: ModelSpec,
+    /// Resolved α (after `resolve_alpha`) the pool's weights use.
+    pub alpha: usize,
+    /// `[c, h, w]` the model's inference inputs must have.
+    pub input_shape: [usize; 3],
+    /// Manifest-resolved accumulation dtype.
+    pub dtype: Dtype,
+    pub plane: Plane,
+    pub max_inflight: usize,
+    inflight: AtomicUsize,
+    admitted: AtomicU64,
+    rejected: AtomicU64,
+    client: Client,
+    /// Owns the engine pool; dropping the `ModelPool` gracefully shuts the
+    /// workers down (dropped only by drain threads, never on a connection
+    /// worker — see the module docs).
+    _server: Server,
+}
+
+impl ModelPool {
+    /// Cheap per-request handle into the engine pool.
+    pub fn client(&self) -> Client {
+        self.client.clone()
+    }
+
+    /// Try to reserve `slots` in-flight units (one per image). `None`
+    /// means the quota is full — answer 429. The returned guard releases
+    /// the slots on drop, so a connection that dies mid-request can never
+    /// leak quota.
+    pub fn try_admit(self: &Arc<Self>, slots: usize) -> Option<AdmitGuard> {
+        if self.inflight.fetch_add(slots, Ordering::SeqCst) + slots > self.max_inflight {
+            self.inflight.fetch_sub(slots, Ordering::SeqCst);
+            self.rejected.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+        self.admitted.fetch_add(1, Ordering::Relaxed);
+        Some(AdmitGuard { pool: Arc::clone(self), slots })
+    }
+
+    /// Requests currently inside the pool.
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::SeqCst)
+    }
+
+    /// Admission/quota counters for `GET /v1/models/<name>/metrics`.
+    pub fn admission(&self) -> AdmissionMetrics {
+        AdmissionMetrics {
+            inflight: self.inflight(),
+            max_inflight: self.max_inflight,
+            admitted: self.admitted.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            generation: self.generation,
+        }
+    }
+
+    /// Pool latency/schedule metrics snapshot.
+    pub fn pool_metrics(&self) -> Result<PoolMetrics> {
+        self.client.pool_metrics()
+    }
+}
+
+/// RAII admission slot: holds the pool alive and releases the in-flight
+/// count when dropped (response written, or connection died).
+pub struct AdmitGuard {
+    pool: Arc<ModelPool>,
+    slots: usize,
+}
+
+impl Drop for AdmitGuard {
+    fn drop(&mut self) {
+        self.pool.inflight.fetch_sub(self.slots, Ordering::SeqCst);
+    }
+}
+
+/// Lifecycle state of one registry entry.
+enum ModelState {
+    /// First build in progress; no pool yet.
+    Loading,
+    /// Answering traffic (swaps replace the `Arc` in place).
+    Serving(Arc<ModelPool>),
+    /// `DELETE` accepted: refusing new traffic while in-flight drains.
+    Draining,
+    /// Last (re)build failed; the error is reported on `/v1/models`.
+    Failed(String),
+}
+
+/// One named model: its state machine plus swap bookkeeping.
+pub struct ModelEntry {
+    pub name: String,
+    state: Mutex<ModelState>,
+    /// Bumped on every successful build; the pool captures its value.
+    generation: AtomicU64,
+    /// Guards against concurrent builds of the same model (409).
+    building: AtomicBool,
+}
+
+/// What a router learns when it asks for a model by name.
+pub enum ModelFetch {
+    /// Route the request into this pool.
+    Ready(Arc<ModelPool>),
+    /// First build still running — 503, retry later.
+    Loading,
+    /// Being unloaded — 503.
+    Draining,
+    /// Last build failed — 503 with the build error.
+    Failed(String),
+    /// No such model — 404.
+    NotFound,
+}
+
+/// One row of `GET /v1/models`.
+pub struct ModelStatus {
+    pub name: String,
+    /// `serving` | `loading` | `draining` | `failed`.
+    pub status: &'static str,
+    pub generation: u64,
+    /// Populated while serving.
+    pub preset: Option<String>,
+    pub alpha: Option<usize>,
+    pub workers: Option<usize>,
+    pub max_inflight: Option<usize>,
+    /// Build error while failed.
+    pub error: Option<String>,
+}
+
+/// Errors from the `/admin` surface, pre-sorted by HTTP semantics.
+#[derive(Debug)]
+pub enum AdminError {
+    /// Unknown model (404).
+    NotFound,
+    /// A build for this model is already running (409).
+    Conflict(String),
+    /// The spec doesn't validate against the manifest (400).
+    BadRequest(String),
+}
+
+impl std::fmt::Display for AdminError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AdminError::NotFound => write!(f, "model not found"),
+            AdminError::Conflict(m) => write!(f, "conflict: {m}"),
+            AdminError::BadRequest(m) => write!(f, "bad request: {m}"),
+        }
+    }
+}
+
+/// The process-wide model table. Shared as `Arc<ModelRegistry>` between the
+/// HTTP front-end (lookups on every request) and admin handlers (swaps).
+pub struct ModelRegistry {
+    models: RwLock<BTreeMap<String, Arc<ModelEntry>>>,
+    artifacts_dir: String,
+    /// Model the legacy `/infer`, `/metrics`, `/healthz` aliases resolve to.
+    default_model: String,
+    /// How long a retired pool may wait for in-flight requests to finish
+    /// before it is dropped anyway.
+    drain_grace: Duration,
+}
+
+impl ModelRegistry {
+    pub fn new(artifacts_dir: impl Into<String>, default_model: impl Into<String>) -> Self {
+        ModelRegistry {
+            models: RwLock::new(BTreeMap::new()),
+            artifacts_dir: artifacts_dir.into(),
+            default_model: default_model.into(),
+            drain_grace: Duration::from_secs(30),
+        }
+    }
+
+    /// Override the drain grace (tests use short values).
+    pub fn with_drain_grace(mut self, grace: Duration) -> Self {
+        self.drain_grace = grace;
+        self
+    }
+
+    pub fn default_model(&self) -> &str {
+        &self.default_model
+    }
+
+    pub fn artifacts_dir(&self) -> &str {
+        &self.artifacts_dir
+    }
+
+    /// Look a model up for routing.
+    pub fn fetch(&self, name: &str) -> ModelFetch {
+        let entry = match self.models.read().unwrap().get(name) {
+            Some(e) => Arc::clone(e),
+            None => return ModelFetch::NotFound,
+        };
+        let state = entry.state.lock().unwrap();
+        match &*state {
+            ModelState::Serving(pool) => ModelFetch::Ready(Arc::clone(pool)),
+            ModelState::Loading => ModelFetch::Loading,
+            ModelState::Draining => ModelFetch::Draining,
+            ModelState::Failed(e) => ModelFetch::Failed(e.clone()),
+        }
+    }
+
+    /// Serving pool for `name`, if any (convenience over [`Self::fetch`]).
+    pub fn pool(&self, name: &str) -> Option<Arc<ModelPool>> {
+        match self.fetch(name) {
+            ModelFetch::Ready(p) => Some(p),
+            _ => None,
+        }
+    }
+
+    /// Current weight-swap generation of `name` (0 if never built).
+    pub fn generation_of(&self, name: &str) -> u64 {
+        self.models
+            .read()
+            .unwrap()
+            .get(name)
+            .map(|e| e.generation.load(Ordering::SeqCst))
+            .unwrap_or(0)
+    }
+
+    /// Admitted in-flight requests summed over every serving pool (drives
+    /// the front-end's graceful-shutdown wait).
+    pub fn total_inflight(&self) -> usize {
+        let entries: Vec<Arc<ModelEntry>> =
+            self.models.read().unwrap().values().cloned().collect();
+        entries
+            .iter()
+            .filter_map(|e| match &*e.state.lock().unwrap() {
+                ModelState::Serving(p) => Some(p.inflight()),
+                _ => None,
+            })
+            .sum()
+    }
+
+    /// Status rows for `GET /v1/models` (sorted by name).
+    pub fn list(&self) -> Vec<ModelStatus> {
+        let entries: Vec<Arc<ModelEntry>> =
+            self.models.read().unwrap().values().cloned().collect();
+        entries
+            .iter()
+            .map(|e| {
+                let state = e.state.lock().unwrap();
+                let generation = e.generation.load(Ordering::SeqCst);
+                match &*state {
+                    ModelState::Serving(p) => ModelStatus {
+                        name: e.name.clone(),
+                        status: "serving",
+                        generation,
+                        preset: Some(p.spec.preset.clone()),
+                        alpha: Some(p.alpha),
+                        workers: Some(p.spec.workers.max(1)),
+                        max_inflight: Some(p.max_inflight),
+                        error: None,
+                    },
+                    ModelState::Loading => ModelStatus {
+                        name: e.name.clone(),
+                        status: "loading",
+                        generation,
+                        preset: None,
+                        alpha: None,
+                        workers: None,
+                        max_inflight: None,
+                        error: None,
+                    },
+                    ModelState::Draining => ModelStatus {
+                        name: e.name.clone(),
+                        status: "draining",
+                        generation,
+                        preset: None,
+                        alpha: None,
+                        workers: None,
+                        max_inflight: None,
+                        error: None,
+                    },
+                    ModelState::Failed(msg) => ModelStatus {
+                        name: e.name.clone(),
+                        status: "failed",
+                        generation,
+                        preset: None,
+                        alpha: None,
+                        workers: None,
+                        max_inflight: None,
+                        error: Some(msg.clone()),
+                    },
+                }
+            })
+            .collect()
+    }
+
+    /// Validate `spec` against the manifest without building anything —
+    /// the synchronous half of `/admin` loads, so bad input fails with a
+    /// 4xx before any thread spawns.
+    pub fn validate(&self, spec: &ModelSpec) -> std::result::Result<(), AdminError> {
+        let rt = Runtime::open(&self.artifacts_dir)
+            .map_err(|e| AdminError::BadRequest(format!("artifacts unreadable: {e}")))?;
+        rt.manifest
+            .variant(&spec.preset)
+            .map_err(|e| AdminError::BadRequest(e.to_string()))?;
+        Ok(())
+    }
+
+    /// Build `name`'s pool synchronously and mark it serving. Used at boot
+    /// (`serve` blocks until every model is up) and by tests.
+    pub fn load_blocking(&self, name: &str, spec: ModelSpec) -> Result<u64> {
+        let entry = self.entry_for(name);
+        if entry
+            .building
+            .compare_exchange(false, true, Ordering::SeqCst, Ordering::SeqCst)
+            .is_err()
+        {
+            return Err(err!("model {name:?} is already building"));
+        }
+        let generation = entry.generation.load(Ordering::SeqCst) + 1;
+        let built = build_pool(&self.artifacts_dir, name, &spec, generation);
+        let out = self.finish_build(&entry, built);
+        entry.building.store(false, Ordering::SeqCst);
+        out
+    }
+
+    /// Start a background (re)build of `name` — the `POST /admin` path.
+    ///
+    /// Synchronous part: manifest validation (4xx) and the concurrent-build
+    /// check (409). Everything expensive happens on the spawned thread;
+    /// while it runs, an existing pool keeps serving. On success the new
+    /// pool is swapped in atomically and the old one drains in the same
+    /// background thread.
+    pub fn begin_load(
+        self: &Arc<Self>,
+        name: &str,
+        spec: ModelSpec,
+    ) -> std::result::Result<(), AdminError> {
+        self.validate(&spec)?;
+        let entry = self.entry_for(name);
+        if entry
+            .building
+            .compare_exchange(false, true, Ordering::SeqCst, Ordering::SeqCst)
+            .is_err()
+        {
+            return Err(AdminError::Conflict(format!("model {name:?} is already building")));
+        }
+        {
+            // A draining or failed entry restarts from Loading; a serving
+            // entry keeps serving its current pool until the swap lands.
+            let mut state = entry.state.lock().unwrap();
+            match &*state {
+                ModelState::Serving(_) => {}
+                _ => *state = ModelState::Loading,
+            }
+        }
+        let registry = Arc::clone(self);
+        let entry_bg = Arc::clone(&entry);
+        let name_bg = name.to_string();
+        std::thread::Builder::new()
+            .name(format!("sf-load-{name}"))
+            .spawn(move || {
+                let generation = entry_bg.generation.load(Ordering::SeqCst) + 1;
+                let built = build_pool(&registry.artifacts_dir, &name_bg, &spec, generation);
+                let _ = registry.finish_build(&entry_bg, built);
+                entry_bg.building.store(false, Ordering::SeqCst);
+            })
+            .expect("spawn model build thread");
+        Ok(())
+    }
+
+    /// Start draining + unloading `name` — the `DELETE /admin` path. The
+    /// entry refuses new traffic immediately; a background thread waits
+    /// for in-flight requests, shuts the pool down, and removes the entry.
+    pub fn begin_remove(self: &Arc<Self>, name: &str) -> std::result::Result<(), AdminError> {
+        let entry = match self.models.read().unwrap().get(name) {
+            Some(e) => Arc::clone(e),
+            None => return Err(AdminError::NotFound),
+        };
+        if entry.building.load(Ordering::SeqCst) {
+            return Err(AdminError::Conflict(format!("model {name:?} is building")));
+        }
+        let old = {
+            let mut state = entry.state.lock().unwrap();
+            match std::mem::replace(&mut *state, ModelState::Draining) {
+                ModelState::Serving(pool) => Some(pool),
+                other => {
+                    // nothing to drain; keep whatever terminal state it had
+                    *state = other;
+                    None
+                }
+            }
+        };
+        let registry = Arc::clone(self);
+        let name_bg = name.to_string();
+        std::thread::Builder::new()
+            .name(format!("sf-drain-{name}"))
+            .spawn(move || {
+                if let Some(pool) = old {
+                    drain_pool(pool, registry.drain_grace);
+                }
+                registry.models.write().unwrap().remove(&name_bg);
+            })
+            .expect("spawn model drain thread");
+        Ok(())
+    }
+
+    /// Drop every pool gracefully (process shutdown). Blocks while engine
+    /// pools join, so call it from the main thread only.
+    pub fn shutdown(&self) {
+        let entries: Vec<Arc<ModelEntry>> = {
+            let mut models = self.models.write().unwrap();
+            let drained = models.values().cloned().collect();
+            models.clear();
+            drained
+        };
+        for entry in entries {
+            let mut state = entry.state.lock().unwrap();
+            if let ModelState::Serving(pool) =
+                std::mem::replace(&mut *state, ModelState::Draining)
+            {
+                drain_pool(pool, self.drain_grace);
+            }
+        }
+    }
+
+    /// Existing entry for `name`, or a fresh `Loading` one.
+    fn entry_for(&self, name: &str) -> Arc<ModelEntry> {
+        let mut models = self.models.write().unwrap();
+        Arc::clone(models.entry(name.to_string()).or_insert_with(|| {
+            Arc::new(ModelEntry {
+                name: name.to_string(),
+                state: Mutex::new(ModelState::Loading),
+                generation: AtomicU64::new(0),
+                building: AtomicBool::new(false),
+            })
+        }))
+    }
+
+    /// Publish a finished build: swap the pool in (bumping the generation)
+    /// or record the failure. Returns the new generation. The *old* pool,
+    /// if any, is drained here — on the calling (background/boot) thread,
+    /// never on a connection worker.
+    fn finish_build(
+        &self,
+        entry: &Arc<ModelEntry>,
+        built: Result<ModelPool>,
+    ) -> Result<u64> {
+        match built {
+            Ok(pool) => {
+                let generation = pool.generation;
+                let old = {
+                    let mut state = entry.state.lock().unwrap();
+                    entry.generation.store(generation, Ordering::SeqCst);
+                    match std::mem::replace(&mut *state, ModelState::Serving(Arc::new(pool))) {
+                        ModelState::Serving(old) => Some(old),
+                        _ => None,
+                    }
+                };
+                if let Some(old) = old {
+                    drain_pool(old, self.drain_grace);
+                }
+                Ok(generation)
+            }
+            Err(e) => {
+                let mut state = entry.state.lock().unwrap();
+                // never clobber a live pool with a failed rebuild — the
+                // old weights keep serving and the error is only reported
+                if !matches!(&*state, ModelState::Serving(_)) {
+                    *state = ModelState::Failed(e.to_string());
+                }
+                Err(e)
+            }
+        }
+    }
+}
+
+/// Wait for every admission guard on `pool` to drop (bounded by `grace`),
+/// then drop it — which joins the engine pool's threads gracefully.
+fn drain_pool(pool: Arc<ModelPool>, grace: Duration) {
+    let deadline = Instant::now() + grace;
+    while Arc::strong_count(&pool) > 1 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    drop(pool);
+}
+
+/// Build one model's engine pool (the expensive part: engines, Alg. 1
+/// plans, Alg. 2 banked schedules — all inside [`Server::start`]).
+fn build_pool(
+    artifacts_dir: &str,
+    name: &str,
+    spec: &ModelSpec,
+    generation: u64,
+) -> Result<ModelPool> {
+    let rt = Runtime::open(artifacts_dir)?;
+    let vdesc = rt.manifest.variant(&spec.preset)?.clone();
+    let alpha = rt.manifest.resolve_alpha(spec.alpha);
+    let dtype = rt.manifest.resolve_dtype(spec.engine.dtype);
+    let input_shape = [vdesc.input_c, vdesc.input_hw, vdesc.input_hw];
+    drop(rt);
+    let server = Server::start(ServerConfig {
+        artifacts_dir: artifacts_dir.to_string(),
+        variant: spec.preset.clone(),
+        mode: WeightMode::from_alpha(alpha),
+        seed: spec.seed,
+        batcher: spec.batcher,
+        workers: spec.workers,
+        engine: spec.engine,
+    })?;
+    let client = server.client();
+    Ok(ModelPool {
+        name: name.to_string(),
+        generation,
+        spec: spec.clone(),
+        alpha,
+        input_shape,
+        dtype,
+        plane: spec.engine.plane,
+        max_inflight: spec.max_inflight,
+        inflight: AtomicUsize::new(0),
+        admitted: AtomicU64::new(0),
+        rejected: AtomicU64::new(0),
+        client,
+        _server: server,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_model_is_not_found() {
+        let reg = ModelRegistry::new("artifacts", "demo");
+        assert!(matches!(reg.fetch("nope"), ModelFetch::NotFound));
+        assert!(reg.pool("nope").is_none());
+        assert!(reg.list().is_empty());
+    }
+
+    #[test]
+    fn remove_unknown_model_errors() {
+        let reg = Arc::new(ModelRegistry::new("artifacts", "demo"));
+        assert!(matches!(reg.begin_remove("nope"), Err(AdminError::NotFound)));
+    }
+
+    #[test]
+    fn admin_error_display() {
+        assert!(AdminError::NotFound.to_string().contains("not found"));
+        assert!(AdminError::Conflict("x".into()).to_string().contains("conflict"));
+        assert!(AdminError::BadRequest("y".into()).to_string().contains("bad request"));
+    }
+}

@@ -30,8 +30,7 @@ use super::batcher::{Batcher, BatcherConfig};
 use super::engine::{EngineOptions, InferenceEngine, WeightMode};
 use super::metrics::{Metrics, PoolMetrics};
 use crate::err;
-use crate::runtime::{BackendKind, Dtype, Plane};
-use crate::schedule::SchedulePolicy;
+use crate::runtime::{Dtype, Plane};
 use crate::tensor::Tensor;
 use crate::util::error::Result;
 
@@ -47,19 +46,14 @@ pub struct ServerConfig {
     pub mode: WeightMode,
     pub seed: u64,
     pub batcher: BatcherConfig,
-    /// Which spectral-conv backend the workers' engines run on (for
-    /// [`BackendKind::Interp`] this carries the per-tile thread count).
-    pub backend: BackendKind,
     /// Number of executor workers, each owning its own engine (0 acts as 1).
     pub workers: usize,
-    /// Alg. 2 access-scheduling policy for the sparse layers (exact cover
-    /// by default; `Off` reproduces the unscheduled PR 3 walk bit for bit).
-    pub scheduler: SchedulePolicy,
-    /// Accumulation dtype every worker engine runs at (`None` defers to the
-    /// manifest's recorded default, like `--alpha 0`).
-    pub dtype: Option<Dtype>,
-    /// Spectral storage plane (full K×K, or the rfft2 half-plane).
-    pub plane: Plane,
+    /// Engine construction knobs (backend, scheduler, dtype, plane,
+    /// arena reuse) — composed here instead of duplicated field-by-field;
+    /// build with [`EngineOptions::builder`]. `engine.plan_batch` is
+    /// overridden by the batcher's `max_batch` at worker startup so Alg. 1
+    /// always plans for the largest batch the pool can close.
+    pub engine: EngineOptions,
 }
 
 impl Default for ServerConfig {
@@ -70,11 +64,8 @@ impl Default for ServerConfig {
             mode: WeightMode::Pruned { alpha: 4 },
             seed: 7,
             batcher: BatcherConfig::default(),
-            backend: BackendKind::default(),
             workers: 1,
-            scheduler: SchedulePolicy::default(),
-            dtype: None,
-            plane: Plane::Full,
+            engine: EngineOptions::default(),
         }
     }
 }
@@ -267,17 +258,10 @@ fn worker_loop(
         &cfg.variant,
         cfg.mode,
         cfg.seed,
-        EngineOptions {
-            backend: cfg.backend,
-            scheduler: cfg.scheduler,
-            // Plan the sparse dataflow for the largest batch the batcher can
-            // close: Alg. 1 with B as the third reuse axis sizes Ps across
-            // B·P tiles, so each weight block streams once per batch.
-            plan_batch: cfg.batcher.max_batch.max(1),
-            dtype: cfg.dtype,
-            plane: cfg.plane,
-            arena_reuse: true,
-        },
+        // Plan the sparse dataflow for the largest batch the batcher can
+        // close: Alg. 1 with B as the third reuse axis sizes Ps across
+        // B·P tiles, so each weight block streams once per batch.
+        EngineOptions { plan_batch: cfg.batcher.max_batch.max(1), ..cfg.engine },
     ) {
         Ok(e) => {
             let _ = ready.send(Ok(()));

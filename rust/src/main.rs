@@ -288,11 +288,12 @@ fn simulate(mut args: Args) -> Result<()> {
 
 /// Run the batching inference server — either against a synthetic
 /// in-process request stream (default) or as a networked HTTP endpoint
-/// (`--http <addr>`: POST /infer, GET /metrics, GET /healthz).
+/// (`--http <addr>`: the `/v1` multi-model API plus the legacy aliases).
 fn serve(mut args: Args) -> Result<()> {
-    use spectral_flow::coordinator::{BatcherConfig, Server, ServerConfig};
+    use spectral_flow::coordinator::{BatcherConfig, ModelRegistry, ModelSpec};
     use spectral_flow::net::{HttpFrontend, NetConfig};
     use spectral_flow::tensor::Tensor;
+    use std::sync::Arc;
     // `--model` is the documented knob since the graph presets landed;
     // `--variant` stays as the original alias (same mechanism as --batch:
     // the alias supplies the default, so `--model` wins when both appear)
@@ -326,7 +327,18 @@ fn serve(mut args: Args) -> Result<()> {
     let dtype_name = args.opt("dtype", "", "accumulation dtype (f32|f64; empty = manifest default)");
     let plane_name = args.opt("plane", "full", "spectral storage plane (full|half)");
     let http_addr = args.opt("http", "", "serve over HTTP on this addr (e.g. 127.0.0.1:7878)");
-    let max_inflight = args.opt_usize("max-inflight", 64, "HTTP admission bound (excess → 429)");
+    let max_inflight =
+        args.opt_usize("max-inflight", 64, "per-model HTTP admission bound (excess → 429)");
+    let extra_models = args.opt(
+        "extra-models",
+        "",
+        "additional model presets to serve simultaneously (comma-separated; HTTP mode)",
+    );
+    let event_workers = args.opt_usize(
+        "event-workers",
+        4,
+        "fixed event-driven connection workers multiplexing all sockets (HTTP mode)",
+    );
     let duration_secs =
         args.opt_usize("duration-secs", 0, "HTTP mode: stop after this many seconds (0 = forever)");
     let backend = parse_backend(&backend_name, threads)?;
@@ -337,12 +349,12 @@ fn serve(mut args: Args) -> Result<()> {
         "serve: run the batching server pool (synthetic traffic, or HTTP with --http)",
     );
     // Manifest-only read to shape the synthetic requests and resolve the α
-    // default: always use the cheap interp backend here — the server worker
-    // owns the real one.
+    // default for the printout — the registry re-resolves per model.
     let m = spectral_flow::runtime::Runtime::open(&artifacts)?;
     let vdesc = m.manifest.variant(&variant)?.clone();
     let mode = WeightMode::from_alpha(m.manifest.resolve_alpha(alpha));
     let resolved_dtype = m.manifest.resolve_dtype(dtype);
+    drop(m);
     println!(
         "serving {variant} at α={} ({mode:?}), scheduler {}, dtype {}, plane {}",
         mode.alpha(),
@@ -350,37 +362,43 @@ fn serve(mut args: Args) -> Result<()> {
         resolved_dtype.label(),
         plane.label()
     );
-    let server = Server::start(ServerConfig {
-        artifacts_dir: artifacts.clone(),
-        variant: variant.clone(),
-        mode,
+    let spec = ModelSpec {
+        preset: variant.clone(),
+        alpha,
         seed: 7,
         batcher: BatcherConfig {
             max_batch: batch,
             max_wait: std::time::Duration::from_millis(wait_ms as u64),
         },
-        backend,
         workers,
-        scheduler,
-        dtype,
-        plane,
-    })?;
+        engine: spectral_flow::coordinator::EngineOptions::builder()
+            .backend(backend)
+            .scheduler(scheduler)
+            .dtype(dtype)
+            .plane(plane)
+            .build(),
+        max_inflight,
+    };
+    // the CLI model name doubles as the registry key; legacy aliases
+    // (/infer, /metrics) resolve to it
+    let registry = Arc::new(ModelRegistry::new(artifacts.clone(), variant.clone()));
+    registry.load_blocking(&variant, spec.clone())?;
     if !http_addr.is_empty() {
-        // networked mode: hand the pool to the HTTP front-end and serve
+        for name in extra_models.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            // extra models share every knob except the preset they serve
+            registry.load_blocking(name, ModelSpec { preset: name.to_string(), ..spec.clone() })?;
+            println!("also serving {name}");
+        }
+        // networked mode: hand the registry to the HTTP front-end and serve
         // until the duration elapses (0 = until the process is killed)
         let frontend = HttpFrontend::start(
-            server,
-            NetConfig {
-                addr: http_addr,
-                max_inflight,
-                input_shape: [vdesc.input_c, vdesc.input_hw, vdesc.input_hw],
-                dtype: resolved_dtype,
-                plane,
-                ..NetConfig::default()
-            },
+            Arc::clone(&registry),
+            NetConfig { addr: http_addr, event_workers, ..NetConfig::default() },
         )?;
         println!(
-            "listening on http://{} — POST /infer, GET /metrics, GET /healthz",
+            "listening on http://{} — POST /v1/models/<name>/infer, GET /v1/models, \
+             GET /v1/models/<name>/metrics, POST|DELETE /admin/models/<name>; \
+             legacy /infer, /metrics, /healthz serve {variant}",
             frontend.local_addr()
         );
         if duration_secs > 0 {
@@ -392,7 +410,10 @@ fn serve(mut args: Args) -> Result<()> {
             std::thread::sleep(std::time::Duration::from_secs(3600));
         }
     }
-    let client = server.client();
+    let pool = registry
+        .pool(&variant)
+        .ok_or_else(|| err!("model {variant:?} is not serving"))?;
+    let client = pool.client();
     let mut rng = Pcg32::new(123);
     let t0 = std::time::Instant::now();
     let rxs: Result<Vec<_>> = (0..requests)
@@ -408,10 +429,12 @@ fn serve(mut args: Args) -> Result<()> {
         rx.recv().map_err(|_| err!("server dropped request"))??;
     }
     let wall = t0.elapsed();
-    let metrics = server.pool_metrics()?;
+    let metrics = pool.pool_metrics()?;
     println!("{requests} requests in {wall:?} → {:.2} img/s", requests as f64 / wall.as_secs_f64());
     println!("{}", metrics.report());
-    server.shutdown()?;
+    drop(client);
+    drop(pool);
+    registry.shutdown();
     Ok(())
 }
 
@@ -429,6 +452,16 @@ fn loadgen(mut args: Args) -> Result<()> {
         "out",
         "rust/reports/BENCH_serve.json",
         "bench artifact to write (\"none\" to skip)",
+    );
+    let model = args.opt(
+        "model",
+        "",
+        "drive POST /v1/models/<name>/infer instead of the legacy /infer alias",
+    );
+    let models_flag = args.opt(
+        "models",
+        "",
+        "comma-separated model names for mixed round-robin load (overrides --model)",
     );
     // the load generator never touches the engine's numerics (the server
     // owns those) — the flags only suffix the default artifact entry name
@@ -453,10 +486,22 @@ fn loadgen(mut args: Args) -> Result<()> {
         "open" => LoadMode::Open { rate_hz: rate },
         other => return Err(err!("unknown mode {other:?} (expected closed|open)")),
     };
+    let models: Vec<String> = if !models_flag.is_empty() {
+        models_flag
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect()
+    } else if !model.is_empty() {
+        vec![model]
+    } else {
+        Vec::new()
+    };
     let report = loadgen::run(&LoadGenConfig {
         addr,
         mode,
         requests,
+        models,
         body: None,
         timeout: std::time::Duration::from_millis(timeout_ms as u64),
     })?;
@@ -464,6 +509,11 @@ fn loadgen(mut args: Args) -> Result<()> {
     if out != "none" {
         let mut b = spectral_flow::util::bench::Bench::new();
         report.record_into(&mut b, &name);
+        // mixed-model runs: one extra entry per model, so sweeps can track
+        // per-model percentiles in the same artifact
+        for (model, sub) in &report.per_model {
+            sub.record_into(&mut b, &format!("{name}/{model}"));
+        }
         b.write_json(&out)?;
         println!("wrote {out}");
     }
@@ -517,7 +567,12 @@ fn infer(mut args: Args) -> Result<()> {
         &variant,
         mode,
         7,
-        EngineOptions { backend, scheduler, dtype, plane, ..EngineOptions::default() },
+        EngineOptions::builder()
+            .backend(backend)
+            .scheduler(scheduler)
+            .dtype(dtype)
+            .plane(plane)
+            .build(),
     )?;
     println!(
         "engine up in {:?} ({} layers, backend {}, α={}, scheduler {}, dtype {}, plane {})",

@@ -66,7 +66,8 @@ pub struct HttpError {
 }
 
 impl HttpError {
-    fn new(status: u16, message: impl Into<String>) -> Self {
+    /// Build a protocol error carrying the HTTP status to answer with.
+    pub fn new(status: u16, message: impl Into<String>) -> Self {
         HttpError { status, message: message.into() }
     }
 
@@ -118,6 +119,134 @@ impl HttpRequest {
     pub fn keep_alive(&self) -> bool {
         self.keep_alive
     }
+}
+
+/// Pull one CRLF-terminated line out of `buf` starting at `pos`.
+///
+/// `Ok(None)` means the line is still incomplete; the `max` cap is enforced
+/// on the incomplete prefix too, so a peer cannot grow the buffer by never
+/// sending the terminator.
+fn take_line(
+    buf: &[u8],
+    pos: usize,
+    max: usize,
+) -> Result<Option<(String, usize)>, HttpError> {
+    match buf[pos..].iter().position(|&b| b == b'\n') {
+        Some(i) => {
+            if i > max {
+                return Err(HttpError::new(400, "header line too long"));
+            }
+            let mut line = buf[pos..pos + i].to_vec();
+            if line.last() == Some(&b'\r') {
+                line.pop();
+            }
+            match String::from_utf8(line) {
+                Ok(s) => Ok(Some((s, pos + i + 1))),
+                Err(_) => Err(HttpError::new(400, "non-utf8 bytes in header")),
+            }
+        }
+        None => {
+            if buf.len() - pos > max {
+                return Err(HttpError::new(400, "header line too long"));
+            }
+            Ok(None)
+        }
+    }
+}
+
+/// Attempt to parse one complete request from `buf` without doing any I/O.
+///
+/// This is the incremental core shared by the blocking reader
+/// ([`HttpConn::read_request`]) and the event-driven front-end, which feeds
+/// it the connection's receive buffer after every poll wakeup:
+///
+/// * `Ok(None)` — `buf` holds only a prefix of a request; read more bytes.
+/// * `Ok(Some((req, consumed)))` — one full request; drop `consumed` bytes.
+/// * `Err(e)` — protocol violation. Every cap is enforced on *incomplete*
+///   data (request-line/header length, header count, `Content-Length` before
+///   any body byte), so a hostile peer can never grow the buffer past
+///   `max_line · max_headers + max_body` or stall a decision it has already
+///   lost.
+pub fn try_parse_request(
+    buf: &[u8],
+    limits: &HttpLimits,
+) -> Result<Option<(HttpRequest, usize)>, HttpError> {
+    let (start_line, mut pos) = match take_line(buf, 0, limits.max_line)? {
+        Some(x) => x,
+        None => return Ok(None),
+    };
+    let parts: Vec<&str> = start_line.split(' ').collect();
+    if parts.len() != 3 || parts.iter().any(|p| p.is_empty()) {
+        return Err(HttpError::new(400, "malformed request line"));
+    }
+    let (method, target, version) = (parts[0], parts[1], parts[2]);
+    if method.len() > 16 || !method.bytes().all(|b| b.is_ascii_uppercase()) {
+        return Err(HttpError::new(400, "malformed method"));
+    }
+    if !target.starts_with('/') || target.len() > limits.max_line {
+        return Err(HttpError::new(400, "target must be an absolute path"));
+    }
+    let mut keep_alive = match version {
+        "HTTP/1.1" => true,
+        "HTTP/1.0" => false,
+        _ => return Err(HttpError::new(505, "unsupported HTTP version")),
+    };
+    let mut headers: Vec<(String, String)> = Vec::new();
+    loop {
+        let (line, next) = match take_line(buf, pos, limits.max_line)? {
+            Some(x) => x,
+            None => return Ok(None),
+        };
+        pos = next;
+        if line.is_empty() {
+            break;
+        }
+        if headers.len() >= limits.max_headers {
+            return Err(HttpError::new(431, "too many header fields"));
+        }
+        let (name, value) = line
+            .split_once(':')
+            .ok_or_else(|| HttpError::new(400, "malformed header field"))?;
+        if name.is_empty() || name.contains(' ') || name.contains('\t') {
+            return Err(HttpError::new(400, "malformed header name"));
+        }
+        headers.push((name.to_ascii_lowercase(), value.trim().to_string()));
+    }
+    let header = |n: &str| headers.iter().find(|(k, _)| k == n).map(|(_, v)| v.as_str());
+    if header("transfer-encoding").is_some() {
+        return Err(HttpError::new(501, "transfer-encoding not supported"));
+    }
+    match header("connection").map(str::to_ascii_lowercase).as_deref() {
+        Some("close") => keep_alive = false,
+        Some("keep-alive") => keep_alive = true,
+        _ => {}
+    }
+    let body_len = match header("content-length") {
+        None => 0,
+        Some(v) => {
+            v.parse::<usize>().map_err(|_| HttpError::new(400, "bad content-length"))?
+        }
+    };
+    if body_len > limits.max_body {
+        return Err(HttpError::new(
+            413,
+            format!("body of {body_len} bytes exceeds the {} byte cap", limits.max_body),
+        ));
+    }
+    if buf.len() - pos < body_len {
+        return Ok(None);
+    }
+    let body = buf[pos..pos + body_len].to_vec();
+    Ok(Some((
+        HttpRequest {
+            method: method.to_string(),
+            path: target.to_string(),
+            headers,
+            body,
+            keep_alive,
+        },
+        pos + body_len,
+    )))
 }
 
 /// Streams that can bound an individual `read` call. [`TcpStream`] re-arms
@@ -241,82 +370,32 @@ impl<S: TimeoutIo> HttpConn<S> {
     /// Parse one request. `Ok(None)` means the peer closed (or idled past
     /// the deadline) between requests — the clean keep-alive exit; errors
     /// carry the status to answer with before closing.
+    ///
+    /// This is a blocking driver around [`try_parse_request`]: refill the
+    /// buffer under the deadline, re-attempt the pure parse, repeat.
     pub fn read_request(&mut self, limits: &HttpLimits) -> Result<Option<HttpRequest>, HttpError> {
         let deadline = Instant::now() + limits.read_timeout;
-        let start_line = match self.read_line(limits.max_line, deadline) {
-            Ok(None) => return Ok(None),
-            // idle keep-alive: the deadline expired with zero request bytes
-            // pending — that is a quiet close, not a slow peer to 408
-            Err(e) if e.is_timeout() && self.buffered().is_empty() => return Ok(None),
-            Ok(Some(l)) => l,
-            Err(e) => return Err(e),
-        };
-        let parts: Vec<&str> = start_line.split(' ').collect();
-        if parts.len() != 3 || parts.iter().any(|p| p.is_empty()) {
-            return Err(HttpError::new(400, "malformed request line"));
-        }
-        let (method, target, version) = (parts[0], parts[1], parts[2]);
-        if method.len() > 16 || !method.bytes().all(|b| b.is_ascii_uppercase()) {
-            return Err(HttpError::new(400, "malformed method"));
-        }
-        if !target.starts_with('/') || target.len() > limits.max_line {
-            return Err(HttpError::new(400, "target must be an absolute path"));
-        }
-        let mut keep_alive = match version {
-            "HTTP/1.1" => true,
-            "HTTP/1.0" => false,
-            _ => return Err(HttpError::new(505, "unsupported HTTP version")),
-        };
-        let mut headers: Vec<(String, String)> = Vec::new();
         loop {
-            let line = match self.read_line(limits.max_line, deadline)? {
-                Some(l) => l,
-                None => return Err(HttpError::new(400, "truncated headers")),
-            };
-            if line.is_empty() {
-                break;
+            if let Some((req, consumed)) = try_parse_request(self.buffered(), limits)? {
+                self.consume(consumed);
+                return Ok(Some(req));
             }
-            if headers.len() >= limits.max_headers {
-                return Err(HttpError::new(431, "too many header fields"));
+            match self.refill(deadline) {
+                Ok(0) => {
+                    return if self.buffered().is_empty() {
+                        Ok(None)
+                    } else {
+                        Err(HttpError::new(400, "truncated request"))
+                    };
+                }
+                Ok(_) => {}
+                // idle keep-alive: the deadline expired with zero request
+                // bytes pending — that is a quiet close, not a slow peer
+                // to 408
+                Err(e) if e.is_timeout() && self.buffered().is_empty() => return Ok(None),
+                Err(e) => return Err(e),
             }
-            let (name, value) = line
-                .split_once(':')
-                .ok_or_else(|| HttpError::new(400, "malformed header field"))?;
-            if name.is_empty() || name.contains(' ') || name.contains('\t') {
-                return Err(HttpError::new(400, "malformed header name"));
-            }
-            headers.push((name.to_ascii_lowercase(), value.trim().to_string()));
         }
-        let header = |n: &str| headers.iter().find(|(k, _)| k == n).map(|(_, v)| v.as_str());
-        if header("transfer-encoding").is_some() {
-            return Err(HttpError::new(501, "transfer-encoding not supported"));
-        }
-        match header("connection").map(str::to_ascii_lowercase).as_deref() {
-            Some("close") => keep_alive = false,
-            Some("keep-alive") => keep_alive = true,
-            _ => {}
-        }
-        let body_len = match header("content-length") {
-            None => 0,
-            Some(v) => v
-                .parse::<usize>()
-                .map_err(|_| HttpError::new(400, "bad content-length"))?,
-        };
-        if body_len > limits.max_body {
-            return Err(HttpError::new(
-                413,
-                format!("body of {body_len} bytes exceeds the {} byte cap", limits.max_body),
-            ));
-        }
-        let body =
-            if body_len > 0 { self.read_body(body_len, deadline)? } else { Vec::new() };
-        Ok(Some(HttpRequest {
-            method: method.to_string(),
-            path: target.to_string(),
-            headers,
-            body,
-            keep_alive,
-        }))
     }
 
     /// Parse one response (client side: the load generator and tests).
@@ -522,6 +601,56 @@ mod tests {
         let text = String::from_utf8(wire).unwrap();
         assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"));
         assert!(text.contains("Connection: keep-alive"));
+    }
+
+    #[test]
+    fn incremental_parse_waits_for_complete_request() {
+        let wire = b"POST /v1/models/demo/infer HTTP/1.1\r\nContent-Length: 4\r\n\r\nabcd";
+        let limits = HttpLimits::default();
+        // every strict prefix is "need more bytes", never an error
+        for cut in 0..wire.len() {
+            let r = try_parse_request(&wire[..cut], &limits).unwrap();
+            assert!(r.is_none(), "prefix of {cut} bytes must be incomplete");
+        }
+        let (req, consumed) = try_parse_request(wire, &limits).unwrap().unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/models/demo/infer");
+        assert_eq!(req.body, b"abcd");
+        assert_eq!(consumed, wire.len());
+    }
+
+    #[test]
+    fn incremental_parse_consumes_only_one_request() {
+        let wire = b"GET /a HTTP/1.1\r\n\r\nGET /b HTTP/1.1\r\n\r\n";
+        let limits = HttpLimits::default();
+        let (req, consumed) = try_parse_request(wire, &limits).unwrap().unwrap();
+        assert_eq!(req.path, "/a");
+        let (req2, consumed2) = try_parse_request(&wire[consumed..], &limits).unwrap().unwrap();
+        assert_eq!(req2.path, "/b");
+        assert_eq!(consumed + consumed2, wire.len());
+    }
+
+    #[test]
+    fn incremental_parse_enforces_caps_on_prefixes() {
+        let limits =
+            HttpLimits { max_line: 32, max_headers: 2, max_body: 8, ..HttpLimits::default() };
+        // unterminated request line past the cap fails without a newline
+        let long = format!("GET /{}", "a".repeat(100));
+        assert_eq!(
+            try_parse_request(long.as_bytes(), &limits).unwrap_err().status,
+            400
+        );
+        // header count violation fires before the blank line arrives
+        let many = b"GET / HTTP/1.1\r\na: 1\r\nb: 2\r\nc: 3\r\n";
+        assert_eq!(try_parse_request(many, &limits).unwrap_err().status, 431);
+        // oversized Content-Length is rejected before any body byte exists
+        let big = b"POST / HTTP/1.1\r\nContent-Length: 999\r\n\r\n";
+        assert_eq!(try_parse_request(big, &limits).unwrap_err().status, 413);
+        // malformed request line fails as soon as its newline lands
+        assert_eq!(
+            try_parse_request(b"GARBAGE\r\n", &HttpLimits::default()).unwrap_err().status,
+            400
+        );
     }
 
     #[test]

@@ -48,6 +48,11 @@ pub struct LoadGenConfig {
     pub mode: LoadMode,
     /// Total requests to issue.
     pub requests: usize,
+    /// Models to drive through `POST /v1/models/<name>/infer`. Empty hits
+    /// the legacy `/infer` alias (the default model); more than one entry
+    /// is the mixed-model mode — requests round-robin across the models
+    /// and the report carries per-model sub-reports.
+    pub models: Vec<String>,
     /// Explicit request body; `None` sends `{"seed":i}` per request —
     /// tiny on the wire, deterministic work on the server.
     pub body: Option<String>,
@@ -61,10 +66,21 @@ impl Default for LoadGenConfig {
             addr: "127.0.0.1:7878".into(),
             mode: LoadMode::Closed { concurrency: 4 },
             requests: 64,
+            models: Vec::new(),
             body: None,
             timeout: Duration::from_secs(30),
         }
     }
+}
+
+/// Pick the model (by index) and URL path for request `seq`: round-robin
+/// across `models`, or the legacy `/infer` alias when none are named.
+fn path_for(models: &[String], seq: usize) -> (usize, String) {
+    if models.is_empty() {
+        return (0, "/infer".to_string());
+    }
+    let idx = seq % models.len();
+    (idx, format!("/v1/models/{}/infer", models[idx]))
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -85,6 +101,9 @@ pub struct LoadReport {
     /// Transport errors, timeouts, and non-200/429 statuses.
     pub failed: usize,
     pub elapsed: Duration,
+    /// Mixed-model runs: one sub-report per model (request order within a
+    /// model is preserved). Empty for single-target runs.
+    pub per_model: Vec<(String, LoadReport)>,
     latencies_us: Vec<u64>,
 }
 
@@ -170,6 +189,16 @@ impl LoadReport {
         if let (Some(p50), Some(p95), Some(p99)) = (self.p50(), self.p95(), self.p99()) {
             out.push_str(&format!("latency: p50={p50:?} p95={p95:?} p99={p99:?}\n"));
         }
+        for (model, sub) in &self.per_model {
+            out.push_str(&format!(
+                "  {model}: {} ok, {} rejected, {} failed",
+                sub.ok, sub.rejected, sub.failed
+            ));
+            if let (Some(p50), Some(p99)) = (sub.p50(), sub.p99()) {
+                out.push_str(&format!(" | p50={p50:?} p99={p99:?}"));
+            }
+            out.push('\n');
+        }
         for (bound, count) in self.histogram() {
             if count > 0 {
                 out.push_str(&format!("  ≤{bound:>9?} {count:>6}  {}\n", "#".repeat(count.min(60))));
@@ -237,14 +266,15 @@ fn issue(
     conn: &mut Option<Conn>,
     addr: &SocketAddr,
     host: &str,
+    path: &str,
     body: &[u8],
     timeout: Duration,
 ) -> Outcome {
     let reused = conn.is_some();
-    match issue_once(conn, addr, host, body, timeout) {
+    match issue_once(conn, addr, host, path, body, timeout) {
         Some(outcome) => outcome,
         None if reused => {
-            issue_once(conn, addr, host, body, timeout).unwrap_or(Outcome::Failed)
+            issue_once(conn, addr, host, path, body, timeout).unwrap_or(Outcome::Failed)
         }
         None => Outcome::Failed,
     }
@@ -256,6 +286,7 @@ fn issue_once(
     conn: &mut Option<Conn>,
     addr: &SocketAddr,
     host: &str,
+    path: &str,
     body: &[u8],
     timeout: Duration,
 ) -> Option<Outcome> {
@@ -267,7 +298,7 @@ fn issue_once(
         }
     }
     let (reader, writer) = conn.as_mut().unwrap();
-    let wire = http::format_request("POST", "/infer", host, body);
+    let wire = http::format_request("POST", path, host, body);
     if writer.write_all(&wire).is_err() {
         *conn = None;
         return None;
@@ -315,7 +346,7 @@ pub fn run(cfg: &LoadGenConfig) -> Result<LoadReport> {
 }
 
 fn run_closed(cfg: &LoadGenConfig, addr: SocketAddr, concurrency: usize) -> Result<LoadReport> {
-    let (tx, rx) = mpsc::channel::<(Outcome, Duration)>();
+    let (tx, rx) = mpsc::channel::<(usize, Outcome, Duration)>();
     let t0 = Instant::now();
     std::thread::scope(|s| {
         for w in 0..concurrency {
@@ -325,21 +356,46 @@ fn run_closed(cfg: &LoadGenConfig, addr: SocketAddr, concurrency: usize) -> Resu
             s.spawn(move || {
                 let mut conn: Option<Conn> = None;
                 for i in 0..n {
-                    let body = body_for(cfg, w * cfg.requests + i);
+                    let seq = w * cfg.requests + i;
+                    let body = body_for(cfg, seq);
+                    let (model, path) = path_for(&cfg.models, seq);
                     let start = Instant::now();
-                    let outcome = issue(&mut conn, &addr, &cfg.addr, &body, cfg.timeout);
-                    let _ = tx.send((outcome, start.elapsed()));
+                    let outcome =
+                        issue(&mut conn, &addr, &cfg.addr, &path, &body, cfg.timeout);
+                    let _ = tx.send((model, outcome, start.elapsed()));
                 }
             });
         }
     });
     drop(tx);
+    Ok(collect(cfg, rx, t0))
+}
+
+/// Drain the outcome channel into the overall report plus (for mixed-model
+/// runs) the per-model sub-reports.
+fn collect(
+    cfg: &LoadGenConfig,
+    rx: mpsc::Receiver<(usize, Outcome, Duration)>,
+    t0: Instant,
+) -> LoadReport {
     let mut report = LoadReport::default();
-    for (outcome, latency) in rx {
+    let mut per_model: Vec<LoadReport> =
+        cfg.models.iter().map(|_| LoadReport::default()).collect();
+    for (model, outcome, latency) in rx {
         report.record(outcome, latency);
+        if let Some(sub) = per_model.get_mut(model) {
+            sub.record(outcome, latency);
+        }
     }
-    report.elapsed = t0.elapsed();
-    Ok(report)
+    let elapsed = t0.elapsed();
+    report.elapsed = elapsed;
+    if cfg.models.len() > 1 {
+        for sub in &mut per_model {
+            sub.elapsed = elapsed;
+        }
+        report.per_model = cfg.models.iter().cloned().zip(per_model).collect();
+    }
+    report
 }
 
 fn run_open(cfg: &LoadGenConfig, addr: SocketAddr, rate_hz: f64) -> Result<LoadReport> {
@@ -351,7 +407,7 @@ fn run_open(cfg: &LoadGenConfig, addr: SocketAddr, rate_hz: f64) -> Result<LoadR
         return Err(err!("open-loop runs are capped at 4096 requests, got {}", cfg.requests));
     }
     let interval = Duration::from_secs_f64(1.0 / rate_hz);
-    let (tx, rx) = mpsc::channel::<(Outcome, Duration)>();
+    let (tx, rx) = mpsc::channel::<(usize, Outcome, Duration)>();
     let t0 = Instant::now();
     std::thread::scope(|s| {
         for i in 0..cfg.requests {
@@ -363,20 +419,16 @@ fn run_open(cfg: &LoadGenConfig, addr: SocketAddr, rate_hz: f64) -> Result<LoadR
             s.spawn(move || {
                 let mut conn: Option<Conn> = None;
                 let body = body_for(cfg, i);
-                let outcome = issue(&mut conn, &addr, &cfg.addr, &body, cfg.timeout);
+                let (model, path) = path_for(&cfg.models, i);
+                let outcome = issue(&mut conn, &addr, &cfg.addr, &path, &body, cfg.timeout);
                 // latency counts from the *scheduled* arrival: launch slip
                 // and server queueing both land in the tail, by design
-                let _ = tx.send((outcome, scheduled.elapsed()));
+                let _ = tx.send((model, outcome, scheduled.elapsed()));
             });
         }
     });
     drop(tx);
-    let mut report = LoadReport::default();
-    for (outcome, latency) in rx {
-        report.record(outcome, latency);
-    }
-    report.elapsed = t0.elapsed();
-    Ok(report)
+    Ok(collect(cfg, rx, t0))
 }
 
 #[cfg(test)]
@@ -453,6 +505,53 @@ mod tests {
         assert_eq!(r.sent, 4);
         assert_eq!(r.ok, 0);
         assert_eq!(r.failed, 4);
+    }
+
+    #[test]
+    fn path_round_robins_across_models() {
+        // no models: the legacy alias
+        assert_eq!(path_for(&[], 0), (0, "/infer".to_string()));
+        assert_eq!(path_for(&[], 7), (0, "/infer".to_string()));
+        // one model: every request pinned to its /v1 route
+        let one = vec!["resnet18".to_string()];
+        assert_eq!(path_for(&one, 5), (0, "/v1/models/resnet18/infer".to_string()));
+        // mixed: strict round-robin by sequence number
+        let two = vec!["a".to_string(), "b".to_string()];
+        assert_eq!(path_for(&two, 0).1, "/v1/models/a/infer");
+        assert_eq!(path_for(&two, 1).1, "/v1/models/b/infer");
+        assert_eq!(path_for(&two, 2).1, "/v1/models/a/infer");
+        assert_eq!(path_for(&two, 3).0, 1);
+    }
+
+    #[test]
+    fn mixed_model_run_reports_per_model() {
+        // unreachable target: outcomes are failures, but the per-model
+        // accounting still splits the traffic
+        let cfg = LoadGenConfig {
+            addr: "127.0.0.1:9".into(),
+            mode: LoadMode::Closed { concurrency: 2 },
+            requests: 6,
+            models: vec!["a".to_string(), "b".to_string()],
+            timeout: Duration::from_millis(300),
+            ..LoadGenConfig::default()
+        };
+        let r = run(&cfg).unwrap();
+        assert_eq!(r.sent, 6);
+        assert_eq!(r.failed, 6);
+        assert_eq!(r.per_model.len(), 2);
+        assert_eq!(r.per_model[0].0, "a");
+        assert_eq!(r.per_model[1].0, "b");
+        let split: usize = r.per_model.iter().map(|(_, s)| s.sent).sum();
+        assert_eq!(split, 6, "every request lands in exactly one sub-report");
+        // single-model runs don't carry redundant sub-reports
+        let cfg = LoadGenConfig {
+            models: vec!["a".to_string()],
+            requests: 2,
+            addr: "127.0.0.1:9".into(),
+            timeout: Duration::from_millis(300),
+            ..LoadGenConfig::default()
+        };
+        assert!(run(&cfg).unwrap().per_model.is_empty());
     }
 
     #[test]

@@ -5,30 +5,37 @@
 //! and `std::thread` only (the offline registry carries no async runtime
 //! or HTTP crate — same constraint as the rest of `util`):
 //!
-//! * [`http`] — minimal HTTP/1.1: strict request parsing with hard caps
-//!   (line/header/body size, deadline-based reads that defeat slow-loris
-//!   peers), keep-alive, and a response writer shared with the client
-//!   side.
-//! * [`proto`] — the JSON wire schema: `POST /infer` (tensor, `{"seed":n}`,
-//!   or a `{"batch":[…]}` of them in; logits + queue/execute/per-image
-//!   latency breakdown + worker + PE utilization out — batched bodies get
-//!   `{"results":[…]}` in request order), `GET /metrics` (merged +
-//!   per-worker pool snapshot with the batch-size histogram),
-//!   `GET /healthz`.
-//! * [`server`] — [`server::HttpFrontend`]: acceptor + per-connection
-//!   threads wired to [`crate::coordinator::Server`] through cloned
-//!   [`crate::coordinator::Client`] handles, with admission control
-//!   (bounded in-flight budget → 429, connection cap → 503), drain mode,
-//!   and graceful shutdown that flushes the batcher.
+//! * [`http`] — minimal HTTP/1.1: an incremental zero-copy request parser
+//!   (`try_parse_request`) with hard caps enforced even on incomplete
+//!   prefixes (line/header/body size — slow-loris peers hit the caps or
+//!   the deadline, never unbounded memory), keep-alive, and a response
+//!   writer shared with the client side.
+//! * [`poll`] — `poll(2)` readiness wrapper (std + raw FFI, no libc crate)
+//!   plus the self-pipe [`poll::WakePipe`] the event workers block on.
+//! * [`proto`] — the JSON wire schema for the `/v1` API: model-scoped
+//!   inference (tensor, `{"seed":n}`, or a `{"batch":[…]}` of them in;
+//!   logits + queue/execute/per-image latency breakdown + worker + PE
+//!   utilization out), the `GET /v1/models` registry listing, per-model
+//!   metrics with admission counters, the `/admin` model-spec body, and
+//!   the single structured error schema
+//!   `{"error":{"code","message","model"}}`.
+//! * [`server`] — [`server::HttpFrontend`]: acceptor + a **fixed pool of
+//!   event-driven connection workers** (nonblocking sockets multiplexed
+//!   over [`poll::wait`]) routing requests by URL path into a shared
+//!   [`crate::coordinator::ModelRegistry`], with per-model admission
+//!   control (bounded in-flight budget → 429, connection cap → 503),
+//!   drain mode, and graceful shutdown that flushes every pool's batcher.
 //! * [`loadgen`] — open-loop (fixed arrival rate, latency from scheduled
 //!   arrival) and closed-loop (fixed concurrency) drivers with percentile
-//!   + histogram reporting, writing `BENCH_serve.json` via
+//!   + histogram reporting — single-model or mixed round-robin across
+//!   `/v1` model routes — writing `BENCH_serve.json` via
 //!   [`crate::util::bench`].
 //!
 //! The request path end to end:
 //!
 //! ```text
-//! socket ──► HttpConn (caps + deadline) ──► admission (inflight ≤ bound)
+//! socket ──► event worker (poll + incremental parse, caps + deadline)
+//!        ──► route (/v1/models/<name>/…) ──► registry ──► admission
 //!        ──► Client ──mpsc──► dispatcher (Batcher) ──► engine pool
 //!        ◄── Response {logits, queue/execute breakdown, worker} as JSON
 //! ```
@@ -42,9 +49,10 @@
 
 pub mod http;
 pub mod loadgen;
+pub mod poll;
 pub mod proto;
 pub mod server;
 
 pub use http::{HttpConn, HttpError, HttpLimits, HttpRequest};
 pub use loadgen::{LoadGenConfig, LoadMode, LoadReport};
-pub use server::{HttpFrontend, NetConfig};
+pub use server::{HttpFrontend, NetConfig, Route};

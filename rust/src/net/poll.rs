@@ -1,0 +1,335 @@
+//! Thin readiness-polling wrapper over `poll(2)` — std + raw FFI only.
+//!
+//! The event-driven front-end ([`crate::net::server`]) multiplexes many
+//! nonblocking sockets onto a fixed pool of connection workers. Each worker
+//! blocks in [`wait`] until one of its sockets is readable/writable (or a
+//! deadline expires), instead of parking one OS thread per connection.
+//!
+//! Two deliberate restrictions keep this dependency-free:
+//!
+//! * On unix the syscall is declared directly (`extern "C" { fn poll(..) }`)
+//!   — no libc crate. `poll(2)` is POSIX and level-triggered, which is all a
+//!   keep-alive HTTP front-end needs; the fd sets are rebuilt each iteration
+//!   from the worker's connection table, so there is no registration state
+//!   to keep in sync (the classic epoll bug class).
+//! * Cross-thread wakeups use a [`WakePipe`] built from
+//!   `UnixStream::pair()` — the only portable std-only self-pipe. Writing a
+//!   byte makes the read end pollable, interrupting a long `wait` when new
+//!   connections or shutdown arrive.
+//!
+//! On non-unix targets the module degrades to a short-sleep stub that
+//! reports every fd ready (correct but busy); CI only exercises unix.
+
+use std::io;
+use std::time::Duration;
+
+/// Raw file descriptor type used by the poller.
+#[cfg(unix)]
+pub type Fd = std::os::unix::io::RawFd;
+/// Raw file descriptor type used by the poller (stub on non-unix).
+#[cfg(not(unix))]
+pub type Fd = i32;
+
+/// One fd's interest set for a [`wait`] call.
+#[derive(Debug, Clone, Copy)]
+pub struct PollSpec {
+    /// The descriptor to watch.
+    pub fd: Fd,
+    /// Watch for readability (`POLLIN`).
+    pub read: bool,
+    /// Watch for writability (`POLLOUT`).
+    pub write: bool,
+}
+
+/// One fd's readiness, aligned index-for-index with the input specs.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PollEvents {
+    /// Data (or EOF) can be read without blocking.
+    pub readable: bool,
+    /// The socket's send buffer has room.
+    pub writable: bool,
+    /// Peer hung up (`POLLHUP`).
+    pub hangup: bool,
+    /// Error condition (`POLLERR` / `POLLNVAL`).
+    pub error: bool,
+}
+
+impl PollEvents {
+    /// True if any condition fired for this fd.
+    pub fn any(&self) -> bool {
+        self.readable || self.writable || self.hangup || self.error
+    }
+}
+
+#[cfg(unix)]
+mod sys {
+    use std::os::raw::{c_int, c_ulong};
+
+    // Matches struct pollfd from <poll.h>.
+    #[repr(C)]
+    pub struct PollFd {
+        pub fd: c_int,
+        pub events: i16,
+        pub revents: i16,
+    }
+
+    pub const POLLIN: i16 = 0x001;
+    pub const POLLOUT: i16 = 0x004;
+    pub const POLLERR: i16 = 0x008;
+    pub const POLLHUP: i16 = 0x010;
+    pub const POLLNVAL: i16 = 0x020;
+
+    // nfds_t is `unsigned long` on Linux, which is where CI runs; declared
+    // here so the crate needs no libc crate.
+    extern "C" {
+        pub fn poll(fds: *mut PollFd, nfds: c_ulong, timeout: c_int) -> c_int;
+    }
+}
+
+/// Block until at least one spec'd fd is ready or `timeout` elapses.
+///
+/// Returns one [`PollEvents`] per input spec (same order). A timeout yields
+/// all-empty events; `EINTR` is treated as a timeout (callers loop anyway).
+#[cfg(unix)]
+pub fn wait(specs: &[PollSpec], timeout: Duration) -> io::Result<Vec<PollEvents>> {
+    let mut fds: Vec<sys::PollFd> = specs
+        .iter()
+        .map(|s| {
+            let mut events = 0i16;
+            if s.read {
+                events |= sys::POLLIN;
+            }
+            if s.write {
+                events |= sys::POLLOUT;
+            }
+            sys::PollFd {
+                fd: s.fd,
+                events,
+                revents: 0,
+            }
+        })
+        .collect();
+    let timeout_ms: i32 = timeout.as_millis().min(i32::MAX as u128) as i32;
+    // SAFETY: `fds` is a live, correctly-sized buffer of #[repr(C)] pollfd
+    // entries for the duration of the call; poll(2) only writes `revents`.
+    let rc = unsafe { sys::poll(fds.as_mut_ptr(), fds.len() as std::os::raw::c_ulong, timeout_ms) };
+    if rc < 0 {
+        let err = io::Error::last_os_error();
+        if err.kind() == io::ErrorKind::Interrupted {
+            return Ok(vec![PollEvents::default(); specs.len()]);
+        }
+        return Err(err);
+    }
+    Ok(fds
+        .iter()
+        .map(|f| PollEvents {
+            readable: f.revents & sys::POLLIN != 0,
+            writable: f.revents & sys::POLLOUT != 0,
+            hangup: f.revents & sys::POLLHUP != 0,
+            error: f.revents & (sys::POLLERR | sys::POLLNVAL) != 0,
+        })
+        .collect())
+}
+
+/// Degraded fallback for non-unix targets: sleep briefly and report every
+/// fd readable + writable. Nonblocking I/O keeps this correct (reads just
+/// return `WouldBlock`), only less efficient.
+#[cfg(not(unix))]
+pub fn wait(specs: &[PollSpec], timeout: Duration) -> io::Result<Vec<PollEvents>> {
+    std::thread::sleep(timeout.min(Duration::from_millis(2)));
+    Ok(specs
+        .iter()
+        .map(|_| PollEvents {
+            readable: true,
+            writable: true,
+            hangup: false,
+            error: false,
+        })
+        .collect())
+}
+
+/// Self-pipe for waking a worker blocked in [`wait`] from another thread.
+///
+/// Built from `UnixStream::pair()` (the std-only pipe): the worker polls the
+/// read end alongside its sockets; any thread holding a clone of the write
+/// end makes it readable with [`WakePipe::wake`].
+#[cfg(unix)]
+pub struct WakePipe {
+    read: std::os::unix::net::UnixStream,
+    write: std::os::unix::net::UnixStream,
+}
+
+#[cfg(unix)]
+impl WakePipe {
+    /// Create a nonblocking pipe pair.
+    pub fn new() -> io::Result<WakePipe> {
+        let (read, write) = std::os::unix::net::UnixStream::pair()?;
+        read.set_nonblocking(true)?;
+        write.set_nonblocking(true)?;
+        Ok(WakePipe { read, write })
+    }
+
+    /// Fd of the read end, for inclusion in a [`wait`] spec set.
+    pub fn fd(&self) -> Fd {
+        use std::os::unix::io::AsRawFd;
+        self.read.as_raw_fd()
+    }
+
+    /// Make the read end pollable. A full pipe means a wakeup is already
+    /// pending, so `WouldBlock` is success.
+    pub fn wake(&self) {
+        use std::io::Write;
+        let mut w = &self.write;
+        let _ = w.write(&[1u8]);
+    }
+
+    /// Consume all pending wakeup bytes (level-triggered poll would
+    /// otherwise re-fire forever).
+    pub fn drain(&self) {
+        use std::io::Read;
+        let mut r = &self.read;
+        let mut buf = [0u8; 64];
+        while let Ok(n) = r.read(&mut buf) {
+            if n == 0 {
+                break;
+            }
+        }
+    }
+
+    /// Clone a handle that can only wake (for handing to other threads).
+    pub fn waker(&self) -> io::Result<Waker> {
+        Ok(Waker {
+            write: self.write.try_clone()?,
+        })
+    }
+}
+
+/// Write-end handle cloned off a [`WakePipe`].
+#[cfg(unix)]
+pub struct Waker {
+    write: std::os::unix::net::UnixStream,
+}
+
+#[cfg(unix)]
+impl Waker {
+    /// Make the paired read end pollable (see [`WakePipe::wake`]).
+    pub fn wake(&self) {
+        use std::io::Write;
+        let mut w = &self.write;
+        let _ = w.write(&[1u8]);
+    }
+}
+
+/// Non-unix stub: no pipe exists; [`wait`] never blocks long, so wakeups
+/// are unnecessary.
+#[cfg(not(unix))]
+pub struct WakePipe;
+
+#[cfg(not(unix))]
+impl WakePipe {
+    pub fn new() -> io::Result<WakePipe> {
+        Ok(WakePipe)
+    }
+    pub fn fd(&self) -> Fd {
+        -1
+    }
+    pub fn wake(&self) {}
+    pub fn drain(&self) {}
+    pub fn waker(&self) -> io::Result<Waker> {
+        Ok(Waker)
+    }
+}
+
+/// Non-unix stub waker.
+#[cfg(not(unix))]
+pub struct Waker;
+
+#[cfg(not(unix))]
+impl Waker {
+    pub fn wake(&self) {}
+}
+
+/// Raw fd of a TCP stream for polling.
+#[cfg(unix)]
+pub fn fd_of(stream: &std::net::TcpStream) -> Fd {
+    use std::os::unix::io::AsRawFd;
+    stream.as_raw_fd()
+}
+
+/// Non-unix stub: the fallback [`wait`] ignores fds entirely.
+#[cfg(not(unix))]
+pub fn fd_of(_stream: &std::net::TcpStream) -> Fd {
+    -1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    #[test]
+    fn wake_pipe_round_trip() {
+        let pipe = WakePipe::new().unwrap();
+        pipe.wake();
+        let specs = [PollSpec {
+            fd: pipe.fd(),
+            read: true,
+            write: false,
+        }];
+        let events = wait(&specs, Duration::from_millis(500)).unwrap();
+        assert!(events[0].readable, "wake() must make the pipe readable");
+        pipe.drain();
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn timeout_returns_empty_events() {
+        let pipe = WakePipe::new().unwrap();
+        let specs = [PollSpec {
+            fd: pipe.fd(),
+            read: true,
+            write: false,
+        }];
+        let start = Instant::now();
+        let events = wait(&specs, Duration::from_millis(30)).unwrap();
+        assert!(!events[0].readable, "nothing written: no readiness");
+        assert!(start.elapsed() >= Duration::from_millis(25));
+    }
+
+    #[test]
+    fn waker_clone_wakes_from_another_thread() {
+        let pipe = WakePipe::new().unwrap();
+        let waker = pipe.waker().unwrap();
+        let handle = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            waker.wake();
+        });
+        let specs = [PollSpec {
+            fd: pipe.fd(),
+            read: true,
+            write: false,
+        }];
+        let start = Instant::now();
+        let events = wait(&specs, Duration::from_secs(5)).unwrap();
+        handle.join().unwrap();
+        assert!(events[0].readable || !cfg!(unix));
+        assert!(start.elapsed() < Duration::from_secs(5));
+        pipe.drain();
+    }
+
+    #[test]
+    fn drain_clears_pending_wakeups() {
+        let pipe = WakePipe::new().unwrap();
+        for _ in 0..10 {
+            pipe.wake();
+        }
+        pipe.drain();
+        let specs = [PollSpec {
+            fd: pipe.fd(),
+            read: true,
+            write: false,
+        }];
+        let events = wait(&specs, Duration::from_millis(20)).unwrap();
+        assert!(!events[0].readable || !cfg!(unix), "drained pipe is quiet");
+    }
+}

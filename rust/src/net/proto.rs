@@ -1,6 +1,6 @@
-//! JSON wire schema for the serving endpoints.
+//! JSON wire schema for the `/v1` serving endpoints.
 //!
-//! * `POST /infer` — body is either an explicit tensor
+//! * `POST /v1/models/<name>/infer` — body is either an explicit tensor
 //!   `{"shape":[c,h,w],"data":[…]}` or `{"seed":n}`, which asks the server
 //!   to synthesize the deterministic test image for `n` (identical to
 //!   [`crate::coordinator::InferenceEngine::synthetic_image`] — tiny
@@ -12,11 +12,19 @@
 //!   [`MAX_BATCH_REQUESTS`] single-image bodies (each `{"seed":n}` or an
 //!   explicit tensor) and is answered with `{"results":[…]}` — one reply
 //!   object per image, in request order.
-//! * `GET /metrics` — merged + per-worker
-//!   [`PoolMetrics`](crate::coordinator::PoolMetrics) snapshot, including
-//!   the queue/execute percentiles and the schedule-quality block.
+//! * `GET /v1/models` — registry listing ([`models_to_json`]): one row per
+//!   model with its status (`serving`/`loading`/`draining`/`failed`) and
+//!   swap generation.
+//! * `GET /v1/models/<name>/metrics` — per-model merged + per-worker
+//!   [`PoolMetrics`](crate::coordinator::PoolMetrics) snapshot
+//!   ([`model_metrics_to_json`]), including the queue/execute percentiles,
+//!   the schedule-quality block, and the admission/quota counters.
 //! * `GET /healthz` — `{"status":"ok"}` (200) or `{"status":"draining"}`
-//!   (503).
+//!   (503). The legacy `/infer` and `/metrics` aliases answer for the
+//!   default model with the same bodies as their `/v1` forms.
+//!
+//! Every non-200 reply carries one structured error shape
+//! ([`error_body`]): `{"error":{"code":…,"message":…,"model":…}}`.
 //!
 //! Values round-trip exactly: logits are f32, carried as f64 (exact), and
 //! the serializer prints the shortest representation that re-parses to the
@@ -28,9 +36,13 @@
 
 use std::time::Duration;
 
-use crate::coordinator::{ArenaMetrics, Metrics, PoolMetrics, Response, ScheduleMetrics};
+use crate::coordinator::{
+    AdmissionMetrics, ArenaMetrics, EngineOptions, Metrics, ModelSpec, ModelStatus,
+    PoolMetrics, Response, ScheduleMetrics,
+};
 use crate::err;
 use crate::runtime::{Dtype, Plane};
+use crate::schedule::SchedulePolicy;
 use crate::tensor::Tensor;
 use crate::util::error::Result;
 use crate::util::json::{arr, num, obj, s, Json, JsonLimits};
@@ -55,9 +67,40 @@ pub enum InferRequest {
     Batch(Vec<Tensor>),
 }
 
-/// `{"error": message}` — the body of every non-200 reply.
-pub fn error_body(message: &str) -> String {
-    obj(vec![("error", s(message))]).to_string()
+/// The single structured error schema every non-200 reply uses:
+/// `{"error":{"code":…,"message":…,"model":…}}`. `code` is a stable
+/// machine-readable slug (`bad_request`, `not_found`, `overloaded`,
+/// `draining`, `loading`, `unavailable`, `method_not_allowed`, `conflict`,
+/// `timeout`, `payload_too_large`, `internal`); `model` names the model the
+/// request resolved to, or null for errors before routing.
+pub fn error_body(code: &str, message: &str, model: Option<&str>) -> String {
+    obj(vec![(
+        "error",
+        obj(vec![
+            ("code", s(code)),
+            ("message", s(message)),
+            ("model", model.map(s).unwrap_or(Json::Null)),
+        ]),
+    )])
+    .to_string()
+}
+
+/// Map an HTTP status to the default error-schema code slug.
+pub fn code_for_status(status: u16) -> &'static str {
+    match status {
+        400 => "bad_request",
+        404 => "not_found",
+        405 => "method_not_allowed",
+        408 => "timeout",
+        409 => "conflict",
+        413 => "payload_too_large",
+        429 => "overloaded",
+        431 => "bad_request",
+        501 => "bad_request",
+        503 => "unavailable",
+        505 => "bad_request",
+        _ => "internal",
+    }
 }
 
 /// Parse a `POST /infer` body into the input tensor. `input_shape` is the
@@ -144,6 +187,106 @@ fn tensor_from_json(j: &Json, input_shape: [usize; 3]) -> Result<Tensor> {
         .collect::<Option<_>>()
         .ok_or_else(|| err!("\"data\" must be an array of numbers"))?;
     Ok(Tensor::from_vec(&shape, data))
+}
+
+/// Keys a `POST /admin/models/<name>` body may carry. Anything else is a
+/// hard error — an admin API that silently ignores a typo'd knob is worse
+/// than one that rejects it.
+const MODEL_SPEC_KEYS: [&str; 11] = [
+    "preset",
+    "alpha",
+    "seed",
+    "workers",
+    "max_batch",
+    "wait_ms",
+    "scheduler",
+    "dtype",
+    "plane",
+    "max_inflight",
+    "arena_reuse",
+];
+
+/// Parse a `POST /admin/models/<name>` body into a [`ModelSpec`].
+///
+/// Every key is optional; an empty body loads the preset named `name` with
+/// defaults. `preset` defaults to the model name, so
+/// `POST /admin/models/resnet18` with `{}` serves the `resnet18` variant.
+/// `"dtype":""` (like `--dtype` unset) defers to the manifest default.
+pub fn parse_model_spec(body: &[u8], name: &str) -> Result<ModelSpec> {
+    let mut spec = ModelSpec { preset: name.to_string(), ..ModelSpec::default() };
+    if body.iter().all(|b| b.is_ascii_whitespace()) {
+        return Ok(spec);
+    }
+    let text = std::str::from_utf8(body).map_err(|_| err!("body is not utf-8"))?;
+    let limits = JsonLimits { max_bytes: body.len().max(1), max_depth: WIRE_JSON_DEPTH };
+    let j = Json::parse_with_limits(text, limits).map_err(|e| err!("bad json: {e}"))?;
+    let fields = j.as_obj().ok_or_else(|| err!("model spec must be a json object"))?;
+    for key in fields.keys() {
+        if !MODEL_SPEC_KEYS.contains(&key.as_str()) {
+            return Err(err!("unknown model-spec key {key:?}"));
+        }
+    }
+    let get_usize = |key: &str| -> Result<Option<usize>> {
+        match j.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .as_usize()
+                .map(Some)
+                .ok_or_else(|| err!("{key:?} must be a non-negative integer")),
+        }
+    };
+    let get_str = |key: &str| -> Result<Option<&str>> {
+        match j.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .as_str()
+                .map(Some)
+                .ok_or_else(|| err!("{key:?} must be a string")),
+        }
+    };
+    if let Some(preset) = get_str("preset")? {
+        if preset.is_empty() {
+            return Err(err!("\"preset\" must not be empty"));
+        }
+        spec.preset = preset.to_string();
+    }
+    if let Some(alpha) = get_usize("alpha")? {
+        spec.alpha = alpha;
+    }
+    if let Some(seed) = get_usize("seed")? {
+        spec.seed = seed as u64;
+    }
+    if let Some(workers) = get_usize("workers")? {
+        spec.workers = workers;
+    }
+    if let Some(max_batch) = get_usize("max_batch")? {
+        spec.batcher.max_batch = max_batch.max(1);
+    }
+    if let Some(wait_ms) = get_usize("wait_ms")? {
+        spec.batcher.max_wait = Duration::from_millis(wait_ms as u64);
+    }
+    if let Some(max_inflight) = get_usize("max_inflight")? {
+        spec.max_inflight = max_inflight;
+    }
+    let mut engine = EngineOptions::builder();
+    if let Some(scheduler) = get_str("scheduler")? {
+        engine = engine.scheduler(SchedulePolicy::parse(scheduler)?);
+    }
+    if let Some(dtype) = get_str("dtype")? {
+        let parsed = if dtype.is_empty() { None } else { Some(Dtype::parse(dtype)?) };
+        engine = engine.dtype(parsed);
+    }
+    if let Some(plane) = get_str("plane")? {
+        engine = engine.plane(Plane::parse(plane)?);
+    }
+    if let Some(arena) = j.get("arena_reuse") {
+        let arena = arena
+            .as_bool()
+            .ok_or_else(|| err!("\"arena_reuse\" must be a boolean"))?;
+        engine = engine.arena_reuse(arena);
+    }
+    spec.engine = engine.build();
+    Ok(spec)
 }
 
 /// Render a tensor as an explicit `/infer` body (tests, clients).
@@ -270,6 +413,61 @@ pub fn pool_metrics_to_json(pm: &PoolMetrics, dtype: Dtype, plane: Plane) -> Jso
         ("plane", s(plane.label())),
         ("merged", metrics_to_json(&pm.merged)),
         ("per_worker", arr(pm.per_worker.iter().map(metrics_to_json).collect())),
+    ])
+}
+
+fn admission_to_json(a: &AdmissionMetrics) -> Json {
+    obj(vec![
+        ("inflight", num(a.inflight as f64)),
+        ("max_inflight", num(a.max_inflight as f64)),
+        ("admitted", num(a.admitted as f64)),
+        ("rejected", num(a.rejected as f64)),
+    ])
+}
+
+/// Render the `GET /v1/models/<name>/metrics` reply: the pool snapshot
+/// plus the model's identity, swap generation, and admission counters.
+pub fn model_metrics_to_json(
+    name: &str,
+    admission: &AdmissionMetrics,
+    pm: &PoolMetrics,
+    dtype: Dtype,
+    plane: Plane,
+) -> Json {
+    obj(vec![
+        ("model", s(name)),
+        ("generation", num(admission.generation as f64)),
+        ("admission", admission_to_json(admission)),
+        ("dtype", s(dtype.label())),
+        ("plane", s(plane.label())),
+        ("merged", metrics_to_json(&pm.merged)),
+        ("per_worker", arr(pm.per_worker.iter().map(metrics_to_json).collect())),
+    ])
+}
+
+fn model_status_to_json(m: &ModelStatus) -> Json {
+    obj(vec![
+        ("name", s(&m.name)),
+        ("status", s(m.status)),
+        ("generation", num(m.generation as f64)),
+        ("preset", m.preset.as_deref().map(s).unwrap_or(Json::Null)),
+        ("alpha", m.alpha.map(|a| num(a as f64)).unwrap_or(Json::Null)),
+        ("workers", m.workers.map(|w| num(w as f64)).unwrap_or(Json::Null)),
+        (
+            "max_inflight",
+            m.max_inflight.map(|q| num(q as f64)).unwrap_or(Json::Null),
+        ),
+        ("error", m.error.as_deref().map(s).unwrap_or(Json::Null)),
+    ])
+}
+
+/// Render the `GET /v1/models` reply: every registered model with its
+/// lifecycle status and swap generation, plus the name the legacy aliases
+/// resolve to.
+pub fn models_to_json(models: &[ModelStatus], default_model: &str) -> Json {
+    obj(vec![
+        ("default_model", s(default_model)),
+        ("models", arr(models.iter().map(model_status_to_json).collect())),
     ])
 }
 
@@ -433,6 +631,119 @@ mod tests {
             vec!["{\"seed\":1}"; MAX_BATCH_REQUESTS + 1].join(",")
         );
         assert!(parse_infer_body(huge.as_bytes(), shape).is_err());
+    }
+
+    #[test]
+    fn model_spec_parses_admin_bodies() {
+        // empty body: serve the preset named like the model, all defaults
+        let spec = parse_model_spec(b"", "resnet18").unwrap();
+        assert_eq!(spec.preset, "resnet18");
+        assert_eq!(spec.alpha, 0);
+        assert_eq!(spec.engine.dtype, None);
+
+        let body = br#"{"preset":"vgg16-cifar","alpha":4,"workers":2,"max_batch":8,
+            "wait_ms":2,"scheduler":"lowest-index","dtype":"f64","plane":"half",
+            "max_inflight":16,"seed":11,"arena_reuse":false}"#;
+        let spec = parse_model_spec(body, "demo").unwrap();
+        assert_eq!(spec.preset, "vgg16-cifar");
+        assert_eq!(spec.alpha, 4);
+        assert_eq!(spec.workers, 2);
+        assert_eq!(spec.seed, 11);
+        assert_eq!(spec.batcher.max_batch, 8);
+        assert_eq!(spec.batcher.max_wait, Duration::from_millis(2));
+        assert_eq!(spec.max_inflight, 16);
+        assert_eq!(spec.engine.scheduler.label(), "lowest-index");
+        assert_eq!(spec.engine.dtype, Some(Dtype::F64));
+        assert_eq!(spec.engine.plane, Plane::Half);
+        assert!(!spec.engine.arena_reuse);
+
+        // unknown keys are rejected (typo'd admin knobs must not be ignored)
+        assert!(parse_model_spec(br#"{"workrs":2}"#, "m").is_err());
+        // wrong types / bad labels / non-object bodies
+        assert!(parse_model_spec(br#"{"alpha":"four"}"#, "m").is_err());
+        assert!(parse_model_spec(br#"{"dtype":"f16"}"#, "m").is_err());
+        assert!(parse_model_spec(br#"{"scheduler":"magic"}"#, "m").is_err());
+        assert!(parse_model_spec(br#"[1,2]"#, "m").is_err());
+        assert!(parse_model_spec(br#"{"preset":""}"#, "m").is_err());
+        // empty dtype string defers to the manifest, like --dtype unset
+        let spec = parse_model_spec(br#"{"dtype":""}"#, "m").unwrap();
+        assert_eq!(spec.engine.dtype, None);
+    }
+
+    #[test]
+    fn error_schema_is_structured() {
+        let body = error_body("not_found", "no such model", Some("resnet18"));
+        let j = Json::parse(&body).unwrap();
+        let e = j.get("error").unwrap();
+        assert_eq!(e.get("code").unwrap().as_str(), Some("not_found"));
+        assert_eq!(e.get("message").unwrap().as_str(), Some("no such model"));
+        assert_eq!(e.get("model").unwrap().as_str(), Some("resnet18"));
+        // pre-routing errors carry a null model, not a missing key
+        let j = Json::parse(&error_body("bad_request", "bad json", None)).unwrap();
+        assert_eq!(j.get("error").unwrap().get("model"), Some(&Json::Null));
+        assert_eq!(code_for_status(429), "overloaded");
+        assert_eq!(code_for_status(404), "not_found");
+        assert_eq!(code_for_status(500), "internal");
+    }
+
+    #[test]
+    fn models_listing_serializes_status_rows() {
+        let rows = vec![
+            ModelStatus {
+                name: "vgg16-cifar".into(),
+                status: "serving",
+                generation: 2,
+                preset: Some("vgg16-cifar".into()),
+                alpha: Some(4),
+                workers: Some(2),
+                max_inflight: Some(64),
+                error: None,
+            },
+            ModelStatus {
+                name: "resnet18".into(),
+                status: "loading",
+                generation: 0,
+                preset: None,
+                alpha: None,
+                workers: None,
+                max_inflight: None,
+                error: None,
+            },
+        ];
+        let j = models_to_json(&rows, "vgg16-cifar");
+        assert_eq!(j.get("default_model").unwrap().as_str(), Some("vgg16-cifar"));
+        let models = j.get("models").unwrap().as_arr().unwrap();
+        assert_eq!(models.len(), 2);
+        assert_eq!(models[0].get("status").unwrap().as_str(), Some("serving"));
+        assert_eq!(models[0].get("generation").unwrap().as_usize(), Some(2));
+        assert_eq!(models[0].get("alpha").unwrap().as_usize(), Some(4));
+        assert_eq!(models[1].get("status").unwrap().as_str(), Some("loading"));
+        assert_eq!(models[1].get("preset"), Some(&Json::Null));
+        assert!(Json::parse(&j.to_string()).is_ok());
+    }
+
+    #[test]
+    fn model_metrics_carry_admission_and_generation() {
+        let mut m = Metrics::new();
+        m.record_request(Duration::from_micros(100));
+        let pm = PoolMetrics::from_workers(vec![m]);
+        let adm = AdmissionMetrics {
+            inflight: 1,
+            max_inflight: 32,
+            admitted: 10,
+            rejected: 3,
+            generation: 5,
+        };
+        let j = model_metrics_to_json("resnet18", &adm, &pm, Dtype::F32, Plane::Half);
+        assert_eq!(j.get("model").unwrap().as_str(), Some("resnet18"));
+        assert_eq!(j.get("generation").unwrap().as_usize(), Some(5));
+        let a = j.get("admission").unwrap();
+        assert_eq!(a.get("inflight").unwrap().as_usize(), Some(1));
+        assert_eq!(a.get("max_inflight").unwrap().as_usize(), Some(32));
+        assert_eq!(a.get("admitted").unwrap().as_usize(), Some(10));
+        assert_eq!(a.get("rejected").unwrap().as_usize(), Some(3));
+        assert_eq!(j.get("merged").unwrap().get("count").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("dtype").unwrap().as_str(), Some("f32"));
     }
 
     #[test]

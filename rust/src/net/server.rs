@@ -1,124 +1,178 @@
-//! HTTP front-end over the engine pool: socket → admission → batcher →
-//! pool → response.
+//! Event-driven HTTP front-end over the model registry: a fixed pool of
+//! connection workers multiplexing every socket with `poll(2)`, routing
+//! requests into per-model engine pools.
 //!
-//! [`HttpFrontend::start`] takes a running [`crate::coordinator::Server`]
-//! and binds a `std::net` listener in front of it. One acceptor thread hands
-//! each connection to its own handler thread (bounded by
-//! [`NetConfig::max_conns`] — beyond the cap a connection gets an
-//! immediate 503 and is closed, never queued invisibly). Handler threads
-//! hold only a cloned [`Client`], so the engine-pool thread-confinement
-//! rule is untouched: tensors cross the channel, engines never do.
+//! ```text
+//! socket ── acceptor (conns ≤ max_conns, else 503) ── least-loaded worker
+//!    │
+//!    ▼  (fixed pool of event_workers threads; each owns its conns)
+//! poller — nonblocking reads into a per-conn buffer; `try_parse_request`
+//!    │     re-attempted after every wakeup (slow-loris still hits the
+//!    │     deadline: caps are enforced on incomplete prefixes)
+//!    ▼
+//! conn state machine — idle ⇆ reading → executing → flushing, one struct
+//!    │     per connection instead of one thread: tens of thousands of
+//!    │     mostly-idle keep-alive connections cost ~zero threads
+//!    ▼
+//! route — /v1/models/<name>/… picks the model; legacy /infer, /metrics,
+//!    │     /healthz alias onto the registry's default model
+//!    ▼
+//! admission — per-model in-flight quota (`ModelPool::try_admit`), 429
+//!    │     past the budget; an RAII guard releases slots even if the
+//!    │     connection dies mid-request
+//!    ▼
+//! registry → pool — `Client::infer_async` receivers are polled from the
+//!          event loop (never a blocking `recv`), so one worker drives
+//!          many in-flight inferences concurrently
+//! ```
 //!
-//! Admission control is a bounded in-flight counter in front of the
-//! dispatcher: at most [`NetConfig::max_inflight`] `/infer` requests may
-//! be queued-or-executing in the pool at once. The bound makes overload a
-//! *fast* failure — a 429 the moment the budget is exceeded — instead of
-//! an unbounded queue whose tail latency quietly explodes, which is the
-//! contract the closed-loop load generator tests: concurrency above the
-//! bound yields 429s, never a hang.
+//! Admission control is per model: at most `ModelPool::max_inflight`
+//! requests may be queued-or-executing in that model's pool at once. The
+//! bound makes overload a *fast* failure — a 429 the moment the budget is
+//! exceeded — instead of an unbounded queue whose tail latency quietly
+//! explodes, which is the contract the closed-loop load generator tests.
 //!
 //! Shutdown is graceful and ordered: [`HttpFrontend::shutdown`] (1) flips
-//! the drain flag so `/healthz` answers 503 and new `/infer`s are refused,
-//! (2) wakes and stops the acceptor, (3) waits (bounded by
-//! [`NetConfig::drain_grace`]) for admitted requests to finish, then
-//! (4) shuts the coordinator pool down, which flushes any open batch
-//! before the workers exit.
+//! the drain flag so `/healthz` answers 503 and new inferences are
+//! refused, (2) wakes and stops the acceptor, (3) waits (bounded by
+//! [`NetConfig::drain_grace`]) for admitted requests to finish, (4) stops
+//! the connection workers, then (5) shuts every registry pool down, which
+//! flushes any open batch before the engine workers exit.
 
+use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Arc;
-use std::time::Duration;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
 
-use super::http::{self, HttpConn, HttpLimits, HttpRequest};
+use super::http::{self, HttpLimits, HttpRequest};
+use super::poll::{self, PollSpec, WakePipe, Waker};
 use super::proto;
-use crate::coordinator::{Client, Server};
-use crate::runtime::{Dtype, Plane};
+use crate::coordinator::{
+    AdminError, AdmitGuard, ModelFetch, ModelRegistry, Response,
+};
 use crate::util::error::{Context, Result};
+use crate::util::json::{num, obj, s};
 
-/// Front-end configuration (the serving knobs the wire adds on top of
-/// [`crate::coordinator::ServerConfig`]).
+/// Front-end configuration (the serving knobs the wire adds on top of the
+/// registry's per-model specs).
 #[derive(Debug, Clone)]
 pub struct NetConfig {
     /// Bind address, e.g. `127.0.0.1:7878` (`:0` picks a free port —
     /// [`HttpFrontend::local_addr`] reports the real one).
     pub addr: String,
-    /// Concurrent connections; excess connections get 503 + close.
+    /// Concurrent connections; excess connections get 503 + close. With
+    /// event-driven workers this is an fd-budget guard, not a thread
+    /// count — idle connections are nearly free.
     pub max_conns: usize,
-    /// Bounded in-flight `/infer` budget; excess requests get 429.
-    pub max_inflight: usize,
-    /// The served variant's input `[C, H, W]` (for `{"seed":n}` bodies).
-    pub input_shape: [usize; 3],
+    /// Fixed number of connection-worker threads multiplexing every
+    /// connection (0 acts as 1). This does not bound concurrent requests —
+    /// one worker drives many in-flight inferences.
+    pub event_workers: usize,
     /// HTTP parse caps + per-request read deadline.
     pub limits: HttpLimits,
+    /// How long an idle keep-alive connection (no partial request, nothing
+    /// to write) is held open before a quiet close.
+    pub idle_timeout: Duration,
     /// How long shutdown waits for admitted requests to drain.
     pub drain_grace: Duration,
-    /// Resolved accumulation dtype the pool serves at (tags `/metrics`).
-    pub dtype: Dtype,
-    /// Spectral storage plane the pool serves on (tags `/metrics`).
-    pub plane: Plane,
 }
 
 impl Default for NetConfig {
     fn default() -> Self {
         NetConfig {
             addr: "127.0.0.1:0".into(),
-            max_conns: 256,
-            max_inflight: 64,
-            input_shape: [1, 16, 16],
+            max_conns: 16384,
+            event_workers: 4,
             limits: HttpLimits::default(),
+            idle_timeout: Duration::from_secs(60),
             drain_grace: Duration::from_secs(10),
-            dtype: Dtype::F32,
-            plane: Plane::Full,
         }
     }
 }
 
-/// Shared request-path state (acceptor + every connection thread).
+/// Shared front-end state (acceptor + every connection worker).
 struct Gate {
-    /// Drain mode: `/healthz` answers 503 and new `/infer`s are refused,
+    /// Drain mode: `/healthz` answers 503 and new inferences are refused,
     /// but connections are still accepted and answered (load-balancer
     /// probes must see the 503, not a dead port).
     draining: AtomicBool,
-    /// Shutdown: the acceptor exits. Implies `draining`.
+    /// Shutdown: acceptor and workers exit. Implies `draining`.
     stopping: AtomicBool,
-    inflight: AtomicUsize,
+    /// Open connections across all workers.
     conns: AtomicUsize,
 }
 
-/// A running HTTP front-end. Owns the coordinator [`Server`] so the
-/// shutdown order (stop accepting → drain → flush batches) has one owner.
+/// A running HTTP front-end over a shared [`ModelRegistry`].
 pub struct HttpFrontend {
     addr: SocketAddr,
     gate: Arc<Gate>,
+    registry: Arc<ModelRegistry>,
     acceptor: Option<std::thread::JoinHandle<()>>,
-    server: Option<Server>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    wakers: Vec<Waker>,
     drain_grace: Duration,
 }
 
+/// Acceptor-side handle to one connection worker.
+struct WorkerHandle {
+    tx: mpsc::Sender<NewConn>,
+    waker: Waker,
+    load: Arc<AtomicUsize>,
+}
+
+/// A freshly accepted connection in flight to its worker.
+struct NewConn {
+    stream: TcpStream,
+    slot: ConnSlot,
+}
+
 impl HttpFrontend {
-    /// Bind and start serving. Fails fast on an unbindable address.
-    pub fn start(server: Server, cfg: NetConfig) -> Result<HttpFrontend> {
+    /// Bind and start serving every model in `registry`. Fails fast on an
+    /// unbindable address.
+    pub fn start(registry: Arc<ModelRegistry>, cfg: NetConfig) -> Result<HttpFrontend> {
         let listener =
             TcpListener::bind(&cfg.addr).with_context(|| format!("binding {}", cfg.addr))?;
         let addr = listener.local_addr().context("resolving bound address")?;
         let gate = Arc::new(Gate {
             draining: AtomicBool::new(false),
             stopping: AtomicBool::new(false),
-            inflight: AtomicUsize::new(0),
             conns: AtomicUsize::new(0),
         });
-        let client = server.client();
+        let n = cfg.event_workers.max(1);
+        let mut handles = Vec::with_capacity(n);
+        let mut workers = Vec::with_capacity(n);
+        let mut wakers = Vec::with_capacity(n);
+        for wi in 0..n {
+            let (tx, rx) = mpsc::channel::<NewConn>();
+            let wake = WakePipe::new().context("creating worker wake pipe")?;
+            let acceptor_waker = wake.waker().context("cloning worker waker")?;
+            let frontend_waker = wake.waker().context("cloning worker waker")?;
+            let load = Arc::new(AtomicUsize::new(0));
+            let wgate = gate.clone();
+            let wregistry = registry.clone();
+            let wcfg = cfg.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("sf-http-ev-{wi}"))
+                .spawn(move || worker_loop(rx, wake, wregistry, wgate, wcfg))
+                .expect("spawn http event worker");
+            handles.push(WorkerHandle { tx, waker: acceptor_waker, load });
+            wakers.push(frontend_waker);
+            workers.push(handle);
+        }
         let agate = gate.clone();
         let acfg = cfg.clone();
         let acceptor = std::thread::Builder::new()
             .name("sf-http-accept".into())
-            .spawn(move || accept_loop(listener, client, agate, acfg))
+            .spawn(move || accept_loop(listener, handles, agate, acfg))
             .expect("spawn http acceptor");
         Ok(HttpFrontend {
             addr,
             gate,
+            registry,
             acceptor: Some(acceptor),
-            server: Some(server),
+            workers,
+            wakers,
             drain_grace: cfg.drain_grace,
         })
     }
@@ -129,19 +183,25 @@ impl HttpFrontend {
     }
 
     /// Enter drain mode without tearing anything down: `/healthz` flips to
-    /// 503 and new `/infer`s are refused while in-flight work completes.
+    /// 503 and new inferences are refused while in-flight work completes.
     /// (Load balancers watch exactly this to take a replica out of
     /// rotation before it stops.)
     pub fn begin_drain(&self) {
         self.gate.draining.store(true, Ordering::SeqCst);
     }
 
-    /// `/infer` requests currently admitted (queued or executing).
+    /// Inference requests currently admitted across every model pool.
     pub fn inflight(&self) -> usize {
-        self.gate.inflight.load(Ordering::SeqCst)
+        self.registry.total_inflight()
     }
 
-    /// Graceful shutdown: drain, stop accepting, flush the pool's batches.
+    /// Open connections across the worker pool.
+    pub fn connections(&self) -> usize {
+        self.gate.conns.load(Ordering::SeqCst)
+    }
+
+    /// Graceful shutdown: drain, stop accepting, stop the workers, retire
+    /// every registry pool.
     pub fn shutdown(mut self) -> Result<()> {
         self.finish()
     }
@@ -155,18 +215,19 @@ impl HttpFrontend {
         if let Some(a) = self.acceptor.take() {
             let _ = a.join();
         }
-        let deadline = std::time::Instant::now() + self.drain_grace;
-        while self.gate.inflight.load(Ordering::SeqCst) > 0
-            && std::time::Instant::now() < deadline
-        {
+        let deadline = Instant::now() + self.drain_grace;
+        while self.registry.total_inflight() > 0 && Instant::now() < deadline {
             std::thread::sleep(Duration::from_millis(5));
         }
-        match self.server.take() {
-            // Server::shutdown flushes the open batch and drains every
-            // worker before joining — admitted requests get their replies
-            Some(s) => s.shutdown(),
-            None => Ok(()),
+        for w in &self.wakers {
+            w.wake();
         }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        // retire every pool: flushes open batches before engine workers exit
+        self.registry.shutdown();
+        Ok(())
     }
 }
 
@@ -176,7 +237,26 @@ impl Drop for HttpFrontend {
     }
 }
 
-fn accept_loop(listener: TcpListener, client: Client, gate: Arc<Gate>, cfg: NetConfig) {
+/// Releases one `Gate::conns` slot on drop (including panic unwinds), plus
+/// the owning worker's load count once attached.
+struct ConnSlot {
+    gate: Arc<Gate>,
+    load: Arc<AtomicUsize>,
+}
+
+impl Drop for ConnSlot {
+    fn drop(&mut self) {
+        self.gate.conns.fetch_sub(1, Ordering::SeqCst);
+        self.load.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    workers: Vec<WorkerHandle>,
+    gate: Arc<Gate>,
+    cfg: NetConfig,
+) {
     for stream in listener.incoming() {
         if gate.stopping.load(Ordering::SeqCst) {
             break;
@@ -188,169 +268,771 @@ fn accept_loop(listener: TcpListener, client: Client, gate: Arc<Gate>, cfg: NetC
         // connection bound: refuse loudly instead of queueing invisibly
         if gate.conns.fetch_add(1, Ordering::SeqCst) >= cfg.max_conns {
             gate.conns.fetch_sub(1, Ordering::SeqCst);
-            let body = proto::error_body("connection capacity reached");
-            let _ = http::write_response(&mut stream, 503, "application/json", body.as_bytes(), false);
+            let body =
+                proto::error_body("overloaded", "connection capacity reached", None);
+            let _ = http::write_response(
+                &mut stream,
+                503,
+                "application/json",
+                body.as_bytes(),
+                false,
+            );
             continue;
         }
-        let conn_client = client.clone();
-        let conn_gate = gate.clone();
-        let conn_cfg = cfg.clone();
-        let spawned = std::thread::Builder::new().name("sf-http-conn".into()).spawn(move || {
-            // drop guard: the slot is released even if the handler panics,
-            // so a crashing connection can never leak capacity
-            let _slot = ConnSlot(conn_gate);
-            handle_conn(stream, &conn_client, &_slot.0, &conn_cfg);
-        });
-        if spawned.is_err() {
+        if stream.set_nonblocking(true).is_err() {
             gate.conns.fetch_sub(1, Ordering::SeqCst);
+            continue;
+        }
+        // least-loaded worker pick: load counts open connections
+        let worker = workers
+            .iter()
+            .min_by_key(|w| w.load.load(Ordering::SeqCst))
+            .expect("front-end has at least one worker");
+        worker.load.fetch_add(1, Ordering::SeqCst);
+        let slot = ConnSlot { gate: gate.clone(), load: worker.load.clone() };
+        // a send can only fail during shutdown (worker gone) — the slot's
+        // Drop rebalances the counters either way
+        if worker.tx.send(NewConn { stream, slot }).is_ok() {
+            worker.waker.wake();
         }
     }
 }
 
-/// Releases one `Gate::conns` slot on drop (including panic unwinds).
-struct ConnSlot(Arc<Gate>);
-
-impl Drop for ConnSlot {
-    fn drop(&mut self) {
-        self.0.conns.fetch_sub(1, Ordering::SeqCst);
-    }
+/// An inference executing in a model pool, driven from the event loop:
+/// one receiver per image, polled with `try_recv` so the worker thread
+/// never blocks on the engine.
+struct Pending {
+    rxs: Vec<mpsc::Receiver<Result<Response>>>,
+    resps: Vec<Response>,
+    /// Single-image request (`/infer` reply shape) vs `{"batch":[…]}`.
+    single: bool,
+    /// Keep-alive decision made when the request was parsed.
+    keep: bool,
+    model: String,
+    /// Releases the per-model admission slots on drop.
+    _guard: AdmitGuard,
 }
 
-/// One connection: keep-alive request loop until close/error/drain.
-fn handle_conn(stream: TcpStream, client: &Client, gate: &Gate, cfg: &NetConfig) {
-    let mut writer = match stream.try_clone() {
-        Ok(w) => w,
-        Err(_) => return,
-    };
-    let mut conn = HttpConn::new(stream);
-    for served in 0..cfg.limits.max_requests_per_conn {
-        match conn.read_request(&cfg.limits) {
-            Ok(None) => break, // clean close / idle keep-alive expiry
-            Ok(Some(req)) => {
-                // the final permitted request must advertise the close —
-                // otherwise a keep-alive client writes request N+1 into a
-                // socket we are about to shut and sees a spurious error
-                let last = served + 1 == cfg.limits.max_requests_per_conn;
-                let keep = req.keep_alive() && !last && !gate.draining.load(Ordering::SeqCst);
-                let (status, body) = route(&req, client, gate, cfg);
-                if http::write_response(&mut writer, status, "application/json", body.as_bytes(), keep)
-                    .is_err()
-                {
-                    break;
+/// What handling one parsed request produced.
+enum Step {
+    /// Answer immediately.
+    Respond(u16, String),
+    /// An admitted inference: poll it to completion from the event loop.
+    Execute(Box<Pending>),
+}
+
+/// One connection's state machine. Lives in a worker's table, never a
+/// dedicated thread.
+struct Conn {
+    stream: TcpStream,
+    /// Received-but-unparsed bytes (the incremental parser's input).
+    buf: Vec<u8>,
+    /// Rendered-but-unsent response bytes.
+    out: Vec<u8>,
+    out_pos: usize,
+    pending: Option<Box<Pending>>,
+    served: usize,
+    /// When the current partial request started arriving (drives the 408
+    /// deadline; `None` while idle between requests).
+    read_start: Option<Instant>,
+    last_activity: Instant,
+    /// Peer sent EOF; no further requests can arrive.
+    peer_eof: bool,
+    /// Finish flushing `out`, then close.
+    close_after_flush: bool,
+    /// Hard close deadline once `close_after_flush` is set (a peer that
+    /// never reads its error response cannot pin the connection).
+    close_by: Option<Instant>,
+    closed: bool,
+    _slot: ConnSlot,
+}
+
+impl Conn {
+    fn new(stream: TcpStream, slot: ConnSlot) -> Conn {
+        Conn {
+            stream,
+            buf: Vec::new(),
+            out: Vec::new(),
+            out_pos: 0,
+            pending: None,
+            served: 0,
+            read_start: None,
+            last_activity: Instant::now(),
+            peer_eof: false,
+            close_after_flush: false,
+            close_by: None,
+            closed: false,
+            _slot: slot,
+        }
+    }
+
+    fn wants_read(&self) -> bool {
+        !self.closed && !self.close_after_flush && self.pending.is_none() && !self.peer_eof
+    }
+
+    fn wants_write(&self) -> bool {
+        !self.closed && self.out_pos < self.out.len()
+    }
+
+    /// Append a rendered response to the output buffer.
+    fn enqueue(&mut self, status: u16, body: &str, keep: bool, limits: &HttpLimits) {
+        let _ = http::write_response(
+            &mut self.out,
+            status,
+            "application/json",
+            body.as_bytes(),
+            keep,
+        );
+        if !keep {
+            self.begin_close(limits);
+        }
+    }
+
+    fn begin_close(&mut self, limits: &HttpLimits) {
+        self.close_after_flush = true;
+        if self.close_by.is_none() {
+            self.close_by = Some(Instant::now() + limits.read_timeout);
+        }
+    }
+
+    /// Nonblocking read until `WouldBlock`/EOF.
+    fn on_readable(&mut self) {
+        let mut tmp = [0u8; 8192];
+        loop {
+            match (&self.stream).read(&mut tmp) {
+                Ok(0) => {
+                    self.peer_eof = true;
+                    return;
                 }
-                if !keep {
-                    break;
+                Ok(n) => self.buf.extend_from_slice(&tmp[..n]),
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(_) => {
+                    self.closed = true;
+                    return;
                 }
             }
-            Err(e) => {
-                // parse/deadline errors answer once (when a status exists
-                // and the peer is still there), then the connection closes —
-                // a malformed or slow peer never wedges this thread
-                if e.status != 0 {
-                    let body = proto::error_body(&e.message);
-                    let _ = http::write_response(
-                        &mut writer,
-                        e.status,
-                        "application/json",
-                        body.as_bytes(),
-                        false,
+        }
+    }
+
+    /// Nonblocking write of whatever is queued.
+    fn flush(&mut self) {
+        while self.out_pos < self.out.len() {
+            match (&self.stream).write(&self.out[self.out_pos..]) {
+                Ok(0) => {
+                    self.closed = true;
+                    return;
+                }
+                Ok(n) => self.out_pos += n,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(_) => {
+                    self.closed = true;
+                    return;
+                }
+            }
+        }
+        self.out.clear();
+        self.out_pos = 0;
+        self.last_activity = Instant::now();
+        if self.close_after_flush {
+            self.closed = true;
+        }
+    }
+
+    /// Parse and handle as many complete requests as the buffer holds
+    /// (stopping at one in-flight inference at a time).
+    fn try_advance(&mut self, registry: &Arc<ModelRegistry>, gate: &Gate, cfg: &NetConfig) {
+        while !self.closed && !self.close_after_flush && self.pending.is_none() {
+            match http::try_parse_request(&self.buf, &cfg.limits) {
+                Ok(Some((req, consumed))) => {
+                    self.buf.drain(..consumed);
+                    self.read_start = None;
+                    self.last_activity = Instant::now();
+                    self.served += 1;
+                    // the final permitted request must advertise the close —
+                    // otherwise a keep-alive client writes request N+1 into
+                    // a socket we are about to shut and sees a spurious error
+                    let last = self.served >= cfg.limits.max_requests_per_conn;
+                    let keep = req.keep_alive()
+                        && !last
+                        && !gate.draining.load(Ordering::SeqCst);
+                    match dispatch(&req, keep, registry, gate) {
+                        Step::Respond(status, body) => {
+                            self.enqueue(status, &body, keep, &cfg.limits)
+                        }
+                        Step::Execute(pending) => self.pending = Some(pending),
+                    }
+                }
+                Ok(None) => {
+                    if !self.buf.is_empty() && self.read_start.is_none() {
+                        self.read_start = Some(Instant::now());
+                    }
+                    if self.peer_eof {
+                        if self.buf.is_empty() {
+                            // clean keep-alive close at a request boundary
+                            self.begin_close(&cfg.limits);
+                        } else {
+                            self.buf.clear();
+                            let body = proto::error_body(
+                                "bad_request",
+                                "truncated request",
+                                None,
+                            );
+                            self.enqueue(400, &body, false, &cfg.limits);
+                        }
+                    }
+                    return;
+                }
+                Err(e) => {
+                    // parse errors answer once, then the connection closes —
+                    // a malformed peer never wedges a worker
+                    self.buf.clear();
+                    let body = proto::error_body(
+                        proto::code_for_status(e.status),
+                        &e.message,
+                        None,
                     );
+                    self.enqueue(e.status, &body, false, &cfg.limits);
+                    return;
                 }
-                break;
+            }
+        }
+    }
+
+    /// Drive an in-flight inference forward without blocking. Completes
+    /// the request (success or error) once every receiver has answered.
+    fn poll_pending(&mut self, limits: &HttpLimits) {
+        let Some(pending) = &mut self.pending else { return };
+        let done = loop {
+            if pending.resps.len() == pending.rxs.len() {
+                let body = if pending.single {
+                    proto::response_to_json(&pending.resps[0]).to_string()
+                } else {
+                    proto::batch_response_to_json(&pending.resps).to_string()
+                };
+                break Some((200u16, body, pending.keep));
+            }
+            match pending.rxs[pending.resps.len()].try_recv() {
+                Ok(Ok(resp)) => pending.resps.push(resp),
+                Ok(Err(e)) => {
+                    // any failed image fails the whole request — the wire
+                    // reply is all results or one error, never a mix
+                    let (status, body) =
+                        infer_error(&e.to_string(), Some(&pending.model));
+                    break Some((status, body, pending.keep));
+                }
+                Err(mpsc::TryRecvError::Empty) => break None,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    let (status, body) =
+                        infer_error("server dropped request", Some(&pending.model));
+                    break Some((status, body, pending.keep));
+                }
+            }
+        };
+        if let Some((status, body, keep)) = done {
+            self.pending = None; // drops the admission guard
+            self.enqueue(status, &body, keep, limits);
+        }
+    }
+
+    /// Enforce the read deadline (slow requests → 408) and the idle
+    /// timeout (quiet close), plus the post-error close deadline.
+    fn sweep(&mut self, now: Instant, cfg: &NetConfig) {
+        if let Some(by) = self.close_by {
+            if now >= by {
+                self.closed = true;
+                return;
+            }
+        }
+        if self.pending.is_some() || self.close_after_flush {
+            return;
+        }
+        if let Some(start) = self.read_start {
+            if now.saturating_duration_since(start) >= cfg.limits.read_timeout {
+                self.buf.clear();
+                self.read_start = None;
+                let body =
+                    proto::error_body("timeout", "read deadline expired", None);
+                self.enqueue(408, &body, false, &cfg.limits);
+                return;
+            }
+        }
+        if self.buf.is_empty()
+            && self.out.is_empty()
+            && now.saturating_duration_since(self.last_activity) >= cfg.idle_timeout
+        {
+            self.closed = true;
+        }
+    }
+
+    /// Next instant at which this connection needs attention regardless of
+    /// socket readiness (deadline expiry).
+    fn next_deadline(&self, cfg: &NetConfig) -> Option<Instant> {
+        if let Some(by) = self.close_by {
+            return Some(by);
+        }
+        if self.pending.is_some() {
+            return None;
+        }
+        if let Some(start) = self.read_start {
+            return Some(start + cfg.limits.read_timeout);
+        }
+        if self.buf.is_empty() && self.out.is_empty() {
+            return Some(self.last_activity + cfg.idle_timeout);
+        }
+        None
+    }
+}
+
+/// One connection worker: multiplex every assigned connection over
+/// `poll(2)`, never blocking on any single peer or inference.
+fn worker_loop(
+    rx: mpsc::Receiver<NewConn>,
+    wake: WakePipe,
+    registry: Arc<ModelRegistry>,
+    gate: Arc<Gate>,
+    cfg: NetConfig,
+) {
+    let mut conns: Vec<Conn> = Vec::new();
+    loop {
+        // intake newly accepted connections
+        while let Ok(new) = rx.try_recv() {
+            conns.push(Conn::new(new.stream, new.slot));
+        }
+        if gate.stopping.load(Ordering::SeqCst) {
+            // bounded farewell: one flush attempt each, then close all
+            for c in &mut conns {
+                c.flush();
+            }
+            conns.clear();
+            return;
+        }
+        let now = Instant::now();
+        let mut any_pending = false;
+        for c in &mut conns {
+            c.poll_pending(&cfg.limits);
+            c.try_advance(&registry, &gate, &cfg);
+            c.flush();
+            c.sweep(now, &cfg);
+            any_pending |= c.pending.is_some();
+        }
+        conns.retain(|c| !c.closed);
+        // poll timeout: tight while inferences are in flight (their
+        // receivers are polled, not blocked on); otherwise sleep until the
+        // nearest deadline, capped so stop flags are observed promptly
+        let timeout = if any_pending {
+            Duration::from_millis(1)
+        } else {
+            let nearest = conns
+                .iter()
+                .filter_map(|c| c.next_deadline(&cfg))
+                .min()
+                .map(|d| d.saturating_duration_since(now))
+                .unwrap_or(Duration::from_millis(500));
+            nearest.clamp(Duration::from_millis(1), Duration::from_millis(500))
+        };
+        let mut specs = Vec::with_capacity(conns.len() + 1);
+        specs.push(PollSpec { fd: wake.fd(), read: true, write: false });
+        for c in &conns {
+            specs.push(PollSpec {
+                fd: poll::fd_of(&c.stream),
+                read: c.wants_read(),
+                write: c.wants_write(),
+            });
+        }
+        let events = match poll::wait(&specs, timeout) {
+            Ok(ev) => ev,
+            Err(_) => continue,
+        };
+        if events[0].readable {
+            wake.drain();
+        }
+        for (c, ev) in conns.iter_mut().zip(events.iter().skip(1)) {
+            if ev.error {
+                c.closed = true;
+                continue;
+            }
+            if ev.readable || ev.hangup {
+                c.on_readable();
+                c.try_advance(&registry, &gate, &cfg);
+            }
+            if ev.writable {
+                c.flush();
             }
         }
     }
 }
 
-fn route(req: &HttpRequest, client: &Client, gate: &Gate, cfg: &NetConfig) -> (u16, String) {
-    match (req.method.as_str(), req.path.as_str()) {
-        ("GET", "/healthz") => {
+/// Parsed route table for the `/v1` + `/admin` + legacy surface. Pure so
+/// the unit tests cover it without sockets.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Route {
+    /// `GET /healthz` (legacy alias, serves the whole process).
+    Healthz,
+    /// `GET /metrics` — alias for the default model's metrics.
+    LegacyMetrics,
+    /// `POST /infer` — alias for the default model's infer.
+    LegacyInfer,
+    /// `GET /v1/models`.
+    ListModels,
+    /// `POST /v1/models/<name>/infer`.
+    Infer(String),
+    /// `GET /v1/models/<name>/metrics`.
+    ModelMetrics(String),
+    /// `POST /admin/models/<name>` — load or live-swap a model.
+    AdminLoad(String),
+    /// `DELETE /admin/models/<name>` — drain and unload.
+    AdminUnload(String),
+    /// Known path, wrong method; carries the allowed method.
+    MethodNotAllowed(&'static str),
+    NotFound,
+}
+
+/// Model names accepted in URL paths (one segment, conservative charset).
+fn valid_model_name(name: &str) -> bool {
+    !name.is_empty()
+        && name.len() <= 64
+        && name
+            .bytes()
+            .all(|b| b.is_ascii_alphanumeric() || b == b'-' || b == b'_' || b == b'.')
+}
+
+/// Map `(method, path)` to a [`Route`].
+pub fn route(method: &str, path: &str) -> Route {
+    match (method, path) {
+        ("GET", "/healthz") => return Route::Healthz,
+        ("GET", "/metrics") => return Route::LegacyMetrics,
+        ("POST", "/infer") => return Route::LegacyInfer,
+        ("GET", "/v1/models") => return Route::ListModels,
+        (_, "/healthz") | (_, "/metrics") | (_, "/v1/models") => {
+            return Route::MethodNotAllowed("GET")
+        }
+        (_, "/infer") => return Route::MethodNotAllowed("POST"),
+        _ => {}
+    }
+    if let Some(rest) = path.strip_prefix("/v1/models/") {
+        if let Some(name) = rest.strip_suffix("/infer") {
+            if valid_model_name(name) {
+                return match method {
+                    "POST" => Route::Infer(name.to_string()),
+                    _ => Route::MethodNotAllowed("POST"),
+                };
+            }
+        } else if let Some(name) = rest.strip_suffix("/metrics") {
+            if valid_model_name(name) {
+                return match method {
+                    "GET" => Route::ModelMetrics(name.to_string()),
+                    _ => Route::MethodNotAllowed("GET"),
+                };
+            }
+        }
+        return Route::NotFound;
+    }
+    if let Some(name) = path.strip_prefix("/admin/models/") {
+        if valid_model_name(name) {
+            return match method {
+                "POST" => Route::AdminLoad(name.to_string()),
+                "DELETE" => Route::AdminUnload(name.to_string()),
+                _ => Route::MethodNotAllowed("POST or DELETE"),
+            };
+        }
+        return Route::NotFound;
+    }
+    Route::NotFound
+}
+
+/// Handle one parsed request: immediate responses for everything except an
+/// admitted inference, which returns `Step::Execute` for the event loop to
+/// drive.
+fn dispatch(
+    req: &HttpRequest,
+    keep: bool,
+    registry: &Arc<ModelRegistry>,
+    gate: &Gate,
+) -> Step {
+    match route(&req.method, &req.path) {
+        Route::Healthz => {
             if gate.draining.load(Ordering::SeqCst) {
-                (503, r#"{"status":"draining"}"#.to_string())
+                Step::Respond(503, r#"{"status":"draining"}"#.to_string())
             } else {
-                (200, r#"{"status":"ok"}"#.to_string())
+                Step::Respond(200, r#"{"status":"ok"}"#.to_string())
             }
         }
-        ("GET", "/metrics") => match client.pool_metrics() {
-            Ok(pm) => {
-                (200, proto::pool_metrics_to_json(&pm, cfg.dtype, cfg.plane).to_string())
-            }
-            Err(e) => (503, proto::error_body(&e.to_string())),
+        Route::ListModels => Step::Respond(
+            200,
+            proto::models_to_json(&registry.list(), registry.default_model()).to_string(),
+        ),
+        Route::LegacyMetrics => {
+            let name = registry.default_model().to_string();
+            metrics_route(&name, true, registry)
+        }
+        Route::ModelMetrics(name) => metrics_route(&name, false, registry),
+        Route::LegacyInfer => {
+            let name = registry.default_model().to_string();
+            infer_route(&name, req, keep, registry, gate)
+        }
+        Route::Infer(name) => infer_route(&name, req, keep, registry, gate),
+        Route::AdminLoad(name) => admin_load_route(&name, req, registry),
+        Route::AdminUnload(name) => match registry.begin_remove(&name) {
+            Ok(()) => Step::Respond(
+                202,
+                obj(vec![("status", s("draining")), ("model", s(&name))]).to_string(),
+            ),
+            Err(e) => Step::Respond(admin_status(&e), admin_body(&e, &name)),
         },
-        ("POST", "/infer") => infer_route(req, client, gate, cfg),
-        (_, "/healthz") | (_, "/metrics") => {
-            (405, proto::error_body("method not allowed (use GET)"))
-        }
-        (_, "/infer") => (405, proto::error_body("method not allowed (use POST)")),
-        _ => (404, proto::error_body("no such endpoint (try /infer, /metrics, /healthz)")),
+        Route::MethodNotAllowed(allowed) => Step::Respond(
+            405,
+            proto::error_body(
+                "method_not_allowed",
+                &format!("method not allowed (use {allowed})"),
+                None,
+            ),
+        ),
+        Route::NotFound => Step::Respond(
+            404,
+            proto::error_body(
+                "not_found",
+                "no such endpoint (try /v1/models, /v1/models/<name>/infer, /healthz)",
+                None,
+            ),
+        ),
     }
 }
 
-fn infer_route(req: &HttpRequest, client: &Client, gate: &Gate, cfg: &NetConfig) -> (u16, String) {
-    if gate.draining.load(Ordering::SeqCst) {
-        return (503, proto::error_body("server is draining"));
+/// Resolve a model for serving, mapping registry states to wire errors.
+fn resolve_model(
+    name: &str,
+    registry: &Arc<ModelRegistry>,
+) -> std::result::Result<Arc<crate::coordinator::ModelPool>, (u16, String)> {
+    match registry.fetch(name) {
+        ModelFetch::Ready(pool) => Ok(pool),
+        ModelFetch::Loading => Err((
+            503,
+            proto::error_body("loading", "model is still loading", Some(name)),
+        )),
+        ModelFetch::Draining => Err((
+            503,
+            proto::error_body("draining", "model is draining", Some(name)),
+        )),
+        ModelFetch::Failed(e) => Err((
+            503,
+            proto::error_body("unavailable", &format!("model failed to load: {e}"), Some(name)),
+        )),
+        ModelFetch::NotFound => Err((
+            404,
+            proto::error_body("not_found", "no such model", Some(name)),
+        )),
     }
+}
+
+fn metrics_route(name: &str, legacy: bool, registry: &Arc<ModelRegistry>) -> Step {
+    let pool = match resolve_model(name, registry) {
+        Ok(p) => p,
+        Err((status, body)) => return Step::Respond(status, body),
+    };
+    match pool.pool_metrics() {
+        Ok(pm) => {
+            // the legacy alias keeps its original body shape; /v1 adds the
+            // model identity, generation, and admission block
+            let body = if legacy {
+                proto::pool_metrics_to_json(&pm, pool.dtype, pool.plane).to_string()
+            } else {
+                proto::model_metrics_to_json(name, &pool.admission(), &pm, pool.dtype, pool.plane)
+                    .to_string()
+            };
+            Step::Respond(200, body)
+        }
+        Err(e) => Step::Respond(
+            503,
+            proto::error_body("unavailable", &e.to_string(), Some(name)),
+        ),
+    }
+}
+
+fn infer_route(
+    name: &str,
+    req: &HttpRequest,
+    keep: bool,
+    registry: &Arc<ModelRegistry>,
+    gate: &Gate,
+) -> Step {
+    if gate.draining.load(Ordering::SeqCst) {
+        return Step::Respond(
+            503,
+            proto::error_body("draining", "server is draining", Some(name)),
+        );
+    }
+    let pool = match resolve_model(name, registry) {
+        Ok(p) => p,
+        Err((status, body)) => return Step::Respond(status, body),
+    };
     // parse before admission: a batch body claims one in-flight slot per
     // image, so a batched client draws from the same budget as the
     // equivalent serial clients would
-    let parsed = match proto::parse_infer_body(&req.body, cfg.input_shape) {
+    let parsed = match proto::parse_infer_body(&req.body, pool.input_shape) {
         Ok(p) => p,
-        Err(e) => return (400, proto::error_body(&e.to_string())),
+        Err(e) => {
+            return Step::Respond(
+                400,
+                proto::error_body("bad_request", &e.to_string(), Some(name)),
+            )
+        }
     };
-    let slots = match &parsed {
-        proto::InferRequest::Single(_) => 1,
-        proto::InferRequest::Batch(images) => images.len(),
+    let (images, single) = match parsed {
+        proto::InferRequest::Single(t) => (vec![t], true),
+        proto::InferRequest::Batch(v) => (v, false),
     };
-    // admission: bounded in-flight queue — overload is a fast 429, not a
-    // silently growing dispatcher queue
-    if gate.inflight.fetch_add(slots, Ordering::SeqCst) + slots > cfg.max_inflight {
-        gate.inflight.fetch_sub(slots, Ordering::SeqCst);
-        return (429, proto::error_body("overloaded: in-flight request limit reached"));
-    }
-    let out = admitted_infer(parsed, client);
-    gate.inflight.fetch_sub(slots, Ordering::SeqCst);
-    out
-}
-
-fn admitted_infer(parsed: proto::InferRequest, client: &Client) -> (u16, String) {
-    match parsed {
-        proto::InferRequest::Single(image) => match client.infer(image) {
-            Ok(resp) => (200, proto::response_to_json(&resp).to_string()),
-            Err(e) => infer_error(&e.to_string()),
-        },
-        proto::InferRequest::Batch(images) => {
-            // submit every image before waiting on any reply: they land in
-            // the dispatcher's window together, so the batcher can close
-            // them into fused batch forwards instead of singletons
-            let mut rxs = Vec::with_capacity(images.len());
-            for image in images {
-                match client.infer_async(image) {
-                    Ok(rx) => rxs.push(rx),
-                    Err(e) => return infer_error(&e.to_string()),
-                }
+    // admission: per-model bounded in-flight budget — overload is a fast
+    // 429, not a silently growing dispatcher queue
+    let Some(guard) = pool.try_admit(images.len()) else {
+        return Step::Respond(
+            429,
+            proto::error_body(
+                "overloaded",
+                "overloaded: in-flight request limit reached",
+                Some(name),
+            ),
+        );
+    };
+    // submit every image before waiting on any reply: they land in the
+    // dispatcher's window together, so the batcher can close them into
+    // fused batch forwards instead of singletons
+    let client = pool.client();
+    let mut rxs = Vec::with_capacity(images.len());
+    for image in images {
+        match client.infer_async(image) {
+            Ok(rx) => rxs.push(rx),
+            Err(e) => {
+                let (status, body) = infer_error(&e.to_string(), Some(name));
+                return Step::Respond(status, body);
             }
-            let mut resps = Vec::with_capacity(rxs.len());
-            for rx in rxs {
-                // any failed image fails the whole batched request — the
-                // wire reply is all results or one error, never a mix
-                match rx.recv() {
-                    Ok(Ok(resp)) => resps.push(resp),
-                    Ok(Err(e)) => return infer_error(&e.to_string()),
-                    Err(_) => return infer_error("server dropped request"),
-                }
-            }
-            (200, proto::batch_response_to_json(&resps).to_string())
         }
     }
+    Step::Execute(Box::new(Pending {
+        rxs,
+        resps: Vec::new(),
+        single,
+        keep,
+        model: name.to_string(),
+        _guard: guard,
+    }))
+}
+
+fn admin_load_route(name: &str, req: &HttpRequest, registry: &Arc<ModelRegistry>) -> Step {
+    let spec = match proto::parse_model_spec(&req.body, name) {
+        Ok(sp) => sp,
+        Err(e) => {
+            return Step::Respond(
+                400,
+                proto::error_body("bad_request", &e.to_string(), Some(name)),
+            )
+        }
+    };
+    match registry.begin_load(name, spec) {
+        Ok(()) => Step::Respond(
+            202,
+            obj(vec![
+                ("status", s("loading")),
+                ("model", s(name)),
+                ("generation", num((registry.generation_of(name) + 1) as f64)),
+            ])
+            .to_string(),
+        ),
+        Err(e) => Step::Respond(admin_status(&e), admin_body(&e, name)),
+    }
+}
+
+fn admin_status(e: &AdminError) -> u16 {
+    match e {
+        AdminError::NotFound => 404,
+        AdminError::Conflict(_) => 409,
+        AdminError::BadRequest(_) => 400,
+    }
+}
+
+fn admin_body(e: &AdminError, model: &str) -> String {
+    let code = match e {
+        AdminError::NotFound => "not_found",
+        AdminError::Conflict(_) => "conflict",
+        AdminError::BadRequest(_) => "bad_request",
+    };
+    proto::error_body(code, &e.to_string(), Some(model))
 }
 
 /// Map an inference failure to a status: engine rejections (wrong shape
 /// for the variant, …) are the client's fault; a stopped/dropped pool is
 /// ours.
-fn infer_error(msg: &str) -> (u16, String) {
+fn infer_error(msg: &str, model: Option<&str>) -> (u16, String) {
     if msg.contains("server stopped") || msg.contains("server dropped") {
-        (503, proto::error_body(msg))
+        (503, proto::error_body("unavailable", msg, model))
     } else {
-        (400, proto::error_body(msg))
+        (400, proto::error_body("bad_request", msg, model))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn route_table_maps_v1_paths() {
+        assert_eq!(route("GET", "/healthz"), Route::Healthz);
+        assert_eq!(route("GET", "/metrics"), Route::LegacyMetrics);
+        assert_eq!(route("POST", "/infer"), Route::LegacyInfer);
+        assert_eq!(route("GET", "/v1/models"), Route::ListModels);
+        assert_eq!(
+            route("POST", "/v1/models/resnet18/infer"),
+            Route::Infer("resnet18".into())
+        );
+        assert_eq!(
+            route("GET", "/v1/models/vgg16-cifar/metrics"),
+            Route::ModelMetrics("vgg16-cifar".into())
+        );
+        assert_eq!(
+            route("POST", "/admin/models/demo"),
+            Route::AdminLoad("demo".into())
+        );
+        assert_eq!(
+            route("DELETE", "/admin/models/demo"),
+            Route::AdminUnload("demo".into())
+        );
+    }
+
+    #[test]
+    fn route_table_enforces_methods() {
+        assert_eq!(route("POST", "/healthz"), Route::MethodNotAllowed("GET"));
+        assert_eq!(route("GET", "/infer"), Route::MethodNotAllowed("POST"));
+        assert_eq!(route("DELETE", "/metrics"), Route::MethodNotAllowed("GET"));
+        assert_eq!(route("POST", "/v1/models"), Route::MethodNotAllowed("GET"));
+        assert_eq!(
+            route("GET", "/v1/models/demo/infer"),
+            Route::MethodNotAllowed("POST")
+        );
+        assert_eq!(
+            route("POST", "/v1/models/demo/metrics"),
+            Route::MethodNotAllowed("GET")
+        );
+        assert_eq!(
+            route("GET", "/admin/models/demo"),
+            Route::MethodNotAllowed("POST or DELETE")
+        );
+    }
+
+    #[test]
+    fn route_table_rejects_unknown_and_invalid() {
+        assert_eq!(route("GET", "/"), Route::NotFound);
+        assert_eq!(route("GET", "/v2/models"), Route::NotFound);
+        assert_eq!(route("POST", "/v1/models//infer"), Route::NotFound);
+        assert_eq!(route("POST", "/v1/models/a/b/infer"), Route::NotFound);
+        assert_eq!(route("POST", "/admin/models/"), Route::NotFound);
+        assert_eq!(route("POST", "/admin/models/bad name"), Route::NotFound);
+        assert_eq!(route("POST", "/v1/models/demo"), Route::NotFound);
+        // model names are one conservative path segment
+        assert!(valid_model_name("vgg16-cifar"));
+        assert!(valid_model_name("resnet18.v2"));
+        assert!(!valid_model_name(""));
+        assert!(!valid_model_name("a/b"));
+        assert!(!valid_model_name(&"x".repeat(65)));
     }
 }

@@ -192,30 +192,38 @@ fn json_roundtrip_fuzz() {
 mod hostile_http {
     use std::io::{Read, Write};
     use std::net::{SocketAddr, TcpStream};
+    use std::sync::Arc;
     use std::time::{Duration, Instant};
 
-    use spectral_flow::coordinator::{BatcherConfig, Server, ServerConfig, WeightMode};
+    use spectral_flow::coordinator::{
+        BatcherConfig, EngineOptions, ModelRegistry, ModelSpec,
+    };
     use spectral_flow::net::{http, HttpConn, HttpFrontend, HttpLimits, NetConfig};
     use spectral_flow::schedule::SchedulePolicy;
 
     /// A short-deadline, small-body front-end over the demo variant: the
     /// attack surface with the caps tight enough to test quickly.
     fn hardened_frontend() -> HttpFrontend {
-        let server = Server::start(ServerConfig {
-            artifacts_dir: concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").into(),
-            variant: "demo".into(),
-            mode: WeightMode::Dense,
-            seed: 7,
-            batcher: BatcherConfig { max_batch: 2, max_wait: Duration::from_millis(2) },
-            scheduler: SchedulePolicy::Off,
-            ..ServerConfig::default()
-        })
-        .expect("server starts");
+        let registry = Arc::new(
+            ModelRegistry::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"), "demo")
+                .with_drain_grace(Duration::from_secs(5)),
+        );
+        registry
+            .load_blocking(
+                "demo",
+                ModelSpec {
+                    preset: "demo".into(),
+                    alpha: 1, // dense weights: no pruning artifacts needed
+                    batcher: BatcherConfig { max_batch: 2, max_wait: Duration::from_millis(2) },
+                    engine: EngineOptions::builder().scheduler(SchedulePolicy::Off).build(),
+                    ..ModelSpec::default()
+                },
+            )
+            .expect("demo model loads");
         HttpFrontend::start(
-            server,
+            registry,
             NetConfig {
                 addr: "127.0.0.1:0".into(),
-                input_shape: [1, 16, 16],
                 limits: HttpLimits {
                     max_body: 64 << 10,
                     read_timeout: Duration::from_millis(400),

@@ -5,7 +5,7 @@
 use std::time::Duration;
 
 use spectral_flow::coordinator::{
-    Batcher, BatcherConfig, Metrics, Server, ServerConfig, WeightMode,
+    Batcher, BatcherConfig, EngineOptions, Metrics, Server, ServerConfig, WeightMode,
 };
 use spectral_flow::runtime::BackendKind;
 use spectral_flow::tensor::Tensor;
@@ -98,7 +98,7 @@ fn pool_matches_serial_bit_for_bit() {
     // request so batches really interleave across workers
     let pool = Server::start(ServerConfig {
         workers: 4,
-        backend: BackendKind::Interp { threads: 2 },
+        engine: EngineOptions::builder().backend(BackendKind::Interp { threads: 2 }).build(),
         ..demo_config(2)
     })
     .expect("pool starts");
@@ -166,7 +166,7 @@ fn deadline_closed_singleton_batch_takes_the_batched_path() {
     // Its logits must match a directly-constructed engine (planned for the
     // pool's max_batch, like the worker's), and its per-image share is the
     // whole execute.
-    use spectral_flow::coordinator::{EngineOptions, InferenceEngine};
+    use spectral_flow::coordinator::InferenceEngine;
     let server = demo_server(4);
     let client = server.client();
     let mut rng = Pcg32::new(31);
@@ -279,8 +279,11 @@ fn scheduler_off_pool_matches_scheduled_pool_bit_for_bit() {
     let mut runs = Vec::new();
     for policy in [SchedulePolicy::Off, SchedulePolicy::ExactCover, SchedulePolicy::LowestIndex]
     {
-        let server = Server::start(ServerConfig { scheduler: policy, ..demo_config(2) })
-            .expect("server starts");
+        let server = Server::start(ServerConfig {
+            engine: EngineOptions::builder().scheduler(policy).build(),
+            ..demo_config(2)
+        })
+        .expect("server starts");
         let client = server.client();
         let logits: Vec<Vec<f32>> =
             images.iter().map(|img| client.infer(img.clone()).unwrap().logits).collect();

@@ -1,12 +1,15 @@
-//! Integration: the networked serving subsystem — HTTP front-end over the
-//! engine pool, wire-schema round-trips, admission control, drain, and
-//! the load generator, all over real loopback sockets on the offline
-//! `interp` backend (demo variant, no artifacts needed).
+//! Integration: the networked serving subsystem — the event-driven HTTP
+//! front-end over the model registry, wire-schema round-trips, admission
+//! control, drain, and the load generator, all over real loopback sockets
+//! on the offline `interp` backend (demo variant, no artifacts needed).
 
 use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
 use std::time::Duration;
 
-use spectral_flow::coordinator::{BatcherConfig, Server, ServerConfig, WeightMode};
+use spectral_flow::coordinator::{
+    BatcherConfig, Client, EngineOptions, ModelRegistry, ModelSpec,
+};
 use spectral_flow::net::{http, proto, HttpConn, HttpFrontend, HttpLimits, NetConfig};
 use spectral_flow::net::{loadgen, LoadGenConfig, LoadMode};
 use spectral_flow::runtime::{Dtype, Plane};
@@ -17,25 +20,38 @@ use spectral_flow::util::rng::Pcg32;
 
 const DEMO_SHAPE: [usize; 3] = [1, 16, 16];
 
-fn demo_config(alpha: usize, scheduler: SchedulePolicy) -> ServerConfig {
-    ServerConfig {
-        artifacts_dir: concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").into(),
-        variant: "demo".into(),
-        mode: WeightMode::from_alpha(alpha),
-        seed: 7,
+fn demo_spec(alpha: usize, scheduler: SchedulePolicy) -> ModelSpec {
+    ModelSpec {
+        preset: "demo".into(),
+        alpha,
         batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(2) },
-        scheduler,
-        ..ServerConfig::default()
+        engine: EngineOptions::builder().scheduler(scheduler).build(),
+        ..ModelSpec::default()
     }
 }
 
-fn start_frontend(cfg: ServerConfig, net: NetConfig) -> HttpFrontend {
-    let server = Server::start(cfg).expect("server starts");
-    HttpFrontend::start(server, net).expect("frontend binds")
+/// A registry serving the demo variant as its (default) model "demo".
+fn demo_registry(spec: ModelSpec) -> Arc<ModelRegistry> {
+    let reg = Arc::new(
+        ModelRegistry::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"), "demo")
+            .with_drain_grace(Duration::from_secs(5)),
+    );
+    reg.load_blocking("demo", spec).expect("demo model loads");
+    reg
+}
+
+/// In-process client handle without retaining the pool `Arc` (a held pool
+/// would stall the shutdown drain).
+fn demo_client(reg: &ModelRegistry) -> Client {
+    reg.pool("demo").expect("demo is serving").client()
+}
+
+fn start_frontend(spec: ModelSpec, net: NetConfig) -> HttpFrontend {
+    HttpFrontend::start(demo_registry(spec), net).expect("frontend binds")
 }
 
 fn demo_net() -> NetConfig {
-    NetConfig { addr: "127.0.0.1:0".into(), input_shape: DEMO_SHAPE, ..NetConfig::default() }
+    NetConfig { addr: "127.0.0.1:0".into(), ..NetConfig::default() }
 }
 
 /// One request over a fresh connection; returns (status, body).
@@ -65,13 +81,13 @@ fn http_inference_bit_identical_to_in_process_client() {
         (4, SchedulePolicy::LowestIndex),
         (4, SchedulePolicy::Off),
     ] {
-        let server = Server::start(demo_config(alpha, policy)).expect("server starts");
-        let client = server.client();
+        let registry = demo_registry(demo_spec(alpha, policy));
+        let client = demo_client(&registry);
         let mut rng = Pcg32::new(11);
         let img = Tensor::randn(&DEMO_SHAPE, &mut rng, 1.0);
         let want = client.infer(img.clone()).expect("in-process infer").logits;
 
-        let frontend = HttpFrontend::start(server, demo_net()).expect("frontend binds");
+        let frontend = HttpFrontend::start(registry, demo_net()).expect("frontend binds");
         let body = proto::tensor_to_json(&img).to_string();
         let (status, resp) =
             roundtrip(frontend.local_addr(), "POST", "/infer", body.as_bytes());
@@ -103,14 +119,62 @@ fn http_inference_bit_identical_to_in_process_client() {
 }
 
 #[test]
+fn v1_route_serves_the_same_bits_as_the_legacy_alias() {
+    // /v1/models/demo/infer and the legacy /infer alias are the same model
+    // — same pool, same logits, bit for bit.
+    let registry = demo_registry(demo_spec(4, SchedulePolicy::ExactCover));
+    let frontend = HttpFrontend::start(registry, demo_net()).expect("frontend");
+    let addr = frontend.local_addr();
+    let (status, legacy) = roundtrip(addr, "POST", "/infer", b"{\"seed\":3}");
+    assert_eq!(status, 200);
+    let (status, v1) = roundtrip(addr, "POST", "/v1/models/demo/infer", b"{\"seed\":3}");
+    assert_eq!(status, 200, "{:?}", String::from_utf8_lossy(&v1));
+    let want = proto::logits_from_json(&parse_body(&legacy)).expect("logits");
+    let got = proto::logits_from_json(&parse_body(&v1)).expect("logits");
+    assert_eq!(
+        got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        want.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+    );
+
+    // unknown model: 404 in the structured error schema
+    let (status, resp) = roundtrip(addr, "POST", "/v1/models/nope/infer", b"{\"seed\":1}");
+    assert_eq!(status, 404);
+    let err = parse_body(&resp).get("error").cloned().expect("error object");
+    assert_eq!(err.get("code").and_then(Json::as_str), Some("not_found"));
+    assert_eq!(err.get("model").and_then(Json::as_str), Some("nope"));
+
+    // the registry listing names the default model and its serving row
+    let (status, resp) = roundtrip(addr, "GET", "/v1/models", b"");
+    assert_eq!(status, 200);
+    let j = parse_body(&resp);
+    assert_eq!(j.get("default_model").and_then(Json::as_str), Some("demo"));
+    let models = j.get("models").and_then(Json::as_arr).expect("models array");
+    assert_eq!(models.len(), 1);
+    assert_eq!(models[0].get("name").and_then(Json::as_str), Some("demo"));
+    assert_eq!(models[0].get("status").and_then(Json::as_str), Some("serving"));
+    assert_eq!(models[0].get("generation").and_then(Json::as_usize), Some(1));
+
+    // per-model metrics carry the admission block and generation
+    let (status, resp) = roundtrip(addr, "GET", "/v1/models/demo/metrics", b"");
+    assert_eq!(status, 200);
+    let j = parse_body(&resp);
+    assert_eq!(j.get("model").and_then(Json::as_str), Some("demo"));
+    assert_eq!(j.get("generation").and_then(Json::as_usize), Some(1));
+    let adm = j.get("admission").expect("admission block");
+    assert!(adm.get("admitted").and_then(Json::as_usize).unwrap() >= 2);
+    assert_eq!(adm.get("rejected").and_then(Json::as_usize), Some(0));
+    frontend.shutdown().expect("shutdown");
+}
+
+#[test]
 fn seed_body_matches_explicit_tensor_inference() {
     // {"seed":n} asks the server to synthesize the image — same bits as
     // sending the tensor explicitly (tiny loadgen bodies, same numerics).
-    let server = Server::start(demo_config(4, SchedulePolicy::ExactCover)).expect("server");
-    let client = server.client();
+    let registry = demo_registry(demo_spec(4, SchedulePolicy::ExactCover));
+    let client = demo_client(&registry);
     let img = Tensor::randn(&DEMO_SHAPE, &mut Pcg32::new(3), 1.0);
     let want = client.infer(img).expect("infer").logits;
-    let frontend = HttpFrontend::start(server, demo_net()).expect("frontend");
+    let frontend = HttpFrontend::start(registry, demo_net()).expect("frontend");
     let (status, resp) = roundtrip(frontend.local_addr(), "POST", "/infer", b"{\"seed\":3}");
     assert_eq!(status, 200);
     let got = proto::logits_from_json(&parse_body(&resp)).expect("logits");
@@ -125,15 +189,15 @@ fn seed_body_matches_explicit_tensor_inference() {
 fn http_batched_request_bit_identical_to_in_process_client() {
     // A {"batch":[…]} body answers {"results":[…]} in request order, each
     // image bit-identical to the in-process Client path.
-    let server = Server::start(demo_config(4, SchedulePolicy::ExactCover)).expect("server");
-    let client = server.client();
+    let registry = demo_registry(demo_spec(4, SchedulePolicy::ExactCover));
+    let client = demo_client(&registry);
     let want: Vec<Vec<f32>> = [3u64, 9, 3]
         .iter()
         .map(|&s| {
             client.infer(Tensor::randn(&DEMO_SHAPE, &mut Pcg32::new(s), 1.0)).unwrap().logits
         })
         .collect();
-    let frontend = HttpFrontend::start(server, demo_net()).expect("frontend");
+    let frontend = HttpFrontend::start(registry, demo_net()).expect("frontend");
     let addr = frontend.local_addr();
     let (status, resp) =
         roundtrip(addr, "POST", "/infer", br#"{"batch":[{"seed":3},{"seed":9},{"seed":3}]}"#);
@@ -170,7 +234,7 @@ fn http_batched_request_bit_identical_to_in_process_client() {
 
 #[test]
 fn healthz_metrics_and_drain_lifecycle() {
-    let frontend = start_frontend(demo_config(4, SchedulePolicy::ExactCover), demo_net());
+    let frontend = start_frontend(demo_spec(4, SchedulePolicy::ExactCover), demo_net());
     let addr = frontend.local_addr();
 
     let (status, body) = roundtrip(addr, "GET", "/healthz", b"");
@@ -218,8 +282,8 @@ fn healthz_metrics_and_drain_lifecycle() {
 fn overload_returns_429_never_hangs() {
     // max_inflight = 0: every /infer is over budget — deterministic 429
     let frontend = start_frontend(
-        demo_config(1, SchedulePolicy::Off),
-        NetConfig { max_inflight: 0, ..demo_net() },
+        ModelSpec { max_inflight: 0, ..demo_spec(1, SchedulePolicy::Off) },
+        demo_net(),
     );
     let addr = frontend.local_addr();
     let (status, body) = roundtrip(addr, "POST", "/infer", b"{\"seed\":1}");
@@ -235,15 +299,15 @@ fn overload_returns_429_never_hangs() {
     // closed-loop storm above the bound: every request completes (ok or
     // 429) — the admission gate sheds load instead of hanging
     let frontend = start_frontend(
-        demo_config(1, SchedulePolicy::Off),
-        NetConfig { max_inflight: 2, ..demo_net() },
+        ModelSpec { max_inflight: 2, ..demo_spec(1, SchedulePolicy::Off) },
+        demo_net(),
     );
     let report = loadgen::run(&LoadGenConfig {
         addr: frontend.local_addr().to_string(),
         mode: LoadMode::Closed { concurrency: 8 },
         requests: 24,
-        body: None,
         timeout: Duration::from_secs(30),
+        ..LoadGenConfig::default()
     })
     .expect("loadgen runs");
     assert_eq!(report.sent, 24);
@@ -259,15 +323,15 @@ fn loadgen_closed_loop_over_the_pool_succeeds_fully() {
     // The CI smoke contract: a pooled server under its admission bound
     // serves a closed-loop run at 100% success with sane percentiles.
     let frontend = start_frontend(
-        ServerConfig { workers: 2, ..demo_config(4, SchedulePolicy::ExactCover) },
+        ModelSpec { workers: 2, ..demo_spec(4, SchedulePolicy::ExactCover) },
         demo_net(),
     );
     let report = loadgen::run(&LoadGenConfig {
         addr: frontend.local_addr().to_string(),
         mode: LoadMode::Closed { concurrency: 3 },
         requests: 12,
-        body: None,
         timeout: Duration::from_secs(60),
+        ..LoadGenConfig::default()
     })
     .expect("loadgen runs");
     assert_eq!(report.ok, 12, "100% success under the admission bound");
@@ -279,14 +343,31 @@ fn loadgen_closed_loop_over_the_pool_succeeds_fully() {
 }
 
 #[test]
+fn loadgen_v1_model_route_succeeds_fully() {
+    // the loadgen's --model path drives /v1/models/<name>/infer
+    let frontend = start_frontend(demo_spec(4, SchedulePolicy::ExactCover), demo_net());
+    let report = loadgen::run(&LoadGenConfig {
+        addr: frontend.local_addr().to_string(),
+        mode: LoadMode::Closed { concurrency: 2 },
+        requests: 8,
+        models: vec!["demo".to_string()],
+        timeout: Duration::from_secs(60),
+        ..LoadGenConfig::default()
+    })
+    .expect("loadgen runs");
+    assert_eq!(report.ok, 8, "every /v1 request succeeds");
+    frontend.shutdown().expect("shutdown");
+}
+
+#[test]
 fn open_loop_measures_from_scheduled_arrival() {
-    let frontend = start_frontend(demo_config(1, SchedulePolicy::Off), demo_net());
+    let frontend = start_frontend(demo_spec(1, SchedulePolicy::Off), demo_net());
     let report = loadgen::run(&LoadGenConfig {
         addr: frontend.local_addr().to_string(),
         mode: LoadMode::Open { rate_hz: 50.0 },
         requests: 10,
-        body: None,
         timeout: Duration::from_secs(30),
+        ..LoadGenConfig::default()
     })
     .expect("loadgen runs");
     assert_eq!(report.sent, 10);
@@ -300,13 +381,14 @@ fn open_loop_measures_from_scheduled_arrival() {
 fn numerics_modes_agree_over_the_wire() {
     // Reference leg: f64 full-plane. The reply and the metrics snapshot
     // both name the numerics mode the pool runs at.
-    let server = Server::start(ServerConfig {
-        dtype: Some(Dtype::F64),
-        ..demo_config(4, SchedulePolicy::ExactCover)
-    })
-    .expect("server starts");
-    let frontend = HttpFrontend::start(server, NetConfig { dtype: Dtype::F64, ..demo_net() })
-        .expect("frontend binds");
+    let spec = ModelSpec {
+        engine: EngineOptions::builder()
+            .scheduler(SchedulePolicy::ExactCover)
+            .dtype(Some(Dtype::F64))
+            .build(),
+        ..demo_spec(4, SchedulePolicy::ExactCover)
+    };
+    let frontend = start_frontend(spec, demo_net());
     let addr = frontend.local_addr();
     let (status, resp) = roundtrip(addr, "POST", "/infer", b"{\"seed\":3}");
     assert_eq!(status, 200, "{:?}", String::from_utf8_lossy(&resp));
@@ -323,13 +405,14 @@ fn numerics_modes_agree_over_the_wire() {
 
     // Fast-path leg: f32 on the rfft2 half-plane — the production mode —
     // stays within the documented 2e-3 of the f64 reference over the wire.
-    let server = Server::start(ServerConfig {
-        plane: Plane::Half,
-        ..demo_config(4, SchedulePolicy::ExactCover)
-    })
-    .expect("server starts");
-    let frontend = HttpFrontend::start(server, NetConfig { plane: Plane::Half, ..demo_net() })
-        .expect("frontend binds");
+    let spec = ModelSpec {
+        engine: EngineOptions::builder()
+            .scheduler(SchedulePolicy::ExactCover)
+            .plane(Plane::Half)
+            .build(),
+        ..demo_spec(4, SchedulePolicy::ExactCover)
+    };
+    let frontend = start_frontend(spec, demo_net());
     let (status, resp) = roundtrip(frontend.local_addr(), "POST", "/infer", b"{\"seed\":3}");
     assert_eq!(status, 200, "{:?}", String::from_utf8_lossy(&resp));
     let j = parse_body(&resp);
@@ -348,7 +431,7 @@ fn numerics_modes_agree_over_the_wire() {
 
 #[test]
 fn wrong_shape_tensor_is_a_400_not_a_crash() {
-    let frontend = start_frontend(demo_config(1, SchedulePolicy::Off), demo_net());
+    let frontend = start_frontend(demo_spec(1, SchedulePolicy::Off), demo_net());
     let addr = frontend.local_addr();
     // structurally valid JSON, semantically wrong shape for the variant
     let img = Tensor::zeros(&[3, 16, 16]);

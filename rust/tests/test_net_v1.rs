@@ -1,0 +1,312 @@
+//! Integration: the `/v1` multi-model serving surface — registry listing,
+//! the `/admin` load → serve → swap → drain lifecycle, the zero-downtime
+//! weight swap under closed-loop load, and C10k-style idle keep-alive
+//! connections against the fixed event-worker pool. All over real loopback
+//! sockets on the offline `interp` backend (demo variant, no artifacts).
+
+use std::io::Write;
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use spectral_flow::coordinator::{BatcherConfig, EngineOptions, ModelRegistry, ModelSpec};
+use spectral_flow::net::{http, HttpConn, HttpFrontend, HttpLimits, NetConfig};
+use spectral_flow::schedule::SchedulePolicy;
+use spectral_flow::util::json::Json;
+
+fn demo_spec(alpha: usize) -> ModelSpec {
+    ModelSpec {
+        preset: "demo".into(),
+        alpha,
+        batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(2) },
+        engine: EngineOptions::builder().scheduler(SchedulePolicy::ExactCover).build(),
+        ..ModelSpec::default()
+    }
+}
+
+fn demo_registry() -> Arc<ModelRegistry> {
+    let reg = Arc::new(
+        ModelRegistry::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"), "demo")
+            .with_drain_grace(Duration::from_secs(5)),
+    );
+    reg.load_blocking("demo", demo_spec(4)).expect("demo model loads");
+    reg
+}
+
+fn start_frontend() -> HttpFrontend {
+    HttpFrontend::start(
+        demo_registry(),
+        NetConfig { addr: "127.0.0.1:0".into(), ..NetConfig::default() },
+    )
+    .expect("frontend binds")
+}
+
+fn roundtrip(addr: SocketAddr, method: &str, path: &str, body: &[u8]) -> (u16, Vec<u8>) {
+    let stream = TcpStream::connect(addr).expect("connect");
+    let mut writer = stream.try_clone().expect("clone");
+    let mut conn = HttpConn::new(stream);
+    writer
+        .write_all(&http::format_request(method, path, &addr.to_string(), body))
+        .expect("send");
+    conn.read_response(&HttpLimits::default()).expect("response")
+}
+
+fn parse_body(body: &[u8]) -> Json {
+    Json::parse(std::str::from_utf8(body).expect("utf8 body")).expect("json body")
+}
+
+/// Poll `GET /v1/models` until `model` reports `status` (or panic after
+/// `timeout`). Returns that model's status row.
+fn await_status(addr: SocketAddr, model: &str, status: &str, timeout: Duration) -> Json {
+    let deadline = Instant::now() + timeout;
+    loop {
+        let (code, body) = roundtrip(addr, "GET", "/v1/models", b"");
+        assert_eq!(code, 200);
+        let j = parse_body(&body);
+        let row = j
+            .get("models")
+            .and_then(Json::as_arr)
+            .and_then(|models| {
+                models
+                    .iter()
+                    .find(|m| m.get("name").and_then(Json::as_str) == Some(model))
+                    .cloned()
+            });
+        if let Some(row) = &row {
+            if row.get("status").and_then(Json::as_str) == Some(status) {
+                return row.clone();
+            }
+        }
+        assert!(
+            Instant::now() < deadline,
+            "model {model:?} never reached {status:?}; last row: {row:?}"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+#[test]
+fn admin_lifecycle_loads_swaps_and_unloads_a_second_model() {
+    let frontend = start_frontend();
+    let addr = frontend.local_addr();
+
+    // load a second model under a new name (dense demo weights)
+    let (status, body) =
+        roundtrip(addr, "POST", "/admin/models/alt", br#"{"preset":"demo","alpha":1}"#);
+    assert_eq!(status, 202, "{:?}", String::from_utf8_lossy(&body));
+    let j = parse_body(&body);
+    assert_eq!(j.get("status").and_then(Json::as_str), Some("loading"));
+    assert_eq!(j.get("model").and_then(Json::as_str), Some("alt"));
+    assert_eq!(j.get("generation").and_then(Json::as_usize), Some(1));
+
+    // the background build lands and the model starts serving
+    let row = await_status(addr, "alt", "serving", Duration::from_secs(30));
+    assert_eq!(row.get("preset").and_then(Json::as_str), Some("demo"));
+    assert_eq!(row.get("alpha").and_then(Json::as_usize), Some(1));
+    let (status, _) = roundtrip(addr, "POST", "/v1/models/alt/infer", b"{\"seed\":4}");
+    assert_eq!(status, 200, "freshly loaded model must serve");
+
+    // both models serve from one process, each with its own metrics
+    for name in ["demo", "alt"] {
+        let path = format!("/v1/models/{name}/metrics");
+        let (status, body) = roundtrip(addr, "GET", &path, b"");
+        assert_eq!(status, 200);
+        let j = parse_body(&body);
+        assert_eq!(j.get("model").and_then(Json::as_str), Some(name));
+        assert!(j.get("admission").is_some());
+    }
+
+    // swap alt in place (back to α=4): 202 names the next generation, the
+    // old pool serves until the new one is ready, then the counter bumps
+    let (status, body) =
+        roundtrip(addr, "POST", "/admin/models/alt", br#"{"preset":"demo","alpha":4}"#);
+    assert_eq!(status, 202, "{:?}", String::from_utf8_lossy(&body));
+    assert_eq!(parse_body(&body).get("generation").and_then(Json::as_usize), Some(2));
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let (status, body) = roundtrip(addr, "GET", "/v1/models/alt/metrics", b"");
+        if status == 200 && parse_body(&body).get("generation").and_then(Json::as_usize) == Some(2)
+        {
+            break;
+        }
+        assert!(Instant::now() < deadline, "generation never bumped to 2");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    let (status, _) = roundtrip(addr, "POST", "/v1/models/alt/infer", b"{\"seed\":4}");
+    assert_eq!(status, 200, "swapped model must serve");
+
+    // drain + unload: immediate 202, then the name disappears (404)
+    let (status, body) = roundtrip(addr, "DELETE", "/admin/models/alt", b"");
+    assert_eq!(status, 202);
+    assert_eq!(parse_body(&body).get("status").and_then(Json::as_str), Some("draining"));
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let (status, _) = roundtrip(addr, "POST", "/v1/models/alt/infer", b"{\"seed\":1}");
+        if status == 404 {
+            break;
+        }
+        assert_eq!(status, 503, "draining model must refuse, not serve");
+        assert!(Instant::now() < deadline, "drained model never unloaded");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    // …and the default model is untouched by its sibling's lifecycle
+    let (status, _) = roundtrip(addr, "POST", "/v1/models/demo/infer", b"{\"seed\":1}");
+    assert_eq!(status, 200);
+    frontend.shutdown().expect("shutdown");
+}
+
+#[test]
+fn admin_rejects_bad_specs_and_unknown_models() {
+    let frontend = start_frontend();
+    let addr = frontend.local_addr();
+
+    // unknown preset: validated synchronously, 400 in the error schema
+    let (status, body) =
+        roundtrip(addr, "POST", "/admin/models/ghost", br#"{"preset":"no-such-variant"}"#);
+    assert_eq!(status, 400);
+    let err = parse_body(&body).get("error").cloned().expect("error object");
+    assert_eq!(err.get("code").and_then(Json::as_str), Some("bad_request"));
+    assert_eq!(err.get("model").and_then(Json::as_str), Some("ghost"));
+
+    // unknown keys in the spec body are typos, not silently ignored
+    let (status, _) =
+        roundtrip(addr, "POST", "/admin/models/ghost", br#"{"bogus":1}"#);
+    assert_eq!(status, 400);
+
+    // a rejected load leaves no registry entry behind
+    let (_, body) = roundtrip(addr, "GET", "/v1/models", b"");
+    let models = parse_body(&body).get("models").and_then(Json::as_arr).unwrap().clone();
+    assert_eq!(models.len(), 1, "failed validation must not register a model");
+
+    // deleting a model that was never loaded is a 404
+    let (status, body) = roundtrip(addr, "DELETE", "/admin/models/ghost", b"");
+    assert_eq!(status, 404);
+    let err = parse_body(&body).get("error").cloned().expect("error object");
+    assert_eq!(err.get("code").and_then(Json::as_str), Some("not_found"));
+    frontend.shutdown().expect("shutdown");
+}
+
+#[test]
+fn live_swap_under_load_drops_zero_requests() {
+    // The zero-downtime contract: while closed-loop clients hammer the
+    // default model, an /admin rebuild swaps its pool generation 1 → 2.
+    // Every request must answer 200 — none dropped, none refused — because
+    // the old pool keeps serving until the new one is ready and in-flight
+    // requests drain on the old engines.
+    let frontend = start_frontend();
+    let addr = frontend.local_addr();
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let served = Arc::new(AtomicUsize::new(0));
+    let clients: Vec<_> = (0..4)
+        .map(|c| {
+            let stop = Arc::clone(&stop);
+            let served = Arc::clone(&served);
+            std::thread::spawn(move || {
+                let mut i = 0usize;
+                while !stop.load(Ordering::SeqCst) {
+                    let body = format!("{{\"seed\":{}}}", c * 1000 + i);
+                    let (status, resp) =
+                        roundtrip(addr, "POST", "/v1/models/demo/infer", body.as_bytes());
+                    assert_eq!(
+                        status,
+                        200,
+                        "request failed during live swap: {:?}",
+                        String::from_utf8_lossy(&resp)
+                    );
+                    served.fetch_add(1, Ordering::SeqCst);
+                    i += 1;
+                }
+            })
+        })
+        .collect();
+
+    // let the load settle, then swap the model under it (α 4 → 1)
+    while served.load(Ordering::SeqCst) < 8 {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let (status, body) =
+        roundtrip(addr, "POST", "/admin/models/demo", br#"{"preset":"demo","alpha":1}"#);
+    assert_eq!(status, 202, "{:?}", String::from_utf8_lossy(&body));
+
+    // wait until the swap lands (generation 2 visible in /v1 metrics)
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let (status, body) = roundtrip(addr, "GET", "/v1/models/demo/metrics", b"");
+        if status == 200 && parse_body(&body).get("generation").and_then(Json::as_usize) == Some(2)
+        {
+            break;
+        }
+        assert!(Instant::now() < deadline, "swap never landed under load");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    // keep serving across the generation boundary, then stop the storm
+    let after_swap = served.load(Ordering::SeqCst);
+    while served.load(Ordering::SeqCst) < after_swap + 8 {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    stop.store(true, Ordering::SeqCst);
+    for c in clients {
+        c.join().expect("client thread panicked (a request failed)");
+    }
+    assert!(served.load(Ordering::SeqCst) >= 16);
+    frontend.shutdown().expect("shutdown");
+}
+
+#[test]
+fn a_thousand_idle_keepalive_connections_stay_cheap() {
+    // C10k posture: ~1k mostly-idle keep-alive connections are multiplexed
+    // over the fixed pool of event workers (4 by default) — no
+    // thread-per-connection. The front-end must keep answering new
+    // requests, and the idle sockets must stay serviceable (the 60 s idle
+    // timeout is far beyond this test's lifetime).
+    let frontend = start_frontend();
+    let addr = frontend.local_addr();
+
+    // open as many as the fd budget allows (client + server side share
+    // this process's limit) — EMFILE is tolerated, but a real C10k box
+    // must get well past the worker count
+    let mut idle = Vec::new();
+    for _ in 0..1050 {
+        match TcpStream::connect(addr) {
+            Ok(s) => idle.push(s),
+            Err(_) => break,
+        }
+    }
+    assert!(
+        idle.len() >= 256,
+        "opened only {} sockets before EMFILE — too few to exercise the event loop",
+        idle.len()
+    );
+
+    // the acceptor registers them with the workers shortly after connect
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while frontend.connections() < idle.len() && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    let registered = frontend.connections();
+    assert!(
+        registered >= idle.len() / 2 && registered >= 256,
+        "front-end registered {registered} of {} idle connections",
+        idle.len()
+    );
+
+    // with every one of them idling, a fresh request still round-trips
+    let (status, _) = roundtrip(addr, "POST", "/infer", b"{\"seed\":1}");
+    assert_eq!(status, 200, "idle connections starved the event loop");
+
+    // …and a long-idle keep-alive socket is still live for its next request
+    let stream = idle.pop().expect("at least one idle socket");
+    let mut writer = stream.try_clone().expect("clone");
+    let mut conn = HttpConn::new(stream);
+    writer
+        .write_all(&http::format_request("POST", "/infer", &addr.to_string(), b"{\"seed\":2}"))
+        .expect("send on idle keep-alive socket");
+    let (status, _) = conn.read_response(&HttpLimits::default()).expect("response");
+    assert_eq!(status, 200, "idle keep-alive socket went dead");
+
+    drop(idle);
+    frontend.shutdown().expect("shutdown");
+}
