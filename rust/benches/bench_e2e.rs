@@ -72,6 +72,77 @@ fn main() {
     b.run(&format!("e2e/demo_conv_layer0{sfx}"), || engine.conv_layer(0, &img).unwrap().len());
     b.run(&format!("e2e/demo_forward{sfx}"), || engine.forward(&img).unwrap().len());
 
+    // ---- observability overhead: traffic counters on vs off --------------
+    // Two pins from the obs work: the relaxed-atomic data-movement counters
+    // are bit-invisible to the logits, and their cost stays inside a 2%
+    // budget on the demo forward median (asserted only in full runs — quick
+    // medians are too noisy to gate on). The per-forward measured weight
+    // bytes are also recorded as a pseudo-latency COUNT entry (1 ns per
+    // byte, the mac_weight_nnz_* convention) so the bench-regression gate
+    // pins Eq. 13 agreement per commit.
+    {
+        let mut on = InferenceEngine::with_options(
+            "artifacts",
+            "demo",
+            WeightMode::Dense,
+            42,
+            EngineOptions { observe: true, ..opts(SchedulePolicy::default(), 1) },
+        )
+        .expect("demo engine (observe on)");
+        let mut off = InferenceEngine::with_options(
+            "artifacts",
+            "demo",
+            WeightMode::Dense,
+            42,
+            EngineOptions { observe: false, ..opts(SchedulePolicy::default(), 1) },
+        )
+        .expect("demo engine (observe off)");
+        let lon = on.forward(&img).expect("observed forward");
+        let loff = off.forward(&img).expect("unobserved forward");
+        assert_eq!(lon, loff, "traffic counters must be bit-invisible to the logits");
+        let mon = b
+            .run(&format!("e2e/demo_forward_observe_on{sfx}"), || on.forward(&img).unwrap().len())
+            .median_ns;
+        let moff = b
+            .run(&format!("e2e/demo_forward_observe_off{sfx}"), || {
+                off.forward(&img).unwrap().len()
+            })
+            .median_ns;
+        let ratio = mon / moff;
+        println!(
+            "observe overhead: {ratio:.4}× (on {mon:.0} ns vs off {moff:.0} ns median)"
+        );
+        if !quick {
+            assert!(ratio <= 1.02, "observability overhead {ratio:.4}× exceeds the 2% budget");
+        }
+        if sfx.is_empty() {
+            // one clean forward through a fresh default-config engine: the
+            // dense demo plan streams every kernel word exactly once, so
+            // measured must equal the Eq. 13 prediction to the byte
+            let mut fresh = InferenceEngine::with_options(
+                "artifacts",
+                "demo",
+                WeightMode::Dense,
+                42,
+                EngineOptions::default(),
+            )
+            .expect("demo engine (traffic count)");
+            let _ = fresh.forward(&img).expect("traffic forward");
+            let tm = fresh.traffic_metrics().expect("traffic metrics");
+            assert_eq!(
+                tm.measured_weight_bytes(),
+                tm.predicted_weight_bytes(),
+                "demo dense weight stream must match Eq. 13 exactly"
+            );
+            b.record(
+                "e2e/demo_traffic_weight_bytes",
+                Duration::from_nanos(tm.measured_weight_bytes()),
+                1,
+            );
+            println!("  {}", tm.report());
+        }
+    }
+
     let t0 = Instant::now();
     let mut cifar = InferenceEngine::with_options(
         "artifacts",

@@ -21,14 +21,18 @@
 //! those never outlive the call. Weight generation is a pure function of
 //! `(variant, mode, seed)`, so pool replicas are bit-identical.
 
+use std::sync::Arc;
+use std::time::Instant;
+
 use super::arena::ArenaPlan;
 use super::metrics::{ArenaMetrics, LayerScheduleMetrics, ScheduleMetrics};
-use crate::analysis::{ArchParams, LayerParams};
+use crate::analysis::{transfers_flex_batch, ArchParams, LayerParams, StreamParams};
 use crate::dataflow::{optimize_layer, OptimizerConfig};
 use crate::err;
 use crate::fft::{im2tiles, overlap_add, spectral_kernels, TileGeometry};
 use crate::model::GraphOp;
 use crate::nn;
+use crate::obs::{LayerSpan, LayerTraffic, TrafficCounters, TrafficMetrics};
 use crate::runtime::{
     freq_major_planes, BackendKind, Dtype, LayerEntry, Plane, Runtime, SparseDataflow,
     SparseWeightPlanes, VariantEntry, WeightId,
@@ -88,7 +92,14 @@ impl WeightMode {
 /// residual graphs keep shortcut tensors on chip across their span, and the
 /// Eq. 12 feasibility gate must budget for them (chain variants pass the
 /// paper's implicit 1 and change nothing).
-fn sparse_dataflow_for(
+/// It also returns the layer's analysis geometry next to the chosen stream
+/// plan — the pair the observability layer needs to evaluate Eq. 13
+/// ([`transfers_flex_batch`]) for the loop order that actually executes.
+/// Infeasible-BRAM layers fall back to pure tile-major streaming
+/// (`Ps = 1`, `Ns = N`), which is also exactly the loop order the backend
+/// then runs — so measured and predicted traffic stay comparable even off
+/// the optimizer's lattice.
+fn layer_plan_for(
     l: &LayerEntry,
     fft: usize,
     tile: usize,
@@ -96,7 +107,7 @@ fn sparse_dataflow_for(
     batch: usize,
     resident: usize,
     plane: Plane,
-) -> SparseDataflow {
+) -> (LayerParams, StreamParams) {
     // Half-plane storage shrinks every per-frequency budget in the Eq. 12/13
     // feasibility/volume model: the planner sees K·(K/2+1) frequency slots
     // instead of K², so more tiles fit resident at the same BRAM point.
@@ -115,10 +126,11 @@ fn sparse_dataflow_for(
         resident_tensors: resident.max(1),
         ..OptimizerConfig::paper()
     };
-    match optimize_layer(&params, &ArchParams::paper(), &cfg, 1.0) {
-        Some(plan) => SparseDataflow::from_stream(&plan.stream),
-        None => SparseDataflow::default(),
-    }
+    let stream = match optimize_layer(&params, &ArchParams::paper(), &cfg, 1.0) {
+        Some(plan) => plan.stream,
+        None => StreamParams { ns: l.cout, ps: 1 },
+    };
+    (params, stream)
 }
 
 /// Engine construction knobs beyond `(artifacts, variant, mode, seed)`.
@@ -143,6 +155,12 @@ pub struct EngineOptions {
     /// `false` gives every tensor its own slot — the no-reuse reference
     /// mode the arena property tests compare bit-for-bit against.
     pub arena_reuse: bool,
+    /// Measure data movement and per-layer execute spans (the default).
+    /// Observation is bit-invisible to logits (pinned in tests) and costs
+    /// a handful of relaxed atomic adds per conv call (≤ 2% median e2e,
+    /// pinned by `bench_e2e`'s observe-on/off contender pair); `false`
+    /// detaches the counters entirely — the overhead-reference mode.
+    pub observe: bool,
 }
 
 impl Default for EngineOptions {
@@ -154,6 +172,7 @@ impl Default for EngineOptions {
             dtype: None,
             plane: Plane::Full,
             arena_reuse: true,
+            observe: true,
         }
     }
 }
@@ -211,6 +230,13 @@ impl EngineOptionsBuilder {
     /// Whether dead activation-arena slots are reused (default `true`).
     pub fn arena_reuse(mut self, arena_reuse: bool) -> Self {
         self.opts.arena_reuse = arena_reuse;
+        self
+    }
+
+    /// Whether data movement and per-layer spans are measured (default
+    /// `true`).
+    pub fn observe(mut self, observe: bool) -> Self {
+        self.opts.observe = observe;
         self
     }
 
@@ -277,6 +303,32 @@ impl Weights {
     }
 }
 
+/// Upper bound on retained per-layer spans: [`InferenceEngine::forward_batch`]
+/// clears the list per forward, but direct `conv_layer_batch` callers
+/// (layer microbenches) accumulate — cap so observation can never grow
+/// unbounded state.
+const MAX_LAYER_SPANS: usize = 4096;
+
+/// One conv layer's observability state: the analysis geometry and stream
+/// plan the layer executes under (fixed at startup) plus the measured /
+/// predicted accumulation across forwards.
+struct LayerTrafficState {
+    params: LayerParams,
+    stream: StreamParams,
+    acc: LayerTraffic,
+}
+
+/// Engine-side observability (present iff `EngineOptions::observe` and the
+/// backend accepted the counters — a densifying backend that can't measure
+/// returns `false` from `attach_traffic` and the engine publishes nothing
+/// rather than zeros that would read as "no traffic").
+struct ObserveState {
+    counters: Arc<TrafficCounters>,
+    layers: Vec<LayerTrafficState>,
+    /// Per-layer execute spans of the most recent forward.
+    spans: Vec<LayerSpan>,
+}
+
 /// The engine: runtime (backend + manifest) + weights + variant description.
 pub struct InferenceEngine {
     runtime: Runtime,
@@ -300,6 +352,9 @@ pub struct InferenceEngine {
     /// Static slot plan for the variant's activation graph (computed once
     /// at startup; the forward just indexes slots).
     arena: ArenaPlan,
+    /// Traffic counters + per-layer measured-vs-predicted accounting
+    /// (None when observation is off or the backend declined the counters).
+    observe: Option<ObserveState>,
 }
 
 impl InferenceEngine {
@@ -356,7 +411,8 @@ impl InferenceEngine {
         seed: u64,
         opts: EngineOptions,
     ) -> Result<Self> {
-        let EngineOptions { backend, scheduler, plan_batch, dtype, plane, arena_reuse } = opts;
+        let EngineOptions { backend, scheduler, plan_batch, dtype, plane, arena_reuse, observe } =
+            opts;
         let mut runtime = Runtime::open_with(artifacts_dir, backend)?;
         let dtype = runtime.manifest.resolve_dtype(dtype);
         // Numeric mode must be pinned before any weight upload: the backend
@@ -373,9 +429,43 @@ impl InferenceEngine {
         let weights = Weights::generate(&v, fft, k, mode, seed);
         let tile = runtime.manifest.tile;
         let arch = ArchParams::paper();
+        // Observation: hand the backend a shared counter block; a backend
+        // that can't measure (densifying PJRT) declines, and the engine
+        // then publishes no traffic metrics at all.
+        let mut observe = if observe {
+            let counters = Arc::new(TrafficCounters::new());
+            runtime.attach_traffic(Arc::clone(&counters)).then(|| ObserveState {
+                counters,
+                layers: Vec::new(),
+                spans: Vec::new(),
+            })
+        } else {
+            None
+        };
         let mut weight_ids = Vec::with_capacity(v.layers.len());
         let mut sched_layers = Vec::new();
         for (l, w) in v.layers.iter().zip(&weights.convs) {
+            // the Eq. 13 geometry + stream plan this layer executes under:
+            // sparse layers run the Alg. 1 optimum; dense layers walk the
+            // full plane per tile, which is exactly the `Ps = 1, Ns = N`
+            // stream at α = 1 — so measured == predicted holds for both.
+            let (obs_params, obs_stream) = match &w.sparse {
+                Some(sp) => {
+                    layer_plan_for(l, fft, tile, sp.alpha, plan_batch, arena.n_slots, plane)
+                }
+                None => {
+                    let (params, _) =
+                        layer_plan_for(l, fft, tile, 1, plan_batch, arena.n_slots, plane);
+                    (params, StreamParams { ns: l.cout, ps: 1 })
+                }
+            };
+            if let Some(obs) = observe.as_mut() {
+                obs.layers.push(LayerTrafficState {
+                    params: obs_params,
+                    stream: obs_stream,
+                    acc: LayerTraffic { layer: l.name.clone(), ..LayerTraffic::default() },
+                });
+            }
             let wid = match &w.sparse {
                 // Pruned layers upload in CSR form, and Alg. 1's per-layer
                 // streaming optimum becomes the backend's loop order. The
@@ -384,10 +474,7 @@ impl InferenceEngine {
                 // h only nudges the optimizer's transfer totals, so a clash
                 // can cost streaming efficiency, never correctness.
                 Some(sp) => {
-                    runtime.set_sparse_dataflow(
-                        &l.file,
-                        sparse_dataflow_for(l, fft, tile, sp.alpha, plan_batch, arena.n_slots, plane),
-                    )?;
+                    runtime.set_sparse_dataflow(&l.file, SparseDataflow::from_stream(&obs_stream))?;
                     let wid = runtime.upload_sparse(sp)?;
                     // Alg. 2: plan every (group, channel) instance at the
                     // paper's architecture point and execute in schedule
@@ -452,6 +539,7 @@ impl InferenceEngine {
             plane,
             schedule_metrics,
             arena,
+            observe,
         })
     }
 
@@ -497,6 +585,28 @@ impl InferenceEngine {
         &self.arena.metrics
     }
 
+    /// Whether this engine measures data movement (observation on AND the
+    /// backend accepted the counters).
+    pub fn observing(&self) -> bool {
+        self.observe.is_some()
+    }
+
+    /// Per-layer measured traffic next to its Eq. 13 prediction, plus the
+    /// raw counter totals — accumulated since engine construction. `None`
+    /// when observation is off or the backend can't measure.
+    pub fn traffic_metrics(&self) -> Option<TrafficMetrics> {
+        self.observe.as_ref().map(|o| TrafficMetrics {
+            layers: o.layers.iter().map(|s| s.acc.clone()).collect(),
+            totals: o.counters.snapshot(),
+        })
+    }
+
+    /// Per-layer execute spans of the most recent forward (empty when not
+    /// observing).
+    pub fn layer_spans(&self) -> &[LayerSpan] {
+        self.observe.as_ref().map(|o| o.spans.as_slice()).unwrap_or(&[])
+    }
+
     /// Run one conv layer through the backend (the "FPGA" side).
     pub fn conv_layer(&mut self, idx: usize, x: &Tensor) -> Result<Tensor> {
         let mut out = self.conv_layer_batch(idx, std::slice::from_ref(x))?;
@@ -522,7 +632,46 @@ impl InferenceEngine {
         }
         let geo = TileGeometry::new(l.h, self.fft, self.kernel_k);
         let tiles: Vec<Tensor> = xs.iter().map(|x| im2tiles(x, &geo)).collect();
+        // snapshot the counters around the backend call: the delta is this
+        // conv's measured traffic, compared against Eq. 13 evaluated at the
+        // layer's executed plan and the *actual* batch size
+        let before = self.observe.as_ref().map(|o| (o.counters.snapshot(), Instant::now()));
         let out_tiles = self.runtime.run_conv_batch(&l.file, &tiles, self.weight_ids[idx])?;
+        if let Some((start_snap, start)) = before {
+            let end = Instant::now();
+            // complex word size at the engine dtype — the byte convention
+            // shared with the backend's weight counters
+            let cb = match self.dtype {
+                Dtype::F32 => 8u64,
+                Dtype::F64 => 16u64,
+            };
+            let obs = self.observe.as_mut().expect("observe state present before the call");
+            let delta = obs.counters.snapshot().since(&start_snap);
+            let tr = transfers_flex_batch(
+                &obs.layers[idx].params,
+                &obs.layers[idx].stream,
+                xs.len(),
+            );
+            let acc = &mut obs.layers[idx].acc;
+            acc.measured.add(&delta);
+            acc.predicted_weight_bytes += tr.kernels * cb;
+            acc.predicted_input_bytes += tr.inputs * 4;
+            acc.predicted_output_bytes += tr.outputs * 4;
+            acc.forwards += 1;
+            if obs.spans.len() >= MAX_LAYER_SPANS {
+                obs.spans.clear();
+            }
+            obs.spans.push(LayerSpan {
+                name: l.name.clone(),
+                start,
+                end,
+                measured_bytes: delta.weight_bytes
+                    + delta.input_bytes
+                    + delta.output_bytes
+                    + delta.psum_bytes,
+                predicted_bytes: tr.kernels * cb + (tr.inputs + tr.outputs) * 4,
+            });
+        }
         let mut outs = Vec::with_capacity(out_tiles.len());
         for ot in &out_tiles {
             let mut out = overlap_add(ot, &geo, l.cout);
@@ -575,6 +724,11 @@ impl InferenceEngine {
     pub fn forward_batch(&mut self, images: &[Tensor]) -> Result<Vec<Vec<f32>>> {
         for image in images {
             self.check_input(image)?;
+        }
+        // spans describe one forward: the serving worker snapshots them per
+        // batch, so each forward starts a fresh list
+        if let Some(obs) = self.observe.as_mut() {
+            obs.spans.clear();
         }
         let plan = self.arena.clone(); // small: ~n_nodes usizes
         let mut slots: Vec<Option<Vec<Tensor>>> = vec![None; plan.n_slots];
@@ -637,6 +791,12 @@ impl InferenceEngine {
                         .collect()
                 }
             };
+            // arena traffic: the slot bytes this step's output occupies
+            // (per image summed over the batch)
+            if let Some(obs) = self.observe.as_ref() {
+                let bytes: usize = out.iter().map(|t| t.data().len() * 4).sum();
+                obs.counters.add_arena(bytes as u64);
+            }
             // free tensors past their last use — the plan claimed the
             // output slot from slots already free before this step, so it
             // never collides with a dying input's slot
@@ -729,6 +889,21 @@ mod tests {
             pool_after: false,
             file: "t.hlo.txt".into(),
         }
+    }
+
+    /// The backend-facing projection of [`layer_plan_for`] — what
+    /// `with_options` hands `set_sparse_dataflow`.
+    fn sparse_dataflow_for(
+        l: &LayerEntry,
+        fft: usize,
+        tile: usize,
+        alpha: usize,
+        batch: usize,
+        resident: usize,
+        plane: Plane,
+    ) -> SparseDataflow {
+        let (_, stream) = layer_plan_for(l, fft, tile, alpha, batch, resident, plane);
+        SparseDataflow::from_stream(&stream)
     }
 
     #[test]

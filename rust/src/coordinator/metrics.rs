@@ -193,6 +193,10 @@ pub struct Metrics {
     /// Static activation-arena accounting of the worker's engine (None
     /// until an engine publishes its plan).
     pub arena: Option<ArenaMetrics>,
+    /// Measured data movement vs the Eq. 13 prediction, per conv layer
+    /// (None when the engine isn't observing — `observe=false` or a
+    /// backend that can't measure).
+    pub traffic: Option<crate::obs::TrafficMetrics>,
 }
 
 impl Metrics {
@@ -258,6 +262,13 @@ impl Metrics {
         }
         if self.arena.is_none() {
             self.arena = other.arena.clone();
+        }
+        // traffic is *measured* per worker, so unlike schedule/arena it
+        // merges additively (bytes across the whole pool)
+        match (&mut self.traffic, &other.traffic) {
+            (Some(dst), Some(src)) => dst.merge_from(src),
+            (dst @ None, Some(src)) => *dst = Some(src.clone()),
+            _ => {}
         }
         self.started = match (self.started, other.started) {
             (Some(a), Some(b)) => Some(a.min(b)),
@@ -375,6 +386,9 @@ impl Metrics {
         }
         if let Some(a) = &self.arena {
             line.push_str(&format!(" | {}", a.report()));
+        }
+        if let Some(t) = &self.traffic {
+            line.push_str(&format!(" | {}", t.report()));
         }
         line
     }

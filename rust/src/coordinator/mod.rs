@@ -23,6 +23,10 @@
 //!   in one process (multi-tenant serving), each with its own admission
 //!   quota, plus the zero-downtime weight-swap protocol behind
 //!   `POST /admin/models/<name>`.
+//!
+//! Observability (measured data movement vs the paper's Eq. 13 prediction,
+//! per-request trace spans, Prometheus exposition) lives in [`crate::obs`];
+//! the engine hosts the counters and the server pool hosts the trace ring.
 
 pub mod arena;
 pub mod batcher;
@@ -41,3 +45,7 @@ pub use registry::{
     AdminError, AdmitGuard, ModelFetch, ModelPool, ModelRegistry, ModelSpec, ModelStatus,
 };
 pub use server::{Client, Response, Server, ServerConfig};
+
+pub use crate::obs::{
+    LayerTraffic, RequestTrace, Span, TraceConfig, TraceRing, TrafficMetrics, WireTiming,
+};

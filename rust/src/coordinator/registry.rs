@@ -36,6 +36,7 @@ use super::engine::{EngineOptions, WeightMode};
 use super::metrics::{AdmissionMetrics, PoolMetrics};
 use super::server::{Client, Server, ServerConfig};
 use crate::err;
+use crate::obs::{TraceConfig, TraceRing};
 use crate::runtime::{Dtype, Plane, Runtime};
 use crate::util::error::Result;
 
@@ -93,6 +94,8 @@ pub struct ModelPool {
     admitted: AtomicU64,
     rejected: AtomicU64,
     client: Client,
+    /// The pool's trace-span ring (`GET /v1/models/<name>/trace`).
+    trace: Arc<TraceRing>,
     /// Owns the engine pool; dropping the `ModelPool` gracefully shuts the
     /// workers down (dropped only by drain threads, never on a connection
     /// worker — see the module docs).
@@ -138,6 +141,11 @@ impl ModelPool {
     /// Pool latency/schedule metrics snapshot.
     pub fn pool_metrics(&self) -> Result<PoolMetrics> {
         self.client.pool_metrics()
+    }
+
+    /// The pool's per-request trace ring (shared with its workers).
+    pub fn trace(&self) -> &Arc<TraceRing> {
+        &self.trace
     }
 }
 
@@ -577,8 +585,10 @@ fn build_pool(
         batcher: spec.batcher,
         workers: spec.workers,
         engine: spec.engine,
+        trace: TraceConfig::default(),
     })?;
     let client = server.client();
+    let trace = server.trace();
     Ok(ModelPool {
         name: name.to_string(),
         generation,
@@ -592,6 +602,7 @@ fn build_pool(
         admitted: AtomicU64::new(0),
         rejected: AtomicU64::new(0),
         client,
+        trace,
         _server: server,
     })
 }

@@ -30,6 +30,7 @@ use super::batcher::{Batcher, BatcherConfig};
 use super::engine::{EngineOptions, InferenceEngine, WeightMode};
 use super::metrics::{Metrics, PoolMetrics};
 use crate::err;
+use crate::obs::{RequestTrace, Span, TraceConfig, TraceRing, WireTiming};
 use crate::runtime::{Dtype, Plane};
 use crate::tensor::Tensor;
 use crate::util::error::Result;
@@ -54,6 +55,9 @@ pub struct ServerConfig {
     /// overridden by the batcher's `max_batch` at worker startup so Alg. 1
     /// always plans for the largest batch the pool can close.
     pub engine: EngineOptions,
+    /// Trace-ring sizing shared by every worker (capacity, slow retention,
+    /// slow threshold). Observation-only — never alters scheduling.
+    pub trace: TraceConfig,
 }
 
 impl Default for ServerConfig {
@@ -66,6 +70,7 @@ impl Default for ServerConfig {
             batcher: BatcherConfig::default(),
             workers: 1,
             engine: EngineOptions::default(),
+            trace: TraceConfig::default(),
         }
     }
 }
@@ -73,6 +78,9 @@ impl Default for ServerConfig {
 struct Request {
     image: Tensor,
     submitted: Instant,
+    /// Wire-side accept/parse stamps from the HTTP front-end; `None` for
+    /// direct `Client::infer` callers (their trace starts at `submitted`).
+    wire: Option<WireTiming>,
     reply: mpsc::Sender<Result<Response>>,
 }
 
@@ -111,7 +119,12 @@ enum Msg {
 }
 
 enum WorkerMsg {
-    Batch(Vec<Request>),
+    Batch {
+        batch: Vec<Request>,
+        /// When the dispatcher closed the batch — the boundary between the
+        /// `queue` and `batch-close` spans of every request riding in it.
+        closed: Instant,
+    },
     Snapshot(mpsc::Sender<Metrics>),
     Shutdown,
 }
@@ -128,6 +141,9 @@ pub struct Server {
     tx: mpsc::Sender<Msg>,
     dispatcher: Option<std::thread::JoinHandle<Result<()>>>,
     workers: Vec<std::thread::JoinHandle<Result<()>>>,
+    /// Pool-wide trace store; workers record into it, the HTTP front-end
+    /// reads from it (`GET /v1/models/<name>/trace`).
+    trace: Arc<TraceRing>,
 }
 
 /// Cheap cloneable client handle.
@@ -139,18 +155,34 @@ pub struct Client {
 impl Client {
     /// Blocking inference call.
     pub fn infer(&self, image: Tensor) -> Result<Response> {
-        let (reply, rx) = mpsc::channel();
-        self.tx
-            .send(Msg::Infer(Request { image, submitted: Instant::now(), reply }))
-            .map_err(|_| err!("server stopped"))?;
+        let rx = self.infer_async(image)?;
         rx.recv().map_err(|_| err!("server dropped request"))?
     }
 
     /// Fire-and-collect: submit without waiting; returns the receiver.
     pub fn infer_async(&self, image: Tensor) -> Result<mpsc::Receiver<Result<Response>>> {
+        self.submit(image, None)
+    }
+
+    /// Like [`Client::infer_async`], but carries the HTTP front-end's
+    /// accept/parse stamps so the request's trace includes the wire-side
+    /// `parse` span and roots at `accepted` instead of `submitted`.
+    pub fn infer_async_timed(
+        &self,
+        image: Tensor,
+        wire: WireTiming,
+    ) -> Result<mpsc::Receiver<Result<Response>>> {
+        self.submit(image, Some(wire))
+    }
+
+    fn submit(
+        &self,
+        image: Tensor,
+        wire: Option<WireTiming>,
+    ) -> Result<mpsc::Receiver<Result<Response>>> {
         let (reply, rx) = mpsc::channel();
         self.tx
-            .send(Msg::Infer(Request { image, submitted: Instant::now(), reply }))
+            .send(Msg::Infer(Request { image, submitted: Instant::now(), wire, reply }))
             .map_err(|_| err!("server stopped"))?;
         Ok(rx)
     }
@@ -172,6 +204,7 @@ impl Server {
     /// Any engine construction error fails the whole startup.
     pub fn start(cfg: ServerConfig) -> Result<Server> {
         let n = cfg.workers.max(1);
+        let trace = Arc::new(TraceRing::new(cfg.trace));
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         let mut slots = Vec::with_capacity(n);
         let mut workers = Vec::with_capacity(n);
@@ -181,9 +214,10 @@ impl Server {
             let wcfg = cfg.clone();
             let wready = ready_tx.clone();
             let wload = load.clone();
+            let wring = Arc::clone(&trace);
             let handle = std::thread::Builder::new()
                 .name(format!("sf-exec-{wi}"))
-                .spawn(move || worker_loop(wi, wcfg, wrx, wready, wload))
+                .spawn(move || worker_loop(wi, wcfg, wrx, wready, wload, wring))
                 .expect("spawn executor worker");
             slots.push(WorkerSlot { tx: wtx, load });
             workers.push(handle);
@@ -202,11 +236,16 @@ impl Server {
             .name("sf-dispatch".into())
             .spawn(move || dispatcher_loop(batcher_cfg, rx, slots))
             .expect("spawn dispatcher");
-        Ok(Server { tx, dispatcher: Some(dispatcher), workers })
+        Ok(Server { tx, dispatcher: Some(dispatcher), workers, trace })
     }
 
     pub fn client(&self) -> Client {
         Client { tx: self.tx.clone() }
+    }
+
+    /// The pool's trace-span ring (shared handle; cheap to clone).
+    pub fn trace(&self) -> Arc<TraceRing> {
+        Arc::clone(&self.trace)
     }
 
     /// Merged metrics snapshot across the pool.
@@ -252,6 +291,7 @@ fn worker_loop(
     rx: mpsc::Receiver<WorkerMsg>,
     ready: mpsc::Sender<Result<()>>,
     load: Arc<AtomicUsize>,
+    ring: Arc<TraceRing>,
 ) -> Result<()> {
     let mut engine = match InferenceEngine::with_options(
         &cfg.artifacts_dir,
@@ -286,8 +326,9 @@ fn worker_loop(
     let (dtype, plane) = (engine.dtype(), engine.plane());
     while let Ok(msg) = rx.recv() {
         match msg {
-            WorkerMsg::Batch(batch) => {
+            WorkerMsg::Batch { batch, closed } => {
                 let size = batch.len();
+                let batch_id = ring.next_batch_id();
                 metrics.record_batch(size);
                 // queue-wait ends (and execute begins) for the whole batch
                 // here: everything before this instant was dispatcher/
@@ -312,7 +353,23 @@ fn worker_loop(
                     engine.forward_batch(&images)
                 };
                 let execute = exec_start.elapsed();
+                let exec_end = exec_start + execute;
                 let per_image = execute / images.len().max(1) as u32;
+                // Per-layer execute intervals from the engine's last
+                // forward, rebased onto the ring epoch. Shared by every
+                // request in the closed batch — the batch ran as one fused
+                // forward, so the layer timeline is genuinely common.
+                let layer_spans: Vec<Span> = engine
+                    .layer_spans()
+                    .iter()
+                    .map(|ls| Span {
+                        name: format!("layer:{}", ls.name),
+                        start_us: ring.to_us(ls.start),
+                        end_us: ring.to_us(ls.end),
+                        measured_bytes: ls.measured_bytes,
+                        predicted_bytes: ls.predicted_bytes,
+                    })
+                    .collect();
                 let mut results: std::vec::IntoIter<Result<Vec<f32>>> = match outcome {
                     Ok(v) => v.into_iter().map(Ok).collect::<Vec<_>>(),
                     // an engine-level failure fails every request that
@@ -346,12 +403,71 @@ fn worker_loop(
                                 }
                             }),
                     };
+                    let ok = result.is_ok();
                     let _ = req.reply.send(result);
                     load.fetch_sub(1, Ordering::Relaxed);
+                    if ok {
+                        // Assemble the span taxonomy: accept → parse →
+                        // queue → batch-close → execute (+ per-layer) →
+                        // respond. Direct Client callers have no wire
+                        // stamps, so their root starts at `submitted`.
+                        let respond_end = Instant::now();
+                        let root_start =
+                            req.wire.map(|w| w.accepted).unwrap_or(req.submitted);
+                        let mut spans = Vec::with_capacity(layer_spans.len() + 6);
+                        spans.push(Span::plain(
+                            "request",
+                            ring.to_us(root_start),
+                            ring.to_us(respond_end),
+                        ));
+                        if let Some(w) = req.wire {
+                            spans.push(Span::plain(
+                                "parse",
+                                ring.to_us(w.accepted),
+                                ring.to_us(w.parsed),
+                            ));
+                        }
+                        spans.push(Span::plain(
+                            "queue",
+                            ring.to_us(req.submitted),
+                            ring.to_us(closed),
+                        ));
+                        spans.push(Span::plain(
+                            "batch-close",
+                            ring.to_us(closed),
+                            ring.to_us(exec_start),
+                        ));
+                        spans.push(Span::plain(
+                            "execute",
+                            ring.to_us(exec_start),
+                            ring.to_us(exec_end),
+                        ));
+                        spans.extend(layer_spans.iter().cloned());
+                        spans.push(Span::plain(
+                            "respond",
+                            ring.to_us(exec_end),
+                            ring.to_us(respond_end),
+                        ));
+                        let latency_us = spans[0].duration_us();
+                        ring.record(RequestTrace {
+                            request: ring.next_request_id(),
+                            batch: batch_id,
+                            worker: id,
+                            model: cfg.variant.clone(),
+                            batch_size: size,
+                            latency_us,
+                            slow: false, // stamped by record()
+                            spans,
+                        });
+                    }
                 }
             }
             WorkerMsg::Snapshot(tx) => {
-                let _ = tx.send(metrics.clone());
+                let mut m = metrics.clone();
+                // Traffic accounting lives in the engine (it owns the
+                // counters); inject the live totals into each snapshot.
+                m.traffic = engine.traffic_metrics();
+                let _ = tx.send(m);
             }
             WorkerMsg::Shutdown => break,
         }
@@ -369,6 +485,9 @@ fn dispatcher_loop(
     let mut batcher: Batcher<Request> = Batcher::new(cfg);
 
     let dispatch = |mut batch: Vec<Request>| {
+        // The batch is closed *now*; every request in it shares this
+        // queue/batch-close boundary in its trace.
+        let closed = Instant::now();
         loop {
             // least-loaded pick: `load` counts dispatched-but-unanswered
             // requests; Relaxed is fine — it's a heuristic, not a lock
@@ -382,14 +501,14 @@ fn dispatcher_loop(
                 return;
             }
             slot.load.fetch_add(batch.len(), Ordering::Relaxed);
-            match slot.tx.send(WorkerMsg::Batch(batch)) {
+            match slot.tx.send(WorkerMsg::Batch { batch, closed }) {
                 Ok(()) => return,
                 Err(mpsc::SendError(msg)) => {
                     // the worker died: poison its load so it is never
                     // picked again and retry the batch on a survivor
                     slot.load.store(usize::MAX, Ordering::Relaxed);
                     match msg {
-                        WorkerMsg::Batch(b) => batch = b,
+                        WorkerMsg::Batch { batch: b, .. } => batch = b,
                         _ => return,
                     }
                 }

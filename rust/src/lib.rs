@@ -66,6 +66,9 @@
 //!   (`POST /infer`, `GET /metrics`, `GET /healthz`) with admission
 //!   control over the engine pool, plus the open/closed-loop load
 //!   generator.
+//! * [`obs`] — observability: backend data-movement counters compared
+//!   against the Eq. 13 prediction, the per-request trace-span ring, and
+//!   the Prometheus text exposition.
 //! * [`report`] — ASCII/CSV emitters for every paper table and figure.
 
 pub mod analysis;
@@ -75,6 +78,7 @@ pub mod fft;
 pub mod model;
 pub mod net;
 pub mod nn;
+pub mod obs;
 pub mod report;
 pub mod runtime;
 pub mod schedule;

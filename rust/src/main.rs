@@ -551,10 +551,33 @@ fn infer(mut args: Args) -> Result<()> {
     );
     let dtype_name = args.opt("dtype", "", "accumulation dtype (f32|f64; empty = manifest default)");
     let plane_name = args.opt("plane", "full", "spectral storage plane (full|half)");
+    let no_observe = args.opt_bool(
+        "no-observe",
+        "disable the data-movement counters (logits are identical either way)",
+    );
+    let trace = args.opt_bool("trace", "print the per-layer execute spans of the forward");
+    let traffic_gate = args.opt(
+        "traffic-gate",
+        "",
+        "fail unless every layer's measured/Eq.13 weight ratio is within lo,hi (e.g. 0.5,2.0)",
+    );
     let backend = parse_backend(&backend_name, threads)?;
     let scheduler = SchedulePolicy::parse(&scheduler_name)?;
     let dtype = parse_dtype(&dtype_name)?;
     let plane = Plane::parse(&plane_name)?;
+    let traffic_gate: Option<(f64, f64)> = if traffic_gate.is_empty() {
+        None
+    } else {
+        let (lo, hi) = traffic_gate
+            .split_once(',')
+            .ok_or_else(|| err!("--traffic-gate wants two bounds, e.g. 0.5,2.0"))?;
+        let parse = |v: &str| {
+            v.trim()
+                .parse::<f64>()
+                .map_err(|_| err!("--traffic-gate bounds must be numbers, got {v:?}"))
+        };
+        Some((parse(lo)?, parse(hi)?))
+    };
     args.maybe_help("infer: single-image forward pass through the spectral backend");
     // one extra (cheap) manifest read: the engine re-opens internally, but
     // the mode must be known before the engine can be constructed
@@ -572,6 +595,7 @@ fn infer(mut args: Args) -> Result<()> {
             .scheduler(scheduler)
             .dtype(dtype)
             .plane(plane)
+            .observe(!no_observe)
             .build(),
     )?;
     println!(
@@ -620,5 +644,71 @@ fn infer(mut args: Args) -> Result<()> {
             .map(|(i, _)| i)
             .unwrap_or(0)
     );
+    if trace {
+        let spans = engine.layer_spans();
+        if spans.is_empty() {
+            println!("trace: no layer spans recorded (is --no-observe set?)");
+        } else {
+            let epoch = spans.iter().map(|s| s.start).min().unwrap();
+            let mut t = Table::new(
+                "Layer trace (last forward)",
+                &["span", "start µs", "dur µs", "measured B", "Eq.13 B"],
+            );
+            for sp in spans {
+                t.row(vec![
+                    format!("layer:{}", sp.name),
+                    sp.start.duration_since(epoch).as_micros().to_string(),
+                    sp.end.duration_since(sp.start).as_micros().to_string(),
+                    sp.measured_bytes.to_string(),
+                    sp.predicted_bytes.to_string(),
+                ]);
+            }
+            println!("{}", t.render());
+        }
+    }
+    match engine.traffic_metrics() {
+        Some(tm) => {
+            // measured on the backend boundary vs the Eq. 13 prediction;
+            // exact byte counts (not fmt_bytes) so CI gates stay debuggable
+            let mut t = Table::new(
+                "Data movement per forward — measured vs Eq. 13 (bytes)",
+                &["layer", "weights", "Eq.13 weights", "ratio", "inputs", "outputs", "psums"],
+            );
+            for l in &tm.layers {
+                t.row(vec![
+                    l.layer.clone(),
+                    l.measured.weight_bytes.to_string(),
+                    l.predicted_weight_bytes.to_string(),
+                    format!("{:.3}", l.weight_ratio()),
+                    l.measured.input_bytes.to_string(),
+                    l.measured.output_bytes.to_string(),
+                    l.measured.psum_bytes.to_string(),
+                ]);
+            }
+            println!("{}", t.render());
+            println!("{}", tm.report());
+            if let Some((lo, hi)) = traffic_gate {
+                for l in &tm.layers {
+                    if l.predicted_weight_bytes == 0 {
+                        continue;
+                    }
+                    let r = l.weight_ratio();
+                    if r < lo || r > hi {
+                        return Err(err!(
+                            "traffic gate: layer {} measured/Eq.13 weight ratio {r:.3} \
+                             outside [{lo}, {hi}]",
+                            l.layer
+                        ));
+                    }
+                }
+                println!("traffic gate OK: every layer weight ratio within [{lo}, {hi}]");
+            }
+        }
+        None => {
+            if traffic_gate.is_some() {
+                return Err(err!("--traffic-gate needs the counters; drop --no-observe"));
+            }
+        }
+    }
     Ok(())
 }

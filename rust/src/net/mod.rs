@@ -25,6 +25,10 @@
 //!   [`crate::coordinator::ModelRegistry`], with per-model admission
 //!   control (bounded in-flight budget → 429, connection cap → 503),
 //!   drain mode, and graceful shutdown that flushes every pool's batcher.
+//!   Observability rides the same surface: `GET /v1/metrics`
+//!   (`?format=prometheus` for the text exposition) and
+//!   `GET /v1/models/<name>/trace` for per-request spans with measured
+//!   vs Eq. 13-predicted data movement (see [`crate::obs`]).
 //! * [`loadgen`] — open-loop (fixed arrival rate, latency from scheduled
 //!   arrival) and closed-loop (fixed concurrency) drivers with percentile
 //!   + histogram reporting — single-model or mixed round-robin across

@@ -41,6 +41,7 @@ use crate::coordinator::{
     PoolMetrics, Response, ScheduleMetrics,
 };
 use crate::err;
+use crate::obs::{RequestTrace, TrafficMetrics};
 use crate::runtime::{Dtype, Plane};
 use crate::schedule::SchedulePolicy;
 use crate::tensor::Tensor;
@@ -192,7 +193,7 @@ fn tensor_from_json(j: &Json, input_shape: [usize; 3]) -> Result<Tensor> {
 /// Keys a `POST /admin/models/<name>` body may carry. Anything else is a
 /// hard error — an admin API that silently ignores a typo'd knob is worse
 /// than one that rejects it.
-const MODEL_SPEC_KEYS: [&str; 11] = [
+const MODEL_SPEC_KEYS: [&str; 12] = [
     "preset",
     "alpha",
     "seed",
@@ -204,6 +205,7 @@ const MODEL_SPEC_KEYS: [&str; 11] = [
     "plane",
     "max_inflight",
     "arena_reuse",
+    "observe",
 ];
 
 /// Parse a `POST /admin/models/<name>` body into a [`ModelSpec`].
@@ -284,6 +286,12 @@ pub fn parse_model_spec(body: &[u8], name: &str) -> Result<ModelSpec> {
             .as_bool()
             .ok_or_else(|| err!("\"arena_reuse\" must be a boolean"))?;
         engine = engine.arena_reuse(arena);
+    }
+    if let Some(observe) = j.get("observe") {
+        let observe = observe
+            .as_bool()
+            .ok_or_else(|| err!("\"observe\" must be a boolean"))?;
+        engine = engine.observe(observe);
     }
     spec.engine = engine.build();
     Ok(spec)
@@ -370,6 +378,86 @@ fn arena_to_json(am: &ArenaMetrics) -> Json {
     ])
 }
 
+/// Measured backend-boundary traffic next to the Eq. 13 prediction for the
+/// executed plan, per conv layer plus engine totals.
+fn traffic_to_json(t: &TrafficMetrics) -> Json {
+    obj(vec![
+        (
+            "layers",
+            arr(t
+                .layers
+                .iter()
+                .map(|l| {
+                    obj(vec![
+                        ("layer", s(&l.layer)),
+                        ("measured_weight_bytes", num(l.measured.weight_bytes as f64)),
+                        ("measured_input_bytes", num(l.measured.input_bytes as f64)),
+                        ("measured_output_bytes", num(l.measured.output_bytes as f64)),
+                        ("measured_psum_bytes", num(l.measured.psum_bytes as f64)),
+                        ("predicted_weight_bytes", num(l.predicted_weight_bytes as f64)),
+                        ("predicted_input_bytes", num(l.predicted_input_bytes as f64)),
+                        ("predicted_output_bytes", num(l.predicted_output_bytes as f64)),
+                        ("weight_ratio", num(l.weight_ratio())),
+                        ("forwards", num(l.forwards as f64)),
+                    ])
+                })
+                .collect()),
+        ),
+        (
+            "totals",
+            obj(vec![
+                ("weight_bytes", num(t.totals.weight_bytes as f64)),
+                ("input_bytes", num(t.totals.input_bytes as f64)),
+                ("output_bytes", num(t.totals.output_bytes as f64)),
+                ("psum_bytes", num(t.totals.psum_bytes as f64)),
+                ("arena_bytes", num(t.totals.arena_bytes as f64)),
+            ]),
+        ),
+    ])
+}
+
+/// Render the `GET /v1/models/<name>/trace` reply: newest-first traces with
+/// their span trees, plus the ring's drop counter and slow threshold.
+pub fn traces_to_json(traces: &[RequestTrace], dropped: u64, slow_threshold_us: u64) -> Json {
+    obj(vec![
+        (
+            "traces",
+            arr(traces
+                .iter()
+                .map(|t| {
+                    obj(vec![
+                        ("request", num(t.request as f64)),
+                        ("batch", num(t.batch as f64)),
+                        ("worker", num(t.worker as f64)),
+                        ("model", s(&t.model)),
+                        ("batch_size", num(t.batch_size as f64)),
+                        ("latency_us", num(t.latency_us as f64)),
+                        ("slow", Json::Bool(t.slow)),
+                        (
+                            "spans",
+                            arr(t
+                                .spans
+                                .iter()
+                                .map(|sp| {
+                                    obj(vec![
+                                        ("name", s(&sp.name)),
+                                        ("start_us", num(sp.start_us as f64)),
+                                        ("end_us", num(sp.end_us as f64)),
+                                        ("measured_bytes", num(sp.measured_bytes as f64)),
+                                        ("predicted_bytes", num(sp.predicted_bytes as f64)),
+                                    ])
+                                })
+                                .collect()),
+                        ),
+                    ])
+                })
+                .collect()),
+        ),
+        ("dropped", num(dropped as f64)),
+        ("slow_threshold_us", num(slow_threshold_us as f64)),
+    ])
+}
+
 fn metrics_to_json(m: &Metrics) -> Json {
     obj(vec![
         ("count", num(m.count() as f64)),
@@ -401,6 +489,7 @@ fn metrics_to_json(m: &Metrics) -> Json {
         ),
         ("schedule", m.schedule.as_ref().map(schedule_to_json).unwrap_or(Json::Null)),
         ("arena", m.arena.as_ref().map(arena_to_json).unwrap_or(Json::Null)),
+        ("traffic", m.traffic.as_ref().map(traffic_to_json).unwrap_or(Json::Null)),
     ])
 }
 
@@ -599,6 +688,90 @@ mod tests {
     }
 
     #[test]
+    fn traffic_metrics_serialize_when_present() {
+        use crate::obs::{LayerTraffic, TrafficSnapshot};
+        let mut m = Metrics::new();
+        m.traffic = Some(TrafficMetrics {
+            layers: vec![LayerTraffic {
+                layer: "conv1".into(),
+                measured: TrafficSnapshot { weight_bytes: 2048, ..Default::default() },
+                predicted_weight_bytes: 1024,
+                predicted_input_bytes: 512,
+                predicted_output_bytes: 256,
+                forwards: 2,
+            }],
+            totals: TrafficSnapshot {
+                weight_bytes: 2048,
+                input_bytes: 100,
+                output_bytes: 200,
+                psum_bytes: 300,
+                arena_bytes: 400,
+            },
+        });
+        let pm = PoolMetrics::from_workers(vec![m]);
+        let j = pool_metrics_to_json(&pm, Dtype::F32, Plane::Full);
+        let t = j.get("merged").unwrap().get("traffic").unwrap();
+        let l = &t.get("layers").unwrap().as_arr().unwrap()[0];
+        assert_eq!(l.get("layer").unwrap().as_str(), Some("conv1"));
+        assert_eq!(l.get("measured_weight_bytes").unwrap().as_usize(), Some(2048));
+        assert_eq!(l.get("predicted_weight_bytes").unwrap().as_usize(), Some(1024));
+        assert_eq!(l.get("weight_ratio").unwrap().as_f64(), Some(2.0));
+        assert_eq!(l.get("forwards").unwrap().as_usize(), Some(2));
+        let tot = t.get("totals").unwrap();
+        assert_eq!(tot.get("psum_bytes").unwrap().as_usize(), Some(300));
+        assert_eq!(tot.get("arena_bytes").unwrap().as_usize(), Some(400));
+        assert!(Json::parse(&j.to_string()).is_ok());
+        // absent traffic is null, not missing (same shape as schedule/arena)
+        let j = pool_metrics_to_json(
+            &PoolMetrics::from_workers(vec![Metrics::new()]),
+            Dtype::F32,
+            Plane::Full,
+        );
+        assert_eq!(j.get("merged").unwrap().get("traffic"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn traces_serialize_with_spans_and_ring_stats() {
+        use crate::obs::Span;
+        let t = RequestTrace {
+            request: 7,
+            batch: 3,
+            worker: 1,
+            model: "demo".into(),
+            batch_size: 2,
+            latency_us: 1500,
+            slow: true,
+            spans: vec![
+                Span::plain("request", 0, 1500),
+                Span {
+                    name: "layer:conv1".into(),
+                    start_us: 100,
+                    end_us: 900,
+                    measured_bytes: 4096,
+                    predicted_bytes: 4096,
+                },
+            ],
+        };
+        let j = traces_to_json(&[t], 2, 50_000);
+        let back = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(back.get("dropped").unwrap().as_usize(), Some(2));
+        assert_eq!(back.get("slow_threshold_us").unwrap().as_usize(), Some(50_000));
+        let traces = back.get("traces").unwrap().as_arr().unwrap();
+        assert_eq!(traces.len(), 1);
+        assert_eq!(traces[0].get("request").unwrap().as_usize(), Some(7));
+        assert_eq!(traces[0].get("batch").unwrap().as_usize(), Some(3));
+        assert_eq!(traces[0].get("slow").unwrap().as_bool(), Some(true));
+        let spans = traces[0].get("spans").unwrap().as_arr().unwrap();
+        assert_eq!(spans.len(), 2);
+        assert_eq!(spans[0].get("name").unwrap().as_str(), Some("request"));
+        assert_eq!(spans[1].get("name").unwrap().as_str(), Some("layer:conv1"));
+        assert_eq!(spans[1].get("measured_bytes").unwrap().as_usize(), Some(4096));
+        // an empty ring renders an empty list, still valid json
+        let j = traces_to_json(&[], 0, 50_000);
+        assert!(j.get("traces").unwrap().as_arr().unwrap().is_empty());
+    }
+
+    #[test]
     fn batch_body_parses_in_order_and_is_bounded() {
         let shape = [1usize, 4, 4];
         // a batch of seed bodies parses to the same tensors, in order
@@ -656,6 +829,12 @@ mod tests {
         assert_eq!(spec.engine.dtype, Some(Dtype::F64));
         assert_eq!(spec.engine.plane, Plane::Half);
         assert!(!spec.engine.arena_reuse);
+
+        // "observe" rides the same builder path as the other engine knobs
+        let spec = parse_model_spec(br#"{"observe":false}"#, "m").unwrap();
+        assert!(!spec.engine.observe);
+        assert!(parse_model_spec(br#"{"observe":1}"#, "m").is_err());
+        assert!(parse_model_spec(b"", "m").unwrap().engine.observe, "observation defaults on");
 
         // unknown keys are rejected (typo'd admin knobs must not be ignored)
         assert!(parse_model_spec(br#"{"workrs":2}"#, "m").is_err());

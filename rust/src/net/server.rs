@@ -51,8 +51,9 @@ use super::proto;
 use crate::coordinator::{
     AdminError, AdmitGuard, ModelFetch, ModelRegistry, Response,
 };
+use crate::obs::{PromWriter, WireTiming};
 use crate::util::error::{Context, Result};
-use crate::util::json::{num, obj, s};
+use crate::util::json::{arr, num, obj, s};
 
 /// Front-end configuration (the serving knobs the wire adds on top of the
 /// registry's per-model specs).
@@ -313,10 +314,15 @@ struct Pending {
     _guard: AdmitGuard,
 }
 
+/// Content type of the Prometheus text exposition format 0.0.4.
+const PROM_CTYPE: &str = "text/plain; version=0.0.4";
+
 /// What handling one parsed request produced.
 enum Step {
-    /// Answer immediately.
+    /// Answer immediately with a JSON body.
     Respond(u16, String),
+    /// Answer immediately with an explicit content type (Prometheus text).
+    RespondText(u16, &'static str, String),
     /// An admitted inference: poll it to completion from the event loop.
     Execute(Box<Pending>),
 }
@@ -374,15 +380,21 @@ impl Conn {
         !self.closed && self.out_pos < self.out.len()
     }
 
-    /// Append a rendered response to the output buffer.
+    /// Append a rendered JSON response to the output buffer.
     fn enqueue(&mut self, status: u16, body: &str, keep: bool, limits: &HttpLimits) {
-        let _ = http::write_response(
-            &mut self.out,
-            status,
-            "application/json",
-            body.as_bytes(),
-            keep,
-        );
+        self.enqueue_typed(status, "application/json", body, keep, limits);
+    }
+
+    /// Append a rendered response with an explicit content type.
+    fn enqueue_typed(
+        &mut self,
+        status: u16,
+        ctype: &str,
+        body: &str,
+        keep: bool,
+        limits: &HttpLimits,
+    ) {
+        let _ = http::write_response(&mut self.out, status, ctype, body.as_bytes(), keep);
         if !keep {
             self.begin_close(limits);
         }
@@ -460,6 +472,9 @@ impl Conn {
                     match dispatch(&req, keep, registry, gate) {
                         Step::Respond(status, body) => {
                             self.enqueue(status, &body, keep, &cfg.limits)
+                        }
+                        Step::RespondText(status, ctype, body) => {
+                            self.enqueue_typed(status, ctype, &body, keep, &cfg.limits)
                         }
                         Step::Execute(pending) => self.pending = Some(pending),
                     }
@@ -676,10 +691,16 @@ pub enum Route {
     LegacyInfer,
     /// `GET /v1/models`.
     ListModels,
+    /// `GET /v1/metrics` — process-wide metrics; `?format=prometheus`
+    /// renders the text exposition instead of JSON.
+    Metrics,
     /// `POST /v1/models/<name>/infer`.
     Infer(String),
     /// `GET /v1/models/<name>/metrics`.
     ModelMetrics(String),
+    /// `GET /v1/models/<name>/trace` — recent trace spans (`?n=K`,
+    /// `?slow=1` for the slow-retention ring).
+    ModelTrace(String),
     /// `POST /admin/models/<name>` — load or live-swap a model.
     AdminLoad(String),
     /// `DELETE /admin/models/<name>` — drain and unload.
@@ -698,14 +719,33 @@ fn valid_model_name(name: &str) -> bool {
             .all(|b| b.is_ascii_alphanumeric() || b == b'-' || b == b'_' || b == b'.')
 }
 
-/// Map `(method, path)` to a [`Route`].
+/// Split a request target into its path and query halves
+/// (`/a/b?x=1&y=2` → `("/a/b", Some("x=1&y=2"))`).
+pub fn split_query(target: &str) -> (&str, Option<&str>) {
+    match target.split_once('?') {
+        Some((path, query)) => (path, Some(query)),
+        None => (target, None),
+    }
+}
+
+/// First value of `key` in a query string; bare keys (`?slow`) yield `""`.
+pub fn query_param<'a>(query: Option<&'a str>, key: &str) -> Option<&'a str> {
+    query?.split('&').find_map(|pair| {
+        let (k, v) = pair.split_once('=').unwrap_or((pair, ""));
+        (k == key).then_some(v)
+    })
+}
+
+/// Map `(method, path)` to a [`Route`]. `path` is query-free — callers
+/// split with [`split_query`] first.
 pub fn route(method: &str, path: &str) -> Route {
     match (method, path) {
         ("GET", "/healthz") => return Route::Healthz,
         ("GET", "/metrics") => return Route::LegacyMetrics,
         ("POST", "/infer") => return Route::LegacyInfer,
         ("GET", "/v1/models") => return Route::ListModels,
-        (_, "/healthz") | (_, "/metrics") | (_, "/v1/models") => {
+        ("GET", "/v1/metrics") => return Route::Metrics,
+        (_, "/healthz") | (_, "/metrics") | (_, "/v1/models") | (_, "/v1/metrics") => {
             return Route::MethodNotAllowed("GET")
         }
         (_, "/infer") => return Route::MethodNotAllowed("POST"),
@@ -723,6 +763,13 @@ pub fn route(method: &str, path: &str) -> Route {
             if valid_model_name(name) {
                 return match method {
                     "GET" => Route::ModelMetrics(name.to_string()),
+                    _ => Route::MethodNotAllowed("GET"),
+                };
+            }
+        } else if let Some(name) = rest.strip_suffix("/trace") {
+            if valid_model_name(name) {
+                return match method {
+                    "GET" => Route::ModelTrace(name.to_string()),
                     _ => Route::MethodNotAllowed("GET"),
                 };
             }
@@ -751,7 +798,8 @@ fn dispatch(
     registry: &Arc<ModelRegistry>,
     gate: &Gate,
 ) -> Step {
-    match route(&req.method, &req.path) {
+    let (path, query) = split_query(&req.path);
+    match route(&req.method, path) {
         Route::Healthz => {
             if gate.draining.load(Ordering::SeqCst) {
                 Step::Respond(503, r#"{"status":"draining"}"#.to_string())
@@ -768,6 +816,8 @@ fn dispatch(
             metrics_route(&name, true, registry)
         }
         Route::ModelMetrics(name) => metrics_route(&name, false, registry),
+        Route::Metrics => global_metrics_route(query, registry),
+        Route::ModelTrace(name) => trace_route(&name, query, registry),
         Route::LegacyInfer => {
             let name = registry.default_model().to_string();
             infer_route(&name, req, keep, registry, gate)
@@ -850,6 +900,198 @@ fn metrics_route(name: &str, legacy: bool, registry: &Arc<ModelRegistry>) -> Ste
     }
 }
 
+/// `GET /v1/metrics` — every serving model's metrics in one reply; with
+/// `?format=prometheus`, the text exposition a scraper ingests directly.
+fn global_metrics_route(query: Option<&str>, registry: &Arc<ModelRegistry>) -> Step {
+    match query_param(query, "format") {
+        Some("prometheus") => {
+            Step::RespondText(200, PROM_CTYPE, prometheus_exposition(registry))
+        }
+        Some(other) => Step::Respond(
+            400,
+            proto::error_body(
+                "bad_request",
+                &format!("unknown metrics format {other:?} (use \"prometheus\" or omit)"),
+                None,
+            ),
+        ),
+        None => {
+            let rows: Vec<_> = registry
+                .list()
+                .iter()
+                .filter(|m| m.status == "serving")
+                .filter_map(|m| {
+                    let pool = registry.pool(&m.name)?;
+                    let pm = pool.pool_metrics().ok()?;
+                    Some(proto::model_metrics_to_json(
+                        &m.name,
+                        &pool.admission(),
+                        &pm,
+                        pool.dtype,
+                        pool.plane,
+                    ))
+                })
+                .collect();
+            Step::Respond(200, obj(vec![("models", arr(rows))]).to_string())
+        }
+    }
+}
+
+/// `GET /v1/models/<name>/trace` — newest-first request traces from the
+/// pool's ring (`?n=K` bounds the count, `?slow` reads the slow-retention
+/// ring instead).
+fn trace_route(name: &str, query: Option<&str>, registry: &Arc<ModelRegistry>) -> Step {
+    let pool = match resolve_model(name, registry) {
+        Ok(p) => p,
+        Err((status, body)) => return Step::Respond(status, body),
+    };
+    let n = query_param(query, "n")
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or(16);
+    let ring = pool.trace();
+    let traces = if query_param(query, "slow").is_some() {
+        ring.slow_traces(n)
+    } else {
+        ring.recent(n)
+    };
+    Step::Respond(
+        200,
+        proto::traces_to_json(&traces, ring.dropped(), ring.slow_threshold_us()).to_string(),
+    )
+}
+
+/// Render every serving model's counters in the Prometheus text format:
+/// latency/throughput/admission gauges plus the measured-vs-Eq. 13 traffic
+/// families the paper's claim is judged by.
+fn prometheus_exposition(registry: &Arc<ModelRegistry>) -> String {
+    struct Snap {
+        name: String,
+        admission: crate::coordinator::AdmissionMetrics,
+        merged: crate::coordinator::Metrics,
+        trace_dropped: u64,
+    }
+    // Snapshot first, render second: rendering never holds a pool handle
+    // longer than one metrics drain.
+    let mut snaps: Vec<Snap> = Vec::new();
+    for row in registry.list() {
+        if row.status != "serving" {
+            continue;
+        }
+        let Some(pool) = registry.pool(&row.name) else { continue };
+        let Ok(pm) = pool.pool_metrics() else { continue };
+        snaps.push(Snap {
+            name: row.name,
+            admission: pool.admission(),
+            merged: pm.merged,
+            trace_dropped: pool.trace().dropped(),
+        });
+    }
+    let mut w = PromWriter::new();
+    w.family("sf_requests_total", "counter", "Completed inference requests.");
+    for sn in &snaps {
+        w.sample("sf_requests_total", &[("model", sn.name.as_str())], sn.merged.count() as f64);
+    }
+    w.family("sf_request_latency_us", "gauge", "Request latency percentiles (microseconds).");
+    for sn in &snaps {
+        for (q, v) in
+            [("0.5", sn.merged.p50()), ("0.95", sn.merged.p95()), ("0.99", sn.merged.p99())]
+        {
+            if let Some(d) = v {
+                w.sample(
+                    "sf_request_latency_us",
+                    &[("model", sn.name.as_str()), ("quantile", q)],
+                    d.as_micros() as f64,
+                );
+            }
+        }
+    }
+    w.family("sf_inflight", "gauge", "Admitted requests currently in the pool.");
+    w.family("sf_admitted_total", "counter", "Requests admitted past the quota gate.");
+    w.family("sf_rejected_total", "counter", "Requests refused by the quota gate (429).");
+    w.family("sf_generation", "gauge", "Weight-swap generation of the serving pool.");
+    for sn in &snaps {
+        let m = &[("model", sn.name.as_str())];
+        w.sample("sf_inflight", m, sn.admission.inflight as f64);
+        w.sample("sf_admitted_total", m, sn.admission.admitted as f64);
+        w.sample("sf_rejected_total", m, sn.admission.rejected as f64);
+        w.sample("sf_generation", m, sn.admission.generation as f64);
+    }
+    w.family("sf_batches_total", "counter", "Closed batches by size.");
+    for sn in &snaps {
+        for (size, &count) in sn.merged.batch_histogram().iter().enumerate() {
+            if count > 0 {
+                let size = size.to_string();
+                w.sample(
+                    "sf_batches_total",
+                    &[("model", sn.name.as_str()), ("size", size.as_str())],
+                    count as f64,
+                );
+            }
+        }
+    }
+    w.family("sf_pe_utilization", "gauge", "Average Alg. 2 network PE utilization.");
+    w.family("sf_arena_peak_activation_bytes", "gauge", "Peak live activation-arena bytes.");
+    for sn in &snaps {
+        let m = &[("model", sn.name.as_str())];
+        if let Some(sched) = &sn.merged.schedule {
+            w.sample("sf_pe_utilization", m, sched.avg_pe_utilization());
+        }
+        if let Some(a) = &sn.merged.arena {
+            w.sample("sf_arena_peak_activation_bytes", m, a.peak_activation_bytes as f64);
+        }
+    }
+    w.family(
+        "sf_traffic_bytes_total",
+        "counter",
+        "Measured backend-boundary bytes by conv layer and kind.",
+    );
+    w.family(
+        "sf_traffic_predicted_bytes_total",
+        "counter",
+        "Eq. 13 predicted bytes for the executed plan, by conv layer and kind.",
+    );
+    w.family(
+        "sf_traffic_weight_ratio",
+        "gauge",
+        "Measured over Eq. 13-predicted weight-stream bytes per conv layer.",
+    );
+    for sn in &snaps {
+        let Some(t) = &sn.merged.traffic else { continue };
+        for l in &t.layers {
+            let base = [("model", sn.name.as_str()), ("layer", l.layer.as_str())];
+            for (kind, v) in [
+                ("weight", l.measured.weight_bytes),
+                ("input", l.measured.input_bytes),
+                ("output", l.measured.output_bytes),
+                ("psum", l.measured.psum_bytes),
+            ] {
+                let labels = [base[0], base[1], ("kind", kind)];
+                w.sample("sf_traffic_bytes_total", &labels, v as f64);
+            }
+            for (kind, v) in [
+                ("weight", l.predicted_weight_bytes),
+                ("input", l.predicted_input_bytes),
+                ("output", l.predicted_output_bytes),
+            ] {
+                let labels = [base[0], base[1], ("kind", kind)];
+                w.sample("sf_traffic_predicted_bytes_total", &labels, v as f64);
+            }
+            if l.predicted_weight_bytes > 0 {
+                w.sample("sf_traffic_weight_ratio", &base, l.weight_ratio());
+            }
+        }
+    }
+    w.family("sf_trace_dropped_total", "counter", "Traces dropped on slot contention.");
+    for sn in &snaps {
+        w.sample(
+            "sf_trace_dropped_total",
+            &[("model", sn.name.as_str())],
+            sn.trace_dropped as f64,
+        );
+    }
+    w.finish()
+}
+
 fn infer_route(
     name: &str,
     req: &HttpRequest,
@@ -857,6 +1099,9 @@ fn infer_route(
     registry: &Arc<ModelRegistry>,
     gate: &Gate,
 ) -> Step {
+    // wire-side trace stamps: `accepted` is when the complete request
+    // reached this handler, `parsed` closes the body-decode span
+    let accepted = Instant::now();
     if gate.draining.load(Ordering::SeqCst) {
         return Step::Respond(
             503,
@@ -883,6 +1128,7 @@ fn infer_route(
         proto::InferRequest::Single(t) => (vec![t], true),
         proto::InferRequest::Batch(v) => (v, false),
     };
+    let wire = WireTiming { accepted, parsed: Instant::now() };
     // admission: per-model bounded in-flight budget — overload is a fast
     // 429, not a silently growing dispatcher queue
     let Some(guard) = pool.try_admit(images.len()) else {
@@ -901,7 +1147,7 @@ fn infer_route(
     let client = pool.client();
     let mut rxs = Vec::with_capacity(images.len());
     for image in images {
-        match client.infer_async(image) {
+        match client.infer_async_timed(image, wire) {
             Ok(rx) => rxs.push(rx),
             Err(e) => {
                 let (status, body) = infer_error(&e.to_string(), Some(name));
@@ -997,6 +1243,28 @@ mod tests {
             route("DELETE", "/admin/models/demo"),
             Route::AdminUnload("demo".into())
         );
+        assert_eq!(route("GET", "/v1/metrics"), Route::Metrics);
+        assert_eq!(
+            route("GET", "/v1/models/demo/trace"),
+            Route::ModelTrace("demo".into())
+        );
+    }
+
+    #[test]
+    fn query_split_and_params() {
+        assert_eq!(split_query("/v1/metrics"), ("/v1/metrics", None));
+        assert_eq!(
+            split_query("/v1/metrics?format=prometheus"),
+            ("/v1/metrics", Some("format=prometheus"))
+        );
+        let (path, query) = split_query("/v1/models/demo/trace?n=4&slow");
+        assert_eq!(path, "/v1/models/demo/trace");
+        assert_eq!(query_param(query, "n"), Some("4"));
+        assert_eq!(query_param(query, "slow"), Some(""));
+        assert_eq!(query_param(query, "format"), None);
+        assert_eq!(query_param(None, "n"), None);
+        // routing is query-blind once split
+        assert_eq!(route("GET", path), Route::ModelTrace("demo".into()));
     }
 
     #[test]
@@ -1011,6 +1279,11 @@ mod tests {
         );
         assert_eq!(
             route("POST", "/v1/models/demo/metrics"),
+            Route::MethodNotAllowed("GET")
+        );
+        assert_eq!(route("POST", "/v1/metrics"), Route::MethodNotAllowed("GET"));
+        assert_eq!(
+            route("DELETE", "/v1/models/demo/trace"),
             Route::MethodNotAllowed("GET")
         );
         assert_eq!(

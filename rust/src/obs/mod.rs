@@ -1,0 +1,683 @@
+//! Observability: data-movement counters, per-request trace spans, and the
+//! Prometheus text renderer behind `GET /v1/metrics?format=prometheus`.
+//!
+//! The paper's headline claim is a *transfer* reduction (Eq. 13), so the
+//! serving stack must be able to measure bytes moved, not just predict
+//! them. Three pieces, deliberately decoupled:
+//!
+//! * [`TrafficCounters`] — relaxed-atomic byte counters the backend's hot
+//!   loops bump once per resident-block walk (never per non-zero). The
+//!   engine snapshots them around each conv call and compares the deltas
+//!   against the Eq. 13 volume for the layer's chosen `(Ns, Ps, B)` plan.
+//! * [`TraceRing`] — a fixed-capacity, never-blocking ring of structured
+//!   [`RequestTrace`]s (accept → parse → queue → batch-close → per-layer
+//!   execute → respond). Writers claim a slot with one `fetch_add` and
+//!   publish through a per-slot `try_lock` that *drops* the trace on
+//!   contention instead of waiting (the drop is counted); readers snapshot
+//!   with the same `try_lock`. A second, smaller ring retains slow
+//!   requests preferentially: fast traffic wrapping the main ring can
+//!   never evict an over-threshold trace.
+//! * [`PromWriter`] — minimal Prometheus text exposition (version 0.0.4):
+//!   `# HELP`/`# TYPE` headers plus label-escaped samples.
+//!
+//! Everything here is observation-only: no counter or span ever feeds back
+//! into the data path, so logits are bit-identical with observation on or
+//! off (pinned by tests).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+// ---------------------------------------------------------------------------
+// Data-movement counters
+// ---------------------------------------------------------------------------
+
+/// Monotonic byte counters at the backend boundary, bumped by the interp
+/// backend's conv loops (weights per block walk, activation tiles in/out,
+/// partial-sum updates) and by the engine's arena writes. All `Relaxed`:
+/// the counters are statistics, not synchronization, and each increment is
+/// one atomic add per *chunk* of work — cost is invisible next to the MACs
+/// it measures (the `bench_e2e` observe-on/off pair pins the overhead).
+#[derive(Debug, Default)]
+pub struct TrafficCounters {
+    /// Spectral kernel bytes streamed (CSR rows or BankedWeights
+    /// cycle-sets; dense planes on the dense path).
+    pub weight_bytes: AtomicU64,
+    /// Activation tile bytes read into the backend (spatial f32 words).
+    pub input_bytes: AtomicU64,
+    /// Activation tile bytes written out of the backend.
+    pub output_bytes: AtomicU64,
+    /// Partial-sum accumulator traffic (complex accumulator updates).
+    pub psum_bytes: AtomicU64,
+    /// Activation-arena slot bytes written by the graph executor.
+    pub arena_bytes: AtomicU64,
+}
+
+impl TrafficCounters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add_weights(&self, bytes: u64) {
+        self.weight_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    pub fn add_inputs(&self, bytes: u64) {
+        self.input_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    pub fn add_outputs(&self, bytes: u64) {
+        self.output_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    pub fn add_psums(&self, bytes: u64) {
+        self.psum_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    pub fn add_arena(&self, bytes: u64) {
+        self.arena_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// Consistent-enough snapshot for delta accounting (the engine reads
+    /// before/after a conv call on the same thread that ran it).
+    pub fn snapshot(&self) -> TrafficSnapshot {
+        TrafficSnapshot {
+            weight_bytes: self.weight_bytes.load(Ordering::Relaxed),
+            input_bytes: self.input_bytes.load(Ordering::Relaxed),
+            output_bytes: self.output_bytes.load(Ordering::Relaxed),
+            psum_bytes: self.psum_bytes.load(Ordering::Relaxed),
+            arena_bytes: self.arena_bytes.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// One point-in-time reading of [`TrafficCounters`], subtractable for
+/// per-layer deltas and addable for accumulation.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TrafficSnapshot {
+    pub weight_bytes: u64,
+    pub input_bytes: u64,
+    pub output_bytes: u64,
+    pub psum_bytes: u64,
+    pub arena_bytes: u64,
+}
+
+impl TrafficSnapshot {
+    /// Bytes moved since `earlier` (saturating: counters only grow, but a
+    /// racing reader should never underflow).
+    pub fn since(&self, earlier: &TrafficSnapshot) -> TrafficSnapshot {
+        TrafficSnapshot {
+            weight_bytes: self.weight_bytes.saturating_sub(earlier.weight_bytes),
+            input_bytes: self.input_bytes.saturating_sub(earlier.input_bytes),
+            output_bytes: self.output_bytes.saturating_sub(earlier.output_bytes),
+            psum_bytes: self.psum_bytes.saturating_sub(earlier.psum_bytes),
+            arena_bytes: self.arena_bytes.saturating_sub(earlier.arena_bytes),
+        }
+    }
+
+    pub fn add(&mut self, other: &TrafficSnapshot) {
+        self.weight_bytes += other.weight_bytes;
+        self.input_bytes += other.input_bytes;
+        self.output_bytes += other.output_bytes;
+        self.psum_bytes += other.psum_bytes;
+        self.arena_bytes += other.arena_bytes;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.weight_bytes + self.input_bytes + self.output_bytes + self.psum_bytes
+            + self.arena_bytes
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Measured-vs-predicted accounting (per layer, per engine)
+// ---------------------------------------------------------------------------
+
+/// One conv layer's measured traffic next to its Eq. 13 prediction for the
+/// plan the engine actually executed (`analysis::transfers_flex_batch` at
+/// the chosen `(Ns, Ps)` and the real per-call batch size). Bytes on both
+/// sides use the same unit convention — complex spectral words at the
+/// engine dtype for kernels, spatial f32 words for activations — so the
+/// B=1 full-plane kernel ratio is exactly 1.0 by construction (pinned in
+/// tests; divergences: thread chunking, the tile-overlap factor on
+/// activations, and the half-plane fold — see ARCHITECTURE.md
+/// "Observability").
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct LayerTraffic {
+    /// Manifest layer name (e.g. `conv5_3`).
+    pub layer: String,
+    /// Measured backend-boundary bytes, accumulated over every forward.
+    pub measured: TrafficSnapshot,
+    /// Eq. 13 kernel-term bytes for the executed plan, accumulated.
+    pub predicted_weight_bytes: u64,
+    /// Eq. 13 input-term bytes (spatial activation words × 4).
+    pub predicted_input_bytes: u64,
+    /// Eq. 13 output-term bytes.
+    pub predicted_output_bytes: u64,
+    /// Conv invocations accumulated into this row.
+    pub forwards: u64,
+}
+
+impl LayerTraffic {
+    /// Measured / predicted weight-stream ratio (the paper's reuse axis).
+    /// 0.0 until the layer has executed at least once.
+    pub fn weight_ratio(&self) -> f64 {
+        if self.predicted_weight_bytes == 0 {
+            return 0.0;
+        }
+        self.measured.weight_bytes as f64 / self.predicted_weight_bytes as f64
+    }
+
+    pub fn merge_from(&mut self, other: &LayerTraffic) {
+        self.measured.add(&other.measured);
+        self.predicted_weight_bytes += other.predicted_weight_bytes;
+        self.predicted_input_bytes += other.predicted_input_bytes;
+        self.predicted_output_bytes += other.predicted_output_bytes;
+        self.forwards += other.forwards;
+    }
+}
+
+/// Engine-wide traffic accounting: one [`LayerTraffic`] per conv layer plus
+/// the raw counter totals (which also carry psum and arena bytes that have
+/// no per-layer prediction).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct TrafficMetrics {
+    pub layers: Vec<LayerTraffic>,
+    /// Raw counter totals for the engine (includes psum/arena traffic).
+    pub totals: TrafficSnapshot,
+}
+
+impl TrafficMetrics {
+    /// Fold another engine's accounting into this one (pool merge: layer
+    /// lists are identical across replicas of one config, matched by
+    /// index; a foreign shape contributes totals only).
+    pub fn merge_from(&mut self, other: &TrafficMetrics) {
+        if self.layers.is_empty() {
+            self.layers = other.layers.clone();
+        } else if self.layers.len() == other.layers.len() {
+            for (dst, src) in self.layers.iter_mut().zip(&other.layers) {
+                dst.merge_from(src);
+            }
+        }
+        self.totals.add(&other.totals);
+    }
+
+    pub fn measured_weight_bytes(&self) -> u64 {
+        self.layers.iter().map(|l| l.measured.weight_bytes).sum()
+    }
+
+    pub fn predicted_weight_bytes(&self) -> u64 {
+        self.layers.iter().map(|l| l.predicted_weight_bytes).sum()
+    }
+
+    /// One summary line (appended to the serving report).
+    pub fn report(&self) -> String {
+        let m = self.measured_weight_bytes();
+        let p = self.predicted_weight_bytes().max(1);
+        format!(
+            "traffic: weights {} B (Eq.13 {} B, x{:.3}) in {} B out {} B psum {} B arena {} B",
+            m,
+            self.predicted_weight_bytes(),
+            m as f64 / p as f64,
+            self.totals.input_bytes,
+            self.totals.output_bytes,
+            self.totals.psum_bytes,
+            self.totals.arena_bytes,
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Trace spans
+// ---------------------------------------------------------------------------
+
+/// One interval inside a request, in microseconds since the trace ring's
+/// epoch. Layer spans (`layer:<name>`) additionally carry the measured
+/// backend-boundary bytes and the Eq. 13 prediction for that conv call;
+/// both are 0 on structural spans.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Span {
+    pub name: String,
+    pub start_us: u64,
+    pub end_us: u64,
+    pub measured_bytes: u64,
+    pub predicted_bytes: u64,
+}
+
+impl Span {
+    pub fn plain(name: impl Into<String>, start_us: u64, end_us: u64) -> Span {
+        Span { name: name.into(), start_us, end_us, measured_bytes: 0, predicted_bytes: 0 }
+    }
+
+    pub fn duration_us(&self) -> u64 {
+        self.end_us.saturating_sub(self.start_us)
+    }
+}
+
+/// A completed request's spans plus its correlation ids. `spans[0]` is the
+/// root (`request`): it covers every other span, children are sorted by
+/// start time, and the root's duration agrees with `latency_us` (pinned by
+/// the trace-integrity tests).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RequestTrace {
+    pub request: u64,
+    pub batch: u64,
+    pub worker: usize,
+    pub model: String,
+    pub batch_size: usize,
+    pub latency_us: u64,
+    /// Latency crossed the ring's slow threshold: the trace was also
+    /// retained in the slow ring, where fast wraps can't evict it.
+    pub slow: bool,
+    pub spans: Vec<Span>,
+}
+
+/// A conv layer's execute interval inside one engine forward, recorded with
+/// raw [`Instant`]s (the engine has no ring epoch); the serving worker
+/// rebases them when it assembles the [`RequestTrace`].
+#[derive(Debug, Clone)]
+pub struct LayerSpan {
+    pub name: String,
+    pub start: Instant,
+    pub end: Instant,
+    pub measured_bytes: u64,
+    pub predicted_bytes: u64,
+}
+
+/// Wire-side stamps the HTTP front-end hands the serving pool with each
+/// request: when the parsed request entered its handler and when body
+/// decode finished — the `accept`/`parse` spans of the taxonomy.
+#[derive(Debug, Clone, Copy)]
+pub struct WireTiming {
+    pub accepted: Instant,
+    pub parsed: Instant,
+}
+
+/// Trace-ring sizing. Defaults suit a serving pool: 256 recent requests,
+/// 64 slow ones, slow ≥ 50 ms.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceConfig {
+    pub capacity: usize,
+    pub slow_capacity: usize,
+    pub slow_threshold_us: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig { capacity: 256, slow_capacity: 64, slow_threshold_us: 50_000 }
+    }
+}
+
+/// Fixed-capacity, never-blocking trace store (see the module docs for the
+/// two-ring design). All storage is allocated at construction; recording
+/// allocates nothing and never waits on a lock.
+pub struct TraceRing {
+    epoch: Instant,
+    recent: Vec<Mutex<Option<RequestTrace>>>,
+    slow: Vec<Mutex<Option<RequestTrace>>>,
+    head: AtomicU64,
+    slow_head: AtomicU64,
+    dropped: AtomicU64,
+    slow_threshold_us: u64,
+    requests: AtomicU64,
+    batches: AtomicU64,
+}
+
+impl std::fmt::Debug for TraceRing {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TraceRing")
+            .field("capacity", &self.recent.len())
+            .field("slow_capacity", &self.slow.len())
+            .field("slow_threshold_us", &self.slow_threshold_us)
+            .field("recorded", &self.head.load(Ordering::Relaxed))
+            .field("dropped", &self.dropped.load(Ordering::Relaxed))
+            .finish()
+    }
+}
+
+impl TraceRing {
+    pub fn new(cfg: TraceConfig) -> Self {
+        let slot = |_| Mutex::new(None);
+        TraceRing {
+            epoch: Instant::now(),
+            recent: (0..cfg.capacity.max(1)).map(slot).collect(),
+            slow: (0..cfg.slow_capacity.max(1)).map(slot).collect(),
+            head: AtomicU64::new(0),
+            slow_head: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            slow_threshold_us: cfg.slow_threshold_us,
+            requests: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+        }
+    }
+
+    /// Microseconds from the ring's epoch to `t` (0 for pre-epoch stamps).
+    pub fn to_us(&self, t: Instant) -> u64 {
+        t.checked_duration_since(self.epoch).map(|d| d.as_micros() as u64).unwrap_or(0)
+    }
+
+    pub fn now_us(&self) -> u64 {
+        self.to_us(Instant::now())
+    }
+
+    /// Fresh request correlation id (1-based).
+    pub fn next_request_id(&self) -> u64 {
+        self.requests.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Fresh batch correlation id (1-based).
+    pub fn next_batch_id(&self) -> u64 {
+        self.batches.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.recent.len()
+    }
+
+    pub fn slow_capacity(&self) -> usize {
+        self.slow.len()
+    }
+
+    pub fn slow_threshold_us(&self) -> u64 {
+        self.slow_threshold_us
+    }
+
+    /// Traces whose publish lost the slot race and were discarded.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Record one completed request. Wait-free for the writer: one atomic
+    /// slot claim plus a `try_lock` publish; a contended slot drops the
+    /// trace (counted in [`TraceRing::dropped`]) rather than blocking the
+    /// serving path. Slow traces are additionally published to the slow
+    /// ring, which only slow traffic can wrap.
+    pub fn record(&self, mut trace: RequestTrace) {
+        trace.slow = trace.latency_us >= self.slow_threshold_us;
+        if trace.slow {
+            Self::publish(&self.slow, &self.slow_head, &self.dropped, trace.clone());
+        }
+        Self::publish(&self.recent, &self.head, &self.dropped, trace);
+    }
+
+    fn publish(
+        ring: &[Mutex<Option<RequestTrace>>],
+        head: &AtomicU64,
+        dropped: &AtomicU64,
+        trace: RequestTrace,
+    ) {
+        let slot = (head.fetch_add(1, Ordering::Relaxed) % ring.len() as u64) as usize;
+        match ring[slot].try_lock() {
+            Ok(mut g) => *g = Some(trace),
+            Err(_) => {
+                dropped.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Most recent `n` traces, newest first. Slots a writer holds at this
+    /// instant are skipped (readers never block writers either).
+    pub fn recent(&self, n: usize) -> Vec<RequestTrace> {
+        Self::collect(&self.recent, &self.head, n)
+    }
+
+    /// Most recent `n` slow traces, newest first.
+    pub fn slow_traces(&self, n: usize) -> Vec<RequestTrace> {
+        Self::collect(&self.slow, &self.slow_head, n)
+    }
+
+    fn collect(
+        ring: &[Mutex<Option<RequestTrace>>],
+        head: &AtomicU64,
+        n: usize,
+    ) -> Vec<RequestTrace> {
+        let len = ring.len() as u64;
+        let h = head.load(Ordering::Relaxed);
+        let take = n.min(ring.len());
+        let mut out = Vec::with_capacity(take);
+        for i in 1..=len.min(h) {
+            if out.len() >= take {
+                break;
+            }
+            let slot = ((h - i) % len) as usize;
+            if let Ok(g) = ring[slot].try_lock() {
+                if let Some(t) = &*g {
+                    out.push(t.clone());
+                }
+            }
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Prometheus text exposition
+// ---------------------------------------------------------------------------
+
+/// Minimal Prometheus text-format (0.0.4) writer: `# HELP`/`# TYPE` family
+/// headers plus samples with escaped label values. The front-end drives it
+/// from registry snapshots; nothing here knows about models or pools.
+#[derive(Debug, Default)]
+pub struct PromWriter {
+    out: String,
+}
+
+impl PromWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Start a metric family: `typ` is `counter` | `gauge` | `histogram`.
+    pub fn family(&mut self, name: &str, typ: &str, help: &str) {
+        self.out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {typ}\n"));
+    }
+
+    /// Emit one sample. Float values print in shortest form (`2` not
+    /// `2.0`); label values are escaped per the exposition format.
+    pub fn sample(&mut self, name: &str, labels: &[(&str, &str)], value: f64) {
+        self.out.push_str(name);
+        if !labels.is_empty() {
+            self.out.push('{');
+            for (i, (k, v)) in labels.iter().enumerate() {
+                if i > 0 {
+                    self.out.push(',');
+                }
+                self.out.push_str(&format!("{k}=\"{}\"", escape_label(v)));
+            }
+            self.out.push('}');
+        }
+        self.out.push_str(&format!(" {value}\n"));
+    }
+
+    pub fn finish(self) -> String {
+        self.out
+    }
+}
+
+/// Escape a label value: backslash, double-quote, and newline.
+fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            other => out.push(other),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn trace(request: u64, latency_us: u64) -> RequestTrace {
+        RequestTrace {
+            request,
+            batch: 1,
+            worker: 0,
+            model: "demo".into(),
+            batch_size: 1,
+            latency_us,
+            slow: false,
+            spans: vec![Span::plain("request", 0, latency_us)],
+        }
+    }
+
+    #[test]
+    fn counters_snapshot_and_delta() {
+        let c = TrafficCounters::new();
+        c.add_weights(100);
+        c.add_inputs(40);
+        c.add_psums(8);
+        let a = c.snapshot();
+        c.add_weights(20);
+        c.add_outputs(16);
+        c.add_arena(4);
+        let b = c.snapshot();
+        let d = b.since(&a);
+        assert_eq!(d.weight_bytes, 20);
+        assert_eq!(d.input_bytes, 0);
+        assert_eq!(d.output_bytes, 16);
+        assert_eq!(d.arena_bytes, 4);
+        assert_eq!(b.total(), 188);
+        // since() saturates instead of underflowing
+        assert_eq!(a.since(&b).weight_bytes, 0);
+    }
+
+    #[test]
+    fn layer_traffic_ratio_and_merge() {
+        let mut a = LayerTraffic {
+            layer: "conv1".into(),
+            measured: TrafficSnapshot { weight_bytes: 1024, ..Default::default() },
+            predicted_weight_bytes: 1024,
+            predicted_input_bytes: 64,
+            predicted_output_bytes: 64,
+            forwards: 1,
+        };
+        assert!((a.weight_ratio() - 1.0).abs() < 1e-12);
+        a.merge_from(&a.clone());
+        assert_eq!(a.measured.weight_bytes, 2048);
+        assert_eq!(a.forwards, 2);
+        assert!((a.weight_ratio() - 1.0).abs() < 1e-12);
+        // unexecuted layer: defined, not a division by zero
+        assert_eq!(LayerTraffic::default().weight_ratio(), 0.0);
+
+        let mut tm = TrafficMetrics { layers: vec![a.clone()], ..Default::default() };
+        tm.merge_from(&TrafficMetrics { layers: vec![a.clone()], ..Default::default() });
+        assert_eq!(tm.measured_weight_bytes(), 4096);
+        assert_eq!(tm.predicted_weight_bytes(), 4096);
+        assert!(tm.report().contains("x1.000"), "{}", tm.report());
+        // empty target adopts the other side's layers wholesale
+        let mut empty = TrafficMetrics::default();
+        empty.merge_from(&tm);
+        assert_eq!(empty.layers.len(), 1);
+    }
+
+    #[test]
+    fn ring_returns_newest_first_and_wraps() {
+        let ring = TraceRing::new(TraceConfig {
+            capacity: 4,
+            slow_capacity: 2,
+            slow_threshold_us: u64::MAX,
+        });
+        for i in 1..=6 {
+            ring.record(trace(i, 10));
+        }
+        // capacity 4, 6 recorded: 3..=6 retained, newest first
+        let got: Vec<u64> = ring.recent(10).iter().map(|t| t.request).collect();
+        assert_eq!(got, vec![6, 5, 4, 3]);
+        assert_eq!(ring.recent(2).len(), 2);
+        assert_eq!(ring.recent(2)[0].request, 6);
+        assert_eq!(ring.dropped(), 0);
+        assert_eq!(ring.capacity(), 4);
+        // nothing crossed the slow threshold
+        assert!(ring.slow_traces(10).is_empty());
+    }
+
+    #[test]
+    fn slow_retention_survives_fast_wraps() {
+        let ring = TraceRing::new(TraceConfig {
+            capacity: 4,
+            slow_capacity: 2,
+            slow_threshold_us: 1_000,
+        });
+        ring.record(trace(1, 5_000)); // slow
+        for i in 2..=20 {
+            ring.record(trace(i, 10)); // fast traffic wraps the recent ring
+        }
+        assert!(ring.recent(10).iter().all(|t| t.request != 1), "recent ring wrapped");
+        let slow = ring.slow_traces(10);
+        assert_eq!(slow.len(), 1);
+        assert_eq!(slow[0].request, 1);
+        assert!(slow[0].slow, "record() stamps the slow flag");
+    }
+
+    #[test]
+    fn ring_concurrent_record_never_blocks_or_grows() {
+        let ring = Arc::new(TraceRing::new(TraceConfig {
+            capacity: 8,
+            slow_capacity: 2,
+            slow_threshold_us: 500,
+        }));
+        let threads: Vec<_> = (0..4)
+            .map(|w| {
+                let r = Arc::clone(&ring);
+                std::thread::spawn(move || {
+                    for i in 0..256u64 {
+                        let mut t = trace(w * 1000 + i, if i % 64 == 0 { 600 } else { 10 });
+                        t.worker = w as usize;
+                        r.record(t);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        // storage never grew; every recorded trace either landed or was
+        // counted as dropped
+        assert_eq!(ring.capacity(), 8);
+        assert_eq!(ring.slow_capacity(), 2);
+        assert!(ring.recent(100).len() <= 8);
+        let landed = ring.recent(100).len() as u64;
+        assert!(landed + ring.dropped() >= 1, "some traces must be visible");
+        // ids are unique across workers
+        assert_eq!(ring.next_request_id(), 1);
+        assert_eq!(ring.next_request_id(), 2);
+        assert_eq!(ring.next_batch_id(), 1);
+    }
+
+    #[test]
+    fn span_duration_and_epoch() {
+        let s = Span::plain("queue", 10, 250);
+        assert_eq!(s.duration_us(), 240);
+        assert_eq!(Span::plain("x", 5, 3).duration_us(), 0);
+        let ring = TraceRing::new(TraceConfig::default());
+        let t0 = ring.now_us();
+        let t1 = ring.now_us();
+        assert!(t1 >= t0);
+        // a pre-epoch instant clamps to 0 instead of panicking
+        assert_eq!(ring.to_us(ring.epoch), 0);
+    }
+
+    #[test]
+    fn prometheus_exposition_format() {
+        let mut w = PromWriter::new();
+        w.family("sf_requests_total", "counter", "Lifetime completed requests.");
+        w.sample("sf_requests_total", &[("model", "demo")], 42.0);
+        w.family("sf_latency_us", "gauge", "Latency percentile.");
+        w.sample("sf_latency_us", &[("model", "a\"b\\c"), ("quantile", "0.5")], 1500.5);
+        w.sample("sf_up", &[], 1.0);
+        let text = w.finish();
+        assert!(text.contains("# TYPE sf_requests_total counter\n"));
+        assert!(text.contains("sf_requests_total{model=\"demo\"} 42\n"), "{text}");
+        assert!(
+            text.contains("sf_latency_us{model=\"a\\\"b\\\\c\",quantile=\"0.5\"} 1500.5\n"),
+            "{text}"
+        );
+        assert!(text.ends_with("sf_up 1\n"));
+    }
+}

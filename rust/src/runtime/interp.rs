@@ -68,9 +68,11 @@
 
 use std::collections::HashMap;
 use std::path::Path;
+use std::sync::Arc;
 
 use crate::err;
 use crate::fft::{fft2d_inplace, ifft2d_inplace, irfft2d_into, rfft2d_into, Cx, Float};
+use crate::obs::TrafficCounters;
 use crate::schedule::LayerSchedule;
 use crate::sparse::SparseLayer;
 use crate::tensor::Tensor;
@@ -241,6 +243,11 @@ pub struct InterpBackend {
     /// Spectral storage plane (weights fold at upload time, so this must
     /// be configured before uploads — `configure_numerics` enforces it).
     plane: Plane,
+    /// Data-movement counters ([`SpectralBackend::attach_traffic`]):
+    /// bumped once per weight-block walk / tile population, never per
+    /// non-zero, and never read by the compute — attaching them cannot
+    /// change any output bit.
+    traffic: Option<Arc<TrafficCounters>>,
 }
 
 impl Default for InterpBackend {
@@ -272,6 +279,7 @@ impl InterpBackend {
             threads: threads.max(1),
             dtype,
             plane,
+            traffic: None,
         }
     }
 
@@ -315,16 +323,34 @@ impl InterpBackend {
         let cap = (SPARSE_RESIDENT_SLOTS / ((m + n) * fs).max(1)).max(1);
         let block = hinted.clamp(1, cap);
         let sched = self.scheduled.get(&wid);
+        // activation traffic at the backend boundary: the spatial f32 tile
+        // words this call reads and writes (t·M·K² in, t·N·K² out). Note
+        // this is the *tiled* population — it exceeds Eq. 13's per-pixel
+        // input term by the tile-overlap factor (documented divergence).
+        if let Some(c) = &self.traffic {
+            let f = (k * k) as u64;
+            c.add_inputs(t as u64 * m as u64 * f * 4);
+            c.add_outputs(t as u64 * n as u64 * f * 4);
+        }
+        let traffic = self.traffic.as_deref();
         match self.dtype {
-            Dtype::F32 => {
-                run_conv_typed::<f32>(store, sched, s, self.plane, t, td, od, threads, block)
-            }
-            Dtype::F64 => {
-                run_conv_typed::<f64>(store, sched, s, self.plane, t, td, od, threads, block)
-            }
+            Dtype::F32 => run_conv_typed::<f32>(
+                store, sched, s, self.plane, t, td, od, threads, block, traffic,
+            ),
+            Dtype::F64 => run_conv_typed::<f64>(
+                store, sched, s, self.plane, t, td, od, threads, block, traffic,
+            ),
         }
         Ok(())
     }
+}
+
+/// Bytes of one complex spectral word at precision `T` (8 for f32, 16 for
+/// f64) — the unit both the measured counters and the engine's Eq. 13
+/// prediction use for kernel traffic, so the B=1 full-plane ratio is
+/// exactly 1 regardless of dtype.
+fn complex_bytes<T: Float>() -> u64 {
+    2 * std::mem::size_of::<T>() as u64
 }
 
 /// Dispatch one tile population through the mode-specific hot loop: the
@@ -341,6 +367,7 @@ fn run_conv_typed<T: Float>(
     od: &mut [f32],
     threads: usize,
     block: usize,
+    traffic: Option<&TrafficCounters>,
 ) {
     let (m, n, k) = (s.cin, s.cout, s.fft);
     let f = k * k;
@@ -366,19 +393,28 @@ fn run_conv_typed<T: Float>(
                         &mut real,
                     );
                 }
+                if let Some(c) = traffic {
+                    // the dense MAC re-reads the full [F', M, N] plane per
+                    // tile and touches every accumulator slot once per
+                    // (freq, cin) — one counter bump per chunk
+                    let tiles = (out_chunk.len() / (n * f)) as u64;
+                    let words = tiles * (fs * m * n) as u64;
+                    c.add_weights(words * complex_bytes::<T>());
+                    c.add_psums(words * complex_bytes::<T>());
+                }
             });
         }
         WeightStore::Sparse(w) => match sched {
             // schedule-driven walk (Alg. 2 order, banked weights)
             Some(bw) => {
                 for_tile_chunks(od, n * f, t, threads, |first, out_chunk| {
-                    conv_tiles_scheduled::<T>(td, out_chunk, first, bw, s, plane, block);
+                    conv_tiles_scheduled::<T>(td, out_chunk, first, bw, s, plane, block, traffic);
                 });
             }
             // unscheduled CSR storage-order walk (PR 3 path)
             None => {
                 for_tile_chunks(od, n * f, t, threads, |first, out_chunk| {
-                    conv_tiles_sparse::<T>(td, out_chunk, first, w, s, plane, block);
+                    conv_tiles_sparse::<T>(td, out_chunk, first, w, s, plane, block, traffic);
                 });
             }
         },
@@ -501,6 +537,7 @@ fn conv_tile<T: Float>(
 /// so results match the dense path on identical values to fp round-off of
 /// the elided zero terms, and are bit-identical across `block` sizes and
 /// thread counts.
+#[allow(clippy::too_many_arguments)]
 fn conv_tiles_sparse<T: Float>(
     in_tiles: &[f32],
     out_chunk: &mut [f32],
@@ -509,10 +546,18 @@ fn conv_tiles_sparse<T: Float>(
     s: Shape,
     plane: Plane,
     block: usize,
+    traffic: Option<&TrafficCounters>,
 ) {
     let (m, n) = (s.cin, s.cout);
     let fs = plane.spectrum_len(s.fft);
+    let nnz = w.nnz() as u64;
     for_sparse_blocks::<T, _>(in_tiles, out_chunk, first, s, plane, block, |xs, acc, b| {
+        if let Some(c) = traffic {
+            // one kernel stream per resident block (every CSR row read
+            // once), one accumulator update per non-zero per resident tile
+            c.add_weights(nnz * complex_bytes::<T>());
+            c.add_psums(nnz * b as u64 * complex_bytes::<T>());
+        }
         // the sparse MAC: only the stored non-zeros are touched (K²/α of
         // them, ~half that again in half-plane mode). The weight sits in
         // registers while the inner loop streams the b resident tiles
@@ -551,6 +596,7 @@ fn conv_tiles_sparse<T: Float>(
 /// Identical f32 products summed in an identical per-slot order, inside the
 /// identical FFT/IFFT block frame ⇒ outputs equal the unscheduled path bit
 /// for bit, for every scheduler, block size, and thread count.
+#[allow(clippy::too_many_arguments)]
 fn conv_tiles_scheduled<T: Float>(
     in_tiles: &[f32],
     out_chunk: &mut [f32],
@@ -559,9 +605,18 @@ fn conv_tiles_scheduled<T: Float>(
     s: Shape,
     plane: Plane,
     block: usize,
+    traffic: Option<&TrafficCounters>,
 ) {
     let fs = plane.spectrum_len(s.fft);
+    // entries across every cycle-set == the layer's non-zeros
+    // (compile_schedule validated the cover)
+    let nnz: u64 = bw.bank_re.iter().map(|bank| bank.len() as u64).sum();
     for_sparse_blocks::<T, _>(in_tiles, out_chunk, first, s, plane, block, |xs, acc, b| {
+        if let Some(c) = traffic {
+            // every BankedWeights cycle-set streams once per resident block
+            c.add_weights(nnz * complex_bytes::<T>());
+            c.add_psums(nnz * b as u64 * complex_bytes::<T>());
+        }
         for mi in 0..bw.cin {
             for g in 0..bw.num_groups {
                 let st = &bw.streams[g * bw.cin + mi];
@@ -785,6 +840,11 @@ impl SpectralBackend for InterpBackend {
     fn set_sparse_dataflow(&mut self, file: &str, flow: SparseDataflow) -> Result<()> {
         self.flows.insert(file.to_string(), flow);
         Ok(())
+    }
+
+    fn attach_traffic(&mut self, counters: Arc<TrafficCounters>) -> bool {
+        self.traffic = Some(counters);
+        true
     }
 
     fn set_schedule(&mut self, wid: WeightId, plan: &LayerSchedule) -> Result<bool> {
@@ -1302,5 +1362,62 @@ mod tests {
         layer.kernels[1].indices[0] = 64; // K²=64 ⇒ valid indices are 0..64
         let mut b = InterpBackend::new();
         assert!(b.upload_sparse(&layer).is_err(), "index ≥ K² must be rejected at upload");
+    }
+
+    #[test]
+    fn traffic_counters_measure_block_walk_and_stay_bit_invisible() {
+        use crate::obs::TrafficSnapshot;
+        use crate::sparse::prune_magnitude;
+        use std::sync::Arc;
+        let mut rng = Pcg32::new(61);
+        let (t, m, n, fft) = (7usize, 3usize, 5usize, 8usize);
+        let layer = prune_magnitude(n, m, fft, 4, &mut rng);
+        let tiles = Tensor::randn(&[t, m, fft, fft], &mut rng, 1.0);
+        let nnz = layer.nnz() as u64; // n·m·K²/α = 5·3·16 = 240
+        assert_eq!(nnz, 240);
+
+        let run = |attach: bool, block: usize| {
+            let mut b = InterpBackend::new();
+            b.prepare("x", &entry(t, m, n, fft), Path::new(".")).unwrap();
+            b.set_sparse_dataflow("x", SparseDataflow { tile_block: block }).unwrap();
+            let wid = b.upload_sparse(&layer).unwrap();
+            let counters = Arc::new(TrafficCounters::new());
+            if attach {
+                assert!(b.attach_traffic(Arc::clone(&counters)));
+            }
+            (b.run_conv("x", &tiles, wid).unwrap(), counters.snapshot())
+        };
+
+        // attaching counters must not change a single output bit
+        let (plain, zero) = run(false, 3);
+        let (counted, snap) = run(true, 3);
+        assert_eq!(plain.data(), counted.data());
+        assert_eq!(zero, TrafficSnapshot::default(), "unattached counters stay zero");
+
+        // block=3 over 7 tiles ⇒ 3 kernel-stream walks; one accumulator
+        // update per non-zero per resident tile; activations at the
+        // backend boundary (spatial f32 words)
+        let f = (fft * fft) as u64;
+        assert_eq!(snap.weight_bytes, 3 * nnz * 8);
+        assert_eq!(snap.psum_bytes, nnz * t as u64 * 8);
+        assert_eq!(snap.input_bytes, (t * m) as u64 * f * 4);
+        assert_eq!(snap.output_bytes, (t * n) as u64 * f * 4);
+        assert_eq!(snap.arena_bytes, 0, "the backend never touches arena traffic");
+
+        // all-resident block ⇒ the kernel stream is read exactly once
+        let (_, one) = run(true, 100);
+        assert_eq!(one.weight_bytes, nnz * 8);
+
+        // dense path: full [F, M, N] plane per tile
+        let mut b = InterpBackend::new();
+        b.prepare("x", &entry(t, m, n, fft), Path::new(".")).unwrap();
+        let (re, im) = freq_major_planes(&layer.to_dense_planes());
+        let wid = b.upload_weights(&re, &im, [fft * fft, m, n]).unwrap();
+        let counters = Arc::new(TrafficCounters::new());
+        assert!(b.attach_traffic(Arc::clone(&counters)));
+        b.run_conv("x", &tiles, wid).unwrap();
+        let dense = counters.snapshot();
+        assert_eq!(dense.weight_bytes, (t * fft * fft * m * n) as u64 * 8);
+        assert_eq!(dense.psum_bytes, dense.weight_bytes);
     }
 }

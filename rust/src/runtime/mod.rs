@@ -41,8 +41,10 @@ pub use manifest::{ExecutableEntry, LayerEntry, Manifest, VariantEntry};
 pub use self::sparse::{SparseDataflow, SparseWeightPlanes};
 
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use crate::err;
+use crate::obs::TrafficCounters;
 use crate::schedule::LayerSchedule;
 use crate::sparse::SparseLayer;
 use crate::tensor::{ComplexTensor, Tensor};
@@ -181,6 +183,17 @@ pub trait SpectralBackend {
     /// publish schedule metrics for an execution that never happens.
     fn set_schedule(&mut self, _wid: WeightId, _plan: &LayerSchedule) -> Result<bool> {
         Ok(false)
+    }
+
+    /// Attach data-movement counters ([`crate::obs::TrafficCounters`]) to
+    /// the backend's hot loops. A backend that instruments its execution
+    /// (interp) keeps the handle, bumps the counters once per weight-block
+    /// walk / tile batch, and returns `true`; the default declines
+    /// (`false`), which tells the engine NOT to publish measured-traffic
+    /// metrics it would never receive. Observation must be bit-invisible:
+    /// attaching counters may not change any computed value.
+    fn attach_traffic(&mut self, _counters: Arc<TrafficCounters>) -> bool {
+        false
     }
 
     /// Execute one spectral conv: spatial input tiles `[T, Cin, K, K]` →
@@ -430,6 +443,13 @@ impl Runtime {
     /// [`SpectralBackend::set_schedule`]).
     pub fn set_schedule(&mut self, wid: WeightId, plan: &LayerSchedule) -> Result<bool> {
         self.backend.set_schedule(wid, plan)
+    }
+
+    /// Attach data-movement counters to the backend's hot loops (see
+    /// [`SpectralBackend::attach_traffic`]). Returns whether the backend
+    /// instruments its execution.
+    pub fn attach_traffic(&mut self, counters: Arc<TrafficCounters>) -> bool {
+        self.backend.attach_traffic(counters)
     }
 
     /// Execute one spectral conv through the backend.

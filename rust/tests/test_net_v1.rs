@@ -256,6 +256,103 @@ fn live_swap_under_load_drops_zero_requests() {
 }
 
 #[test]
+fn observability_surface_round_trips_over_http() {
+    // The obs stack end to end on loopback: inference leaves traffic
+    // accounting in /v1/metrics (JSON and Prometheus text) and a structured
+    // trace behind /v1/models/<name>/trace.
+    let frontend = start_frontend();
+    let addr = frontend.local_addr();
+
+    let (status, _) = roundtrip(addr, "POST", "/v1/models/demo/infer", b"{\"seed\":1}");
+    assert_eq!(status, 200);
+    let (status, _) = roundtrip(
+        addr,
+        "POST",
+        "/v1/models/demo/infer",
+        br#"{"batch":[{"seed":2},{"seed":3}]}"#,
+    );
+    assert_eq!(status, 200);
+
+    // JSON form: one row per serving model, traffic block present with the
+    // per-layer measured-vs-Eq.13 accounting
+    let (status, body) = roundtrip(addr, "GET", "/v1/metrics", b"");
+    assert_eq!(status, 200);
+    let j = parse_body(&body);
+    let models = j.get("models").and_then(Json::as_arr).expect("models array");
+    let row = models
+        .iter()
+        .find(|m| m.get("model").and_then(Json::as_str) == Some("demo"))
+        .expect("demo row");
+    let traffic = row.get("traffic").expect("traffic block");
+    let layers = traffic.get("layers").and_then(Json::as_arr).expect("traffic layers");
+    assert_eq!(layers.len(), 2, "demo has two conv layers");
+    for l in layers {
+        assert!(l.get("measured_weight_bytes").and_then(Json::as_usize).unwrap_or(0) > 0);
+        assert!(l.get("predicted_weight_bytes").and_then(Json::as_usize).unwrap_or(0) > 0);
+        assert!(l.get("weight_ratio").is_some());
+    }
+
+    // Prometheus form: # TYPE headers, per-model labels, and every sample
+    // line shaped `name{labels} value` — what a scraper would accept
+    let (status, body) = roundtrip(addr, "GET", "/v1/metrics?format=prometheus", b"");
+    assert_eq!(status, 200);
+    let text = String::from_utf8(body).expect("utf8 exposition");
+    for needle in [
+        "# TYPE sf_requests_total counter",
+        "# TYPE sf_traffic_bytes_total counter",
+        "model=\"demo\"",
+        "sf_traffic_weight_ratio",
+    ] {
+        assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+    }
+    for line in text.lines().filter(|l| !l.starts_with('#') && !l.is_empty()) {
+        let value = line.rsplit(' ').next().expect("sample value");
+        assert!(value.parse::<f64>().is_ok(), "unparseable sample line {line:?}");
+    }
+    // unknown format is a structured 400, not a silent JSON fallback
+    let (status, _) = roundtrip(addr, "GET", "/v1/metrics?format=xml", b"");
+    assert_eq!(status, 400);
+
+    // trace endpoint: the requests above left traces with the full span
+    // taxonomy (wire-side parse included — these came over HTTP)
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let traces = loop {
+        let (status, body) = roundtrip(addr, "GET", "/v1/models/demo/trace?n=8", b"");
+        assert_eq!(status, 200);
+        let j = parse_body(&body);
+        assert!(j.get("dropped").is_some() && j.get("slow_threshold_us").is_some());
+        let traces = j.get("traces").and_then(Json::as_arr).cloned().expect("traces array");
+        if !traces.is_empty() {
+            break traces;
+        }
+        assert!(Instant::now() < deadline, "traces never appeared");
+        std::thread::sleep(Duration::from_millis(10));
+    };
+    let t = &traces[0];
+    assert!(t.get("request").and_then(Json::as_usize).unwrap_or(0) > 0);
+    assert_eq!(t.get("model").and_then(Json::as_str), Some("demo"));
+    let spans = t.get("spans").and_then(Json::as_arr).expect("spans array");
+    let names: Vec<&str> =
+        spans.iter().filter_map(|s| s.get("name").and_then(Json::as_str)).collect();
+    assert_eq!(names.first(), Some(&"request"), "root span leads");
+    for want in ["parse", "queue", "batch-close", "execute", "layer:conv1", "layer:conv2"] {
+        assert!(names.contains(&want), "missing {want} span in {names:?}");
+    }
+
+    // ?slow selects the slow-retention ring (valid, likely empty here)
+    let (status, body) = roundtrip(addr, "GET", "/v1/models/demo/trace?slow&n=4", b"");
+    assert_eq!(status, 200);
+    assert!(parse_body(&body).get("traces").and_then(Json::as_arr).is_some());
+
+    // unknown model keeps the structured 404 schema
+    let (status, body) = roundtrip(addr, "GET", "/v1/models/nope/trace", b"");
+    assert_eq!(status, 404);
+    let err = parse_body(&body).get("error").cloned().expect("error object");
+    assert_eq!(err.get("code").and_then(Json::as_str), Some("not_found"));
+    frontend.shutdown().expect("shutdown");
+}
+
+#[test]
 fn a_thousand_idle_keepalive_connections_stay_cheap() {
     // C10k posture: ~1k mostly-idle keep-alive connections are multiplexed
     // over the fixed pool of event workers (4 by default) — no
